@@ -1,0 +1,76 @@
+//! Mapping sweep: where does each strategy win?
+//!
+//! Sweeps the three §5 knobs — mapping iterations (task scale), packet
+//! size (kernel), and NoC architecture — and prints the crossover
+//! analysis: the regimes where static information (distance, Eq. 6) is
+//! enough, and where the measured travel time is required.
+//!
+//! Run: `cargo run --release --example mapping_sweep`
+
+use noctt::config::{PlacementPreset, PlatformConfig};
+use noctt::dnn::{lenet5, LayerSpec};
+use noctt::mapping::{run_layer, Strategy};
+use noctt::metrics::improvement;
+use noctt::util::Table;
+
+fn improvements(cfg: &PlatformConfig, layer: &LayerSpec) -> Vec<(String, f64)> {
+    let base = run_layer(cfg, layer, Strategy::RowMajor).summary.latency;
+    [Strategy::Distance, Strategy::StaticLatency, Strategy::Sampling(10), Strategy::PostRun]
+        .into_iter()
+        .map(|s| (s.label(), improvement(base, run_layer(cfg, layer, s).summary.latency)))
+        .collect()
+}
+
+fn main() {
+    let cfg = PlatformConfig::default_2mc();
+
+    println!("== task-scale sweep (C1 output channels; Fig. 8 axis) ==");
+    let mut t = Table::new(["channels", "tasks", "distance", "static-latency", "sampling-10", "post-run"]);
+    for ch in [3u64, 6, 12, 24, 48] {
+        let layer = lenet5(ch).remove(0);
+        let imp = improvements(&cfg, &layer);
+        t.row([
+            ch.to_string(),
+            layer.tasks.to_string(),
+            format!("{:+.2}%", imp[0].1 * 100.0),
+            format!("{:+.2}%", imp[1].1 * 100.0),
+            format!("{:+.2}%", imp[2].1 * 100.0),
+            format!("{:+.2}%", imp[3].1 * 100.0),
+        ]);
+    }
+    println!("{t}");
+
+    println!("== packet-size sweep (kernel; Fig. 9 axis) ==");
+    let mut t = Table::new(["kernel", "flits", "distance", "static-latency", "sampling-10", "post-run"]);
+    for k in [1u64, 3, 5, 7, 9, 11, 13] {
+        let layer = LayerSpec::conv(&format!("k{k}"), k, 1.0, 4704);
+        let flits = layer.profile(&cfg).resp_flits;
+        let imp = improvements(&cfg, &layer);
+        t.row([
+            format!("{k}x{k}"),
+            flits.to_string(),
+            format!("{:+.2}%", imp[0].1 * 100.0),
+            format!("{:+.2}%", imp[1].1 * 100.0),
+            format!("{:+.2}%", imp[2].1 * 100.0),
+            format!("{:+.2}%", imp[3].1 * 100.0),
+        ]);
+    }
+    println!("{t}");
+    println!("(improvements collapse past the 64 GB/s memory-bandwidth knee, k ≥ 9 — see EXPERIMENTS.md)");
+
+    println!("\n== architecture sweep (Fig. 10 axis) ==");
+    let mut t = Table::new(["architecture", "distance", "static-latency", "sampling-10", "post-run"]);
+    for p in [PlacementPreset::TwoMc, PlacementPreset::FourMc] {
+        let cfg = PlatformConfig::preset(p);
+        let layer = lenet5(6).remove(0);
+        let imp = improvements(&cfg, &layer);
+        t.row([
+            format!("{:?}", p),
+            format!("{:+.2}%", imp[0].1 * 100.0),
+            format!("{:+.2}%", imp[1].1 * 100.0),
+            format!("{:+.2}%", imp[2].1 * 100.0),
+            format!("{:+.2}%", imp[3].1 * 100.0),
+        ]);
+    }
+    println!("{t}");
+}

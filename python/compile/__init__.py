@@ -1,0 +1,1 @@
+"""Build-time compile path: JAX/Pallas LeNet, AOT-lowered to HLO text."""

@@ -1,0 +1,161 @@
+"""AOT bridge: lower the JAX/Pallas LeNet to HLO **text** artifacts.
+
+Run once at build time (``make artifacts``); Python never touches the
+request path. The Rust runtime loads the text with
+``HloModuleProto::from_text_file``, compiles it on the PJRT CPU client and
+executes it with the weights serialised here.
+
+HLO *text* — not ``lowered.compile()`` nor a serialized ``HloModuleProto``
+— is the interchange format: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. Lowering goes through stablehlo →
+``mlir_module_to_xla_computation(..., return_tuple=True)`` so the Rust
+side unwraps a 1-tuple.
+
+Artifacts written (all under ``--out-dir``):
+
+* ``lenet_b{1,8}.hlo.txt`` — the full forward pass at batch 1 / 8;
+  parameters: ``[x, *PARAM_ORDER]`` (15 positional buffers).
+* ``smoke.hlo.txt`` — 2x2 ``matmul(x, y) + 2`` smoke computation.
+* ``lenet_weights.bin`` — the deterministic parameters (NCTW format).
+* ``testvec.bin`` — a batch-8 input and its expected logits, for the Rust
+  integration test to verify numerics end-to-end.
+* ``MANIFEST.txt`` — file list + provenance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import struct
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Magic prefix of the NCTW tensor container format (v1).
+MAGIC = b"NCTW001\0"
+
+
+def write_tensors(path: pathlib.Path, tensors: dict[str, np.ndarray]) -> None:
+    """Serialise named f32 tensors in the NCTW v1 container.
+
+    Layout (little-endian): magic, u32 tensor count, then per tensor:
+    u32 name length, name bytes, u32 ndim, u64 dims…, f32 data.
+    """
+    with path.open("wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            encoded = name.encode("utf-8")
+            f.write(struct.pack("<I", len(encoded)))
+            f.write(encoded)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path: pathlib.Path) -> dict[str, np.ndarray]:
+    """Read back an NCTW v1 container (inverse of :func:`write_tensors`)."""
+    data = path.read_bytes()
+    assert data[:8] == MAGIC, f"bad magic in {path}"
+    off = 8
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + nlen].decode("utf-8")
+        off += nlen
+        (ndim,) = struct.unpack_from("<I", data, off)
+        off += 4
+        dims = struct.unpack_from(f"<{ndim}Q", data, off)
+        off += 8 * ndim
+        numel = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype="<f4", count=numel, offset=off).reshape(dims)
+        off += 4 * numel
+        out[name] = arr
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_lenet(batch: int, params: dict[str, np.ndarray]) -> str:
+    """Lower the batch-`batch` LeNet forward pass to HLO text."""
+    x_spec = jax.ShapeDtypeStruct((batch, 1, 32, 32), jnp.float32)
+    p_specs = [
+        jax.ShapeDtypeStruct(params[name].shape, jnp.float32) for name in model.PARAM_ORDER
+    ]
+
+    def fn(x, *flat):
+        return (model.forward_flat(x, *flat),)
+
+    return to_hlo_text(jax.jit(fn).lower(x_spec, *p_specs))
+
+
+def lower_smoke() -> str:
+    """The 2x2 ``matmul + 2`` smoke computation (runtime self-test)."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    parser.add_argument("--seed", type=int, default=2024, help="weight seed")
+    parser.add_argument(
+        "--batches", type=int, nargs="+", default=[1, 8], help="batch sizes to lower"
+    )
+    args = parser.parse_args(argv)
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    params = model.init_params(args.seed)
+    write_tensors(out / "lenet_weights.bin", {n: params[n] for n in model.PARAM_ORDER})
+
+    files = ["lenet_weights.bin"]
+    for b in args.batches:
+        text = lower_lenet(b, params)
+        name = f"lenet_b{b}.hlo.txt"
+        (out / name).write_text(text)
+        files.append(name)
+        print(f"wrote {name}: {len(text)} chars", file=sys.stderr)
+
+    (out / "smoke.hlo.txt").write_text(lower_smoke())
+    files.append("smoke.hlo.txt")
+
+    # Golden test vector: batch-8 inputs and expected logits.
+    x = model.sample_images(8)
+    logits = np.asarray(model.forward(jnp.asarray(x), {k: jnp.asarray(v) for k, v in params.items()}))
+    write_tensors(out / "testvec.bin", {"input": x, "logits": logits})
+    files.append("testvec.bin")
+
+    manifest = "\n".join(
+        [f"seed={args.seed}", f"jax={jax.__version__}", "format=NCTW001+HLO-text", *files]
+    )
+    (out / "MANIFEST.txt").write_text(manifest + "\n")
+    print(f"artifacts complete: {', '.join(files)}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

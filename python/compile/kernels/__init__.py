@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracle.
+
+* :mod:`.conv2d` -- im2col + tiled MXU matmul (the compute hot-spot).
+* :mod:`.pool` -- LeNet trainable 2x2 average pooling.
+* :mod:`.ref` -- reference implementations every kernel is tested against.
+
+All kernels run with ``interpret=True``: real-TPU Pallas lowering emits
+Mosaic custom-calls the CPU PJRT client cannot execute, so interpret mode
+is the correctness path and real-TPU performance is estimated analytically
+(DESIGN.md section Hardware-Adaptation).
+"""
+
+from . import conv2d, pool, ref
+
+__all__ = ["conv2d", "pool", "ref"]

@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernel: tiled matmul — the compute hot-spot.
+
+The paper's task is a convolution producing one output pixel; on TPU the
+idiomatic mapping (DESIGN.md §Hardware-Adaptation) is **im2col + MXU
+matmul**: the k x k patch gather becomes a reshape, and the per-pixel dot
+products become one `(M, K) @ (K, N)` matmul that feeds the 128x128
+systolic array. The Pallas kernel tiles M so each grid step keeps one
+`(TILE_M, K)` activation block and the whole `(K, N)` weight panel
+resident in VMEM (LeNet panels are tiny: K <= 400, N <= 120 → << 16 MiB).
+
+VMEM footprint per grid step (f32):
+    TILE_M*K + K*N + TILE_M*N  =  128·400 + 400·120 + 128·120  ≈ 0.5 MiB
+MXU utilisation estimate: K and N are far below 128 for LeNet, so the
+systolic array is underfed on this workload (utilisation ≈ K/128 · N/128);
+the kernel shape is nevertheless the one that *would* saturate the MXU at
+transformer-scale K/N. interpret=True timings are CPU-numpy and are not a
+TPU proxy — see DESIGN.md.
+
+`interpret=True` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows of the patch matrix processed per grid step. 128 matches the MXU
+# systolic dimension; smaller inputs fall back to a single padded tile.
+TILE_M = 128
+
+
+def _matmul_bias_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One grid step: (TILE_M, K) @ (K, N) + b on the MXU."""
+    o_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_bias(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Tiled ``x @ w + b`` via a Pallas kernel.
+
+    Args:
+        x: ``(M, K)`` activations.
+        w: ``(K, N)`` weights.
+        b: ``(N,)`` bias.
+        interpret: run the kernel in interpret mode (required off-TPU).
+
+    Returns:
+        ``(M, N)`` result, f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    m_pad = -(-m // TILE_M) * TILE_M
+    x_padded = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    out = pl.pallas_call(
+        _matmul_bias_kernel,
+        grid=(m_pad // TILE_M,),
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        interpret=interpret,
+    )(x_padded.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:m]
+
+
+def conv2d(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Valid 2-D convolution via im2col + the Pallas matmul kernel.
+
+    Same signature/semantics as :func:`ref.conv2d`.
+    """
+    bsz, _, h, _w = x.shape
+    c_out, _c_in, k, _k2 = w.shape
+    oh, ow = h - k + 1, _w - k + 1
+    patches = ref.im2col(x, k)  # (B·OH·OW, C_in·k·k)
+    panel = w.reshape(c_out, -1).T  # (C_in·k·k, C_out)
+    out = matmul_bias(patches, panel, b, interpret=interpret)
+    return out.reshape(bsz, oh, ow, c_out).transpose(0, 3, 1, 2)

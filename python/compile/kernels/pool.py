@@ -1,0 +1,56 @@
+"""Layer-1 Pallas kernel: LeNet trainable 2x2 average pooling.
+
+One grid step processes one (batch, channel) plane held in VMEM: the
+window sum is four strided loads + adds (VPU work, no MXU), scaled by the
+per-channel trained coefficient and shifted by the bias. VMEM footprint is
+one `(H, W)` f32 plane plus its `(H/2, W/2)` output — ≤ 8 KiB for LeNet.
+
+`interpret=True` is mandatory off-TPU (see conv2d.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, coef_ref, bias_ref, o_ref):
+    """One (batch·channel) plane: coef · Σ(2x2 window) + bias."""
+    x = x_ref[...]
+    window_sum = x[0::2, 0::2] + x[0::2, 1::2] + x[1::2, 0::2] + x[1::2, 1::2]
+    o_ref[...] = coef_ref[0] * window_sum + bias_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def avg_pool2(
+    x: jnp.ndarray, coef: jnp.ndarray, bias: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Trainable 2x2 subsampling, same semantics as :func:`ref.avg_pool2`.
+
+    Args:
+        x: ``(B, C, H, W)`` with even spatial dims.
+        coef: per-channel coefficient ``(C,)``.
+        bias: per-channel bias ``(C,)``.
+        interpret: run the kernel in interpret mode (required off-TPU).
+    """
+    b, c, h, w = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims {h}x{w}"
+    planes = x.reshape(b * c, h, w).astype(jnp.float32)
+    coef_bc = jnp.tile(coef.astype(jnp.float32), b)
+    bias_bc = jnp.tile(bias.astype(jnp.float32), b)
+    out = pl.pallas_call(
+        _pool_kernel,
+        grid=(b * c,),
+        in_specs=[
+            pl.BlockSpec((None, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, h // 2, w // 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * c, h // 2, w // 2), jnp.float32),
+        interpret=interpret,
+    )(planes, coef_bc, bias_bc)
+    return out.reshape(b, c, h // 2, w // 2)

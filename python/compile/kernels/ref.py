@@ -1,0 +1,110 @@
+"""Pure-`jnp` reference implementations — the correctness oracle.
+
+Every Pallas kernel in this package is validated against these functions
+by the pytest/hypothesis suite (`python/tests/test_kernel.py`). They are
+written for clarity, not speed, using only `jax.numpy` primitives.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Valid (no padding, stride 1) 2-D convolution.
+
+    Args:
+        x: input, shape ``(B, C_in, H, W)``.
+        w: weights, shape ``(C_out, C_in, K, K)``.
+        b: bias, shape ``(C_out,)``.
+
+    Returns:
+        Output of shape ``(B, C_out, H-K+1, W-K+1)``.
+    """
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def avg_pool2(x: jnp.ndarray, coef: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """LeNet-5 trainable 2x2 subsampling: ``coef * sum(window) + bias``.
+
+    Args:
+        x: input, shape ``(B, C, H, W)`` with even ``H``/``W``.
+        coef: per-channel coefficient, shape ``(C,)``.
+        bias: per-channel bias, shape ``(C,)``.
+
+    Returns:
+        Output of shape ``(B, C, H/2, W/2)``.
+    """
+    b, c, h, w = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"odd spatial dims {h}x{w}"
+    window_sum = (
+        x[:, :, 0::2, 0::2]
+        + x[:, :, 0::2, 1::2]
+        + x[:, :, 1::2, 0::2]
+        + x[:, :, 1::2, 1::2]
+    )
+    return coef[None, :, None, None] * window_sum + bias[None, :, None, None]
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fully connected layer ``x @ w + b``.
+
+    Args:
+        x: input, shape ``(B, N_in)``.
+        w: weights, shape ``(N_in, N_out)``.
+        b: bias, shape ``(N_out,)``.
+    """
+    return x @ w + b
+
+
+def im2col(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Extract all ``k x k`` patches for a valid convolution.
+
+    Args:
+        x: input, shape ``(B, C, H, W)``.
+        k: kernel size.
+
+    Returns:
+        Patches of shape ``(B * OH * OW, C * k * k)`` with
+        ``OH = H-k+1``, ``OW = W-k+1``; patch layout matches
+        ``w.reshape(C_out, -1).T`` for OIHW weights.
+    """
+    bsz, c, h, w = x.shape
+    oh, ow = h - k + 1, w - k + 1
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(x[:, :, di : di + oh, dj : dj + ow])
+    # (k*k, B, C, OH, OW) → (B, OH, OW, C, k*k) → (B·OH·OW, C·k·k)
+    stacked = jnp.stack(cols, axis=0)
+    stacked = stacked.transpose(1, 3, 4, 2, 0)
+    return stacked.reshape(bsz * oh * ow, c * k * k)
+
+
+def lenet_forward(x: jnp.ndarray, params: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Reference LeNet-5 forward pass (tanh activations, full C3).
+
+    Args:
+        x: input images, shape ``(B, 1, 32, 32)``.
+        params: the parameter dict produced by
+            :func:`python.compile.model.init_params`.
+
+    Returns:
+        Logits of shape ``(B, 10)``.
+    """
+    h = jnp.tanh(conv2d(x, params["c1_w"], params["c1_b"]))
+    h = jnp.tanh(avg_pool2(h, params["s2_coef"], params["s2_bias"]))
+    h = jnp.tanh(conv2d(h, params["c3_w"], params["c3_b"]))
+    h = jnp.tanh(avg_pool2(h, params["s4_coef"], params["s4_bias"]))
+    h = jnp.tanh(conv2d(h, params["c5_w"], params["c5_b"]))
+    h = h.reshape(h.shape[0], -1)  # (B, 120)
+    h = jnp.tanh(dense(h, params["f6_w"], params["f6_b"]))
+    return dense(h, params["out_w"], params["out_b"])

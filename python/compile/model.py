@@ -1,0 +1,123 @@
+"""Layer-2 JAX model: LeNet-5 forward pass built on the Pallas kernels.
+
+This is the paper's evaluated network (§5.6). The forward pass calls the
+Layer-1 kernels (:mod:`.kernels.conv2d`, :mod:`.kernels.pool`) so that a
+single ``jax.jit(...).lower(...)`` emits one HLO module containing the
+kernels — the artifact the Rust runtime loads and executes via PJRT.
+
+Parameters are deterministically initialised (seeded); the same weights
+are serialised to ``artifacts/lenet_weights.bin`` so the Rust side feeds
+identical tensors at run time.
+
+Note on C3 connectivity: the *functional* model uses full 6→16
+connectivity; the *timing* model in the Rust co-simulation uses the
+classic partial-connection table's per-task average (60/16 = 3.75
+effective channels). The substitution affects only FLOP-count realism of
+the functional path, not the mapping experiments (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import conv2d as conv_kernel
+from .kernels import pool as pool_kernel
+
+#: Parameter names in their canonical (serialisation) order.
+PARAM_ORDER = [
+    "c1_w", "c1_b",
+    "s2_coef", "s2_bias",
+    "c3_w", "c3_b",
+    "s4_coef", "s4_bias",
+    "c5_w", "c5_b",
+    "f6_w", "f6_b",
+    "out_w", "out_b",
+]
+
+#: Parameter shapes, keyed by name.
+PARAM_SHAPES = {
+    "c1_w": (6, 1, 5, 5),
+    "c1_b": (6,),
+    "s2_coef": (6,),
+    "s2_bias": (6,),
+    "c3_w": (16, 6, 5, 5),
+    "c3_b": (16,),
+    "s4_coef": (16,),
+    "s4_bias": (16,),
+    "c5_w": (120, 16, 5, 5),
+    "c5_b": (120,),
+    "f6_w": (120, 84),
+    "f6_b": (84,),
+    "out_w": (84, 10),
+    "out_b": (10,),
+}
+
+
+def init_params(seed: int = 2024) -> dict[str, np.ndarray]:
+    """Deterministic Glorot-ish initialisation of all LeNet parameters.
+
+    Args:
+        seed: RNG seed; equal seeds give bit-identical parameters.
+
+    Returns:
+        name → f32 ndarray, in :data:`PARAM_SHAPES` shapes.
+    """
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for name in PARAM_ORDER:
+        shape = PARAM_SHAPES[name]
+        if name.endswith("_b") or name.endswith("_bias"):
+            params[name] = np.zeros(shape, dtype=np.float32)
+        elif name.endswith("_coef"):
+            # Positive pooling coefficients around the true average (1/4).
+            params[name] = (0.25 + 0.05 * rng.standard_normal(shape)).astype(np.float32)
+        else:
+            fan_in = int(np.prod(shape[1:])) if len(shape) > 1 else int(shape[0])
+            scale = 1.0 / np.sqrt(fan_in)
+            params[name] = (scale * rng.standard_normal(shape)).astype(np.float32)
+    return params
+
+
+def sample_images(batch: int, seed: int = 7) -> np.ndarray:
+    """Deterministic synthetic MNIST-like inputs, shape ``(B, 1, 32, 32)``.
+
+    Digit-ish blobs: a bright rectangle whose position/extent depend on the
+    per-image class, over light noise — enough structure for logits to
+    differ across classes deterministically.
+    """
+    rng = np.random.default_rng(seed)
+    x = 0.1 * rng.standard_normal((batch, 1, 32, 32)).astype(np.float32)
+    for i in range(batch):
+        cls = i % 10
+        r0, c0 = 4 + (cls % 5) * 2, 4 + (cls // 5) * 8
+        x[i, 0, r0 : r0 + 12, c0 : c0 + 6] += 1.0
+    return x
+
+
+def forward(x: jnp.ndarray, params: dict[str, jnp.ndarray], *, interpret: bool = True) -> jnp.ndarray:
+    """LeNet-5 forward pass using the Pallas kernels.
+
+    Args:
+        x: images ``(B, 1, 32, 32)``.
+        params: parameter dict (see :func:`init_params`).
+        interpret: interpret-mode Pallas (required off-TPU).
+
+    Returns:
+        Logits ``(B, 10)``.
+    """
+    h = jnp.tanh(conv_kernel.conv2d(x, params["c1_w"], params["c1_b"], interpret=interpret))
+    h = jnp.tanh(pool_kernel.avg_pool2(h, params["s2_coef"], params["s2_bias"], interpret=interpret))
+    h = jnp.tanh(conv_kernel.conv2d(h, params["c3_w"], params["c3_b"], interpret=interpret))
+    h = jnp.tanh(pool_kernel.avg_pool2(h, params["s4_coef"], params["s4_bias"], interpret=interpret))
+    h = jnp.tanh(conv_kernel.conv2d(h, params["c5_w"], params["c5_b"], interpret=interpret))
+    h = h.reshape(h.shape[0], -1)
+    h = jnp.tanh(conv_kernel.matmul_bias(h, params["f6_w"], params["f6_b"], interpret=interpret))
+    return conv_kernel.matmul_bias(h, params["out_w"], params["out_b"], interpret=interpret)
+
+
+def forward_flat(x: jnp.ndarray, *flat_params: jnp.ndarray) -> jnp.ndarray:
+    """`forward` with positional params in :data:`PARAM_ORDER` — the
+    signature that is AOT-lowered (PJRT executes positional buffers)."""
+    params = dict(zip(PARAM_ORDER, flat_params))
+    return forward(x, params)

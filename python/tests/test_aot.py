@@ -1,0 +1,98 @@
+"""AOT path tests: HLO text lowering + the NCTW tensor container."""
+
+import pathlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+
+
+def test_tensor_container_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.standard_normal((3, 4)).astype(np.float32),
+        "scalar_ish": rng.standard_normal((1,)).astype(np.float32),
+        "deep": rng.standard_normal((2, 3, 4, 5)).astype(np.float32),
+    }
+    p = tmp_path / "t.bin"
+    aot.write_tensors(p, tensors)
+    back = aot.read_tensors(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 5),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_tensor_container_roundtrip_random(tmp_path_factory, n, seed):
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for i in range(n):
+        ndim = int(rng.integers(1, 4))
+        shape = tuple(int(d) for d in rng.integers(1, 6, size=ndim))
+        tensors[f"t{i}"] = rng.standard_normal(shape).astype(np.float32)
+    p = tmp_path_factory.mktemp("nctw") / "t.bin"
+    aot.write_tensors(p, tensors)
+    back = aot.read_tensors(p)
+    for k, v in tensors.items():
+        np.testing.assert_array_equal(back[k], v)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        aot.read_tensors(p)
+
+
+def test_smoke_hlo_text_structure():
+    text = aot.lower_smoke()
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+    # return_tuple=True → tuple-rooted computation.
+    assert "tuple" in text.lower()
+
+
+def test_lenet_hlo_lowering_batch1():
+    params = model.init_params()
+    text = aot.lower_lenet(1, params)
+    assert "HloModule" in text
+    # Input and logits shapes appear in the module text.
+    assert "f32[1,1,32,32]" in text
+    assert "f32[1,10]" in text
+    # All 14 parameters + the input = 15 entry-computation parameters
+    # (nested kernel computations have their own, so restrict to ENTRY).
+    entry = text[text.index("ENTRY") :]
+    assert entry.count("parameter(") == 15
+
+
+def test_full_artifact_generation(tmp_path):
+    rc = aot.main(["--out-dir", str(tmp_path), "--batches", "1"])
+    assert rc == 0
+    for name in ["lenet_b1.hlo.txt", "smoke.hlo.txt", "lenet_weights.bin", "testvec.bin", "MANIFEST.txt"]:
+        assert (tmp_path / name).exists(), name
+    weights = aot.read_tensors(tmp_path / "lenet_weights.bin")
+    assert list(weights) == model.PARAM_ORDER
+    tv = aot.read_tensors(tmp_path / "testvec.bin")
+    assert tv["input"].shape == (8, 1, 32, 32)
+    assert tv["logits"].shape == (8, 10)
+    # The recorded logits must reproduce from the recorded weights.
+    import jax.numpy as jnp
+
+    logits = model.forward(
+        jnp.asarray(tv["input"]), {k: jnp.asarray(v) for k, v in weights.items()}
+    )
+    np.testing.assert_allclose(np.asarray(logits), tv["logits"], rtol=1e-5, atol=1e-5)
+
+
+def test_artifact_weights_match_seed(tmp_path):
+    aot.main(["--out-dir", str(tmp_path), "--batches", "1", "--seed", "77"])
+    weights = aot.read_tensors(tmp_path / "lenet_weights.bin")
+    expect = model.init_params(77)
+    for name in model.PARAM_ORDER:
+        np.testing.assert_array_equal(weights[name], expect[name])

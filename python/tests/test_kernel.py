@@ -1,0 +1,151 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and the f32/bf16 input dtypes the kernels
+accept); every draw asserts allclose against `kernels.ref`.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as conv_kernel
+from compile.kernels import pool as pool_kernel
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_matmul_bias_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = conv_kernel.matmul_bias(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    want = ref.dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_bias_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 32)), dtype=dtype)
+    w = jnp.asarray(rng.standard_normal((32, 16)), dtype=dtype)
+    b = jnp.asarray(rng.standard_normal(16), dtype=dtype)
+    got = conv_kernel.matmul_bias(x, w, b)
+    assert got.dtype == jnp.float32  # kernel accumulates in f32
+    want = ref.dense(x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))
+    tol = 5e-2 if dtype != np.float32 else RTOL
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_matmul_exact_tile_boundary():
+    # M exactly TILE_M and M = TILE_M ± 1 exercise the padding path.
+    rng = np.random.default_rng(1)
+    for m in (conv_kernel.TILE_M - 1, conv_kernel.TILE_M, conv_kernel.TILE_M + 1):
+        x, w, b = rand(rng, m, 8), rand(rng, 8, 4), rand(rng, 4)
+        got = conv_kernel.matmul_bias(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+        np.testing.assert_allclose(
+            got, ref.dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)),
+            rtol=RTOL, atol=ATOL,
+        )
+
+
+# ---------------------------------------------------------------- conv2d
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    c_in=st.integers(1, 6),
+    c_out=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    extra=st.integers(0, 6),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_conv2d_matches_ref(b, c_in, c_out, k, extra, seed):
+    rng = np.random.default_rng(seed)
+    h = w = k + extra
+    x = rand(rng, b, c_in, h, w)
+    wt = rand(rng, c_out, c_in, k, k)
+    bias = rand(rng, c_out)
+    got = conv_kernel.conv2d(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(bias))
+    want = ref.conv2d(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(bias))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-4)
+
+
+def test_conv2d_lenet_shapes():
+    # The exact LeNet layer shapes the artifacts use.
+    rng = np.random.default_rng(2)
+    cases = [
+        ((1, 1, 32, 32), (6, 1, 5, 5)),
+        ((1, 6, 14, 14), (16, 6, 5, 5)),
+        ((1, 16, 5, 5), (120, 16, 5, 5)),
+    ]
+    for xs, ws in cases:
+        x, wt, bias = rand(rng, *xs), rand(rng, *ws), rand(rng, ws[0])
+        got = conv_kernel.conv2d(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(bias))
+        want = ref.conv2d(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(bias))
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-4)
+
+
+# ---------------------------------------------------------------- pooling
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    c=st.integers(1, 16),
+    half=st.integers(1, 8),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_avg_pool2_matches_ref(b, c, half, seed):
+    rng = np.random.default_rng(seed)
+    h = w = 2 * half
+    x = rand(rng, b, c, h, w)
+    coef, bias = rand(rng, c), rand(rng, c)
+    got = pool_kernel.avg_pool2(jnp.asarray(x), jnp.asarray(coef), jnp.asarray(bias))
+    want = ref.avg_pool2(jnp.asarray(x), jnp.asarray(coef), jnp.asarray(bias))
+    assert got.shape == (b, c, half, half)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_pool_rejects_odd_dims():
+    x = jnp.zeros((1, 1, 3, 4))
+    with pytest.raises(AssertionError):
+        pool_kernel.avg_pool2(x, jnp.ones(1), jnp.zeros(1))
+
+
+# ---------------------------------------------------------------- im2col
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    c=st.integers(1, 4),
+    k=st.sampled_from([1, 2, 3, 5]),
+    extra=st.integers(0, 5),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_im2col_reconstructs_conv(b, c, k, extra, seed):
+    # im2col patches + flattened-weight matmul must equal the conv oracle.
+    rng = np.random.default_rng(seed)
+    h = w = k + extra
+    x = rand(rng, b, c, h, w)
+    wt = rand(rng, 7, c, k, k)
+    patches = ref.im2col(jnp.asarray(x), k)
+    assert patches.shape == (b * (h - k + 1) * (w - k + 1), c * k * k)
+    out = patches @ jnp.asarray(wt.reshape(7, -1).T)
+    oh = h - k + 1
+    out = out.reshape(b, oh, oh, 7).transpose(0, 3, 1, 2)
+    want = ref.conv2d(jnp.asarray(x), jnp.asarray(wt), jnp.zeros(7))
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=1e-4)

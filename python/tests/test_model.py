@@ -1,0 +1,62 @@
+"""Layer-2 model tests: the Pallas-kernel LeNet vs the pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _jparams(params):
+    return {k: jnp.asarray(v) for k, v in params.items()}
+
+
+def test_param_shapes_and_determinism():
+    a = model.init_params(2024)
+    b = model.init_params(2024)
+    c = model.init_params(2025)
+    assert set(a) == set(model.PARAM_SHAPES)
+    for name, shape in model.PARAM_SHAPES.items():
+        assert a[name].shape == shape, name
+        assert a[name].dtype == np.float32, name
+        np.testing.assert_array_equal(a[name], b[name])
+    assert any(not np.array_equal(a[n], c[n]) for n in model.PARAM_ORDER)
+
+
+def test_param_order_covers_all_params():
+    assert sorted(model.PARAM_ORDER) == sorted(model.PARAM_SHAPES)
+    assert len(model.PARAM_ORDER) == 14
+
+
+def test_forward_matches_reference():
+    params = model.init_params()
+    x = model.sample_images(4)
+    got = model.forward(jnp.asarray(x), _jparams(params))
+    want = ref.lenet_forward(jnp.asarray(x), _jparams(params))
+    assert got.shape == (4, 10)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_flat_equals_forward():
+    params = model.init_params()
+    x = jnp.asarray(model.sample_images(2))
+    flat = [jnp.asarray(params[n]) for n in model.PARAM_ORDER]
+    got = model.forward_flat(x, *flat)
+    want = model.forward(x, _jparams(params))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_outputs_finite_and_class_dependent():
+    params = model.init_params()
+    x = model.sample_images(8)
+    logits = np.asarray(model.forward(jnp.asarray(x), _jparams(params)))
+    assert np.isfinite(logits).all()
+    # Different synthetic classes produce different logits.
+    assert not np.allclose(logits[0], logits[1])
+
+
+def test_sample_images_deterministic():
+    a = model.sample_images(3)
+    b = model.sample_images(3)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (3, 1, 32, 32)

@@ -1,0 +1,84 @@
+//! Microbenchmarks of the simulator hot paths: the network clock step
+//! (idle and loaded), the full co-simulation step, injection throughput,
+//! and the mapping math. These are the §Perf optimisation targets.
+
+use std::time::Duration;
+
+use noctt::accel::Simulation;
+use noctt::config::PlatformConfig;
+use noctt::dnn::LayerSpec;
+use noctt::noc::{Network, PacketKind};
+use noctt::util::apportion::inverse_proportional;
+use noctt::util::bench::{bench, BenchResult};
+
+const T: Duration = Duration::from_millis(1200);
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let cfg = PlatformConfig::default_2mc();
+
+    // Idle fabric: the floor cost of one cycle over 16 routers.
+    {
+        let mut net = Network::new(&cfg);
+        const STEPS: u64 = 10_000;
+        results.push(bench("network/step-idle-x10k", T, Some((STEPS as f64, "cycles")), || {
+            for _ in 0..STEPS {
+                net.step();
+            }
+        }));
+    }
+
+    // Saturated fabric: every PE streams 22-flit packets at both MCs.
+    {
+        results.push(bench("network/step-saturated-x2k", T, Some((2000.0, "cycles")), || {
+            let mut net = Network::new(&cfg);
+            for (i, pe) in cfg.pe_nodes().into_iter().enumerate() {
+                for _ in 0..4 {
+                    net.send(pe, if i % 2 == 0 { 9 } else { 10 }, PacketKind::Response, 22, 0, 0);
+                    net.send(if i % 2 == 0 { 9 } else { 10 }, pe, PacketKind::Response, 22, 0, 0);
+                }
+            }
+            for _ in 0..2000 {
+                net.step();
+            }
+        }));
+    }
+
+    // Full co-simulation step rate on the C1 profile.
+    {
+        let layer = LayerSpec::conv("C1", 5, 1.0, 4704);
+        let profile = layer.profile(&cfg);
+        let mut sim = Simulation::new(&cfg, profile);
+        sim.add_budgets(&vec![u64::MAX / 2 / 14; 14]); // endless work
+        const STEPS: u64 = 5_000;
+        results.push(bench("sim/step-busy-x5k", T, Some((STEPS as f64, "cycles")), || {
+            for _ in 0..STEPS {
+                sim.step();
+            }
+        }));
+    }
+
+    // One complete small-layer run (engine setup + run + drain).
+    {
+        let layer = LayerSpec::conv("small", 5, 1.0, 140);
+        let profile = layer.profile(&cfg);
+        results.push(bench("sim/full-run-140-tasks", T, Some((140.0, "tasks")), || {
+            let mut sim = Simulation::new(&cfg, profile);
+            sim.add_budgets(&vec![10; 14]);
+            std::hint::black_box(sim.run_until_done());
+        }));
+    }
+
+    // Mapping math: Eq. 4–5 apportionment at PE scale.
+    {
+        let times: Vec<f64> = (0..14).map(|i| 40.0 + i as f64).collect();
+        results.push(bench("mapping/inverse-proportional-14", T, Some((1.0, "calls")), || {
+            std::hint::black_box(inverse_proportional(4704, &times));
+        }));
+    }
+
+    println!("\n== noc_microbench ==");
+    for r in &results {
+        println!("{}", r.render());
+    }
+}

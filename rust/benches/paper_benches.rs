@@ -1,0 +1,78 @@
+//! End-to-end benchmarks: one per paper table/figure.
+//!
+//! Each bench times the *regeneration* of one evaluation artefact and
+//! reports simulator throughput (simulated router cycles per wall second
+//! and tasks per second). Run with `cargo bench` (or `make bench`); the
+//! §Perf section of EXPERIMENTS.md records the tracked numbers.
+
+use std::time::Duration;
+
+use noctt::config::{PlacementPreset, PlatformConfig};
+use noctt::dnn::{lenet5, LayerSpec};
+use noctt::experiments::table1;
+use noctt::mapping::{run_layer, Strategy};
+use noctt::util::bench::{bench, BenchResult};
+
+const T: Duration = Duration::from_millis(1500);
+
+fn simulated_cycles(cfg: &PlatformConfig, layer: &LayerSpec, s: Strategy) -> f64 {
+    run_layer(cfg, layer, s).result.drained_at as f64
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let cfg = PlatformConfig::default_2mc();
+    let c1 = lenet5(6).remove(0);
+
+    // table1 — packet-size law (pure computation, no simulation).
+    results.push(bench("table1/kernel-packet-law", T, Some((7.0, "rows")), || {
+        std::hint::black_box(table1::rows());
+    }));
+
+    // fig7 — C1 under the four §5.2 mappings.
+    let cycles = simulated_cycles(&cfg, &c1, Strategy::RowMajor);
+    results.push(bench("fig7/c1-row-major", T, Some((cycles, "sim-cycles")), || {
+        std::hint::black_box(run_layer(&cfg, &c1, Strategy::RowMajor));
+    }));
+    results.push(bench("fig7/c1-sampling-10", T, Some((c1.tasks as f64, "tasks")), || {
+        std::hint::black_box(run_layer(&cfg, &c1, Strategy::Sampling(10)));
+    }));
+    results.push(bench("fig7/c1-post-run(2 runs)", T, Some((2.0 * c1.tasks as f64, "tasks")), || {
+        std::hint::black_box(run_layer(&cfg, &c1, Strategy::PostRun));
+    }));
+
+    // fig8 — the 8x task-scale point (the heaviest single simulation).
+    let big = lenet5(48).remove(0);
+    let cycles = simulated_cycles(&cfg, &big, Strategy::RowMajor);
+    results.push(bench("fig8/c1x8-row-major", T, Some((cycles, "sim-cycles")), || {
+        std::hint::black_box(run_layer(&cfg, &big, Strategy::RowMajor));
+    }));
+
+    // fig9 — the largest packet size (22 flits, bandwidth-saturated).
+    let k13 = LayerSpec::conv("k13", 13, 1.0, 4704);
+    let cycles = simulated_cycles(&cfg, &k13, Strategy::RowMajor);
+    results.push(bench("fig9/k13-row-major", T, Some((cycles, "sim-cycles")), || {
+        std::hint::black_box(run_layer(&cfg, &k13, Strategy::RowMajor));
+    }));
+
+    // fig10 — the 4-MC architecture.
+    let cfg4 = PlatformConfig::preset(PlacementPreset::FourMc);
+    let cycles = simulated_cycles(&cfg4, &c1, Strategy::Sampling(10));
+    results.push(bench("fig10/c1-4mc-sampling-10", T, Some((cycles, "sim-cycles")), || {
+        std::hint::black_box(run_layer(&cfg4, &c1, Strategy::Sampling(10)));
+    }));
+
+    // fig11 — the whole seven-layer model under the headline mapping.
+    let layers = lenet5(6);
+    let total_tasks: u64 = layers.iter().map(|l| l.tasks).sum();
+    results.push(bench("fig11/lenet-sampling-10", T, Some((total_tasks as f64, "tasks")), || {
+        for l in &layers {
+            std::hint::black_box(run_layer(&cfg, l, Strategy::Sampling(10)));
+        }
+    }));
+
+    println!("\n== paper_benches ==");
+    for r in &results {
+        println!("{}", r.render());
+    }
+}

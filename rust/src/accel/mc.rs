@@ -1,0 +1,152 @@
+//! The memory-controller device model.
+//!
+//! Requests are served strictly FIFO at the configured bandwidth — a DDR5
+//! device behind two mesh nodes at 64 GB/s (§5.1: one 16-bit datum every
+//! 0.0625 router cycles). One request is in service at a time; the access
+//! delay is the data volume divided by bandwidth. When the access
+//! completes, the response packet is handed to the MC's NI (where it then
+//! contends with other responses for the single injection port — this
+//! serialization plus the FIFO queue is where the congestion signal the
+//! travel-time mapper exploits comes from).
+
+use std::collections::VecDeque;
+
+use crate::config::MemModel;
+use crate::noc::NodeId;
+
+/// A queued request: (PE index, arrival cycle).
+type Pending = (usize, u64);
+
+/// One memory controller.
+#[derive(Debug, Clone)]
+pub struct Mc {
+    /// Mesh node hosting this MC.
+    pub node: NodeId,
+    /// Service discipline (see [`MemModel`]).
+    model: MemModel,
+    queue: VecDeque<Pending>,
+    /// The request currently being served: (pe, finish cycle).
+    in_service: Option<(usize, u64)>,
+    /// Parallel model: all outstanding accesses (pe, finish cycle).
+    outstanding: Vec<(usize, u64)>,
+    /// Total requests served (diagnostics).
+    pub served: u64,
+}
+
+impl Mc {
+    /// New idle MC at `node` with the default queued discipline.
+    pub fn new(node: NodeId) -> Self {
+        Self::with_model(node, MemModel::Queued)
+    }
+
+    /// New idle MC with an explicit service discipline.
+    pub fn with_model(node: NodeId, model: MemModel) -> Self {
+        Self {
+            node,
+            model,
+            queue: VecDeque::new(),
+            in_service: None,
+            outstanding: Vec::new(),
+            served: 0,
+        }
+    }
+
+    /// A request packet (tail) arrived at cycle `now` from PE `pe`.
+    pub fn on_request(&mut self, pe: usize, now: u64) {
+        self.queue.push_back((pe, now));
+    }
+
+    /// Advance the controller to cycle `now`. Returns the PE index of a
+    /// completed access (queued model: at most one per call — the engine
+    /// calls this once per cycle and accesses take ≥ 1 cycle).
+    pub fn tick(&mut self, now: u64, mem_cycles: u64) -> Option<usize> {
+        match self.model {
+            MemModel::Queued => {
+                let mut finished = None;
+                if let Some((pe, done_at)) = self.in_service {
+                    if done_at <= now {
+                        finished = Some(pe);
+                        self.in_service = None;
+                        self.served += 1;
+                    }
+                }
+                if self.in_service.is_none() {
+                    if let Some((pe, _arrived)) = self.queue.pop_front() {
+                        self.in_service = Some((pe, now + mem_cycles.max(1)));
+                    }
+                }
+                finished
+            }
+            MemModel::Parallel => {
+                // Start every queued request immediately.
+                while let Some((pe, arrived)) = self.queue.pop_front() {
+                    self.outstanding.push((pe, arrived + mem_cycles.max(1)));
+                }
+                // Complete at most one per call to keep the engine's
+                // one-response-per-cycle contract; the rest complete on
+                // subsequent cycles (the NI serialises responses anyway).
+                let idx = self
+                    .outstanding
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &(_, d))| d <= now)
+                    .min_by_key(|(_, &(pe, d))| (d, pe))
+                    .map(|(i, _)| i);
+                idx.map(|i| {
+                    self.served += 1;
+                    self.outstanding.remove(i).0
+                })
+            }
+        }
+    }
+
+    /// True when no request is queued or in flight.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.in_service.is_none() && self.outstanding.is_empty()
+    }
+
+    /// Requests waiting behind the one in service.
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_service_with_bandwidth_delay() {
+        let mut mc = Mc::new(9);
+        mc.on_request(3, 10);
+        mc.on_request(7, 11);
+        // Cycle 10: starts serving PE 3 (4-cycle access → done at 14).
+        assert_eq!(mc.tick(10, 4), None);
+        assert_eq!(mc.tick(13, 4), None);
+        // Cycle 14: PE 3 done; PE 7 starts (done at 18).
+        assert_eq!(mc.tick(14, 4), Some(3));
+        assert_eq!(mc.tick(17, 4), None);
+        assert_eq!(mc.tick(18, 4), Some(7));
+        assert!(mc.idle());
+        assert_eq!(mc.served, 2);
+    }
+
+    #[test]
+    fn minimum_one_cycle_service() {
+        let mut mc = Mc::new(9);
+        mc.on_request(0, 0);
+        assert_eq!(mc.tick(0, 0), None);
+        assert_eq!(mc.tick(1, 0), Some(0));
+    }
+
+    #[test]
+    fn backlog_counts_waiting_only() {
+        let mut mc = Mc::new(10);
+        for pe in 0..5 {
+            mc.on_request(pe, 0);
+        }
+        mc.tick(0, 4); // one enters service
+        assert_eq!(mc.backlog(), 4);
+        assert!(!mc.idle());
+    }
+}

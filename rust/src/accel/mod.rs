@@ -1,0 +1,20 @@
+//! The CNN-NoC accelerator co-simulation (§5.1's "cycle-accurate CNN-NoC
+//! accelerator simulation environment based on a behavior-level NoC
+//! simulator").
+//!
+//! * [`record`] — per-task travel-time records (Eq. 3 components).
+//! * [`pe`] — processing element: 64 MACs at 200 MHz, a sequential
+//!   request → response → compute → result task loop with the result/next-
+//!   request overlap of §4.1.
+//! * [`mc`] — memory controller: FIFO service at DDR5-like bandwidth
+//!   (one 16-bit datum per 0.0625 router cycles).
+//! * [`sim`] — the engine that drives PEs and MCs against the NoC, with
+//!   support for adding task budgets mid-run (the sampling-window flow).
+
+pub mod mc;
+pub mod pe;
+pub mod record;
+pub mod sim;
+
+pub use record::{PePhaseTotals, TaskRecord};
+pub use sim::{SimResult, Simulation};

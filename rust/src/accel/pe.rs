@@ -1,0 +1,199 @@
+//! The processing-element device model.
+//!
+//! Each PE (Simba-like, 64 MAC units at 200 MHz — §5.1) executes its
+//! assigned tasks strictly sequentially: issue a request, wait for the
+//! response, compute, then send the result *and immediately issue the next
+//! request* (the §4.1 overlap). Compute durations are whole PE cycles
+//! (the NoC clock runs 10× faster), applied as a plain delay per §5.1.
+
+use crate::accel::record::TaskRecord;
+use crate::noc::NodeId;
+
+/// PE execution state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeState {
+    /// No task in flight (either before the first issue or out of budget).
+    Idle,
+    /// Request issued at `t_issue`; waiting for the response tail.
+    Waiting {
+        /// Issue cycle of the in-flight request.
+        t_issue: u64,
+    },
+    /// Response received; MACs busy until `done_at`.
+    Computing {
+        /// Issue cycle (carried into the final record).
+        t_issue: u64,
+        /// Request delivery cycle at the MC.
+        t_req_arrive: u64,
+        /// First response flit out of the MC NI.
+        t_resp_depart: u64,
+        /// Response tail arrival cycle.
+        t_resp_arrive: u64,
+        /// Cycle the MAC array finishes.
+        done_at: u64,
+    },
+}
+
+/// One processing element.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    /// Dense index (position in the platform PE list).
+    pub index: usize,
+    /// Mesh node hosting this PE.
+    pub node: NodeId,
+    /// The MC this PE fetches from / reports to (nearest, ties balanced).
+    pub mc: NodeId,
+    /// Tasks this PE may execute (budget; can grow mid-run).
+    budget: u64,
+    /// Requests issued so far.
+    issued: u64,
+    /// Tasks completed so far.
+    completed: u64,
+    /// Current state.
+    state: PeState,
+    /// Completion cycle of the most recent task (0 if none).
+    pub last_done: u64,
+}
+
+impl Pe {
+    /// New idle PE with zero budget.
+    pub fn new(index: usize, node: NodeId, mc: NodeId) -> Self {
+        Self { index, node, mc, budget: 0, issued: 0, completed: 0, state: PeState::Idle, last_done: 0 }
+    }
+
+    /// Grant `n` more tasks.
+    pub fn add_budget(&mut self, n: u64) {
+        self.budget += n;
+    }
+
+    /// Tasks assigned in total.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Tasks completed.
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// True when every budgeted task has completed.
+    pub fn done(&self) -> bool {
+        self.completed == self.budget && matches!(self.state, PeState::Idle)
+    }
+
+    /// Current state (tests/diagnostics).
+    pub fn state(&self) -> PeState {
+        self.state
+    }
+
+    /// Should a new request be issued this cycle? (Engine calls this when
+    /// the PE is idle or has just completed a task.)
+    pub fn wants_issue(&self) -> bool {
+        matches!(self.state, PeState::Idle) && self.issued < self.budget
+    }
+
+    /// Mark a request issued at `now`.
+    pub fn note_issued(&mut self, now: u64) {
+        debug_assert!(self.wants_issue(), "PE {} cannot issue now", self.index);
+        self.issued += 1;
+        self.state = PeState::Waiting { t_issue: now };
+    }
+
+    /// Response tail arrived; start computing. `compute_cycles` is the
+    /// task's MAC time in router cycles (a whole number of PE cycles — the
+    /// 200 MHz PE clock determines the *duration*; the paper's model applies
+    /// the MAC delay directly, with no start-edge alignment, which keeps
+    /// per-task travel times continuous as in Fig. 7a).
+    pub fn on_response(
+        &mut self,
+        now: u64,
+        t_req_arrive: u64,
+        t_resp_depart: u64,
+        compute_cycles: u64,
+    ) {
+        let PeState::Waiting { t_issue } = self.state else {
+            panic!("PE {} got a response while not waiting", self.index);
+        };
+        self.state = PeState::Computing {
+            t_issue,
+            t_req_arrive,
+            t_resp_depart,
+            t_resp_arrive: now,
+            done_at: now + compute_cycles,
+        };
+    }
+
+    /// If computing and the MACs finish at or before `now`, complete the
+    /// task and return its record (the engine then sends the result packet
+    /// and lets the PE issue again in the same cycle).
+    pub fn try_complete(&mut self, now: u64) -> Option<TaskRecord> {
+        let PeState::Computing { t_issue, t_req_arrive, t_resp_depart, t_resp_arrive, done_at } =
+            self.state
+        else {
+            return None;
+        };
+        if done_at > now {
+            return None;
+        }
+        self.completed += 1;
+        self.last_done = done_at;
+        self.state = PeState::Idle;
+        Some(TaskRecord { pe: self.index, t_issue, t_req_arrive, t_resp_depart, t_resp_arrive, t_compute_done: done_at })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_issue_respond_compute_complete() {
+        let mut pe = Pe::new(0, 5, 9);
+        pe.add_budget(2);
+        assert!(pe.wants_issue());
+        pe.note_issued(100);
+        assert!(!pe.wants_issue());
+        assert_eq!(pe.state(), PeState::Waiting { t_issue: 100 });
+        // Response at 127; compute 10 router cycles → done at 137.
+        pe.on_response(127, 110, 114, 10);
+        assert!(pe.try_complete(136).is_none());
+        let r = pe.try_complete(137).expect("done at 137");
+        assert_eq!(r.t_compute_done, 137);
+        assert_eq!(r.t_issue, 100);
+        assert_eq!(r.travel_time(), 37);
+        assert_eq!(pe.completed(), 1);
+        assert!(pe.wants_issue(), "second task pending");
+        assert!(!pe.done());
+    }
+
+    #[test]
+    fn compute_duration_is_exact() {
+        let mut pe = Pe::new(0, 5, 9);
+        pe.add_budget(1);
+        pe.note_issued(0);
+        pe.on_response(23, 5, 9, 10);
+        assert_eq!(pe.try_complete(33).unwrap().t_compute_done, 33);
+    }
+
+    #[test]
+    fn done_only_after_all_budget() {
+        let mut pe = Pe::new(1, 0, 9);
+        pe.add_budget(1);
+        pe.note_issued(0);
+        pe.on_response(10, 4, 6, 10);
+        assert!(!pe.done());
+        pe.try_complete(20).unwrap();
+        assert!(pe.done());
+        // Budget growth revives the PE (sampling-window phase 2).
+        pe.add_budget(3);
+        assert!(!pe.done());
+        assert!(pe.wants_issue());
+    }
+
+    #[test]
+    #[should_panic(expected = "not waiting")]
+    fn response_without_request_panics() {
+        let mut pe = Pe::new(0, 5, 9);
+        pe.on_response(10, 4, 6, 10);
+    }
+}

@@ -1,0 +1,151 @@
+//! Per-task travel-time records — the paper's Eq. 3 decomposition:
+//!
+//! ```text
+//! T_travel = T_req + T_memaccess + T_resp + T_compu
+//! ```
+//!
+//! All timestamps are router cycles measured by the co-simulation:
+//!
+//! * `t_issue` — the PE hands the request packet to its NI (brown path
+//!   starts; packetization is inside `T_req`, it is part of the fixed
+//!   overhead of Eq. 6);
+//! * `t_req_arrive` — request delivered at the MC;
+//! * `t_resp_depart` — first response flit leaves the MC's NI (§4.1: the
+//!   response trajectory "is tracked from the moment the first flit leaves
+//!   the MC node's NI");
+//! * `t_resp_arrive` — response tail arrives at the PE;
+//! * `t_compute_done` — the PE finishes the task's MAC work.
+//!
+//! The result packet's travel is deliberately *not* part of the travel
+//! time: "PE will generate the next request packet while previous results
+//! are on the way … to avoid counting this overlapped travel time twice."
+
+/// Timing record for one completed task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskRecord {
+    /// Dense PE index (position in the platform's PE list).
+    pub pe: usize,
+    /// Cycle the request was issued.
+    pub t_issue: u64,
+    /// Cycle the request's tail was delivered at the MC.
+    pub t_req_arrive: u64,
+    /// Cycle the response's first flit left the MC NI.
+    pub t_resp_depart: u64,
+    /// Cycle the response's tail arrived at the PE.
+    pub t_resp_arrive: u64,
+    /// Cycle the computation finished.
+    pub t_compute_done: u64,
+}
+
+impl TaskRecord {
+    /// Request travel time `T_req` (includes source packetization).
+    pub fn t_req(&self) -> u64 {
+        self.t_req_arrive - self.t_issue
+    }
+
+    /// Memory access time `T_memaccess` (includes MC queueing — the paper's
+    /// congestion signal is implicit in the recorded components).
+    pub fn t_mem(&self) -> u64 {
+        self.t_resp_depart - self.t_req_arrive
+    }
+
+    /// Response travel time `T_resp` (MC NI → PE, tail arrival).
+    pub fn t_resp(&self) -> u64 {
+        self.t_resp_arrive - self.t_resp_depart
+    }
+
+    /// Compute time `T_compu`.
+    pub fn t_comp(&self) -> u64 {
+        self.t_compute_done - self.t_resp_arrive
+    }
+
+    /// End-to-end travel time (Eq. 3). Identical to the sum of the four
+    /// components by construction.
+    pub fn travel_time(&self) -> u64 {
+        self.t_compute_done - self.t_issue
+    }
+}
+
+/// Per-PE accumulated phase totals — the stacked bars of Fig. 7e–h.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PePhaseTotals {
+    /// Completed task count.
+    pub tasks: u64,
+    /// Σ T_req.
+    pub req: u64,
+    /// Σ T_memaccess.
+    pub mem: u64,
+    /// Σ T_resp.
+    pub resp: u64,
+    /// Σ T_compu.
+    pub comp: u64,
+}
+
+impl PePhaseTotals {
+    /// Add one task record.
+    pub fn add(&mut self, r: &TaskRecord) {
+        self.tasks += 1;
+        self.req += r.t_req();
+        self.mem += r.t_mem();
+        self.resp += r.t_resp();
+        self.comp += r.t_comp();
+    }
+
+    /// Total accumulated travel time (the bar height in Fig. 7e–h).
+    pub fn total(&self) -> u64 {
+        self.req + self.mem + self.resp + self.comp
+    }
+
+    /// Mean travel time per task (the bar height in Fig. 7a–d).
+    pub fn mean(&self) -> f64 {
+        if self.tasks == 0 {
+            0.0
+        } else {
+            self.total() as f64 / self.tasks as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> TaskRecord {
+        TaskRecord {
+            pe: 3,
+            t_issue: 100,
+            t_req_arrive: 110,
+            t_resp_depart: 114,
+            t_resp_arrive: 130,
+            t_compute_done: 140,
+        }
+    }
+
+    #[test]
+    fn components_sum_to_travel_time() {
+        let r = rec();
+        assert_eq!(r.t_req(), 10);
+        assert_eq!(r.t_mem(), 4);
+        assert_eq!(r.t_resp(), 16);
+        assert_eq!(r.t_comp(), 10);
+        assert_eq!(r.travel_time(), 40);
+        assert_eq!(r.t_req() + r.t_mem() + r.t_resp() + r.t_comp(), r.travel_time());
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut t = PePhaseTotals::default();
+        t.add(&rec());
+        t.add(&rec());
+        assert_eq!(t.tasks, 2);
+        assert_eq!(t.total(), 80);
+        assert!((t.mean() - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_totals_mean_zero() {
+        let t = PePhaseTotals::default();
+        assert_eq!(t.mean(), 0.0);
+        assert_eq!(t.total(), 0);
+    }
+}

@@ -1,0 +1,416 @@
+//! The co-simulation engine: PEs + MCs driven against the cycle-accurate
+//! NoC until a layer's task budget completes.
+//!
+//! Each router cycle the engine:
+//! 1. advances the network one cycle;
+//! 2. reacts to delivered packets (requests enter MC queues, responses
+//!    start PE computation, results are logged);
+//! 3. ticks every MC (bandwidth-model service; finished accesses emit
+//!    response packets into the MC's NI);
+//! 4. ticks every PE (completes computation → emits the result packet and
+//!    immediately issues the next request, §4.1's overlap).
+//!
+//! The engine supports growing per-PE budgets mid-run, which is how the
+//! sampling-window mapper (Fig. 6) allocates the residual tasks after the
+//! sampled phase without restarting the platform.
+
+use crate::accel::mc::Mc;
+use crate::accel::pe::Pe;
+use crate::accel::record::{PePhaseTotals, TaskRecord};
+use crate::config::PlatformConfig;
+use crate::dnn::TaskProfile;
+use crate::noc::{Network, PacketId, PacketKind};
+
+/// Hard per-phase cycle cap — hit only on a simulator bug (deadlock).
+const MAX_PHASE_CYCLES: u64 = 2_000_000_000;
+
+/// Outcome of a completed simulation phase/run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Every completed task's record, in completion order.
+    pub records: Vec<TaskRecord>,
+    /// Per-PE phase totals (Fig. 7e–h bars).
+    pub totals: Vec<PePhaseTotals>,
+    /// Per-PE cycle of last compute completion (0 for an unused PE).
+    pub finish: Vec<u64>,
+    /// The layer inference latency: max over PEs of `finish` (§5.2: the
+    /// slowest PE "determines the final inference time for a layer").
+    pub latency: u64,
+    /// Cycle at which the whole platform went quiescent (results drained).
+    pub drained_at: u64,
+}
+
+impl SimResult {
+    /// Mean travel time per task for each PE (Fig. 7a–d bars). PEs with no
+    /// tasks yield `None`.
+    pub fn mean_travel_times(&self) -> Vec<Option<f64>> {
+        self.totals
+            .iter()
+            .map(|t| (t.tasks > 0).then(|| t.mean()))
+            .collect()
+    }
+
+    /// Per-PE task counts actually executed.
+    pub fn task_counts(&self) -> Vec<u64> {
+        self.totals.iter().map(|t| t.tasks).collect()
+    }
+}
+
+/// The engine.
+pub struct Simulation {
+    cfg: PlatformConfig,
+    profile: TaskProfile,
+    net: Network,
+    pes: Vec<Pe>,
+    mcs: Vec<Mc>,
+    /// request packet id → (t_req_arrive at MC) filled on delivery; keyed
+    /// implicitly via PE state instead (single outstanding request per PE).
+    records: Vec<TaskRecord>,
+    /// Pending response metadata per PE: (t_req_arrive, response packet id).
+    resp_meta: Vec<Option<(u64, PacketId)>>,
+}
+
+impl Simulation {
+    /// Build a fresh platform for one layer profile. All budgets start at 0;
+    /// assign with [`add_budgets`](Self::add_budgets).
+    pub fn new(cfg: &PlatformConfig, profile: TaskProfile) -> Self {
+        cfg.validate().expect("invalid platform");
+        let net = Network::new(cfg);
+        let mcs: Vec<Mc> = cfg.mc_nodes.iter().map(|&n| Mc::with_model(n, cfg.mem_model)).collect();
+        // Nearest-MC assignment; ties balanced by round-robin over the tied
+        // set in PE order (deterministic).
+        let mesh = net.mesh().clone();
+        let mut tie_rr = 0usize;
+        let pes: Vec<Pe> = cfg
+            .pe_nodes()
+            .into_iter()
+            .enumerate()
+            .map(|(i, node)| {
+                let best = cfg
+                    .mc_nodes
+                    .iter()
+                    .map(|&mc| mesh.hop_distance(node, mc))
+                    .min()
+                    .expect("at least one MC");
+                let tied: Vec<usize> = cfg
+                    .mc_nodes
+                    .iter()
+                    .copied()
+                    .filter(|&mc| mesh.hop_distance(node, mc) == best)
+                    .collect();
+                let mc = tied[tie_rr % tied.len()];
+                if tied.len() > 1 {
+                    tie_rr += 1;
+                }
+                Pe::new(i, node, mc)
+            })
+            .collect();
+        let n = pes.len();
+        Self { cfg: cfg.clone(), profile, net, pes, mcs, records: Vec::new(), resp_meta: vec![None; n] }
+    }
+
+    /// The platform configuration in use.
+    pub fn cfg(&self) -> &PlatformConfig {
+        &self.cfg
+    }
+
+    /// The per-task cost profile in use.
+    pub fn profile(&self) -> &TaskProfile {
+        &self.profile
+    }
+
+    /// Dense-index → mesh-node mapping of the PEs.
+    pub fn pe_nodes(&self) -> Vec<usize> {
+        self.pes.iter().map(|p| p.node).collect()
+    }
+
+    /// Grow per-PE budgets. `counts[i]` adds to PE `i` (dense index).
+    pub fn add_budgets(&mut self, counts: &[u64]) {
+        assert_eq!(counts.len(), self.pes.len(), "budget vector length mismatch");
+        for (pe, &c) in self.pes.iter_mut().zip(counts) {
+            pe.add_budget(c);
+        }
+    }
+
+    /// Current cycle.
+    pub fn now(&self) -> u64 {
+        self.net.now()
+    }
+
+    /// Records completed so far (also available from [`run_until_done`]'s
+    /// result).
+    pub fn records(&self) -> &[TaskRecord] {
+        &self.records
+    }
+
+    /// Network traffic statistics (per-port switching counters, latency
+    /// sums) accumulated so far.
+    pub fn network_stats(&self) -> &crate::noc::NetworkStats {
+        self.net.stats()
+    }
+
+    /// Run until every PE has completed its budget **and** the network has
+    /// drained (result packets delivered).
+    ///
+    /// Returns the aggregate result over *all* records accumulated so far
+    /// (across phases, if budgets were added in stages).
+    pub fn run_until_done(&mut self) -> SimResult {
+        let start = self.net.now();
+        loop {
+            let pes_done = self.pes.iter().all(Pe::done);
+            let mcs_idle = self.mcs.iter().all(Mc::idle);
+            if pes_done && mcs_idle && self.net.quiescent() {
+                break;
+            }
+            assert!(
+                self.net.now() - start < MAX_PHASE_CYCLES,
+                "simulation failed to converge — deadlock?"
+            );
+            self.step();
+        }
+        self.result()
+    }
+
+    /// Run until every PE has completed its budget (network may still be
+    /// draining result packets). Used between sampling and residual phases.
+    pub fn run_until_budgets_met(&mut self) -> SimResult {
+        let start = self.net.now();
+        while !self.pes.iter().all(Pe::done) {
+            assert!(
+                self.net.now() - start < MAX_PHASE_CYCLES,
+                "sampling phase failed to converge — deadlock?"
+            );
+            self.step();
+        }
+        self.result()
+    }
+
+    /// Aggregate the records into a [`SimResult`] snapshot.
+    pub fn result(&self) -> SimResult {
+        let n = self.pes.len();
+        let mut totals = vec![PePhaseTotals::default(); n];
+        for r in &self.records {
+            totals[r.pe].add(r);
+        }
+        let finish: Vec<u64> = self.pes.iter().map(|p| p.last_done).collect();
+        let latency = finish.iter().copied().max().unwrap_or(0);
+        SimResult { records: self.records.clone(), totals, finish, latency, drained_at: self.net.now() }
+    }
+
+    /// One router-clock cycle of the whole platform.
+    pub fn step(&mut self) {
+        self.net.step();
+        let now = self.net.now();
+
+        // 2. Packet deliveries.
+        for (pkt, _t) in self.net.drain_delivered() {
+            let info = self.net.packet(pkt);
+            match info.kind {
+                PacketKind::Request => {
+                    let pe = info.tag as usize;
+                    // Find which MC lives at the destination node.
+                    let mc = self
+                        .mcs
+                        .iter_mut()
+                        .find(|m| m.node == info.dst)
+                        .expect("request addressed to a non-MC node");
+                    mc.on_request(pe, now);
+                    // Remember the request arrival for the task record.
+                    debug_assert!(self.resp_meta[pe].is_none());
+                    self.resp_meta[pe] = Some((now, PacketId::MAX));
+                }
+                PacketKind::Response => {
+                    let pe = info.tag as usize;
+                    let (t_req_arrive, resp_id) =
+                        self.resp_meta[pe].take().expect("response without request");
+                    debug_assert_eq!(resp_id, pkt, "response packet mismatch");
+                    let t_resp_depart = self.net.packet(pkt).t_first_flit_out;
+                    self.pes[pe].on_response(
+                        now,
+                        t_req_arrive,
+                        t_resp_depart,
+                        self.profile.compute_cycles,
+                    );
+                }
+                PacketKind::Result => {
+                    // Results sink at the MC; no further action (§4.1: their
+                    // travel is overlapped and not counted again).
+                }
+            }
+        }
+
+        // 3. MC service.
+        for i in 0..self.mcs.len() {
+            let mc_node = self.mcs[i].node;
+            if let Some(pe) = self.mcs[i].tick(now, self.profile.mem_cycles) {
+                let dst = self.pes[pe].node;
+                let id = self.net.send_packetized(
+                    &self.cfg,
+                    mc_node,
+                    dst,
+                    PacketKind::Response,
+                    self.profile.resp_flits,
+                    pe as u64,
+                );
+                // Attach the response id so delivery can cross-check.
+                if let Some(meta) = self.resp_meta[pe].as_mut() {
+                    meta.1 = id;
+                } else {
+                    unreachable!("MC finished an access for a PE with no pending request");
+                }
+            }
+        }
+
+        // 4. PE completion + issue.
+        for i in 0..self.pes.len() {
+            if let Some(record) = self.pes[i].try_complete(now) {
+                // Result packet back to the MC (overlapped with next issue).
+                let (src, dst) = (self.pes[i].node, self.pes[i].mc);
+                self.net.send_packetized(
+                    &self.cfg,
+                    src,
+                    dst,
+                    PacketKind::Result,
+                    self.profile.result_flits,
+                    i as u64,
+                );
+                self.records.push(record);
+            }
+            if self.pes[i].wants_issue() {
+                let (src, dst) = (self.pes[i].node, self.pes[i].mc);
+                self.net.send_packetized(&self.cfg, src, dst, PacketKind::Request, self.profile.req_flits, i as u64);
+                self.pes[i].note_issued(now);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::LayerSpec;
+
+    fn c1_profile(cfg: &PlatformConfig) -> TaskProfile {
+        LayerSpec::conv("C1", 5, 1.0, 4704).profile(cfg)
+    }
+
+    #[test]
+    fn single_task_single_pe() {
+        let cfg = PlatformConfig::default_2mc();
+        let profile = c1_profile(&cfg);
+        let mut sim = Simulation::new(&cfg, profile);
+        let mut counts = vec![0u64; 14];
+        counts[0] = 1; // PE dense index 0 = node 0 (farthest)
+        sim.add_budgets(&counts);
+        let res = sim.run_until_done();
+        assert_eq!(res.records.len(), 1);
+        let r = &res.records[0];
+        assert_eq!(r.pe, 0);
+        // Components are each positive and sum to the travel time.
+        assert!(r.t_req() > 0 && r.t_mem() > 0 && r.t_resp() > 0 && r.t_comp() > 0);
+        assert_eq!(r.travel_time(), r.t_req() + r.t_mem() + r.t_resp() + r.t_comp());
+        // Compute is exactly one PE cycle (25 MACs) = 10 router cycles.
+        assert_eq!(r.t_comp(), 10);
+        assert_eq!(res.latency, r.t_compute_done);
+        assert!(res.drained_at >= res.latency, "result packet must drain");
+    }
+
+    #[test]
+    fn near_pe_faster_than_far_pe_unloaded() {
+        let cfg = PlatformConfig::default_2mc();
+        let profile = c1_profile(&cfg);
+        let pe_nodes = cfg.pe_nodes();
+        let near_idx = pe_nodes.iter().position(|&n| n == 5).unwrap(); // distance 1
+        let far_idx = pe_nodes.iter().position(|&n| n == 0).unwrap(); // distance 3
+        let run_one = |idx: usize| {
+            let mut sim = Simulation::new(&cfg, profile);
+            let mut counts = vec![0u64; 14];
+            counts[idx] = 1;
+            sim.add_budgets(&counts);
+            sim.run_until_done().records[0].travel_time()
+        };
+        assert!(run_one(near_idx) < run_one(far_idx));
+    }
+
+    #[test]
+    fn all_pes_one_task_each_all_complete() {
+        let cfg = PlatformConfig::default_2mc();
+        let profile = c1_profile(&cfg);
+        let mut sim = Simulation::new(&cfg, profile);
+        sim.add_budgets(&vec![1; 14]);
+        let res = sim.run_until_done();
+        assert_eq!(res.records.len(), 14);
+        assert!(res.task_counts().iter().all(|&c| c == 1));
+        // Contention at 2 MCs: travel times spread out.
+        let times: Vec<u64> = res.records.iter().map(TaskRecord::travel_time).collect();
+        let (min, max) = (times.iter().min().unwrap(), times.iter().max().unwrap());
+        assert!(max > min, "congestion should differentiate PEs: {times:?}");
+    }
+
+    #[test]
+    fn sequential_tasks_per_pe_do_not_overlap_compute() {
+        let cfg = PlatformConfig::default_2mc();
+        let profile = c1_profile(&cfg);
+        let mut sim = Simulation::new(&cfg, profile);
+        let mut counts = vec![0u64; 14];
+        counts[3] = 5;
+        sim.add_budgets(&counts);
+        let res = sim.run_until_done();
+        assert_eq!(res.records.len(), 5);
+        // Strictly increasing issue and completion times; next issue is at
+        // or after previous completion (sequential loop).
+        for w in res.records.windows(2) {
+            assert!(w[1].t_issue >= w[0].t_compute_done, "overlap: {w:?}");
+        }
+    }
+
+    #[test]
+    fn budgets_can_grow_mid_run() {
+        let cfg = PlatformConfig::default_2mc();
+        let profile = c1_profile(&cfg);
+        let mut sim = Simulation::new(&cfg, profile);
+        sim.add_budgets(&vec![2; 14]);
+        let phase1 = sim.run_until_budgets_met();
+        assert_eq!(phase1.records.len(), 28);
+        sim.add_budgets(&vec![1; 14]);
+        let phase2 = sim.run_until_done();
+        assert_eq!(phase2.records.len(), 42);
+        assert!(phase2.latency > phase1.latency);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = PlatformConfig::default_2mc();
+        let profile = c1_profile(&cfg);
+        let run = || {
+            let mut sim = Simulation::new(&cfg, profile);
+            sim.add_budgets(&vec![10; 14]);
+            let r = sim.run_until_done();
+            (r.latency, r.drained_at, r.records.len())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn mc_tie_breaking_balances_load() {
+        // Node 1 and node 2 are equidistant from MCs 9 and 10; the tie
+        // round-robin must not send every tied PE to the same MC.
+        let cfg = PlatformConfig::default_2mc();
+        let profile = c1_profile(&cfg);
+        let sim = Simulation::new(&cfg, profile);
+        let assignments: Vec<(usize, usize)> =
+            sim.pes.iter().map(|p| (p.node, p.mc)).collect();
+        let to9 = assignments.iter().filter(|&&(_, mc)| mc == 9).count();
+        let to10 = assignments.iter().filter(|&&(_, mc)| mc == 10).count();
+        assert_eq!(to9 + to10, 14);
+        assert!((to9 as i64 - to10 as i64).abs() <= 2, "unbalanced: 9→{to9}, 10→{to10}");
+        // Distance-1 nodes keep their nearest MC.
+        for &(node, mc) in &assignments {
+            let mesh = crate::noc::Mesh::new(4, 4);
+            let d_own = mesh.hop_distance(node, mc);
+            let d_best =
+                cfg.mc_nodes.iter().map(|&m| mesh.hop_distance(node, m)).min().unwrap();
+            assert_eq!(d_own, d_best, "PE at node {node} not assigned nearest MC");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Platform and experiment configuration.
+//!
+//! All constants default to the paper's §5.1 setup: a 4x4 mesh VC NoC at
+//! 2 GHz (Garnet-derived: 4 VCs per link, 4-flit buffers, X-Y routing),
+//! Simba-like PEs with 64 MAC units at 200 MHz, and DDR5-like memory
+//! controllers with 64 GB/s bandwidth (one 16-bit datum every 0.0625 router
+//! cycles).
+
+pub mod platform;
+
+pub use platform::{MemModel, PlacementPreset, PlatformConfig};

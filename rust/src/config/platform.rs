@@ -1,0 +1,239 @@
+//! The accelerator platform description (§5.1 of the paper).
+
+/// Memory-controller placement presets used in the evaluation.
+///
+/// Placements are reverse-engineered from Fig. 1/Fig. 3: with MCs at mesh
+/// nodes 9 and 10 the distance classes match the paper exactly —
+/// D1 = {5, 6, 8, 11, 13, 14}, D2 = {1, 2, 4, 7, 12, 15}, D3 = {0, 3}
+/// ("Nodes 13, 5, and 8 are the fastest … nodes 1, 4, and 12 … distances
+/// are two. Node 0 has the longest distance, three").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPreset {
+    /// Default §5.1 platform: 4x4 mesh, two MCs (nodes 9, 10), 14 PEs.
+    TwoMc,
+    /// Fig. 10b variant: 4x4 mesh, four MCs (centre nodes 5, 6, 9, 10),
+    /// 12 PEs — flattens the distance distribution.
+    FourMc,
+}
+
+/// Memory-controller service discipline (ablation knob).
+///
+/// The paper's §5.1 bandwidth statement ("64 GB/s … the memory access
+/// delay is determined by the data number") is compatible with two
+/// behavioural models; the ablation experiment (`noctt exp ablation`)
+/// quantifies the difference:
+///
+/// * [`MemModel::Queued`] — **default**: one access in service at a time,
+///   FIFO; the bandwidth is a shared, saturable resource (a real DDR
+///   channel). Past the saturation knee every PE becomes equally
+///   memory-bound and unevenness collapses (see EXPERIMENTS.md §fig9).
+/// * [`MemModel::Parallel`] — the access delay is a pure latency applied
+///   per request with unlimited concurrency (a simpler behavioural model;
+///   keeps unevenness alive at every packet size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemModel {
+    /// FIFO, bandwidth-limited service (default).
+    #[default]
+    Queued,
+    /// Fixed-latency, infinitely parallel service.
+    Parallel,
+}
+
+/// Full platform configuration. Time unit throughout the simulator is one
+/// **router cycle** (NoC clock, 2 GHz by default → 0.5 ns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformConfig {
+    /// Mesh width (columns).
+    pub mesh_width: usize,
+    /// Mesh height (rows).
+    pub mesh_height: usize,
+    /// Node ids hosting memory controllers; every other node hosts a PE.
+    pub mc_nodes: Vec<usize>,
+    /// Virtual channels per physical link (paper: 4).
+    pub num_vcs: usize,
+    /// Flit buffer depth per VC (paper: 4).
+    pub vc_depth: usize,
+    /// Bits carried by one flit. 256 reproduces Table 1 exactly:
+    /// `flits(k) = ceil(2·k²·16 / 256)` gives 1/2/4/7/11/16/22 for
+    /// k = 1/3/5/7/9/11/13.
+    pub flit_bits: u64,
+    /// Bits per datum (16-bit fixed point, §5.1).
+    pub data_bits: u64,
+    /// Router cycles per PE cycle (2 GHz NoC / 200 MHz PE = 10).
+    pub pe_clock_ratio: u64,
+    /// MAC units per PE (Simba-like, 64).
+    pub macs_per_pe: u64,
+    /// Memory bandwidth in bytes per router cycle (64 GB/s at 2 GHz = 32).
+    pub mem_bytes_per_cycle: u64,
+    /// Fixed packetization overhead at each NI, in router cycles.
+    pub ni_packetize_cycles: u64,
+    /// No-load per-hop head-flit latency used by the *static* latency
+    /// estimate of Eq. 6 (router pipeline + link; the simulator's actual
+    /// pipeline is 3 stages + 1-cycle link).
+    pub static_hop_cycles: u64,
+    /// Memory-controller service discipline (see [`MemModel`]).
+    pub mem_model: MemModel,
+}
+
+impl PlatformConfig {
+    /// The paper's default platform (§5.1): 4x4 mesh, 2 MCs, 14 PEs.
+    pub fn default_2mc() -> Self {
+        Self::preset(PlacementPreset::TwoMc)
+    }
+
+    /// The Fig. 10b platform: 4x4 mesh, 4 MCs, 12 PEs.
+    pub fn default_4mc() -> Self {
+        Self::preset(PlacementPreset::FourMc)
+    }
+
+    /// Build a platform from a placement preset with §5.1 constants.
+    pub fn preset(p: PlacementPreset) -> Self {
+        let mc_nodes = match p {
+            PlacementPreset::TwoMc => vec![9, 10],
+            PlacementPreset::FourMc => vec![5, 6, 9, 10],
+        };
+        Self {
+            mesh_width: 4,
+            mesh_height: 4,
+            mc_nodes,
+            num_vcs: 4,
+            vc_depth: 4,
+            flit_bits: 256,
+            data_bits: 16,
+            pe_clock_ratio: 10,
+            macs_per_pe: 64,
+            mem_bytes_per_cycle: 32,
+            ni_packetize_cycles: 2,
+            static_hop_cycles: 4,
+            mem_model: MemModel::Queued,
+        }
+    }
+
+    /// Total node count in the mesh.
+    pub fn num_nodes(&self) -> usize {
+        self.mesh_width * self.mesh_height
+    }
+
+    /// Node ids hosting PEs, ascending (row-major order — the paper's
+    /// row-major mapping walks this list).
+    pub fn pe_nodes(&self) -> Vec<usize> {
+        (0..self.num_nodes()).filter(|n| !self.mc_nodes.contains(n)).collect()
+    }
+
+    /// Number of PE nodes.
+    pub fn num_pes(&self) -> usize {
+        self.num_nodes() - self.mc_nodes.len()
+    }
+
+    /// Flits needed to carry `words` data items of `data_bits` each
+    /// (payload packets; at least one flit).
+    pub fn flits_for_words(&self, words: u64) -> u64 {
+        let bits = words * self.data_bits;
+        bits.div_ceil(self.flit_bits).max(1)
+    }
+
+    /// Memory access cycles to fetch `words` data items at the configured
+    /// bandwidth (§5.1: one 16-bit datum = 0.0625 router cycles).
+    pub fn mem_access_cycles(&self, words: u64) -> u64 {
+        let bytes = words * self.data_bits.div_ceil(8);
+        bytes.div_ceil(self.mem_bytes_per_cycle).max(1)
+    }
+
+    /// PE compute cycles (in **router** cycles) for a task of `macs`
+    /// multiply-accumulates: `ceil(macs / 64)` PE cycles × clock ratio.
+    pub fn compute_cycles(&self, macs: u64) -> u64 {
+        macs.div_ceil(self.macs_per_pe).max(1) * self.pe_clock_ratio
+    }
+
+    /// Basic structural validation.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.mesh_width >= 2 && self.mesh_height >= 2, "mesh must be at least 2x2");
+        anyhow::ensure!(!self.mc_nodes.is_empty(), "need at least one MC node");
+        anyhow::ensure!(
+            self.mc_nodes.iter().all(|&n| n < self.num_nodes()),
+            "MC node id out of range"
+        );
+        let mut sorted = self.mc_nodes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        anyhow::ensure!(sorted.len() == self.mc_nodes.len(), "duplicate MC nodes");
+        anyhow::ensure!(self.num_pes() >= 1, "need at least one PE node");
+        anyhow::ensure!(self.num_vcs >= 1 && self.vc_depth >= 1, "need VCs and buffers");
+        anyhow::ensure!(self.flit_bits >= self.data_bits, "flit smaller than one datum");
+        anyhow::ensure!(self.pe_clock_ratio >= 1, "PE clock ratio must be >= 1");
+        Ok(())
+    }
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        Self::default_2mc()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_has_14_pes() {
+        let p = PlatformConfig::default_2mc();
+        assert_eq!(p.num_pes(), 14);
+        assert_eq!(p.pe_nodes().len(), 14);
+        assert!(!p.pe_nodes().contains(&9));
+        assert!(!p.pe_nodes().contains(&10));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn four_mc_has_12_pes() {
+        let p = PlatformConfig::default_4mc();
+        assert_eq!(p.num_pes(), 12);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn table1_flit_counts() {
+        // Table 1 of the paper: kernel k → response packet size in flits.
+        let p = PlatformConfig::default_2mc();
+        let expect = [(1u64, 1u64), (3, 2), (5, 4), (7, 7), (9, 11), (11, 16), (13, 22)];
+        for (k, flits) in expect {
+            let words = 2 * k * k; // k² inputs + k² weights
+            assert_eq!(p.flits_for_words(words), flits, "kernel {k}x{k}");
+        }
+    }
+
+    #[test]
+    fn mem_access_matches_paper_rate() {
+        // §5.1: one 16-bit datum = 0.0625 router cycles → 50 data ≈ 3.125,
+        // integerised to 4 cycles.
+        let p = PlatformConfig::default_2mc();
+        assert_eq!(p.mem_access_cycles(50), 4);
+        assert_eq!(p.mem_access_cycles(16), 1);
+        assert_eq!(p.mem_access_cycles(32), 2);
+    }
+
+    #[test]
+    fn compute_cycles_match_paper_examples() {
+        // §5.1: 25 MACs → 1 PE cycle; 128 MACs → 2 PE cycles. 10 router
+        // cycles per PE cycle.
+        let p = PlatformConfig::default_2mc();
+        assert_eq!(p.compute_cycles(25), 10);
+        assert_eq!(p.compute_cycles(128), 20);
+        assert_eq!(p.compute_cycles(64), 10);
+        assert_eq!(p.compute_cycles(65), 20);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut p = PlatformConfig::default_2mc();
+        p.mc_nodes = vec![99];
+        assert!(p.validate().is_err());
+        let mut p = PlatformConfig::default_2mc();
+        p.mc_nodes = vec![9, 9];
+        assert!(p.validate().is_err());
+        let mut p = PlatformConfig::default_2mc();
+        p.mc_nodes = (0..16).collect();
+        assert!(p.validate().is_err());
+    }
+}

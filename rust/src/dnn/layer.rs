@@ -1,0 +1,192 @@
+//! Layer shapes and the per-task cost profile they induce.
+
+use crate::config::PlatformConfig;
+
+/// The kinds of layer the workload model supports.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution: `kernel`×`kernel` over `in_channels_eff` input maps.
+    ///
+    /// `in_channels_eff` may be fractional to model partial connectivity
+    /// (LeNet-5's C3 connects each output map to 3–6 of the 6 input maps;
+    /// the per-task average is 60/16 = 3.75 — the paper's constant-per-layer
+    /// cost model takes the average).
+    Conv { kernel: u64, in_channels_eff: f64 },
+    /// `kernel`×`kernel` average pooling (plus coefficient and bias, as in
+    /// LeNet-5's trainable subsampling).
+    Pool { kernel: u64 },
+    /// Fully connected: one task = one output neuron over `in_features`.
+    Fc { in_features: u64 },
+}
+
+/// A layer of the network to be mapped onto the NoC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    /// Human-readable name ("C1", "S2", …).
+    pub name: String,
+    /// Operation shape.
+    pub kind: LayerKind,
+    /// Output elements = number of tasks (§3.1).
+    pub tasks: u64,
+}
+
+/// Platform-resolved per-task costs for one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskProfile {
+    /// Multiply-accumulates per task.
+    pub macs: u64,
+    /// Data words (16-bit) fetched from memory per task (inputs + weights).
+    pub resp_data_words: u64,
+    /// Request packet size in flits (single compact flit, §4.1).
+    pub req_flits: u64,
+    /// Response packet size in flits (Table 1 law).
+    pub resp_flits: u64,
+    /// Result packet size in flits (one output pixel).
+    pub result_flits: u64,
+    /// PE compute time per task, in **router** cycles.
+    pub compute_cycles: u64,
+    /// Memory access time per task, in router cycles.
+    pub mem_cycles: u64,
+}
+
+impl LayerSpec {
+    /// Construct a convolution layer; `tasks = out_channels · out_h · out_w`.
+    pub fn conv(name: &str, kernel: u64, in_channels_eff: f64, tasks: u64) -> Self {
+        assert!(kernel >= 1 && in_channels_eff > 0.0 && tasks >= 1);
+        Self { name: name.into(), kind: LayerKind::Conv { kernel, in_channels_eff }, tasks }
+    }
+
+    /// Construct a pooling layer.
+    pub fn pool(name: &str, kernel: u64, tasks: u64) -> Self {
+        assert!(kernel >= 1 && tasks >= 1);
+        Self { name: name.into(), kind: LayerKind::Pool { kernel }, tasks }
+    }
+
+    /// Construct a fully-connected layer; `tasks = out_features`.
+    pub fn fc(name: &str, in_features: u64, tasks: u64) -> Self {
+        assert!(in_features >= 1 && tasks >= 1);
+        Self { name: name.into(), kind: LayerKind::Fc { in_features }, tasks }
+    }
+
+    /// MACs per task (before integerisation to PE cycles).
+    pub fn macs_per_task(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { kernel, in_channels_eff } => {
+                ((kernel * kernel) as f64 * in_channels_eff).round() as u64
+            }
+            // k² adds for the window sum + 1 multiply by the trained
+            // coefficient (LeNet-5 subsampling).
+            LayerKind::Pool { kernel } => kernel * kernel + 1,
+            LayerKind::Fc { in_features } => *in_features,
+        }
+    }
+
+    /// Data words (16-bit each) a task fetches from memory: its inputs and
+    /// its weights/parameters.
+    pub fn words_per_task(&self) -> u64 {
+        match &self.kind {
+            // k²·c inputs + k²·c weights — for c = 1 this is the paper's
+            // Table 1 packet law.
+            LayerKind::Conv { kernel, in_channels_eff } => {
+                (2.0 * (kernel * kernel) as f64 * in_channels_eff).round() as u64
+            }
+            // k² inputs + coefficient + bias.
+            LayerKind::Pool { kernel } => kernel * kernel + 2,
+            // n inputs + n weights + bias.
+            LayerKind::Fc { in_features } => 2 * in_features + 1,
+        }
+    }
+
+    /// Resolve the platform-dependent per-task costs.
+    pub fn profile(&self, cfg: &PlatformConfig) -> TaskProfile {
+        let macs = self.macs_per_task();
+        let words = self.words_per_task();
+        TaskProfile {
+            macs,
+            resp_data_words: words,
+            req_flits: 1,
+            resp_flits: cfg.flits_for_words(words),
+            result_flits: 1,
+            compute_cycles: cfg.compute_cycles(macs),
+            mem_cycles: cfg.mem_access_cycles(words),
+        }
+    }
+
+    /// Number of row-major mapping iterations this layer needs on `num_pes`
+    /// PEs (§3.2: "Allocating tasks to the entire NoC at once constitutes
+    /// one mapping iteration"), counting the possibly-partial tail.
+    pub fn mapping_iterations(&self, num_pes: u64) -> u64 {
+        self.tasks.div_ceil(num_pes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::default_2mc()
+    }
+
+    #[test]
+    fn lenet_c1_profile_matches_paper() {
+        // §5.1/§5.2: C1 = 5x5 conv, 1 input map, 6x28x28 = 4704 tasks,
+        // 25 MACs → 1 PE cycle (10 router cycles), 50 words → 4 flits,
+        // 336 mapping iterations on 14 PEs.
+        let c1 = LayerSpec::conv("C1", 5, 1.0, 4704);
+        let p = c1.profile(&cfg());
+        assert_eq!(p.macs, 25);
+        assert_eq!(p.resp_data_words, 50);
+        assert_eq!(p.resp_flits, 4);
+        assert_eq!(p.compute_cycles, 10);
+        assert_eq!(p.mem_cycles, 4); // 50·0.0625 = 3.125 → 4
+        assert_eq!(c1.mapping_iterations(14), 336);
+    }
+
+    #[test]
+    fn table1_kernel_sweep() {
+        // Table 1: kernel size → packet size in flits (c_in = 1).
+        let expect = [(1u64, 1u64), (3, 2), (5, 4), (7, 7), (9, 11), (11, 16), (13, 22)];
+        for (k, flits) in expect {
+            let l = LayerSpec::conv("sweep", k, 1.0, 4704);
+            assert_eq!(l.profile(&cfg()).resp_flits, flits, "kernel {k}");
+        }
+    }
+
+    #[test]
+    fn c3_partial_connectivity_average() {
+        // LeNet-5 C3: 16 maps over 6 inputs with the classic connection
+        // table — 60 total connections → 3.75 effective input channels.
+        let c3 = LayerSpec::conv("C3", 5, 3.75, 1600);
+        let p = c3.profile(&cfg());
+        assert_eq!(p.macs, 94); // 25·3.75 = 93.75 → 94
+        assert_eq!(p.compute_cycles, 20); // 2 PE cycles
+        assert_eq!(p.resp_data_words, 188);
+        assert_eq!(p.resp_flits, 12);
+    }
+
+    #[test]
+    fn pool_and_fc_profiles() {
+        let s2 = LayerSpec::pool("S2", 2, 1176);
+        let p = s2.profile(&cfg());
+        assert_eq!(p.macs, 5);
+        assert_eq!(p.compute_cycles, 10);
+        assert_eq!(p.resp_data_words, 6);
+        assert_eq!(p.resp_flits, 1);
+
+        let f6 = LayerSpec::fc("F6", 120, 84);
+        let p = f6.profile(&cfg());
+        assert_eq!(p.macs, 120);
+        assert_eq!(p.compute_cycles, 20); // ceil(120/64) = 2 PE cycles
+        assert_eq!(p.resp_data_words, 241);
+        assert_eq!(p.resp_flits, 16);
+    }
+
+    #[test]
+    fn mapping_iterations_rounds_up_tail() {
+        let l = LayerSpec::fc("x", 8, 15);
+        assert_eq!(l.mapping_iterations(14), 2); // 14 + 1 tail
+        let l = LayerSpec::fc("y", 8, 14);
+        assert_eq!(l.mapping_iterations(14), 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! LeNet-5 [LeCun et al., 1998] as the paper's end-to-end workload (§5.6).
+//!
+//! Seven layers are mapped (the paper's Fig. 11 shows "7 individual
+//! layers"), with task counts equal to output elements:
+//!
+//! | # | layer | shape                  | tasks |
+//! |---|-------|------------------------|-------|
+//! | 1 | C1    | conv 5x5, 1→6, 28x28   | 4704  |
+//! | 2 | S2    | pool 2x2, 6, 14x14     | 1176  |
+//! | 3 | C3    | conv 5x5, 6→16 (partial), 10x10 | 1600 |
+//! | 4 | S4    | pool 2x2, 16, 5x5      | 400   |
+//! | 5 | C5    | conv 5x5, 16→120, 1x1  | 120   |
+//! | 6 | F6    | fc 120→84              | 84    |
+//! | 7 | OUT   | fc 84→10               | 10    |
+//!
+//! §5.6 confirms layer 6 has a "small packet count of 84" — matching F6.
+
+use super::layer::LayerSpec;
+
+/// Names of the seven mapped LeNet-5 layers, in order.
+pub const LENET_LAYER_NAMES: [&str; 7] = ["C1", "S2", "C3", "S4", "C5", "F6", "OUT"];
+
+/// The full 7-layer LeNet-5 workload.
+///
+/// `out_channels_c1` scales the first layer's output channel count — the
+/// Fig. 8 knob ("we extend the task count with ratios from 0.5x to 8x by
+/// adjusting the output channel from 3 to 48, while the default
+/// configuration is 6"). Only C1 scales; pass 6 for the paper's default.
+pub fn lenet5(out_channels_c1: u64) -> Vec<LayerSpec> {
+    assert!(out_channels_c1 >= 1);
+    vec![
+        LayerSpec::conv("C1", 5, 1.0, out_channels_c1 * 28 * 28),
+        LayerSpec::pool("S2", 2, 6 * 14 * 14),
+        // Classic C3 connection table: 6 maps see 3 inputs, 9 see 4, 1 sees
+        // all 6 → 60 connections / 16 maps = 3.75 effective channels.
+        LayerSpec::conv("C3", 5, 60.0 / 16.0, 16 * 10 * 10),
+        LayerSpec::pool("S4", 2, 16 * 5 * 5),
+        LayerSpec::conv("C5", 5, 16.0, 120),
+        LayerSpec::fc("F6", 120, 84),
+        LayerSpec::fc("OUT", 84, 10),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+
+    #[test]
+    fn default_task_counts_match_paper() {
+        let layers = lenet5(6);
+        let tasks: Vec<u64> = layers.iter().map(|l| l.tasks).collect();
+        assert_eq!(tasks, vec![4704, 1176, 1600, 400, 120, 84, 10]);
+        let names: Vec<&str> = layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, LENET_LAYER_NAMES.to_vec());
+    }
+
+    #[test]
+    fn fig8_channel_scaling() {
+        // §5.1: output channel 3 → 2352 tasks (0.5x) … 48 → 37632 (8x),
+        // i.e. 168 … 2688 mapping iterations on 14 PEs.
+        for (ch, tasks, iters) in
+            [(3u64, 2352u64, 168u64), (6, 4704, 336), (12, 9408, 672), (24, 18816, 1344), (48, 37632, 2688)]
+        {
+            let l = &lenet5(ch)[0];
+            assert_eq!(l.tasks, tasks, "channels {ch}");
+            assert_eq!(l.mapping_iterations(14), iters, "channels {ch}");
+        }
+    }
+
+    #[test]
+    fn c5_is_the_heaviest_per_task() {
+        let cfg = PlatformConfig::default_2mc();
+        let layers = lenet5(6);
+        let profiles: Vec<_> = layers.iter().map(|l| l.profile(&cfg)).collect();
+        let c5 = &profiles[4];
+        assert_eq!(c5.macs, 400);
+        assert_eq!(c5.compute_cycles, 70); // ceil(400/64) = 7 PE cycles
+        assert_eq!(c5.resp_flits, 50); // 800 words
+        for (i, p) in profiles.iter().enumerate() {
+            assert!(p.macs <= c5.macs, "layer {i} heavier than C5");
+        }
+    }
+
+    #[test]
+    fn f6_small_layer_packet_count() {
+        // §5.6: "the small packet count of 84 in layer 6".
+        let layers = lenet5(6);
+        assert_eq!(layers[5].tasks, 84);
+    }
+}

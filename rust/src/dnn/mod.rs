@@ -1,0 +1,17 @@
+//! The DNN workload model: layers → NoC task streams.
+//!
+//! A *task* is one output element of a layer (§3.1: "This convolution
+//! operation constitutes a computation task and yields a pixel in the
+//! output feature map"). Each task fetches its inputs and weights from an
+//! MC (one request packet, one response packet), computes on the PE's 64
+//! MACs, and returns one result packet.
+//!
+//! Per the paper's model, tasks are homogeneous within a layer:
+//! "Computation time … varies across different layers due to different
+//! kernel sizes but is constant in the same layer."
+
+pub mod layer;
+pub mod lenet;
+
+pub use layer::{LayerKind, LayerSpec, TaskProfile};
+pub use lenet::{lenet5, LENET_LAYER_NAMES};

@@ -1,0 +1,138 @@
+//! Fig. 10 — different NoC architectures (two MCs vs four MCs).
+//!
+//! With four MCs the distance spread across PEs shrinks (every PE is at
+//! distance 1 or 2 of an MC), so row-major's fast/slow gap narrows and the
+//! headroom for uneven mapping drops. Paper anchors: the row-major gap
+//! falls 21.7 % → 9.3 %, and the travel-time improvement falls
+//! 9.5 % → 5.6 %.
+
+use crate::config::{PlacementPreset, PlatformConfig};
+use crate::dnn::lenet5;
+use crate::mapping::{run_layer, MappedRun, Strategy};
+use crate::metrics::improvement;
+use crate::util::{table::fmt_pct, Table};
+
+use super::Report;
+
+/// One architecture's results.
+#[derive(Debug)]
+pub struct ArchPoint {
+    /// Preset evaluated.
+    pub preset: PlacementPreset,
+    /// MC count.
+    pub mcs: usize,
+    /// PE count.
+    pub pes: usize,
+    /// Row-major / sampling-10 / post-run runs.
+    pub runs: Vec<MappedRun>,
+}
+
+/// Mappings compared in Fig. 10.
+pub fn strategies() -> Vec<Strategy> {
+    vec![Strategy::RowMajor, Strategy::Sampling(10), Strategy::PostRun]
+}
+
+/// Run both architectures on C1.
+pub fn data(quick: bool) -> Vec<ArchPoint> {
+    [PlacementPreset::TwoMc, PlacementPreset::FourMc]
+        .into_iter()
+        .map(|preset| {
+            let cfg = PlatformConfig::preset(preset);
+            let mut layer = lenet5(6).remove(0);
+            if quick {
+                layer.tasks /= 4;
+            }
+            let runs = strategies().iter().map(|&s| run_layer(&cfg, &layer, s)).collect();
+            ArchPoint { preset, mcs: cfg.mc_nodes.len(), pes: cfg.num_pes(), runs }
+        })
+        .collect()
+}
+
+/// Row-major fast/slow gap for an architecture (ρ over accumulated time).
+pub fn row_major_gap(p: &ArchPoint) -> f64 {
+    p.runs[0].summary.rho_accum
+}
+
+/// Travel-time (sampling-10) improvement over row-major.
+pub fn sw10_improvement(p: &ArchPoint) -> f64 {
+    improvement(p.runs[0].summary.latency, p.runs[1].summary.latency)
+}
+
+/// Render the report.
+pub fn run(quick: bool) -> Report {
+    let points = data(quick);
+    let mut t = Table::new([
+        "architecture",
+        "PEs",
+        "mapping",
+        "latency",
+        "ρ accum",
+        "improv vs row-major",
+    ]);
+    for p in &points {
+        let base = p.runs[0].summary.latency;
+        for r in &p.runs {
+            t.row([
+                format!("{} MCs", p.mcs),
+                p.pes.to_string(),
+                r.strategy.label(),
+                r.summary.latency.to_string(),
+                fmt_pct(r.summary.rho_accum),
+                fmt_pct(improvement(base, r.summary.latency)),
+            ]);
+        }
+    }
+    let body = format!(
+        "LeNet C1 on the 2-MC (nodes 9,10) and 4-MC (nodes 5,6,9,10) 4x4 meshes.\n\n{}\n\
+         Paper anchors: row-major gap 21.7% (2 MCs) → 9.3% (4 MCs); travel-time improvement \
+         9.5% → 5.6% — more MCs flatten the distances and shrink the optimisation headroom.\n\
+         Ours: gap {} → {}, improvement {} → {}.\n",
+        t,
+        fmt_pct(row_major_gap(&points[0])),
+        fmt_pct(row_major_gap(&points[1])),
+        fmt_pct(sw10_improvement(&points[0])),
+        fmt_pct(sw10_improvement(&points[1])),
+    );
+    Report { id: "fig10", title: "Results of different NoC architectures", body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_mcs_narrow_the_row_major_gap() {
+        let points = data(true);
+        let gap2 = row_major_gap(&points[0]);
+        let gap4 = row_major_gap(&points[1]);
+        assert!(gap4 < gap2, "4-MC gap {gap4:.3} should be below 2-MC gap {gap2:.3}");
+    }
+
+    #[test]
+    fn improvement_shrinks_with_more_mcs() {
+        let points = data(true);
+        let i2 = sw10_improvement(&points[0]);
+        let i4 = sw10_improvement(&points[1]);
+        assert!(
+            i4 < i2 + 0.01,
+            "4-MC improvement {i4:.3} should not exceed 2-MC improvement {i2:.3}"
+        );
+        assert!(i2 > 0.0, "travel time must still win on 2 MCs");
+    }
+
+    #[test]
+    fn both_architectures_still_benefit() {
+        for p in data(true) {
+            let base = p.runs[0].summary.latency;
+            let post = p.runs[2].summary.latency;
+            assert!(post <= base, "{} MCs: oracle must not lose", p.mcs);
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = run(true);
+        assert!(rep.body.contains("2 MCs"));
+        assert!(rep.body.contains("4 MCs"));
+    }
+}

@@ -1,0 +1,184 @@
+//! Fig. 11 — inference time for the whole LeNet under six mappings.
+//!
+//! Seven layers (C1 … OUT) each run under row-major, distance-based,
+//! sampling windows 1/5/10, and post-run travel-time mapping; the eighth
+//! cluster aggregates the whole model. Improvement polylines are relative
+//! to row-major.
+//!
+//! Paper anchors (overall improvement over row-major): distance −13.75 %
+//! (worse), SW1 +1.78 %, SW5 +6.62 %, SW10 +8.17 %, post-run +10.37 %.
+//! SW1 loses on layers 3/5/6; SW5 only on layer 6 (≈105 cycles); SW10
+//! never loses; small layers (F6 with 84 tasks < 14·10) take the
+//! row-major fallback route under SW10.
+
+use crate::config::PlatformConfig;
+use crate::dnn::{lenet5, LayerSpec};
+use crate::mapping::{run_layer, Strategy};
+use crate::metrics::improvement;
+use crate::util::{table::fmt_pct, Table};
+
+use super::Report;
+
+/// Per-layer latencies for one strategy.
+#[derive(Debug, Clone)]
+pub struct StrategySeries {
+    /// The mapping.
+    pub strategy: Strategy,
+    /// Latency of each of the 7 layers, cycles.
+    pub layer_latency: Vec<u64>,
+    /// Whole-model latency (sum — layers run back-to-back).
+    pub total: u64,
+}
+
+/// The full Fig. 11 data: one series per strategy.
+#[derive(Debug)]
+pub struct Fig11Data {
+    /// The LeNet layers simulated.
+    pub layers: Vec<LayerSpec>,
+    /// One series per Fig. 11 strategy, in paper order.
+    pub series: Vec<StrategySeries>,
+}
+
+/// Run the whole model under every Fig. 11 strategy.
+pub fn data(quick: bool) -> Fig11Data {
+    let cfg = PlatformConfig::default_2mc();
+    let mut layers = lenet5(6);
+    if quick {
+        // Shrink only the big early layers; keep the small-layer fallback
+        // behaviour intact.
+        for l in &mut layers {
+            if l.tasks > 600 {
+                l.tasks /= 8;
+            }
+        }
+    }
+    let series = Strategy::fig11_set()
+        .into_iter()
+        .map(|s| {
+            let layer_latency: Vec<u64> =
+                layers.iter().map(|l| run_layer(&cfg, l, s).summary.latency).collect();
+            let total = layer_latency.iter().sum();
+            StrategySeries { strategy: s, layer_latency, total }
+        })
+        .collect();
+    Fig11Data { layers, series }
+}
+
+/// Render the report.
+pub fn run(quick: bool) -> Report {
+    let d = data(quick);
+    let base = &d.series[0];
+    let mut t = Table::new(
+        std::iter::once("mapping".to_string())
+            .chain(d.layers.iter().map(|l| l.name.clone()))
+            .chain(["overall".to_string()]),
+    );
+    for s in &d.series {
+        let mut row = vec![s.strategy.label()];
+        row.extend(s.layer_latency.iter().map(u64::to_string));
+        row.push(s.total.to_string());
+        t.row(row);
+    }
+    let mut imp = Table::new(
+        std::iter::once("improvement vs row-major".to_string())
+            .chain(d.layers.iter().map(|l| l.name.clone()))
+            .chain(["overall".to_string()]),
+    );
+    let paper_overall = [
+        ("row-major", None),
+        ("distance", Some(-0.1375)),
+        ("sampling-1", Some(0.0178)),
+        ("sampling-5", Some(0.0662)),
+        ("sampling-10", Some(0.0817)),
+        ("post-run", Some(0.1037)),
+    ];
+    for (s, (_, paper)) in d.series.iter().zip(paper_overall) {
+        let mut row = vec![s.strategy.label()];
+        for (i, &l) in s.layer_latency.iter().enumerate() {
+            row.push(fmt_pct(improvement(base.layer_latency[i], l)));
+        }
+        let overall = fmt_pct(improvement(base.total, s.total));
+        row.push(match paper {
+            Some(p) => format!("{overall} (paper {})", fmt_pct(p)),
+            None => overall,
+        });
+        imp.row(row);
+    }
+    let body = format!(
+        "Whole LeNet-5, default 2-MC platform. Layers run back-to-back; overall = sum.\n\n\
+         **Per-layer inference time (cycles):**\n\n{t}\n\
+         **Improvement polylines (positive = faster than row-major):**\n\n{imp}\n",
+    );
+    Report { id: "fig11", title: "Inference time for LeNet", body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn overall_improvement(d: &Fig11Data, idx: usize) -> f64 {
+        improvement(d.series[0].total, d.series[idx].total)
+    }
+
+    #[test]
+    fn sampling_window_ordering_matches_paper() {
+        // SW1 ≤ SW5 ≤ SW10 ≤ post-run on the overall improvement (§5.6:
+        // "the overall improvement increases from 1.78% to 8.17%,
+        // approaching the ideal post-run ... 10.37%").
+        let d = data(true);
+        let sw1 = overall_improvement(&d, 2);
+        let sw5 = overall_improvement(&d, 3);
+        let sw10 = overall_improvement(&d, 4);
+        let post = overall_improvement(&d, 5);
+        assert!(post > 0.0, "post-run must improve overall, got {post:.4}");
+        assert!(sw10 > 0.0, "sw10 must improve overall, got {sw10:.4}");
+        assert!(sw10 <= post + 0.02, "sw10 {sw10:.4} should approach post-run {post:.4}");
+        assert!(sw1 <= sw10 + 0.02, "sw1 {sw1:.4} should not beat sw10 {sw10:.4}");
+        assert!(sw5 <= sw10 + 0.03, "sw5 {sw5:.4} roughly below sw10 {sw10:.4}");
+    }
+
+    #[test]
+    fn distance_based_loses_overall() {
+        let d = data(true);
+        assert!(
+            overall_improvement(&d, 1) < 0.0,
+            "distance mapping should be worse overall (paper: −13.75%)"
+        );
+    }
+
+    #[test]
+    fn sw10_never_loses_a_layer() {
+        // §5.6: "With a longer sampling window of 10, the performance no
+        // longer worsens compared to row-major mapping in any layer."
+        let d = data(true);
+        for (i, (&b, &s)) in
+            d.series[0].layer_latency.iter().zip(&d.series[4].layer_latency).enumerate()
+        {
+            assert!(
+                s <= b + b / 20,
+                "layer {} ({}): sw10 {s} worse than row-major {b}",
+                i,
+                d.layers[i].name
+            );
+        }
+    }
+
+    #[test]
+    fn small_layers_take_the_fallback_route() {
+        // OUT (10 tasks) and F6 (84 tasks) are below 14·10 samples → SW10
+        // falls back to row-major → identical latency.
+        let d = data(true);
+        let b = &d.series[0].layer_latency;
+        let sw10 = &d.series[4].layer_latency;
+        assert_eq!(b[6], sw10[6], "OUT must be identical under fallback");
+        assert_eq!(b[5], sw10[5], "F6 must be identical under fallback");
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = run(true);
+        assert!(rep.body.contains("OUT"));
+        assert!(rep.body.contains("overall"));
+        assert!(rep.body.contains("paper"));
+    }
+}

@@ -1,0 +1,182 @@
+//! Fig. 7 (a–h) and the §5.2 unevenness numbers.
+//!
+//! LeNet C1 (4704 tasks, 4-flit responses) on the default 2-MC platform
+//! under four mappings. For each: the per-PE *average* end-to-end task
+//! time (Fig. 7a–d) and the per-PE *accumulated* travel-time components
+//! (Fig. 7e–h, stacked: T_req + T_mem + T_resp + T_comp, result packets
+//! excluded), with PEs ordered by increasing distance as in the paper.
+//!
+//! Paper anchors: row-major ρ_avg = 25.92 %, ρ_accum = 22.09 %;
+//! distance-based ρ_accum = 58.03 %; sampling-10 ρ_accum = 5.81 %;
+//! post-run ρ_accum = 6.24 %.
+
+use crate::config::PlatformConfig;
+use crate::dnn::{lenet5, LayerSpec};
+use crate::mapping::{distance::pe_distances, run_layer, MappedRun, Strategy};
+use crate::util::{table::fmt_pct, Table};
+
+use super::Report;
+
+/// The four mappings shown in Fig. 7, in subfigure order.
+pub fn strategies() -> Vec<Strategy> {
+    vec![Strategy::RowMajor, Strategy::Distance, Strategy::Sampling(10), Strategy::PostRun]
+}
+
+/// Data behind the figure: one [`MappedRun`] per strategy.
+#[derive(Debug)]
+pub struct Fig7Data {
+    /// The layer simulated (C1 by default; smaller when `quick`).
+    pub layer: LayerSpec,
+    /// Runs in [`strategies`] order.
+    pub runs: Vec<MappedRun>,
+    /// PE dense indices ordered by (distance, node) — the paper's x-axis.
+    pub pe_order: Vec<usize>,
+    /// PE mesh node ids in dense order.
+    pub pe_nodes: Vec<usize>,
+}
+
+/// Run the experiment.
+pub fn data(quick: bool) -> Fig7Data {
+    let cfg = PlatformConfig::default_2mc();
+    let mut layer = lenet5(6).remove(0);
+    if quick {
+        layer.tasks = 4704 / 8;
+    }
+    let runs: Vec<MappedRun> = strategies().iter().map(|&s| run_layer(&cfg, &layer, s)).collect();
+    let d = pe_distances(&cfg);
+    let pe_nodes = cfg.pe_nodes();
+    let mut pe_order: Vec<usize> = (0..cfg.num_pes()).collect();
+    pe_order.sort_by_key(|&i| (d[i], pe_nodes[i]));
+    Fig7Data { layer, runs, pe_order, pe_nodes }
+}
+
+/// Render the report.
+pub fn run(quick: bool) -> Report {
+    let d = data(quick);
+    let cfg = PlatformConfig::default_2mc();
+    let dists = pe_distances(&cfg);
+    let mut body = format!(
+        "Layer {} ({} tasks), default 2-MC platform; PEs ordered by increasing distance.\n\n",
+        d.layer.name, d.layer.tasks
+    );
+
+    // Fig. 7a–d: per-PE average end-to-end task time.
+    let mut avg = Table::new(
+        std::iter::once("mapping".to_string()).chain(
+            d.pe_order
+                .iter()
+                .map(|&i| format!("n{}(d{})", d.pe_nodes[i], dists[i])),
+        ),
+    );
+    for r in &d.runs {
+        let mut row = vec![r.strategy.label()];
+        for &i in &d.pe_order {
+            row.push(match r.summary.mean_travel[i] {
+                Some(m) => format!("{m:.1}"),
+                None => "-".into(),
+            });
+        }
+        avg.row(row);
+    }
+    body.push_str("**Fig. 7a–d — average end-to-end task time per PE (cycles):**\n\n");
+    body.push_str(&avg.render());
+
+    // Fig. 7e–h: per-PE accumulated travel time (stacked components).
+    let mut acc = Table::new(["mapping", "PE", "tasks", "Σreq", "Σmem", "Σresp", "Σcomp", "total"]);
+    for r in &d.runs {
+        for &i in &d.pe_order {
+            let t = &r.result.totals[i];
+            acc.row([
+                r.strategy.label(),
+                format!("n{}(d{})", d.pe_nodes[i], dists[i]),
+                t.tasks.to_string(),
+                t.req.to_string(),
+                t.mem.to_string(),
+                t.resp.to_string(),
+                t.comp.to_string(),
+                t.total().to_string(),
+            ]);
+        }
+    }
+    body.push_str("\n**Fig. 7e–h — accumulated travel-time components per PE (cycles):**\n\n");
+    body.push_str(&acc.render());
+
+    // §5.2 unevenness summary vs. the paper.
+    let paper_accum = [("row-major", 0.2209), ("distance", 0.5803), ("sampling-10", 0.0581), ("post-run", 0.0624)];
+    let mut rho = Table::new(["mapping", "ρ avg (ours)", "ρ accum (ours)", "ρ accum (paper)", "latency (cycles)"]);
+    for (r, (label, paper)) in d.runs.iter().zip(paper_accum) {
+        debug_assert_eq!(r.strategy.label().split('-').next(), label.split('-').next());
+        rho.row([
+            r.strategy.label(),
+            fmt_pct(r.summary.rho_avg),
+            fmt_pct(r.summary.rho_accum),
+            fmt_pct(paper),
+            r.summary.latency.to_string(),
+        ]);
+    }
+    body.push_str("\n**§5.2 unevenness ρ = (T_max − T_min)/T_max:**\n\n");
+    body.push_str(&rho.render());
+    Report { id: "fig7", title: "Results of unevenness (per-PE averages and accumulations)", body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let d = data(true);
+        let [even, dist, sw10, post] = &d.runs[..] else { panic!("4 runs") };
+        // Row-major: substantial unevenness (paper 22%; shape: > 10%).
+        assert!(even.summary.rho_accum > 0.10, "row-major ρ {:.3}", even.summary.rho_accum);
+        // Distance-based over-corrects: worse than row-major (paper 58%).
+        assert!(
+            dist.summary.rho_accum > even.summary.rho_accum * 1.5,
+            "distance ρ {:.3} must exceed row-major ρ {:.3}",
+            dist.summary.rho_accum,
+            even.summary.rho_accum
+        );
+        // Travel-time variants flatten to single digits.
+        assert!(sw10.summary.rho_accum < 0.10, "sw10 ρ {:.3}", sw10.summary.rho_accum);
+        assert!(post.summary.rho_accum < 0.10, "post ρ {:.3}", post.summary.rho_accum);
+        // Slowest PE dominates: both travel-time variants beat row-major.
+        assert!(post.summary.latency < even.summary.latency);
+        assert!(sw10.summary.latency < even.summary.latency);
+    }
+
+    #[test]
+    fn pe_order_is_by_distance() {
+        let d = data(true);
+        let cfg = PlatformConfig::default_2mc();
+        let dists = pe_distances(&cfg);
+        let seq: Vec<u64> = d.pe_order.iter().map(|&i| dists[i]).collect();
+        let mut sorted = seq.clone();
+        sorted.sort_unstable();
+        assert_eq!(seq, sorted);
+        assert_eq!(seq.len(), 14);
+    }
+
+    #[test]
+    fn fastest_pes_are_distance_one_under_row_major() {
+        // Fig. 7b: "Nodes 13, 5, and 8 are the fastest" — distance-1 nodes
+        // have lower mean travel time than node 0 (distance 3).
+        let d = data(true);
+        let even = &d.runs[0];
+        let nodes = &d.pe_nodes;
+        let mt = |node: usize| {
+            even.summary.mean_travel[nodes.iter().position(|&n| n == node).unwrap()].unwrap()
+        };
+        for fast in [13usize, 5, 8] {
+            assert!(mt(fast) < mt(0), "node {fast} should be faster than node 0");
+        }
+    }
+
+    #[test]
+    fn report_renders_with_all_sections() {
+        let rep = run(true);
+        assert!(rep.body.contains("Fig. 7a–d"));
+        assert!(rep.body.contains("Fig. 7e–h"));
+        assert!(rep.body.contains("unevenness"));
+        assert!(rep.body.contains("row-major"));
+    }
+}

@@ -1,0 +1,182 @@
+//! Fig. 9 — inference time for one layer with varying kernel / packet size.
+//!
+//! The kernel sweep of Table 1 (1×1 → 13×13, i.e. 1 → 22 flits per
+//! response) under five mappings. The paper's observations to reproduce:
+//!
+//! * unevenness exists at every packet size;
+//! * distance-based mapping *worsens* latency at every size;
+//! * static-latency mapping is strong for few flits but degrades as
+//!   congestion (excluded from Eq. 6) grows with the flit count;
+//! * travel-time mapping wins throughout — "up to 12.1 %".
+
+use crate::config::PlatformConfig;
+use crate::dnn::LayerSpec;
+use crate::mapping::{run_layer, MappedRun, Strategy};
+use crate::metrics::improvement;
+use crate::util::{table::fmt_pct, Table};
+
+use super::table1::KERNELS;
+use super::Report;
+
+/// Mappings compared in Fig. 9.
+pub fn strategies() -> Vec<Strategy> {
+    vec![
+        Strategy::RowMajor,
+        Strategy::Distance,
+        Strategy::StaticLatency,
+        Strategy::Sampling(10),
+        Strategy::PostRun,
+    ]
+}
+
+/// One kernel-size point.
+#[derive(Debug)]
+pub struct KernelPoint {
+    /// Kernel size k.
+    pub kernel: u64,
+    /// Response flits.
+    pub flits: u64,
+    /// Runs in [`strategies`] order.
+    pub runs: Vec<MappedRun>,
+}
+
+/// Run the sweep. `quick` trims to three kernel sizes and 1/8 tasks.
+pub fn data(quick: bool) -> Vec<KernelPoint> {
+    let cfg = PlatformConfig::default_2mc();
+    let kernels: Vec<u64> = if quick { vec![1, 5, 13] } else { KERNELS.to_vec() };
+    let tasks = if quick { 4704 / 8 } else { 4704 };
+    kernels
+        .into_iter()
+        .map(|k| {
+            let layer = LayerSpec::conv(&format!("k{k}"), k, 1.0, tasks);
+            let flits = layer.profile(&cfg).resp_flits;
+            let runs = strategies().iter().map(|&s| run_layer(&cfg, &layer, s)).collect();
+            KernelPoint { kernel: k, flits, runs }
+        })
+        .collect()
+}
+
+/// Render the report.
+pub fn run(quick: bool) -> Report {
+    let points = data(quick);
+    let mut t = Table::new(["kernel", "flits", "mapping", "latency", "improv vs row-major", "ρ accum"]);
+    let mut best = 0.0f64;
+    for p in &points {
+        let base = p.runs[0].summary.latency;
+        for r in &p.runs {
+            let imp = improvement(base, r.summary.latency);
+            if matches!(r.strategy, Strategy::Sampling(_) | Strategy::PostRun) {
+                best = best.max(imp);
+            }
+            t.row([
+                format!("{0}x{0}", p.kernel),
+                p.flits.to_string(),
+                r.strategy.label(),
+                r.summary.latency.to_string(),
+                fmt_pct(imp),
+                fmt_pct(r.summary.rho_accum),
+            ]);
+        }
+    }
+    let body = format!(
+        "Kernel sweep of Table 1 on the default platform (28x28x6 output).\n\n{}\n\
+         Best travel-time improvement over row-major in this sweep: **{}** \
+         (paper: up to 12.1%).\n",
+        t,
+        fmt_pct(best)
+    );
+    Report { id: "fig9", title: "Inference time for one layer with varying kernel and packet size", body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unevenness_exists_below_the_bandwidth_knee() {
+        // ρ is large while the MCs are unsaturated (k ≤ 5 here); past the
+        // knee the 64 GB/s bandwidth model serialises everyone equally and
+        // ρ collapses (see EXPERIMENTS.md §fig9 for the analysis).
+        for p in data(true) {
+            if p.kernel <= 5 {
+                assert!(
+                    p.runs[0].summary.rho_accum > 0.05,
+                    "kernel {}: row-major ρ {:.3}",
+                    p.kernel,
+                    p.runs[0].summary.rho_accum
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distance_mapping_never_wins_meaningfully() {
+        // Paper: "All distance-based mapping worsens the situation". Allow
+        // sub-2% noise wins at the smallest packets.
+        for p in data(true) {
+            let base = p.runs[0].summary.latency;
+            let dist = p.runs[1].summary.latency;
+            assert!(
+                dist as f64 >= base as f64 * 0.98,
+                "kernel {}: distance {dist} beat row-major {base}",
+                p.kernel
+            );
+        }
+    }
+
+    #[test]
+    fn distance_mapping_clearly_loses_under_congestion() {
+        for p in data(true) {
+            if p.kernel >= 5 {
+                let base = p.runs[0].summary.latency;
+                let dist = p.runs[1].summary.latency;
+                assert!(
+                    dist > base,
+                    "kernel {}: distance {dist} should lose to row-major {base}",
+                    p.kernel
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn travel_time_never_loses_meaningfully() {
+        // Post-run wins below the knee and must stay within rounding noise
+        // of row-major even in the saturated regime.
+        for p in data(true) {
+            let base = p.runs[0].summary.latency;
+            let post = p.runs[4].summary.latency;
+            assert!(
+                post as f64 <= base as f64 * 1.02,
+                "kernel {}: post-run {post} lost to row-major {base}",
+                p.kernel
+            );
+            if p.kernel <= 5 {
+                assert!(post < base, "kernel {}: post-run must win below the knee", p.kernel);
+            }
+        }
+    }
+
+    #[test]
+    fn static_latency_degrades_with_flits() {
+        // Static-latency's improvement at 1 flit should exceed its
+        // improvement at 22 flits (congestion excluded from Eq. 6).
+        let points = data(true);
+        let imp = |p: &KernelPoint| {
+            improvement(p.runs[0].summary.latency, p.runs[2].summary.latency)
+        };
+        let small = imp(&points[0]); // k=1
+        let large = imp(&points[2]); // k=13
+        assert!(
+            small >= large - 0.02,
+            "static-latency at 1 flit ({small:.3}) should be at least as good as at 22 flits ({large:.3})"
+        );
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = run(true);
+        assert!(rep.body.contains("13x13"));
+        assert!(rep.body.contains("static-latency"));
+    }
+}

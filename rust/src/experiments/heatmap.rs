@@ -1,0 +1,102 @@
+//! Congestion heatmap — where does the travel-time signal come from?
+//!
+//! An extension beyond the paper: per-router, per-output-port switched
+//! flit counts for LeNet C1 under row-major mapping. The heatmap makes
+//! the implicit congestion signal of §4.1 visible: traffic concentrates
+//! on the links feeding the two MC columns (nodes 9/10) and on the MCs'
+//! local ejection ports, which is exactly why nearer PEs see shorter
+//! `T_req`/`T_resp` and why distance alone (Eq. 1) under-corrects.
+
+use crate::config::PlatformConfig;
+use crate::dnn::lenet5;
+use crate::mapping::row_major;
+use crate::accel::Simulation;
+use crate::noc::topology::{NUM_PORTS, PORT_NAMES};
+use crate::util::Table;
+
+use super::Report;
+
+/// Per-node switched-flit counts for C1 under row-major mapping.
+pub fn data(quick: bool) -> Vec<[u64; NUM_PORTS]> {
+    let cfg = PlatformConfig::default_2mc();
+    let mut layer = lenet5(6).remove(0);
+    if quick {
+        layer.tasks /= 8;
+    }
+    let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
+    sim.add_budgets(&row_major::counts(layer.tasks, cfg.num_pes()));
+    sim.run_until_done();
+    sim.network_stats().switched_per_port.clone()
+}
+
+/// Render the report.
+pub fn run(quick: bool) -> Report {
+    let per_port = data(quick);
+    let cfg = PlatformConfig::default_2mc();
+    let mut t = Table::new(
+        std::iter::once("node".to_string())
+            .chain(PORT_NAMES.iter().map(|p| p.to_string()))
+            .chain(["total".to_string(), "role".to_string()]),
+    );
+    for (node, ports) in per_port.iter().enumerate() {
+        let total: u64 = ports.iter().sum();
+        let mut row = vec![format!("n{node}")];
+        row.extend(ports.iter().map(u64::to_string));
+        row.push(total.to_string());
+        row.push(if cfg.mc_nodes.contains(&node) { "MC".into() } else { "PE".into() });
+        t.row(row);
+    }
+    let mc_total: u64 = cfg.mc_nodes.iter().map(|&n| per_port[n].iter().sum::<u64>()).sum();
+    let all_total: u64 = per_port.iter().flat_map(|p| p.iter()).sum();
+    let body = format!(
+        "Switched flits per router/output port, LeNet C1, row-major mapping, 2-MC platform.\n\n{t}\n\
+         The two MC routers carry **{:.1}%** of all switched flits ({} of {}) — the\n\
+         congestion hot-spot the travel-time mapper senses implicitly through\n\
+         `T_req`/`T_resp` and that pure distance ratios cannot see.\n",
+        100.0 * mc_total as f64 / all_total as f64,
+        mc_total,
+        all_total
+    );
+    Report { id: "heatmap", title: "Congestion heatmap (extension)", body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mc_routers_are_the_hotspot() {
+        let per_port = data(true);
+        let cfg = PlatformConfig::default_2mc();
+        let totals: Vec<u64> = per_port.iter().map(|p| p.iter().sum()).collect();
+        let mc_mean: f64 = cfg.mc_nodes.iter().map(|&n| totals[n] as f64).sum::<f64>()
+            / cfg.mc_nodes.len() as f64;
+        let pe_mean: f64 = cfg.pe_nodes().iter().map(|&n| totals[n] as f64).sum::<f64>()
+            / cfg.num_pes() as f64;
+        assert!(
+            mc_mean > 2.0 * pe_mean,
+            "MC routers ({mc_mean:.0}) should switch far more flits than PE routers ({pe_mean:.0})"
+        );
+    }
+
+    #[test]
+    fn every_flit_is_accounted() {
+        // Sum over per-port counters equals the global counter.
+        let cfg = PlatformConfig::default_2mc();
+        let mut layer = lenet5(6).remove(0);
+        layer.tasks /= 16;
+        let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
+        sim.add_budgets(&crate::mapping::row_major::counts(layer.tasks, cfg.num_pes()));
+        sim.run_until_done();
+        let stats = sim.network_stats();
+        let per_port_sum: u64 = stats.switched_per_port.iter().flat_map(|p| p.iter()).sum();
+        assert_eq!(per_port_sum, stats.flits_switched);
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = run(true);
+        assert!(rep.body.contains("n9"));
+        assert!(rep.body.contains("MC"));
+    }
+}

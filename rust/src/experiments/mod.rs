@@ -1,0 +1,92 @@
+//! The experiment harness: one module per table/figure of the paper's
+//! evaluation (§5). Each regenerates the corresponding rows/series.
+//!
+//! | module | reproduces |
+//! |--------|------------|
+//! | [`table1`] | Table 1 — kernel size → packet size in flits |
+//! | [`fig7`]   | Fig. 7a–h + §5.2 — per-PE times and unevenness ρ |
+//! | [`fig8`]   | Fig. 8 — different mapping iterations (0.5×–8× tasks) |
+//! | [`fig9`]   | Fig. 9 — different packet sizes (kernel 1×1–13×13) |
+//! | [`fig10`]  | Fig. 10 — NoC architectures (2 MCs vs 4 MCs) |
+//! | [`fig11`]  | Fig. 11 — whole LeNet under all six mappings |
+//! | [`ablation`] | extension — memory-service discipline vs. saturation |
+//! | [`heatmap`] | extension — per-router congestion heatmap |
+//!
+//! Absolute cycle counts differ from the paper (different testbeds); the
+//! *shape* — who wins, by roughly what factor, where the crossovers sit —
+//! is the reproduction target, and each report prints the paper's numbers
+//! next to ours.
+
+pub mod ablation;
+pub mod fig10;
+pub mod heatmap;
+pub mod fig11;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+/// A rendered experiment report (markdown).
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Stable id ("fig7", "table1", …).
+    pub id: &'static str,
+    /// Human title.
+    pub title: &'static str,
+    /// Markdown body with the regenerated tables/series.
+    pub body: String,
+}
+
+impl std::fmt::Display for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "## {} — {}\n", self.id, self.title)?;
+        f.write_str(&self.body)
+    }
+}
+
+/// Run every experiment. `quick` trims the sweeps (used by tests); the
+/// full run regenerates exactly the paper's configurations.
+pub fn all_reports(quick: bool) -> Vec<Report> {
+    vec![
+        table1::run(),
+        fig7::run(quick),
+        fig8::run(quick),
+        fig9::run(quick),
+        fig10::run(quick),
+        fig11::run(quick),
+        ablation::run(quick),
+        heatmap::run(quick),
+    ]
+}
+
+/// Look up one experiment by id.
+pub fn run_by_id(id: &str, quick: bool) -> Option<Report> {
+    match id {
+        "table1" => Some(table1::run()),
+        "fig7" => Some(fig7::run(quick)),
+        "fig8" => Some(fig8::run(quick)),
+        "fig9" => Some(fig9::run(quick)),
+        "fig10" => Some(fig10::run(quick)),
+        "fig11" => Some(fig11::run(quick)),
+        "ablation" => Some(ablation::run(quick)),
+        "heatmap" => Some(heatmap::run(quick)),
+        _ => None,
+    }
+}
+
+/// Ids of all experiments, in paper order.
+pub const ALL_IDS: [&str; 8] =
+    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation", "heatmap"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_by_id_covers_all_ids() {
+        for id in ALL_IDS {
+            assert!(run_by_id(id, true).is_some(), "missing experiment {id}");
+        }
+        assert!(run_by_id("fig99", true).is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! Table 1 — kernel size → mapping iterations and packet size in flits.
+//!
+//! The paper's communication-protocol model: only the response packet
+//! carries data (k² inputs + k² weights at 16 bit), so the packet size in
+//! flits follows `ceil(2·k²·16 / 256)` for the 256-bit flit the platform
+//! uses. The input feature map (28×28 output, 6 channels, 14 PEs) fixes
+//! the mapping iterations at 336 for every kernel.
+
+use crate::config::PlatformConfig;
+use crate::dnn::LayerSpec;
+use crate::util::Table;
+
+use super::Report;
+
+/// Kernel sizes evaluated in Table 1 / Fig. 9.
+pub const KERNELS: [u64; 7] = [1, 3, 5, 7, 9, 11, 13];
+
+/// Paper's published packet sizes (flits) for [`KERNELS`].
+pub const PAPER_FLITS: [u64; 7] = [1, 2, 4, 7, 11, 16, 22];
+
+/// One row of Table 1.
+#[derive(Debug, Clone, Copy)]
+pub struct Row {
+    /// Convolution kernel size k (k×k).
+    pub kernel: u64,
+    /// Zero padding that keeps the 28×28 output.
+    pub padding: u64,
+    /// Row-major mapping iterations on the default 14-PE platform.
+    pub iterations: u64,
+    /// Response packet size in flits (ours).
+    pub flits: u64,
+    /// Response packet size in flits (paper).
+    pub paper_flits: u64,
+}
+
+/// Compute the table rows.
+pub fn rows() -> Vec<Row> {
+    let cfg = PlatformConfig::default_2mc();
+    KERNELS
+        .iter()
+        .zip(PAPER_FLITS)
+        .map(|(&k, paper)| {
+            let layer = LayerSpec::conv("sweep", k, 1.0, 6 * 28 * 28);
+            Row {
+                kernel: k,
+                padding: (k - 1) / 2,
+                iterations: layer.mapping_iterations(cfg.num_pes() as u64),
+                flits: layer.profile(&cfg).resp_flits,
+                paper_flits: paper,
+            }
+        })
+        .collect()
+}
+
+/// Render the report.
+pub fn run() -> Report {
+    let mut t = Table::new(["kernel", "padding", "mapping iterations", "flits (ours)", "flits (paper)"]);
+    for r in rows() {
+        t.row([
+            format!("{0}x{0}", r.kernel),
+            r.padding.to_string(),
+            r.iterations.to_string(),
+            r.flits.to_string(),
+            r.paper_flits.to_string(),
+        ]);
+    }
+    let all_match = rows().iter().all(|r| r.flits == r.paper_flits);
+    let body = format!(
+        "Input 28x28 (padded), 6 output channels, 14 PEs.\n\n{t}\nAll packet sizes match the paper: **{all_match}** \
+         (flit = 256 bit, reverse-engineered from the published rows).\n"
+    );
+    Report { id: "table1", title: "Different kernel size and packet size", body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table1_exactly() {
+        for r in rows() {
+            assert_eq!(r.flits, r.paper_flits, "kernel {}", r.kernel);
+            assert_eq!(r.iterations, 336);
+        }
+    }
+
+    #[test]
+    fn padding_preserves_output() {
+        for r in rows() {
+            // 28 + 2·padding − (k − 1) = 28.
+            assert_eq!(28 + 2 * r.padding - (r.kernel - 1), 28);
+        }
+    }
+
+    #[test]
+    fn report_renders() {
+        let rep = run();
+        assert_eq!(rep.id, "table1");
+        assert!(rep.body.contains("13x13"));
+        assert!(rep.body.contains("true"));
+    }
+}

@@ -1,0 +1,38 @@
+//! # noctt — Travel-Time Based Task Mapping for NoC-Based DNN Accelerators
+//!
+//! A from-scratch reproduction of Chen, Zhu & Lu, *"Travel Time Based Task
+//! Mapping for NoC-Based DNN Accelerator"* (LNCS, 2024).
+//!
+//! The crate is organised in layers:
+//!
+//! * [`noc`] — a cycle-accurate 2-D-mesh virtual-channel Network-on-Chip
+//!   simulator (5-stage routers, credit-based flow control, X-Y routing).
+//! * [`accel`] — the CNN accelerator device models (PE with 64 MACs, memory
+//!   controllers with a DDR5-like bandwidth model) and the co-simulation
+//!   engine that drives them against the NoC.
+//! * [`dnn`] — the DNN workload model: layers, tasks, packet sizing, and the
+//!   LeNet-5 network used throughout the paper's evaluation.
+//! * [`mapping`] — the five task-mapping strategies under study: row-major
+//!   (even), distance-based, static-latency, post-run travel-time, and
+//!   sampling-window travel-time mapping (the paper's contribution).
+//! * [`metrics`] — unevenness (Eq. 9) and per-PE timing statistics.
+//! * [`experiments`] — one module per figure/table of the paper's
+//!   evaluation section; each regenerates the corresponding result.
+//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   LeNet artifacts (HLO text) and executes them for functional inference.
+//! * [`config`] — the experiment/platform configuration system.
+//! * [`util`] — deterministic PRNG, table printing, and a tiny
+//!   property-testing harness used by the test-suite.
+
+pub mod accel;
+pub mod config;
+pub mod dnn;
+pub mod experiments;
+pub mod mapping;
+pub mod metrics;
+pub mod noc;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

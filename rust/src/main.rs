@@ -1,0 +1,251 @@
+//! `noctt` — the leader binary: experiments, single simulations, platform
+//! inspection, and PJRT LeNet inference, all from the command line.
+//!
+//! ```text
+//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|all> [--quick]
+//! noctt sim --layer <C1|S2|C3|S4|C5|F6|OUT|k<N>> --strategy <name> [--mcs 2|4] [--channels N]
+//! noctt platform [--mcs 2|4]
+//! noctt infer [--artifacts DIR] [--batch 1|8]
+//! noctt smoke [--artifacts DIR]
+//! noctt report
+//! ```
+//!
+//! (clap is unavailable in the offline build environment; argument parsing
+//! is a small hand-rolled layer in [`args`].)
+
+use anyhow::{bail, Context, Result};
+
+use noctt::config::PlatformConfig;
+use noctt::dnn::{lenet5, LayerSpec};
+use noctt::experiments;
+use noctt::mapping::{distance::pe_distances, run_layer, Strategy};
+use noctt::metrics::improvement;
+use noctt::runtime::{LenetRuntime, TensorFile};
+use noctt::util::{table::fmt_pct, Table};
+
+mod args {
+    //! Minimal flag parser: `--key value` pairs + positionals.
+
+    use anyhow::{bail, Result};
+    use std::collections::HashMap;
+
+    /// Parsed command line: positionals + `--key value` flags
+    /// (`--flag` with no value stores `"true"`).
+    pub struct Args {
+        pub positional: Vec<String>,
+        pub flags: HashMap<String, String>,
+    }
+
+    impl Args {
+        /// Parse from `std::env::args` (excluding argv\[0\]).
+        pub fn parse(argv: impl Iterator<Item = String>) -> Result<Self> {
+            let mut positional = Vec::new();
+            let mut flags = HashMap::new();
+            let mut iter = argv.peekable();
+            while let Some(a) = iter.next() {
+                if let Some(key) = a.strip_prefix("--") {
+                    let value = match iter.peek() {
+                        Some(v) if !v.starts_with("--") => iter.next().unwrap(),
+                        _ => "true".to_string(),
+                    };
+                    if flags.insert(key.to_string(), value).is_some() {
+                        bail!("duplicate flag --{key}");
+                    }
+                } else {
+                    positional.push(a);
+                }
+            }
+            Ok(Self { positional, flags })
+        }
+
+        /// Flag value with default.
+        pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+            self.flags.get(key).map(String::as_str).unwrap_or(default)
+        }
+
+        /// Boolean flag.
+        pub fn has(&self, key: &str) -> bool {
+            self.flags.contains_key(key)
+        }
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "noctt — travel-time based task mapping for NoC-based DNN accelerators\n\
+         \n\
+         Usage:\n\
+         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|all> [--quick]   regenerate paper results\n\
+         \x20 noctt sim --layer <C1..OUT|k<N>> --strategy <s> [--mcs 2|4]   one mapped layer run\n\
+         \x20             [--channels N] [--window W]\n\
+         \x20 noctt platform [--mcs 2|4]                                    platform inventory\n\
+         \x20 noctt infer [--artifacts DIR] [--batch 1|8]                   PJRT LeNet inference\n\
+         \x20 noctt smoke [--artifacts DIR]                                 PJRT smoke test\n\
+         \x20 noctt report                                                  all experiments (markdown)\n\
+         \n\
+         Strategies: row-major | distance | static-latency | post-run | sampling-<W>"
+    );
+    std::process::exit(2);
+}
+
+fn parse_strategy(s: &str) -> Result<Strategy> {
+    Ok(match s {
+        "row-major" => Strategy::RowMajor,
+        "distance" => Strategy::Distance,
+        "static-latency" => Strategy::StaticLatency,
+        "post-run" => Strategy::PostRun,
+        _ => match s.strip_prefix("sampling-") {
+            Some(w) => Strategy::Sampling(w.parse().context("sampling window")?),
+            None => bail!("unknown strategy '{s}'"),
+        },
+    })
+}
+
+fn parse_platform(a: &args::Args) -> Result<PlatformConfig> {
+    match a.get_or("mcs", "2") {
+        "2" => Ok(PlatformConfig::default_2mc()),
+        "4" => Ok(PlatformConfig::default_4mc()),
+        other => bail!("--mcs must be 2 or 4, got {other}"),
+    }
+}
+
+fn parse_layer(a: &args::Args, cfg: &PlatformConfig) -> Result<LayerSpec> {
+    let name = a.get_or("layer", "C1");
+    let channels: u64 = a.get_or("channels", "6").parse().context("--channels")?;
+    if let Some(k) = name.strip_prefix('k') {
+        let k: u64 = k.parse().context("kernel size")?;
+        return Ok(LayerSpec::conv(&format!("k{k}"), k, 1.0, channels * 28 * 28));
+    }
+    let layers = lenet5(channels);
+    layers
+        .into_iter()
+        .find(|l| l.name == name)
+        .with_context(|| format!("unknown layer '{name}' (need C1,S2,C3,S4,C5,F6,OUT or k<N>); cfg has {} PEs", cfg.num_pes()))
+}
+
+fn cmd_exp(a: &args::Args) -> Result<()> {
+    let Some(id) = a.positional.get(1) else { usage() };
+    let quick = a.has("quick");
+    if id == "all" {
+        for r in experiments::all_reports(quick) {
+            println!("{r}");
+        }
+        return Ok(());
+    }
+    match experiments::run_by_id(id, quick) {
+        Some(r) => {
+            println!("{r}");
+            Ok(())
+        }
+        None => bail!("unknown experiment '{id}' — one of {:?}", experiments::ALL_IDS),
+    }
+}
+
+fn cmd_sim(a: &args::Args) -> Result<()> {
+    let cfg = parse_platform(a)?;
+    let layer = parse_layer(a, &cfg)?;
+    let strategy = parse_strategy(a.get_or("strategy", "sampling-10"))?;
+    let run = run_layer(&cfg, &layer, strategy);
+    let base = run_layer(&cfg, &layer, Strategy::RowMajor);
+
+    println!(
+        "layer {} — {} tasks, {} flits/response, strategy {}",
+        layer.name,
+        layer.tasks,
+        layer.profile(&cfg).resp_flits,
+        strategy.label()
+    );
+    let d = pe_distances(&cfg);
+    let mut t = Table::new(["PE node", "dist", "tasks", "mean travel", "accum travel", "finish"]);
+    for (i, node) in cfg.pe_nodes().iter().enumerate() {
+        t.row([
+            format!("n{node}"),
+            d[i].to_string(),
+            run.summary.counts[i].to_string(),
+            run.summary.mean_travel[i].map_or("-".into(), |m| format!("{m:.2}")),
+            run.summary.accum_travel[i].to_string(),
+            run.result.finish[i].to_string(),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "latency {} cycles | ρ_avg {} | ρ_accum {} | improvement vs row-major {}",
+        run.summary.latency,
+        fmt_pct(run.summary.rho_avg),
+        fmt_pct(run.summary.rho_accum),
+        fmt_pct(improvement(base.summary.latency, run.summary.latency)),
+    );
+    Ok(())
+}
+
+fn cmd_platform(a: &args::Args) -> Result<()> {
+    let cfg = parse_platform(a)?;
+    cfg.validate()?;
+    println!(
+        "mesh {}x{} | {} MCs at {:?} | {} PEs | {} VCs x {}-flit buffers | flit {} bits",
+        cfg.mesh_width,
+        cfg.mesh_height,
+        cfg.mc_nodes.len(),
+        cfg.mc_nodes,
+        cfg.num_pes(),
+        cfg.num_vcs,
+        cfg.vc_depth,
+        cfg.flit_bits
+    );
+    let d = pe_distances(&cfg);
+    let mut t = Table::new(["PE node", "distance to nearest MC"]);
+    for (i, node) in cfg.pe_nodes().iter().enumerate() {
+        t.row([format!("n{node}"), d[i].to_string()]);
+    }
+    println!("{t}");
+    Ok(())
+}
+
+fn cmd_infer(a: &args::Args) -> Result<()> {
+    let dir = a.get_or("artifacts", "artifacts");
+    let batch: usize = a.get_or("batch", "8").parse().context("--batch")?;
+    let rt = LenetRuntime::load(dir, batch).context("loading LeNet runtime")?;
+    println!("platform {} | artifact batch {}", rt.platform(), rt.batch());
+
+    // Run on the golden test vector and check against the AOT logits.
+    let tv = TensorFile::load(&format!("{dir}/testvec.bin"))?;
+    let input = tv.get("input")?;
+    let expect = tv.get("logits")?;
+    anyhow::ensure!(input.dims[0] >= batch, "testvec batch too small");
+    let images = &input.data[..batch * 32 * 32];
+    let t0 = std::time::Instant::now();
+    let logits = rt.infer(images)?;
+    let dt = t0.elapsed();
+    let mut max_err = 0f32;
+    for (g, w) in logits.iter().zip(&expect.data[..batch * 10]) {
+        max_err = max_err.max((g - w).abs());
+    }
+    let classes = rt.classify(images)?;
+    println!("classes: {classes:?}");
+    println!("max |logit error| vs AOT golden: {max_err:.2e} | inference {dt:?}");
+    anyhow::ensure!(max_err < 1e-3, "numerics diverge from the AOT golden output");
+    println!("inference OK — rust PJRT output matches the JAX/Pallas build");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let a = args::Args::parse(std::env::args().skip(1))?;
+    match a.positional.first().map(String::as_str) {
+        Some("exp") => cmd_exp(&a),
+        Some("sim") => cmd_sim(&a),
+        Some("platform") => cmd_platform(&a),
+        Some("infer") => cmd_infer(&a),
+        Some("smoke") => {
+            noctt::runtime::smoke_test(a.get_or("artifacts", "artifacts"))?;
+            println!("smoke OK");
+            Ok(())
+        }
+        Some("report") => {
+            for r in experiments::all_reports(false) {
+                println!("{r}");
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,99 @@
+//! Distance-based task mapping — §3.3, Fig. 3, Eq. 1–2.
+//!
+//! Counts are inversely proportional to each PE's hop distance to its
+//! nearest MC:
+//!
+//! ```text
+//! Task_count1 · Distance1 = Task_count2 · Distance2 = Task_count3 · Distance3   (Eq. 1)
+//! Task_all = Σ_d Num_d · Task_count_d                                            (Eq. 2)
+//! ```
+//!
+//! The paper shows this static rule *over-corrects* (ρ rises to 58.03% on
+//! the default platform) because distance alone ignores congestion and the
+//! non-linear cost of multi-flit packets — exactly the gap the travel-time
+//! mapper closes.
+
+use crate::config::PlatformConfig;
+use crate::noc::Mesh;
+use crate::util::apportion::inverse_proportional;
+
+/// Hop distance from each PE (dense order) to its nearest MC.
+pub fn pe_distances(cfg: &PlatformConfig) -> Vec<u64> {
+    let mesh = Mesh::new(cfg.mesh_width, cfg.mesh_height);
+    cfg.pe_nodes()
+        .into_iter()
+        .map(|pe| {
+            cfg.mc_nodes
+                .iter()
+                .map(|&mc| mesh.hop_distance(pe, mc) as u64)
+                .min()
+                .expect("at least one MC")
+        })
+        .collect()
+}
+
+/// Per-PE counts for distance-based mapping of `total` tasks (Eq. 1–2,
+/// integerised by largest remainder).
+pub fn counts(cfg: &PlatformConfig, total: u64) -> Vec<u64> {
+    let d: Vec<f64> = pe_distances(cfg).into_iter().map(|x| x as f64).collect();
+    inverse_proportional(total, &d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_platform_distance_classes() {
+        let cfg = PlatformConfig::default_2mc();
+        let d = pe_distances(&cfg);
+        // PE dense order = ascending node id skipping 9, 10:
+        // nodes 0..8 → indices 0..8; nodes 11..15 → indices 9..13.
+        let nodes = cfg.pe_nodes();
+        for (i, &node) in nodes.iter().enumerate() {
+            let expect = match node {
+                5 | 6 | 8 | 11 | 13 | 14 => 1,
+                1 | 2 | 4 | 7 | 12 | 15 => 2,
+                0 | 3 => 3,
+                n => panic!("unexpected PE node {n}"),
+            };
+            assert_eq!(d[i], expect, "node {node}");
+        }
+    }
+
+    #[test]
+    fn eq1_eq2_solution_for_c1() {
+        // §3.3 solved for 4704 tasks: distance-1 PEs ≈ 487, distance-2
+        // ≈ 243, distance-3 ≈ 162 (t·29/3 = 4704 → t ≈ 486.6).
+        let cfg = PlatformConfig::default_2mc();
+        let c = counts(&cfg, 4704);
+        assert_eq!(c.iter().sum::<u64>(), 4704);
+        let nodes = cfg.pe_nodes();
+        for (i, &node) in nodes.iter().enumerate() {
+            match node {
+                5 | 6 | 8 | 11 | 13 | 14 => assert!((486..=488).contains(&c[i]), "D1 {}", c[i]),
+                1 | 2 | 4 | 7 | 12 | 15 => assert!((242..=244).contains(&c[i]), "D2 {}", c[i]),
+                0 | 3 => assert!((161..=163).contains(&c[i]), "D3 {}", c[i]),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn four_mc_platform_flattens_distances() {
+        // Fig. 10: with four MCs the distance spread shrinks to {1, 2}.
+        let cfg = PlatformConfig::default_4mc();
+        let d = pe_distances(&cfg);
+        assert!(d.iter().all(|&x| x == 1 || x == 2), "{d:?}");
+        assert_eq!(d.iter().filter(|&&x| x == 1).count(), 8);
+        assert_eq!(d.iter().filter(|&&x| x == 2).count(), 4);
+    }
+
+    #[test]
+    fn conserves_total() {
+        let cfg = PlatformConfig::default_2mc();
+        for total in [1u64, 13, 14, 100, 4704, 37632] {
+            assert_eq!(counts(&cfg, total).iter().sum::<u64>(), total);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! The five task-mapping strategies under study (§3–§4).
+//!
+//! Every strategy answers the same question: *how many tasks of a layer
+//! does each PE get?* The engine then executes those budgets on the
+//! cycle-accurate platform.
+//!
+//! * [`row_major`] — even mapping in row order (§3.2, the baseline).
+//! * [`distance`] — counts inversely proportional to the hop distance to
+//!   the nearest MC (§3.3, Eq. 1–2).
+//! * [`static_latency`] — counts inversely proportional to an analytic
+//!   no-load latency estimate (§4.2, Eq. 6).
+//! * [`travel_time`] — the paper's contribution: counts inversely
+//!   proportional to *measured* travel times, either recorded post-run
+//!   (Eq. 4–5, the oracle) or sampled in a short window at the start of
+//!   the layer (Eq. 7–8, Fig. 6 — with a row-major fallback for layers too
+//!   small to sample).
+
+pub mod distance;
+pub mod row_major;
+pub mod static_latency;
+pub mod travel_time;
+
+use crate::accel::{SimResult, Simulation};
+use crate::config::PlatformConfig;
+use crate::dnn::LayerSpec;
+use crate::metrics::RunSummary;
+
+/// Mapping strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Even mapping in row order (baseline).
+    RowMajor,
+    /// Distance-based uneven mapping.
+    Distance,
+    /// Static-latency-based uneven mapping.
+    StaticLatency,
+    /// Post-run travel-time mapping (oracle; needs an extra profiling run).
+    PostRun,
+    /// Sampling-window travel-time mapping with the given window length.
+    Sampling(u64),
+}
+
+impl Strategy {
+    /// Short label used in experiment tables.
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::RowMajor => "row-major".into(),
+            Strategy::Distance => "distance".into(),
+            Strategy::StaticLatency => "static-latency".into(),
+            Strategy::PostRun => "post-run".into(),
+            Strategy::Sampling(w) => format!("sampling-{w}"),
+        }
+    }
+
+    /// All strategies evaluated in Fig. 11, in the paper's order.
+    pub fn fig11_set() -> Vec<Strategy> {
+        vec![
+            Strategy::RowMajor,
+            Strategy::Distance,
+            Strategy::Sampling(1),
+            Strategy::Sampling(5),
+            Strategy::Sampling(10),
+            Strategy::PostRun,
+        ]
+    }
+}
+
+/// Outcome of mapping + executing one layer.
+#[derive(Debug, Clone)]
+pub struct MappedRun {
+    /// Strategy that produced it.
+    pub strategy: Strategy,
+    /// Planned per-PE task counts (sum = layer tasks).
+    pub counts: Vec<u64>,
+    /// Metric summary of the executed run.
+    pub summary: RunSummary,
+    /// Raw simulation result.
+    pub result: SimResult,
+    /// True when the strategy consumed an additional profiling run
+    /// (post-run mapping; the paper notes its extra time/energy cost).
+    pub extra_run: bool,
+}
+
+/// Map and execute `layer` on the platform with `strategy`.
+pub fn run_layer(cfg: &PlatformConfig, layer: &LayerSpec, strategy: Strategy) -> MappedRun {
+    match strategy {
+        Strategy::RowMajor => run_precomputed(cfg, layer, strategy, row_major::counts(layer.tasks, cfg.num_pes()), false),
+        Strategy::Distance => run_precomputed(cfg, layer, strategy, distance::counts(cfg, layer.tasks), false),
+        Strategy::StaticLatency => {
+            run_precomputed(cfg, layer, strategy, static_latency::counts(cfg, layer), false)
+        }
+        Strategy::PostRun => travel_time::run_post_run(cfg, layer),
+        Strategy::Sampling(w) => travel_time::run_sampling(cfg, layer, w),
+    }
+}
+
+/// Execute a layer with fully precomputed counts.
+pub(crate) fn run_precomputed(
+    cfg: &PlatformConfig,
+    layer: &LayerSpec,
+    strategy: Strategy,
+    counts: Vec<u64>,
+    extra_run: bool,
+) -> MappedRun {
+    debug_assert_eq!(counts.iter().sum::<u64>(), layer.tasks, "counts must conserve tasks");
+    let mut sim = Simulation::new(cfg, layer.profile(cfg));
+    sim.add_budgets(&counts);
+    let result = sim.run_until_done();
+    finish(strategy, counts, result, extra_run)
+}
+
+pub(crate) fn finish(
+    strategy: Strategy,
+    counts: Vec<u64>,
+    result: SimResult,
+    extra_run: bool,
+) -> MappedRun {
+    let summary = RunSummary::from_result(&result);
+    MappedRun { strategy, counts, summary, result, extra_run }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Strategy::RowMajor.label(), "row-major");
+        assert_eq!(Strategy::Sampling(10).label(), "sampling-10");
+        assert_eq!(Strategy::fig11_set().len(), 6);
+    }
+
+    #[test]
+    fn every_strategy_conserves_tasks_on_a_small_layer() {
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("mini", 5, 1.0, 140);
+        for s in Strategy::fig11_set() {
+            let run = run_layer(&cfg, &layer, s);
+            assert_eq!(
+                run.counts.iter().sum::<u64>(),
+                140,
+                "{} lost tasks",
+                s.label()
+            );
+            assert_eq!(
+                run.summary.counts.iter().sum::<u64>(),
+                140,
+                "{} executed wrong task total",
+                s.label()
+            );
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Even (row-major) task mapping — §3.2, Fig. 2, the baseline.
+//!
+//! "DNN tiling strategies generally allocate an equal amount of work to
+//! each available resource, until the final mapping iteration for tail
+//! tasks." One *mapping iteration* hands one task to every PE in row
+//! order; the tail iteration may run short.
+
+/// Per-PE task counts for even mapping of `total` tasks over `num_pes`
+/// PEs in row order: every PE gets `total / num_pes`, and the first
+/// `total % num_pes` PEs (row order) one more (the tail iteration).
+pub fn counts(total: u64, num_pes: usize) -> Vec<u64> {
+    assert!(num_pes > 0);
+    let n = num_pes as u64;
+    let base = total / n;
+    let tail = (total % n) as usize;
+    (0..num_pes).map(|i| base + u64::from(i < tail)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_c1_default() {
+        // 4704 tasks on 14 PEs = exactly 336 each (336 iterations, §5.1).
+        let c = counts(4704, 14);
+        assert_eq!(c, vec![336; 14]);
+    }
+
+    #[test]
+    fn tail_goes_to_first_pes_in_row_order() {
+        let c = counts(30, 14);
+        assert_eq!(c.iter().sum::<u64>(), 30);
+        assert_eq!(&c[..2], &[3, 3]);
+        assert_eq!(&c[2..], &[2; 12]);
+    }
+
+    #[test]
+    fn fewer_tasks_than_pes() {
+        let c = counts(5, 14);
+        assert_eq!(c.iter().sum::<u64>(), 5);
+        assert_eq!(&c[..5], &[1; 5]);
+        assert_eq!(&c[5..], &[0; 9]);
+    }
+
+    #[test]
+    fn zero_tasks() {
+        assert_eq!(counts(0, 3), vec![0, 0, 0]);
+    }
+}

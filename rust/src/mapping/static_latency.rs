@@ -1,0 +1,108 @@
+//! Static-latency-based task mapping — §4.2, Eq. 6.
+//!
+//! Without running the platform, estimate each PE's per-task latency from
+//! static information:
+//!
+//! ```text
+//! T_SL = T_compu + T_memaccess + (D·T_link + (FlitNum − 1)·T_flit) + T_fixed   (Eq. 6)
+//! ```
+//!
+//! * `T_compu` — workload / available MACs (per the layer profile);
+//! * `T_memaccess` — data size / bandwidth;
+//! * `D·T_link` — response head flit traversal over `D` hops;
+//! * `(FlitNum − 1)·T_flit` — serialization of the packet body;
+//! * `T_fixed` — fixed overheads: packetization at both NIs plus the
+//!   single-flit request's own `D·T_link` trip.
+//!
+//! The estimate deliberately excludes congestion and queueing — the paper
+//! shows it works well for small flit counts and degrades as congestion
+//! grows (Fig. 9), motivating measured travel times.
+
+use crate::config::PlatformConfig;
+use crate::dnn::LayerSpec;
+use crate::mapping::distance::pe_distances;
+use crate::util::apportion::inverse_proportional;
+
+/// Per-flit serialization latency (cycles) used by Eq. 6.
+const T_FLIT: u64 = 1;
+
+/// The Eq. 6 static latency estimate per PE (dense order), in router
+/// cycles, for one task of `layer`.
+pub fn static_latencies(cfg: &PlatformConfig, layer: &LayerSpec) -> Vec<f64> {
+    let profile = layer.profile(cfg);
+    pe_distances(cfg)
+        .into_iter()
+        .map(|d| {
+            let response_trip = d * cfg.static_hop_cycles + (profile.resp_flits - 1) * T_FLIT;
+            let request_trip = d * cfg.static_hop_cycles;
+            let t_fixed = 2 * cfg.ni_packetize_cycles + request_trip;
+            (profile.compute_cycles + profile.mem_cycles + response_trip + t_fixed) as f64
+        })
+        .collect()
+}
+
+/// Per-PE counts: inversely proportional to the Eq. 6 estimates.
+pub fn counts(cfg: &PlatformConfig, layer: &LayerSpec) -> Vec<u64> {
+    inverse_proportional(layer.tasks, &static_latencies(cfg, layer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_grows_with_distance() {
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("C1", 5, 1.0, 4704);
+        let lat = static_latencies(&cfg, &layer);
+        let d = pe_distances(&cfg);
+        for i in 0..lat.len() {
+            for j in 0..lat.len() {
+                if d[i] < d[j] {
+                    assert!(lat[i] < lat[j], "distance ordering violated");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flit_count_shifts_the_balance_toward_uniformity() {
+        // With more flits, the distance-dependent share of T_SL shrinks, so
+        // the allocation is *less* skewed than pure distance ratios.
+        let cfg = PlatformConfig::default_2mc();
+        let small = LayerSpec::conv("k1", 1, 1.0, 4704);
+        let large = LayerSpec::conv("k13", 13, 1.0, 4704);
+        let c_small = counts(&cfg, &small);
+        let c_large = counts(&cfg, &large);
+        let spread = |c: &[u64]| c.iter().max().unwrap() - c.iter().min().unwrap();
+        assert!(
+            spread(&c_large) < spread(&c_small),
+            "large packets must flatten the static allocation: {c_small:?} vs {c_large:?}"
+        );
+    }
+
+    #[test]
+    fn conserves_total() {
+        let cfg = PlatformConfig::default_2mc();
+        for tasks in [10u64, 4704, 37632] {
+            let layer = LayerSpec::conv("x", 5, 1.0, tasks);
+            assert_eq!(counts(&cfg, &layer).iter().sum::<u64>(), tasks);
+        }
+    }
+
+    #[test]
+    fn skew_is_milder_than_distance_ratios() {
+        // Distance mapping gives D3 a third of D1's tasks; the static
+        // estimate adds distance-independent terms, so its ratio is closer
+        // to 1 — the paper's explanation for distance over-correction.
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("C1", 5, 1.0, 4704);
+        let c = counts(&cfg, &layer);
+        let nodes = cfg.pe_nodes();
+        let d1 = c[nodes.iter().position(|&n| n == 5).unwrap()] as f64;
+        let d3 = c[nodes.iter().position(|&n| n == 0).unwrap()] as f64;
+        let ratio = d3 / d1;
+        assert!(ratio > 1.0 / 3.0 + 0.05, "static ratio {ratio} should exceed distance's 1/3");
+        assert!(ratio < 1.0, "farther PE still gets fewer tasks");
+    }
+}

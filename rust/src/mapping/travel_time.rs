@@ -1,0 +1,200 @@
+//! Travel-time based task mapping — the paper's contribution (§4).
+//!
+//! Both variants allocate counts inversely proportional to *measured*
+//! per-PE travel times (Eq. 4–5), which implicitly capture the NoC
+//! architecture **and** its dynamic congestion:
+//!
+//! * **Post-run** (§4.2): an extra profiling run records exact travel
+//!   times for every task; the mapped run then balances perfectly up to
+//!   integer rounding. The oracle — best results, but pays a full extra
+//!   run of time and energy.
+//! * **Sampling window** (§4.2, Fig. 6): the first `window` tasks of each
+//!   PE are mapped evenly and their travel times averaged (Eq. 7); only
+//!   the *residual* tasks are then redistributed (Eq. 8). No extra run.
+//!   Layers too small to sample fall back to row-major (the flowchart's
+//!   left route).
+
+use crate::accel::Simulation;
+use crate::config::PlatformConfig;
+use crate::dnn::LayerSpec;
+use crate::mapping::{finish, row_major, run_precomputed, MappedRun, Strategy};
+use crate::util::apportion::inverse_proportional;
+
+/// Mean travel time per PE from a set of records; `fallback` substitutes
+/// for PEs with no completed tasks (can happen only with zero budgets).
+fn mean_travel_per_pe(records: &[crate::accel::TaskRecord], num_pes: usize) -> Vec<f64> {
+    let mut sum = vec![0u64; num_pes];
+    let mut cnt = vec![0u64; num_pes];
+    for r in records {
+        sum[r.pe] += r.travel_time();
+        cnt[r.pe] += 1;
+    }
+    let global_mean = {
+        let t: u64 = sum.iter().sum();
+        let c: u64 = cnt.iter().sum();
+        if c == 0 {
+            1.0
+        } else {
+            t as f64 / c as f64
+        }
+    };
+    (0..num_pes)
+        .map(|i| if cnt[i] == 0 { global_mean } else { sum[i] as f64 / cnt[i] as f64 })
+        .collect()
+}
+
+/// Post-run travel-time mapping: profile with an extra even-mapped run,
+/// then execute with counts solving Eq. 4–5 on the recorded times.
+pub fn run_post_run(cfg: &PlatformConfig, layer: &LayerSpec) -> MappedRun {
+    // Extra run (the cost the paper attributes to this oracle).
+    let probe_counts = row_major::counts(layer.tasks, cfg.num_pes());
+    let mut probe = Simulation::new(cfg, layer.profile(cfg));
+    probe.add_budgets(&probe_counts);
+    let probe_res = probe.run_until_done();
+    let times = mean_travel_per_pe(&probe_res.records, cfg.num_pes());
+    let counts = inverse_proportional(layer.tasks, &times);
+    run_precomputed(cfg, layer, Strategy::PostRun, counts, true)
+}
+
+/// Sampling-window travel-time mapping (Fig. 6).
+///
+/// * Not enough tasks to sample every PE `window` times → row-major route.
+/// * Otherwise: run the sampled tasks (even, `window` per PE), compute
+///   per-PE sampled means `T_s` (Eq. 7), allocate the residual
+///   `Task_all − Task_sampled` inversely proportional to `T_s` (Eq. 8),
+///   and continue the *same* platform run — no extra run needed.
+pub fn run_sampling(cfg: &PlatformConfig, layer: &LayerSpec, window: u64) -> MappedRun {
+    assert!(window >= 1, "sampling window must be at least 1");
+    let n = cfg.num_pes();
+    let sampled_total = window * n as u64;
+    if layer.tasks < sampled_total {
+        // Fig. 6 left route: small layer, sample-free row-major mapping.
+        let counts = row_major::counts(layer.tasks, n);
+        return run_precomputed(cfg, layer, Strategy::Sampling(window), counts, false);
+    }
+    let mut sim = Simulation::new(cfg, layer.profile(cfg));
+    // Phase 1: the sampling window, mapped evenly.
+    sim.add_budgets(&vec![window; n]);
+    let phase1 = sim.run_until_budgets_met();
+    let t_s = mean_travel_per_pe(&phase1.records, n);
+    // Phase 2: residual tasks, Eq. 7–8.
+    let residual = layer.tasks - sampled_total;
+    let residual_counts = inverse_proportional(residual, &t_s);
+    sim.add_budgets(&residual_counts);
+    let result = sim.run_until_done();
+    let counts: Vec<u64> = residual_counts.iter().map(|c| c + window).collect();
+    finish(Strategy::Sampling(window), counts, result, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::unevenness;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::default_2mc()
+    }
+
+    /// A mid-size layer keeps these tests fast (~600 tasks).
+    fn layer() -> LayerSpec {
+        LayerSpec::conv("test-c1", 5, 1.0, 4704 / 8)
+    }
+
+    #[test]
+    fn post_run_balances_accumulated_time() {
+        let l = layer();
+        let even = run_precomputed(
+            &cfg(),
+            &l,
+            Strategy::RowMajor,
+            row_major::counts(l.tasks, 14),
+            false,
+        );
+        let post = run_post_run(&cfg(), &l);
+        assert!(post.extra_run);
+        assert!(
+            post.summary.rho_accum < even.summary.rho_accum,
+            "post-run ρ {:.4} should beat row-major ρ {:.4}",
+            post.summary.rho_accum,
+            even.summary.rho_accum
+        );
+        assert!(post.summary.latency <= even.summary.latency, "oracle should not be slower");
+    }
+
+    #[test]
+    fn post_run_gives_fewer_tasks_to_far_pes() {
+        let post = run_post_run(&cfg(), &layer());
+        let nodes = cfg().pe_nodes();
+        let far = post.counts[nodes.iter().position(|&n| n == 0).unwrap()];
+        let near = post.counts[nodes.iter().position(|&n| n == 5).unwrap()];
+        assert!(far < near, "far PE got {far}, near PE got {near}");
+    }
+
+    #[test]
+    fn sampling_small_layer_falls_back_to_row_major() {
+        let small = LayerSpec::fc("F6", 120, 84);
+        let run = run_sampling(&cfg(), &small, 10); // needs 140 > 84
+        assert_eq!(run.counts, row_major::counts(84, 14));
+        assert!(!run.extra_run);
+    }
+
+    #[test]
+    fn sampling_uses_window_then_residual() {
+        let l = layer();
+        let run = run_sampling(&cfg(), &l, 10);
+        assert_eq!(run.counts.iter().sum::<u64>(), l.tasks);
+        // Every PE executed at least its window.
+        assert!(run.summary.counts.iter().all(|&c| c >= 10), "{:?}", run.summary.counts);
+        // And the allocation is uneven (travel times differ across PEs).
+        let uniq: std::collections::BTreeSet<u64> = run.counts.iter().copied().collect();
+        assert!(uniq.len() > 1, "sampling produced an even allocation: {:?}", run.counts);
+    }
+
+    #[test]
+    fn sampling_improves_over_row_major() {
+        let l = layer();
+        let even = run_precomputed(
+            &cfg(),
+            &l,
+            Strategy::RowMajor,
+            row_major::counts(l.tasks, 14),
+            false,
+        );
+        let sw10 = run_sampling(&cfg(), &l, 10);
+        assert!(
+            sw10.summary.latency < even.summary.latency,
+            "sampling-10 {} should beat row-major {}",
+            sw10.summary.latency,
+            even.summary.latency
+        );
+    }
+
+    #[test]
+    fn larger_window_tracks_post_run_better() {
+        // ρ(sw10) should be closer to the oracle than ρ(sw1) on a layer
+        // with enough tasks (the §5.6 trend).
+        let l = layer();
+        let post = run_post_run(&cfg(), &l);
+        let sw1 = run_sampling(&cfg(), &l, 1);
+        let sw10 = run_sampling(&cfg(), &l, 10);
+        let d1 = (sw1.summary.latency as f64 - post.summary.latency as f64).abs();
+        let d10 = (sw10.summary.latency as f64 - post.summary.latency as f64).abs();
+        assert!(
+            d10 <= d1 * 1.5,
+            "sw10 (Δ{d10}) should approximate the oracle at least as well as sw1 (Δ{d1})"
+        );
+    }
+
+    #[test]
+    fn balanced_runs_have_low_unevenness() {
+        let post = run_post_run(&cfg(), &layer());
+        let accum: Vec<Option<f64>> = post
+            .result
+            .totals
+            .iter()
+            .map(|t| (t.tasks > 0).then(|| t.total() as f64))
+            .collect();
+        let rho = unevenness(&accum);
+        assert!(rho < 0.25, "oracle unevenness should be small, got {rho:.4}");
+    }
+}

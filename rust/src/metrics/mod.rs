@@ -1,0 +1,124 @@
+//! Evaluation metrics (§5.2).
+//!
+//! The central metric is *unevenness* (Eq. 9):
+//!
+//! ```text
+//! ρ = (T_max − T_min) / T_max
+//! ```
+//!
+//! computed over per-PE quantities — either the average end-to-end task
+//! time (Fig. 7a–d) or the accumulated busy time (Fig. 7e–h). The paper
+//! minimises the *maximum* per-PE time because the slowest PE determines a
+//! layer's inference latency.
+
+use crate::accel::SimResult;
+
+/// Unevenness ρ = (max − min) / max over the given per-PE values
+/// (Eq. 9). Values `<= 0`/empty yield 0. `None` entries (unused PEs) are
+/// skipped.
+pub fn unevenness(values: &[Option<f64>]) -> f64 {
+    let vals: Vec<f64> = values.iter().filter_map(|v| *v).filter(|v| *v > 0.0).collect();
+    if vals.is_empty() {
+        return 0.0;
+    }
+    let max = vals.iter().copied().fold(f64::MIN, f64::max);
+    let min = vals.iter().copied().fold(f64::MAX, f64::min);
+    if max <= 0.0 {
+        0.0
+    } else {
+        (max - min) / max
+    }
+}
+
+/// Unevenness over plain values (no missing entries).
+pub fn unevenness_u64(values: &[u64]) -> f64 {
+    let opts: Vec<Option<f64>> = values.iter().map(|&v| Some(v as f64)).collect();
+    unevenness(&opts)
+}
+
+/// Improvement of `ours` over `baseline`, as a positive fraction when ours
+/// is faster: `(baseline − ours) / baseline`.
+pub fn improvement(baseline: u64, ours: u64) -> f64 {
+    if baseline == 0 {
+        0.0
+    } else {
+        (baseline as f64 - ours as f64) / baseline as f64
+    }
+}
+
+/// Summary of one simulated layer run under one mapping.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    /// Layer inference latency (slowest PE's completion), cycles.
+    pub latency: u64,
+    /// Unevenness of per-PE mean travel times (Fig. 7a–d metric).
+    pub rho_avg: f64,
+    /// Unevenness of per-PE accumulated travel times (Fig. 7e–h metric).
+    pub rho_accum: f64,
+    /// Per-PE executed task counts.
+    pub counts: Vec<u64>,
+    /// Per-PE mean travel time (None = unused PE).
+    pub mean_travel: Vec<Option<f64>>,
+    /// Per-PE accumulated travel time.
+    pub accum_travel: Vec<u64>,
+}
+
+impl RunSummary {
+    /// Summarise a simulation result.
+    pub fn from_result(res: &SimResult) -> Self {
+        let mean_travel = res.mean_travel_times();
+        let accum_travel: Vec<u64> = res.totals.iter().map(|t| t.total()).collect();
+        let used_accum: Vec<Option<f64>> = res
+            .totals
+            .iter()
+            .map(|t| (t.tasks > 0).then(|| t.total() as f64))
+            .collect();
+        Self {
+            latency: res.latency,
+            rho_avg: unevenness(&mean_travel),
+            rho_accum: unevenness(&used_accum),
+            counts: res.task_counts(),
+            mean_travel,
+            accum_travel,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unevenness_matches_eq9() {
+        // Paper example: 57.69 … 77.88 cycles → ρ = 25.92%.
+        let v = vec![Some(57.69), Some(77.88), Some(60.0)];
+        let rho = unevenness(&v);
+        assert!((rho - (77.88 - 57.69) / 77.88).abs() < 1e-12);
+        assert!((rho - 0.2592).abs() < 1e-3);
+    }
+
+    #[test]
+    fn unevenness_of_balanced_is_zero() {
+        assert_eq!(unevenness(&[Some(5.0), Some(5.0)]), 0.0);
+        assert_eq!(unevenness_u64(&[7, 7, 7]), 0.0);
+    }
+
+    #[test]
+    fn unevenness_skips_unused() {
+        let rho = unevenness(&[Some(10.0), None, Some(10.0)]);
+        assert_eq!(rho, 0.0);
+    }
+
+    #[test]
+    fn unevenness_empty_is_zero() {
+        assert_eq!(unevenness(&[]), 0.0);
+        assert_eq!(unevenness(&[None, None]), 0.0);
+    }
+
+    #[test]
+    fn improvement_signs() {
+        assert!((improvement(100, 90) - 0.10).abs() < 1e-12);
+        assert!(improvement(100, 110) < 0.0);
+        assert_eq!(improvement(0, 10), 0.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Flit and packet wire types.
+//!
+//! A packet is serialised into `num_flits` flits: a head flit (carrying the
+//! route — here the destination id), zero or more body flits, and a tail
+//! flit that releases the wormhole resources. Single-flit packets use a
+//! combined `HeadTail` flit (the paper's request packets are exactly this:
+//! "comprising only one single flit").
+//!
+//! Per-flit payloads are not modelled — the co-simulation carries real data
+//! through the PJRT runtime instead — but per-packet metadata (source,
+//! destination, kind, timestamps) lives in a side table, [`PacketInfo`],
+//! indexed by [`PacketId`] so the hot path moves only a small `Copy` struct.
+
+use crate::noc::topology::NodeId;
+
+/// Dense packet identifier; index into [`Network::packets`](super::Network).
+pub type PacketId = u32;
+
+/// Position of a flit within its packet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlitKind {
+    /// First flit of a multi-flit packet; triggers route computation.
+    Head,
+    /// Middle flit; follows the wormhole opened by its head.
+    Body,
+    /// Last flit; frees the VC ownership along the path.
+    Tail,
+    /// Single-flit packet (head and tail at once).
+    HeadTail,
+}
+
+impl FlitKind {
+    /// Does this flit open a route (head of packet)?
+    pub fn is_head(self) -> bool {
+        matches!(self, FlitKind::Head | FlitKind::HeadTail)
+    }
+
+    /// Does this flit close the wormhole (tail of packet)?
+    pub fn is_tail(self) -> bool {
+        matches!(self, FlitKind::Tail | FlitKind::HeadTail)
+    }
+}
+
+/// The unit of flow control moving through the network. Kept `Copy` and
+/// small: the router hot loop stores and moves millions of these.
+#[derive(Debug, Clone, Copy)]
+pub struct Flit {
+    /// Owning packet.
+    pub packet: PacketId,
+    /// Sequence number within the packet (0 = head).
+    pub seq: u16,
+    /// Destination node (denormalised from the packet table so route
+    /// computation needs no side lookup).
+    pub dst: u16,
+    /// Head/body/tail marker.
+    pub kind: FlitKind,
+}
+
+/// Protocol-level role of a packet in the accelerator traffic pattern
+/// (§4.1, Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketKind {
+    /// PE → MC: ask for the inputs+weights of one task (1 flit).
+    Request,
+    /// MC → PE: the requested data (`ceil(2·k²·16 / flit_bits)` flits).
+    Response,
+    /// PE → MC: the computed output pixel (1 flit), overlapped with the
+    /// next request (dotted path in Fig. 4).
+    Result,
+}
+
+/// Per-packet metadata and timestamps, recorded by the network.
+///
+/// All times are router cycles. `u64::MAX` marks "not yet happened".
+#[derive(Debug, Clone)]
+pub struct PacketInfo {
+    /// Stable id (== index in the packet table).
+    pub id: PacketId,
+    /// Source node.
+    pub src: NodeId,
+    /// Destination node.
+    pub dst: NodeId,
+    /// Protocol role.
+    pub kind: PacketKind,
+    /// Total flit count (≥ 1).
+    pub num_flits: u64,
+    /// Cycle the owning device handed the packet to its NI.
+    pub t_created: u64,
+    /// Cycle the first flit left the source NI into the router
+    /// (the paper measures response travel "from the moment the first flit
+    /// leaves the MC node's NI").
+    pub t_first_flit_out: u64,
+    /// Cycle the tail flit was ejected at the destination NI ("until the
+    /// last flit arrives at the requesting PE's router").
+    pub t_delivered: u64,
+    /// Opaque device tag: the accel layer stores (pe, task) bookkeeping here.
+    pub tag: u64,
+}
+
+/// Sentinel for timestamps that have not occurred.
+pub const T_NEVER: u64 = u64::MAX;
+
+impl PacketInfo {
+    /// Fresh metadata record for a packet created at cycle `now`.
+    pub fn new(
+        id: PacketId,
+        src: NodeId,
+        dst: NodeId,
+        kind: PacketKind,
+        num_flits: u64,
+        now: u64,
+        tag: u64,
+    ) -> Self {
+        Self {
+            id,
+            src,
+            dst,
+            kind,
+            num_flits,
+            t_created: now,
+            t_first_flit_out: T_NEVER,
+            t_delivered: T_NEVER,
+            tag,
+        }
+    }
+
+    /// Has the tail flit been delivered?
+    pub fn delivered(&self) -> bool {
+        self.t_delivered != T_NEVER
+    }
+
+    /// Network latency: first flit out of source NI → tail delivered.
+    /// Only valid once [`delivered`](Self::delivered).
+    pub fn network_latency(&self) -> u64 {
+        debug_assert!(self.delivered());
+        self.t_delivered - self.t_first_flit_out
+    }
+
+    /// Build the flit sequence for this packet.
+    pub fn flits(&self) -> impl Iterator<Item = Flit> + '_ {
+        let n = self.num_flits;
+        (0..n).map(move |i| {
+            let kind = match (n, i) {
+                (1, _) => FlitKind::HeadTail,
+                (_, 0) => FlitKind::Head,
+                (_, i) if i == n - 1 => FlitKind::Tail,
+                _ => FlitKind::Body,
+            };
+            Flit { packet: self.id, seq: i as u16, dst: self.dst as u16, kind }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_flit_packet_is_headtail() {
+        let p = PacketInfo::new(0, 1, 9, PacketKind::Request, 1, 0, 0);
+        let flits: Vec<Flit> = p.flits().collect();
+        assert_eq!(flits.len(), 1);
+        assert_eq!(flits[0].kind, FlitKind::HeadTail);
+        assert!(flits[0].kind.is_head() && flits[0].kind.is_tail());
+    }
+
+    #[test]
+    fn multi_flit_packet_structure() {
+        let p = PacketInfo::new(7, 9, 5, PacketKind::Response, 4, 10, 0);
+        let flits: Vec<Flit> = p.flits().collect();
+        assert_eq!(flits.len(), 4);
+        assert_eq!(flits[0].kind, FlitKind::Head);
+        assert_eq!(flits[1].kind, FlitKind::Body);
+        assert_eq!(flits[2].kind, FlitKind::Body);
+        assert_eq!(flits[3].kind, FlitKind::Tail);
+        assert!(flits.iter().all(|f| f.packet == 7 && f.dst == 5));
+        assert_eq!(flits.iter().map(|f| f.seq).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn two_flit_packet_has_no_body() {
+        let p = PacketInfo::new(1, 0, 3, PacketKind::Response, 2, 0, 0);
+        let kinds: Vec<FlitKind> = p.flits().map(|f| f.kind).collect();
+        assert_eq!(kinds, vec![FlitKind::Head, FlitKind::Tail]);
+    }
+
+    #[test]
+    fn latency_accounting() {
+        let mut p = PacketInfo::new(0, 1, 9, PacketKind::Request, 1, 5, 0);
+        assert!(!p.delivered());
+        p.t_first_flit_out = 8;
+        p.t_delivered = 20;
+        assert!(p.delivered());
+        assert_eq!(p.network_latency(), 12);
+    }
+}

@@ -1,0 +1,25 @@
+//! Cycle-accurate 2-D-mesh virtual-channel Network-on-Chip simulator.
+//!
+//! This is the substrate the paper evaluates on (§5.1): a Garnet-derived
+//! behavioural VC network with X-Y dimension-order routing, four virtual
+//! channels per physical link, four-flit buffers per VC, credit-based flow
+//! control, and a pipelined router (buffer-write/route-compute → VC
+//! allocation → switch allocation → switch/link traversal, one cycle per
+//! stage, 1-cycle links and credit return).
+//!
+//! Structure:
+//! * [`flit`] — flit/packet wire types and the packet metadata table.
+//! * [`topology`] — mesh coordinates, hop distances, X-Y routing.
+//! * [`router`] — the 5-port VC router microarchitecture.
+//! * [`ni`] — network interfaces: packetization, injection, ejection.
+//! * [`network`] — wires routers + NIs together and advances the clock.
+
+pub mod flit;
+pub mod network;
+pub mod ni;
+pub mod router;
+pub mod topology;
+
+pub use flit::{Flit, FlitKind, PacketId, PacketInfo, PacketKind};
+pub use network::{Network, NetworkStats};
+pub use topology::{Mesh, NodeId, Port, NUM_PORTS};

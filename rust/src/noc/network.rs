@@ -1,0 +1,437 @@
+//! The assembled NoC: routers + NIs + wires, advanced cycle by cycle.
+//!
+//! [`Network::step`] executes one router-clock cycle:
+//!
+//! 1. apply staged flit arrivals (buffer write) and credit returns;
+//! 2. NI injection (≤ 1 flit per node per cycle into the local port);
+//! 3. switch allocation + traversal on every router — switched flits are
+//!    staged onto the wires (1-cycle links) or ejected locally; credits are
+//!    staged back upstream (1-cycle credit links);
+//! 4. VC allocation;
+//! 5. route computation.
+//!
+//! Stages run in reverse pipeline order so a flit advances at most one
+//! stage per cycle (3-cycle per-hop head latency + 1-cycle link, see
+//! [`router`](super::router)).
+
+use crate::config::PlatformConfig;
+use crate::noc::flit::{Flit, PacketId, PacketInfo, PacketKind, T_NEVER};
+use crate::noc::ni::Ni;
+use crate::noc::router::Router;
+use crate::noc::topology::{Mesh, NodeId, Port, PORT_LOCAL};
+
+/// Aggregate traffic statistics.
+#[derive(Debug, Clone, Default)]
+pub struct NetworkStats {
+    /// Cycles simulated.
+    pub cycles: u64,
+    /// Flits that crossed any router crossbar.
+    pub flits_switched: u64,
+    /// Packets fully delivered (tail ejected).
+    pub packets_delivered: u64,
+    /// Sum over delivered packets of (t_delivered − t_first_flit_out),
+    /// by packet kind [request, response, result].
+    pub latency_sum: [u64; 3],
+    /// Delivered packet count by kind.
+    pub delivered_by_kind: [u64; 3],
+    /// Flits switched per router per output port (congestion heatmap:
+    /// `switched_per_port[node][port]`, ports as in [`topology`]).
+    pub switched_per_port: Vec<[u64; crate::noc::topology::NUM_PORTS]>,
+}
+
+impl NetworkStats {
+    /// Mean network latency in cycles for a packet kind, if any delivered.
+    pub fn mean_latency(&self, kind: PacketKind) -> Option<f64> {
+        let i = kind_index(kind);
+        (self.delivered_by_kind[i] > 0)
+            .then(|| self.latency_sum[i] as f64 / self.delivered_by_kind[i] as f64)
+    }
+}
+
+fn kind_index(kind: PacketKind) -> usize {
+    match kind {
+        PacketKind::Request => 0,
+        PacketKind::Response => 1,
+        PacketKind::Result => 2,
+    }
+}
+
+/// A staged flit on a wire: (destination router, input port, vc, flit).
+type FlitWire = (NodeId, Port, usize, Flit);
+/// A staged credit: toward `router`'s output `[port][vc]` counters.
+type CreditWire = (NodeId, Port, usize);
+/// A staged NI credit: back to `node`'s NI for local VC `vc`.
+type NiCreditWire = (NodeId, usize);
+
+/// The network fabric.
+pub struct Network {
+    mesh: Mesh,
+    routers: Vec<Router>,
+    nis: Vec<Ni>,
+    packets: Vec<PacketInfo>,
+    cycle: u64,
+    flit_wires: Vec<FlitWire>,
+    credit_wires: Vec<CreditWire>,
+    ni_credit_wires: Vec<NiCreditWire>,
+    /// Packets whose tail was ejected this/previous cycles, drained by the
+    /// device layer: (packet, delivery cycle).
+    delivered: Vec<(PacketId, u64)>,
+    /// Packets created but not yet tail-delivered (O(1) quiescence).
+    undelivered: u64,
+    /// Reusable per-cycle scratch (swap targets for the wire stages and
+    /// the switched-flit list; avoids per-cycle allocation).
+    wires_scratch: Vec<FlitWire>,
+    credits_scratch: Vec<CreditWire>,
+    ni_credits_scratch: Vec<NiCreditWire>,
+    moves_scratch: Vec<crate::noc::router::SwitchedFlit>,
+    stats: NetworkStats,
+}
+
+impl Network {
+    /// Build the fabric described by `cfg`.
+    pub fn new(cfg: &PlatformConfig) -> Self {
+        let mesh = Mesh::new(cfg.mesh_width, cfg.mesh_height);
+        let num_nodes = mesh.len();
+        let routers =
+            (0..mesh.len()).map(|n| Router::new(n, cfg.num_vcs, cfg.vc_depth)).collect();
+        let nis = (0..mesh.len()).map(|n| Ni::new(n, cfg.num_vcs, cfg.vc_depth)).collect();
+        Self {
+            mesh,
+            routers,
+            nis,
+            packets: Vec::new(),
+            cycle: 0,
+            flit_wires: Vec::new(),
+            credit_wires: Vec::new(),
+            ni_credit_wires: Vec::new(),
+            delivered: Vec::new(),
+            undelivered: 0,
+            wires_scratch: Vec::new(),
+            credits_scratch: Vec::new(),
+            ni_credits_scratch: Vec::new(),
+            moves_scratch: Vec::new(),
+            stats: NetworkStats {
+                switched_per_port: vec![[0; crate::noc::topology::NUM_PORTS]; num_nodes],
+                ..NetworkStats::default()
+            },
+        }
+    }
+
+    /// Current cycle (number of completed [`step`](Self::step)s).
+    pub fn now(&self) -> u64 {
+        self.cycle
+    }
+
+    /// The mesh topology.
+    pub fn mesh(&self) -> &Mesh {
+        &self.mesh
+    }
+
+    /// Read-only packet table.
+    pub fn packet(&self, id: PacketId) -> &PacketInfo {
+        &self.packets[id as usize]
+    }
+
+    /// Number of packets created so far.
+    pub fn num_packets(&self) -> usize {
+        self.packets.len()
+    }
+
+    /// Traffic statistics so far.
+    pub fn stats(&self) -> &NetworkStats {
+        &self.stats
+    }
+
+    /// Create a packet and hand it to `src`'s NI. Injection of the first
+    /// flit begins after the NI packetization delay (`ready_at`).
+    ///
+    /// `tag` is opaque device bookkeeping (the accel layer stores the PE
+    /// index / task ordinal there).
+    pub fn send(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        kind: PacketKind,
+        num_flits: u64,
+        ready_at: u64,
+        tag: u64,
+    ) -> PacketId {
+        debug_assert!(src != dst, "self-send is not a NoC packet");
+        debug_assert!(num_flits >= 1);
+        let id = self.packets.len() as PacketId;
+        self.packets.push(PacketInfo::new(id, src, dst, kind, num_flits, self.cycle, tag));
+        self.nis[src].enqueue(id, dst as u16, num_flits, ready_at);
+        self.undelivered += 1;
+        id
+    }
+
+    /// Convenience: send with the platform's packetization delay applied.
+    pub fn send_packetized(
+        &mut self,
+        cfg: &PlatformConfig,
+        src: NodeId,
+        dst: NodeId,
+        kind: PacketKind,
+        num_flits: u64,
+        tag: u64,
+    ) -> PacketId {
+        let ready = self.cycle + cfg.ni_packetize_cycles;
+        self.send(src, dst, kind, num_flits, ready, tag)
+    }
+
+    /// Drain the packets delivered since the last call.
+    pub fn drain_delivered(&mut self) -> Vec<(PacketId, u64)> {
+        std::mem::take(&mut self.delivered)
+    }
+
+    /// True when no flit is anywhere in the fabric and all NIs are idle.
+    ///
+    /// O(1): every flit in a queue, wire or buffer belongs to a packet
+    /// whose tail has not been ejected, so `undelivered == 0` implies a
+    /// fully drained fabric (cross-checked exhaustively in debug builds).
+    pub fn quiescent(&self) -> bool {
+        let q = self.undelivered == 0;
+        debug_assert_eq!(
+            q,
+            self.flit_wires.is_empty()
+                && self.nis.iter().all(Ni::idle)
+                && self.routers.iter().all(Router::is_quiescent),
+            "undelivered counter disagrees with fabric state"
+        );
+        q
+    }
+
+    /// Advance one router-clock cycle.
+    pub fn step(&mut self) {
+        self.cycle += 1;
+        let now = self.cycle;
+
+        // 1a. Wire stage: deliver flits staged last cycle (buffer write).
+        // Swap with persistent scratch so neither vector reallocates.
+        std::mem::swap(&mut self.flit_wires, &mut self.wires_scratch);
+        for i in 0..self.wires_scratch.len() {
+            let (node, port, vc, flit) = self.wires_scratch[i];
+            self.routers[node].accept_flit(port, vc, flit);
+        }
+        self.wires_scratch.clear();
+        // 1b. Credit returns staged last cycle.
+        std::mem::swap(&mut self.credit_wires, &mut self.credits_scratch);
+        for i in 0..self.credits_scratch.len() {
+            let (node, port, vc) = self.credits_scratch[i];
+            self.routers[node].add_credit(port, vc);
+        }
+        self.credits_scratch.clear();
+        std::mem::swap(&mut self.ni_credit_wires, &mut self.ni_credits_scratch);
+        for i in 0..self.ni_credits_scratch.len() {
+            let (node, vc) = self.ni_credits_scratch[i];
+            self.nis[node].add_credit(vc);
+        }
+        self.ni_credits_scratch.clear();
+
+        // 2. NI injection: stage ≤1 flit per node onto the local-port wire.
+        for node in 0..self.nis.len() {
+            if let Some((vc, flit, first)) = self.nis[node].inject(now) {
+                if first {
+                    self.packets[flit.packet as usize].t_first_flit_out = now;
+                }
+                self.flit_wires.push((node, PORT_LOCAL, vc, flit));
+            }
+        }
+
+        // 3. SA + ST on every router.
+        for node in 0..self.routers.len() {
+            if !self.routers[node].has_work() {
+                continue;
+            }
+            let mut moves = std::mem::take(&mut self.moves_scratch);
+            moves.clear();
+            self.routers[node].switch_allocate_into(&mut moves);
+            for &m in &moves {
+                self.stats.flits_switched += 1;
+                self.stats.switched_per_port[node][m.out_port] += 1;
+                // Credit return for the freed input slot.
+                if m.in_port == PORT_LOCAL {
+                    self.ni_credit_wires.push((node, m.in_vc));
+                } else {
+                    let upstream = self
+                        .mesh
+                        .neighbor(node, m.in_port)
+                        .expect("flit arrived through an in-mesh port");
+                    let up_port = Mesh::opposite(m.in_port);
+                    self.credit_wires.push((upstream, up_port, m.in_vc));
+                }
+                if m.out_port == PORT_LOCAL {
+                    // Ejection: consume immediately.
+                    self.nis[node].note_ejected();
+                    if m.flit.kind.is_tail() {
+                        let p = &mut self.packets[m.flit.packet as usize];
+                        debug_assert_eq!(p.dst, node, "flit ejected at wrong node");
+                        debug_assert_eq!(p.t_delivered, T_NEVER, "double delivery");
+                        p.t_delivered = now;
+                        self.undelivered -= 1;
+                        self.stats.packets_delivered += 1;
+                        let k = kind_index(p.kind);
+                        self.stats.delivered_by_kind[k] += 1;
+                        self.stats.latency_sum[k] += now - p.t_first_flit_out;
+                        self.delivered.push((m.flit.packet, now));
+                    }
+                } else {
+                    let next = self
+                        .mesh
+                        .neighbor(node, m.out_port)
+                        .expect("xy routing never exits the mesh");
+                    let in_port = Mesh::opposite(m.out_port);
+                    self.flit_wires.push((next, in_port, m.out_vc, m.flit));
+                }
+            }
+            self.moves_scratch = moves;
+        }
+
+        // 4. VC allocation.
+        for r in &mut self.routers {
+            r.vc_allocate();
+        }
+        // 5. Route computation.
+        for r in &mut self.routers {
+            r.route_compute(&self.mesh);
+        }
+        self.stats.cycles = self.cycle;
+    }
+
+    /// Step until the fabric is quiescent or `max_cycles` elapse.
+    /// Returns the number of cycles stepped.
+    pub fn run_to_quiescence(&mut self, max_cycles: u64) -> u64 {
+        let start = self.cycle;
+        while !self.quiescent() {
+            assert!(
+                self.cycle - start < max_cycles,
+                "network failed to drain within {max_cycles} cycles — deadlock?"
+            );
+            self.step();
+        }
+        self.cycle - start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> Network {
+        Network::new(&PlatformConfig::default_2mc())
+    }
+
+    #[test]
+    fn single_packet_delivery_and_latency() {
+        let mut n = net();
+        // Node 5 → node 9 (1 hop), single-flit request, no packetize delay.
+        let id = n.send(5, 9, PacketKind::Request, 1, 0, 7);
+        let cycles = n.run_to_quiescence(1000);
+        assert!(cycles > 0);
+        let p = n.packet(id);
+        assert!(p.delivered());
+        assert_eq!(p.tag, 7);
+        // Head: inject t+1 wire, BW t+2, RC t+2, VA t+3, SA t+4 @src,
+        // BW t+5 @dst, VA t+6, SA/eject t+7 — small single digits.
+        let lat = p.network_latency();
+        assert!((4..=10).contains(&lat), "1-hop single-flit latency {lat}");
+        assert_eq!(n.stats().packets_delivered, 1);
+    }
+
+    #[test]
+    fn multi_flit_packet_delivers_in_order_and_whole() {
+        let mut n = net();
+        let id = n.send(0, 10, PacketKind::Response, 22, 0, 0);
+        n.run_to_quiescence(10_000);
+        let p = n.packet(id);
+        assert!(p.delivered());
+        // 22 flits over 3 hops: tail at least 21 cycles behind head wire.
+        assert!(p.network_latency() >= 22, "latency {}", p.network_latency());
+    }
+
+    #[test]
+    fn farther_destination_takes_longer_unloaded() {
+        let near = {
+            let mut n = net();
+            let id = n.send(5, 9, PacketKind::Request, 1, 0, 0);
+            n.run_to_quiescence(1000);
+            n.packet(id).network_latency()
+        };
+        let far = {
+            let mut n = net();
+            let id = n.send(0, 10, PacketKind::Request, 1, 0, 0);
+            n.run_to_quiescence(1000);
+            n.packet(id).network_latency()
+        };
+        assert!(far > near, "far {far} <= near {near}");
+    }
+
+    #[test]
+    fn many_packets_all_delivered_no_loss() {
+        let mut n = net();
+        let cfg = PlatformConfig::default_2mc();
+        let mut ids = Vec::new();
+        // Every PE sends a request to MC 9 and MC 10 simultaneously.
+        for pe in cfg.pe_nodes() {
+            ids.push(n.send(pe, 9, PacketKind::Request, 1, 0, 0));
+            ids.push(n.send(pe, 10, PacketKind::Request, 4, 0, 0));
+        }
+        n.run_to_quiescence(100_000);
+        for id in ids {
+            assert!(n.packet(id).delivered(), "packet {id} lost");
+        }
+        assert_eq!(n.stats().packets_delivered, 28);
+    }
+
+    #[test]
+    fn contention_increases_latency() {
+        // One victim packet measured alone vs. measured under heavy cross
+        // traffic to the same destination.
+        let solo = {
+            let mut n = net();
+            let id = n.send(12, 10, PacketKind::Response, 4, 0, 0);
+            n.run_to_quiescence(10_000);
+            n.packet(id).network_latency()
+        };
+        let loaded = {
+            let mut n = net();
+            // 13 other PEs each fire an 8-flit packet at node 10 first.
+            for pe in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 11, 13, 14] {
+                n.send(pe, 10, PacketKind::Response, 8, 0, 0);
+            }
+            let id = n.send(12, 10, PacketKind::Response, 4, 0, 0);
+            n.run_to_quiescence(100_000);
+            n.packet(id).network_latency()
+        };
+        assert!(loaded > solo, "congestion must add latency: solo {solo}, loaded {loaded}");
+    }
+
+    #[test]
+    fn quiescence_is_stable() {
+        let mut n = net();
+        n.send(5, 9, PacketKind::Request, 1, 0, 0);
+        n.run_to_quiescence(1000);
+        let c = n.now();
+        assert!(n.quiescent());
+        n.step();
+        assert!(n.quiescent());
+        assert_eq!(n.now(), c + 1);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut n = net();
+            let cfg = PlatformConfig::default_2mc();
+            for (i, pe) in cfg.pe_nodes().into_iter().enumerate() {
+                n.send(pe, if i % 2 == 0 { 9 } else { 10 }, PacketKind::Response, 4, 0, 0);
+            }
+            n.run_to_quiescence(100_000);
+            let mut lats: Vec<u64> =
+                (0..n.num_packets()).map(|i| n.packet(i as u32).network_latency()).collect();
+            lats.push(n.now());
+            lats
+        };
+        assert_eq!(run(), run());
+    }
+}

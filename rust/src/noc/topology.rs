@@ -1,0 +1,227 @@
+//! 2-D mesh topology, node coordinates, and X-Y dimension-order routing.
+//!
+//! Nodes are numbered row-major: node `n` sits at `(x, y) = (n % W, n / W)`
+//! with `x` growing east and `y` growing south, matching the paper's Fig. 1
+//! numbering. X-Y routing first corrects the X offset, then Y — minimal,
+//! deterministic, and deadlock-free on a mesh, as used by Garnet (§5.1).
+
+/// Node identifier (row-major index into the mesh).
+pub type NodeId = usize;
+
+/// Router port index.
+pub type Port = usize;
+
+/// Local (NI) port.
+pub const PORT_LOCAL: Port = 0;
+/// North (toward y-1).
+pub const PORT_NORTH: Port = 1;
+/// East (toward x+1).
+pub const PORT_EAST: Port = 2;
+/// South (toward y+1).
+pub const PORT_SOUTH: Port = 3;
+/// West (toward x-1).
+pub const PORT_WEST: Port = 4;
+/// Ports per router: local + 4 cardinal directions.
+pub const NUM_PORTS: usize = 5;
+
+/// Human-readable port names, indexed by [`Port`].
+pub const PORT_NAMES: [&str; NUM_PORTS] = ["local", "north", "east", "south", "west"];
+
+/// A W×H mesh.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mesh {
+    width: usize,
+    height: usize,
+}
+
+impl Mesh {
+    /// Create a mesh; both dimensions must be ≥ 1.
+    pub fn new(width: usize, height: usize) -> Self {
+        assert!(width >= 1 && height >= 1, "degenerate mesh {width}x{height}");
+        Self { width, height }
+    }
+
+    /// Mesh width (columns).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Mesh height (rows).
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    /// Total node count.
+    pub fn len(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// True for the degenerate 0-node mesh (never constructible).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Coordinates of node `n`.
+    pub fn coords(&self, n: NodeId) -> (usize, usize) {
+        debug_assert!(n < self.len(), "node {n} out of range");
+        (n % self.width, n / self.width)
+    }
+
+    /// Node at coordinates `(x, y)`.
+    pub fn node_at(&self, x: usize, y: usize) -> NodeId {
+        debug_assert!(x < self.width && y < self.height);
+        y * self.width + x
+    }
+
+    /// Manhattan (hop) distance between two nodes — the metric behind the
+    /// paper's distance classes (Fig. 3).
+    pub fn hop_distance(&self, a: NodeId, b: NodeId) -> usize {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// The neighbour of `n` through `port`, if that port faces into the mesh.
+    pub fn neighbor(&self, n: NodeId, port: Port) -> Option<NodeId> {
+        let (x, y) = self.coords(n);
+        match port {
+            PORT_NORTH if y > 0 => Some(self.node_at(x, y - 1)),
+            PORT_EAST if x + 1 < self.width => Some(self.node_at(x + 1, y)),
+            PORT_SOUTH if y + 1 < self.height => Some(self.node_at(x, y + 1)),
+            PORT_WEST if x > 0 => Some(self.node_at(x - 1, y)),
+            _ => None,
+        }
+    }
+
+    /// X-Y dimension-order route: the output port a flit at `cur` must take
+    /// to reach `dst`. Returns [`PORT_LOCAL`] when already there.
+    pub fn xy_route(&self, cur: NodeId, dst: NodeId) -> Port {
+        let (cx, cy) = self.coords(cur);
+        let (dx, dy) = self.coords(dst);
+        if dx > cx {
+            PORT_EAST
+        } else if dx < cx {
+            PORT_WEST
+        } else if dy > cy {
+            PORT_SOUTH
+        } else if dy < cy {
+            PORT_NORTH
+        } else {
+            PORT_LOCAL
+        }
+    }
+
+    /// The full X-Y path from `src` to `dst`, inclusive of both endpoints.
+    pub fn xy_path(&self, src: NodeId, dst: NodeId) -> Vec<NodeId> {
+        let mut path = vec![src];
+        let mut cur = src;
+        while cur != dst {
+            let port = self.xy_route(cur, dst);
+            cur = self.neighbor(cur, port).expect("xy_route must stay in-mesh");
+            path.push(cur);
+        }
+        path
+    }
+
+    /// The opposite cardinal port (the input port a flit arrives on at the
+    /// neighbour after leaving through `port`).
+    pub fn opposite(port: Port) -> Port {
+        match port {
+            PORT_NORTH => PORT_SOUTH,
+            PORT_SOUTH => PORT_NORTH,
+            PORT_EAST => PORT_WEST,
+            PORT_WEST => PORT_EAST,
+            p => panic!("no opposite for port {p} ({})", PORT_NAMES[p]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh4() -> Mesh {
+        Mesh::new(4, 4)
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let m = mesh4();
+        for n in 0..16 {
+            let (x, y) = m.coords(n);
+            assert_eq!(m.node_at(x, y), n);
+        }
+        assert_eq!(m.coords(9), (1, 2));
+        assert_eq!(m.coords(10), (2, 2));
+    }
+
+    #[test]
+    fn paper_distance_classes_from_mc_9_10() {
+        // Fig. 3: with MCs at 9 and 10, D1/D2/D3 must match the paper.
+        let m = mesh4();
+        let dist = |n: NodeId| m.hop_distance(n, 9).min(m.hop_distance(n, 10));
+        for n in [5usize, 6, 8, 11, 13, 14] {
+            assert_eq!(dist(n), 1, "node {n} should be distance 1");
+        }
+        for n in [1usize, 2, 4, 7, 12, 15] {
+            assert_eq!(dist(n), 2, "node {n} should be distance 2");
+        }
+        for n in [0usize, 3] {
+            assert_eq!(dist(n), 3, "node {n} should be distance 3");
+        }
+    }
+
+    #[test]
+    fn xy_route_corrects_x_first() {
+        let m = mesh4();
+        // 0 (0,0) → 10 (2,2): go east first.
+        assert_eq!(m.xy_route(0, 10), PORT_EAST);
+        // 2 (2,0) → 10 (2,2): x aligned, go south.
+        assert_eq!(m.xy_route(2, 10), PORT_SOUTH);
+        // arrival
+        assert_eq!(m.xy_route(10, 10), PORT_LOCAL);
+    }
+
+    #[test]
+    fn xy_path_is_minimal_and_l_shaped() {
+        let m = mesh4();
+        let path = m.xy_path(12, 3);
+        // 12 (0,3) → 3 (3,0): east through 13,14,15? No: X first from (0,3)
+        // to (3,3) = 13,14,15, then north 11,7,3.
+        assert_eq!(path, vec![12, 13, 14, 15, 11, 7, 3]);
+        assert_eq!(path.len() - 1, m.hop_distance(12, 3));
+    }
+
+    #[test]
+    fn neighbors_at_edges() {
+        let m = mesh4();
+        assert_eq!(m.neighbor(0, PORT_NORTH), None);
+        assert_eq!(m.neighbor(0, PORT_WEST), None);
+        assert_eq!(m.neighbor(0, PORT_EAST), Some(1));
+        assert_eq!(m.neighbor(0, PORT_SOUTH), Some(4));
+        assert_eq!(m.neighbor(15, PORT_SOUTH), None);
+        assert_eq!(m.neighbor(15, PORT_EAST), None);
+    }
+
+    #[test]
+    fn opposite_ports() {
+        assert_eq!(Mesh::opposite(PORT_NORTH), PORT_SOUTH);
+        assert_eq!(Mesh::opposite(PORT_EAST), PORT_WEST);
+        assert_eq!(Mesh::opposite(PORT_SOUTH), PORT_NORTH);
+        assert_eq!(Mesh::opposite(PORT_WEST), PORT_EAST);
+    }
+
+    #[test]
+    #[should_panic]
+    fn opposite_of_local_panics() {
+        Mesh::opposite(PORT_LOCAL);
+    }
+
+    #[test]
+    fn rectangular_mesh() {
+        let m = Mesh::new(8, 2);
+        assert_eq!(m.len(), 16);
+        assert_eq!(m.coords(9), (1, 1));
+        assert_eq!(m.hop_distance(0, 15), 8);
+    }
+}

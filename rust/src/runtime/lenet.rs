@@ -1,0 +1,88 @@
+//! The compiled LeNet executable: weights + HLO artifact + typed `infer`.
+//!
+//! The artifact's entry signature is `(x, *PARAM_ORDER) -> (logits,)` with
+//! the 14 parameters in the canonical order written by the AOT step; the
+//! runtime keeps the weight literals resident and feeds them alongside
+//! each input batch.
+
+use anyhow::{ensure, Context, Result};
+
+use super::weights::TensorFile;
+use super::Artifact;
+
+/// Canonical parameter order — must match `python/compile/model.PARAM_ORDER`.
+pub const PARAM_ORDER: [&str; 14] = [
+    "c1_w", "c1_b", "s2_coef", "s2_bias", "c3_w", "c3_b", "s4_coef", "s4_bias", "c5_w", "c5_b",
+    "f6_w", "f6_b", "out_w", "out_b",
+];
+
+/// A ready-to-run LeNet: compiled executable + resident weights.
+pub struct LenetRuntime {
+    artifact: Artifact,
+    weights: Vec<xla::Literal>,
+    batch: usize,
+}
+
+impl LenetRuntime {
+    /// Load the batch-`batch` artifact and weights from `artifact_dir`.
+    pub fn load(artifact_dir: &str, batch: usize) -> Result<Self> {
+        let hlo = format!("{artifact_dir}/lenet_b{batch}.hlo.txt");
+        let artifact = Artifact::load(&hlo)?;
+        let wf = TensorFile::load(&format!("{artifact_dir}/lenet_weights.bin"))?;
+        let mut weights = Vec::with_capacity(PARAM_ORDER.len());
+        for name in PARAM_ORDER {
+            weights.push(wf.get(name)?.to_literal()?);
+        }
+        Ok(Self { artifact, weights, batch })
+    }
+
+    /// The batch size this executable was lowered for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> String {
+        self.artifact.platform()
+    }
+
+    /// Run inference. `images` is `(batch, 1, 32, 32)` row-major f32.
+    /// Returns `(batch, 10)` logits, row-major.
+    pub fn infer(&self, images: &[f32]) -> Result<Vec<f32>> {
+        let expect = self.batch * 32 * 32;
+        ensure!(
+            images.len() == expect,
+            "expected {expect} image floats for batch {}, got {}",
+            self.batch,
+            images.len()
+        );
+        let x = xla::Literal::vec1(images)
+            .reshape(&[self.batch as i64, 1, 32, 32])
+            .context("shaping input batch")?;
+        let mut args = Vec::with_capacity(1 + self.weights.len());
+        args.push(x);
+        for w in &self.weights {
+            // Literals are host-side buffers; PJRT transfers on execute.
+            args.push(w.clone());
+        }
+        let out = self.artifact.execute(&args)?;
+        let logits = out.to_vec::<f32>().context("reading logits")?;
+        ensure!(logits.len() == self.batch * 10, "unexpected logits size {}", logits.len());
+        Ok(logits)
+    }
+
+    /// Argmax class per batch element.
+    pub fn classify(&self, images: &[f32]) -> Result<Vec<usize>> {
+        let logits = self.infer(images)?;
+        Ok(logits
+            .chunks(10)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite logits"))
+                    .map(|(i, _)| i)
+                    .expect("non-empty row")
+            })
+            .collect())
+    }
+}

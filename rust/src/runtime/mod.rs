@@ -1,0 +1,74 @@
+//! The PJRT runtime: load the AOT artifacts and execute them natively.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! request-path side: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`. HLO *text* is the interchange format (jax ≥ 0.5
+//! emits 64-bit instruction ids in serialized protos, which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! * [`weights`] — reader for the NCTW tensor container written by
+//!   `python/compile/aot.py` (`lenet_weights.bin`, `testvec.bin`).
+//! * [`lenet`] — the compiled LeNet executable with a typed `infer` API.
+
+pub mod lenet;
+pub mod weights;
+
+pub use lenet::LenetRuntime;
+pub use weights::{Tensor, TensorFile};
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO artifact ready to execute on the PJRT CPU client.
+pub struct Artifact {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+impl Artifact {
+    /// Load and compile `path` (HLO text) on a fresh CPU client.
+    pub fn load(path: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::load_with(client, path)
+    }
+
+    /// Load and compile `path` on an existing client (one client can host
+    /// several executables).
+    pub fn load_with(client: xla::PjRtClient, path: &str) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text at {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+        Ok(Self { client, exe, path: path.to_string() })
+    }
+
+    /// The PJRT platform name ("cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Source path of the artifact.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Execute with the given literals; returns the unwrapped element of
+    /// the 1-tuple root (the AOT path lowers with `return_tuple=True`).
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let results = self.exe.execute::<xla::Literal>(args).context("PJRT execution")?;
+        let tuple = results[0][0].to_literal_sync().context("fetching result buffer")?;
+        tuple.to_tuple1().context("unwrapping result 1-tuple")
+    }
+}
+
+/// Smoke-test the PJRT path with `artifacts/smoke.hlo.txt`:
+/// `matmul([[1,2],[3,4]], ones) + 2 == [[5,5],[9,9]]`.
+pub fn smoke_test(artifact_dir: &str) -> Result<()> {
+    let art = Artifact::load(&format!("{artifact_dir}/smoke.hlo.txt"))?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+    let out = art.execute(&[x, y])?;
+    let vals = out.to_vec::<f32>()?;
+    anyhow::ensure!(vals == vec![5., 5., 9., 9.], "smoke mismatch: {vals:?}");
+    Ok(())
+}

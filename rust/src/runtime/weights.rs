@@ -1,0 +1,183 @@
+//! Reader for the NCTW v1 tensor container written by
+//! `python/compile/aot.py` (`write_tensors`).
+//!
+//! Layout (little-endian):
+//! `b"NCTW001\0"` · u32 tensor count · per tensor: u32 name length, name
+//! bytes (UTF-8), u32 ndim, u64 dims…, f32 data (row-major).
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Container magic.
+pub const MAGIC: &[u8; 8] = b"NCTW001\0";
+
+/// One named f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Tensor name (e.g. `c1_w`).
+    pub name: String,
+    /// Shape (row-major data).
+    pub dims: Vec<usize>,
+    /// Flat f32 data, `dims.iter().product()` elements.
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True for a zero-element tensor.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .with_context(|| format!("reshaping tensor '{}' to {:?}", self.name, self.dims))
+    }
+}
+
+/// A parsed NCTW file: named tensors in file order.
+#[derive(Debug, Clone, Default)]
+pub struct TensorFile {
+    tensors: Vec<Tensor>,
+}
+
+impl TensorFile {
+    /// Parse an NCTW container from bytes.
+    pub fn parse(data: &[u8]) -> Result<Self> {
+        ensure!(data.len() >= 12, "file too short for NCTW header");
+        ensure!(&data[..8] == MAGIC, "bad NCTW magic");
+        let mut off = 8usize;
+        let count = read_u32(data, &mut off)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for i in 0..count {
+            let nlen = read_u32(data, &mut off)? as usize;
+            ensure!(off + nlen <= data.len(), "tensor {i}: name overruns file");
+            let name = std::str::from_utf8(&data[off..off + nlen])
+                .with_context(|| format!("tensor {i}: name not UTF-8"))?
+                .to_string();
+            off += nlen;
+            let ndim = read_u32(data, &mut off)? as usize;
+            ensure!(ndim <= 8, "tensor '{name}': implausible rank {ndim}");
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u64(data, &mut off)? as usize);
+            }
+            let numel: usize = dims.iter().product::<usize>().max(usize::from(ndim == 0));
+            ensure!(
+                off + 4 * numel <= data.len(),
+                "tensor '{name}': data overruns file ({numel} elements)"
+            );
+            let mut values = Vec::with_capacity(numel);
+            for k in 0..numel {
+                let b = [data[off + 4 * k], data[off + 4 * k + 1], data[off + 4 * k + 2], data[off + 4 * k + 3]];
+                values.push(f32::from_le_bytes(b));
+            }
+            off += 4 * numel;
+            tensors.push(Tensor { name, dims, data: values });
+        }
+        ensure!(off == data.len(), "trailing bytes after last tensor");
+        Ok(Self { tensors })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &str) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {path}"))
+    }
+
+    /// Tensors in file order.
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    /// Find a tensor by name.
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        match self.tensors.iter().find(|t| t.name == name) {
+            Some(t) => Ok(t),
+            None => bail!(
+                "tensor '{name}' not found; file has: {:?}",
+                self.tensors.iter().map(|t| t.name.as_str()).collect::<Vec<_>>()
+            ),
+        }
+    }
+}
+
+fn read_u32(data: &[u8], off: &mut usize) -> Result<u32> {
+    ensure!(*off + 4 <= data.len(), "truncated u32 at offset {off}");
+    let v = u32::from_le_bytes(data[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+fn read_u64(data: &[u8], off: &mut usize) -> Result<u64> {
+    ensure!(*off + 8 <= data.len(), "truncated u64 at offset {off}");
+    let v = u64::from_le_bytes(data[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a container with one tensor "ab" of shape [2,2].
+    fn sample_bytes() -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(MAGIC);
+        v.extend_from_slice(&1u32.to_le_bytes());
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(b"ab");
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(&2u64.to_le_bytes());
+        v.extend_from_slice(&2u64.to_le_bytes());
+        for x in [1.0f32, 2.0, 3.0, 4.0] {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v
+    }
+
+    #[test]
+    fn parses_hand_built_container() {
+        let f = TensorFile::parse(&sample_bytes()).unwrap();
+        assert_eq!(f.tensors().len(), 1);
+        let t = f.get("ab").unwrap();
+        assert_eq!(t.dims, vec![2, 2]);
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample_bytes();
+        b[0] = b'X';
+        assert!(TensorFile::parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_anywhere() {
+        let b = sample_bytes();
+        for cut in [4usize, 10, 13, 20, b.len() - 3] {
+            assert!(TensorFile::parse(&b[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut b = sample_bytes();
+        b.push(0);
+        assert!(TensorFile::parse(&b).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_reports_inventory() {
+        let f = TensorFile::parse(&sample_bytes()).unwrap();
+        let err = f.get("zz").unwrap_err().to_string();
+        assert!(err.contains("ab"), "error should list available tensors: {err}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Largest-remainder (Hamilton) apportionment of an integer total across
+//! fractional shares.
+//!
+//! Every uneven mapping strategy in the paper reduces to "split `total`
+//! tasks proportionally to per-PE weights, in whole tasks" (Eq. 1–2, 4–5,
+//! 7–8). Largest-remainder apportionment is the canonical way to integerise
+//! such shares while conserving the total exactly.
+
+/// Apportion `total` items proportionally to `weights`.
+///
+/// Returns per-slot non-negative counts summing exactly to `total`.
+/// Zero-weight slots receive zero items (unless *all* weights are zero, in
+/// which case items are spread round-robin to keep the total conserved).
+///
+/// Ties in the fractional remainders are broken towards lower indices,
+/// making the function fully deterministic.
+///
+/// # Panics
+/// Panics if `weights` is empty while `total > 0`, or any weight is negative
+/// or non-finite.
+pub fn largest_remainder(total: u64, weights: &[f64]) -> Vec<u64> {
+    if total == 0 {
+        return vec![0; weights.len()];
+    }
+    assert!(!weights.is_empty(), "cannot apportion {total} items over zero slots");
+    for &w in weights {
+        assert!(w.is_finite() && w >= 0.0, "weights must be finite and non-negative, got {w}");
+    }
+    let sum: f64 = weights.iter().sum();
+    if sum <= 0.0 {
+        // Degenerate: no information — spread evenly, remainder round-robin.
+        let n = weights.len() as u64;
+        let base = total / n;
+        let extra = (total % n) as usize;
+        return (0..weights.len())
+            .map(|i| base + u64::from(i < extra))
+            .collect();
+    }
+
+    let quotas: Vec<f64> = weights.iter().map(|w| w / sum * total as f64).collect();
+    let mut counts: Vec<u64> = quotas.iter().map(|q| q.floor() as u64).collect();
+    let assigned: u64 = counts.iter().sum();
+    let mut leftover = total - assigned;
+
+    // Hand out the leftover items by descending fractional remainder.
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in &order {
+        if leftover == 0 {
+            break;
+        }
+        // Never give an item to a zero-weight slot while a positive-weight
+        // slot could take it; order already guarantees this for the usual
+        // case because zero-weight slots have zero remainder.
+        if weights[i] > 0.0 || quotas[i] > 0.0 {
+            counts[i] += 1;
+            leftover -= 1;
+        }
+    }
+    // Extremely skewed weights can still leave items (all positive slots
+    // already consumed); fall back to round-robin over positive slots.
+    let mut i = 0;
+    while leftover > 0 {
+        let idx = order[i % order.len()];
+        if weights[idx] > 0.0 {
+            counts[idx] += 1;
+            leftover -= 1;
+        }
+        i += 1;
+    }
+    counts
+}
+
+/// Apportion `total` items with weights proportional to `1 / value` —
+/// the travel-time rule of Eq. 4: slower PEs get fewer tasks.
+///
+/// `values` are per-slot costs (travel times, distances, latencies) and must
+/// be strictly positive.
+pub fn inverse_proportional(total: u64, values: &[f64]) -> Vec<u64> {
+    let weights: Vec<f64> = values
+        .iter()
+        .map(|&v| {
+            assert!(v.is_finite() && v > 0.0, "inverse weights need positive values, got {v}");
+            1.0 / v
+        })
+        .collect();
+    largest_remainder(total, &weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conserves_total() {
+        let counts = largest_remainder(4704, &[1.0, 0.5, 0.3333, 2.0, 7.0]);
+        assert_eq!(counts.iter().sum::<u64>(), 4704);
+    }
+
+    #[test]
+    fn equal_weights_even_split() {
+        let counts = largest_remainder(28, &[1.0; 14]);
+        assert_eq!(counts, vec![2; 14]);
+    }
+
+    #[test]
+    fn uneven_total_distributes_remainder() {
+        let counts = largest_remainder(30, &[1.0; 14]);
+        assert_eq!(counts.iter().sum::<u64>(), 30);
+        assert!(counts.iter().all(|&c| c == 2 || c == 3));
+        assert_eq!(counts.iter().filter(|&&c| c == 3).count(), 2);
+    }
+
+    #[test]
+    fn zero_total() {
+        assert_eq!(largest_remainder(0, &[1.0, 2.0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn zero_weight_gets_nothing() {
+        let counts = largest_remainder(10, &[0.0, 1.0, 1.0]);
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts.iter().sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn all_zero_weights_spread_evenly() {
+        let counts = largest_remainder(10, &[0.0, 0.0, 0.0]);
+        assert_eq!(counts.iter().sum::<u64>(), 10);
+        assert_eq!(counts, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn proportionality_ordering() {
+        // Heavier weight never receives fewer items.
+        let counts = largest_remainder(1000, &[1.0, 2.0, 4.0, 8.0]);
+        for w in counts.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn inverse_proportional_favours_fast() {
+        // Travel times: PE0 twice as slow as PE1 — should get about half.
+        let counts = inverse_proportional(300, &[2.0, 1.0]);
+        assert_eq!(counts.iter().sum::<u64>(), 300);
+        assert_eq!(counts, vec![100, 200]);
+    }
+
+    #[test]
+    fn distance_rule_matches_paper_eq1_eq2() {
+        // Paper §3.3 default platform: 6 nodes at distance 1, 6 at distance
+        // 2, 2 at distance 3, 4704 tasks (LeNet C1). Solving Eq. 1–2 gives
+        // t ≈ 486.6 tasks for distance-1 nodes.
+        let mut dists = vec![1.0; 6];
+        dists.extend(vec![2.0; 6]);
+        dists.extend(vec![3.0; 2]);
+        let counts = inverse_proportional(4704, &dists);
+        assert_eq!(counts.iter().sum::<u64>(), 4704);
+        assert!((486..=488).contains(&counts[0]), "D1 count {}", counts[0]);
+        assert!((242..=244).contains(&counts[6]), "D2 count {}", counts[6]);
+        assert!((161..=163).contains(&counts[12]), "D3 count {}", counts[12]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_weight_panics() {
+        largest_remainder(5, &[1.0, -0.5]);
+    }
+}

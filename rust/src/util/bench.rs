@@ -1,0 +1,93 @@
+//! A small benchmarking harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock over repeated runs with warmup, reports mean ±
+//! standard deviation and optional throughput. Used by the `cargo bench`
+//! targets (`rust/benches/*`, `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Measured iterations (after warmup).
+    pub iters: u32,
+    /// Mean wall time per iteration.
+    pub mean: Duration,
+    /// Standard deviation across iterations.
+    pub stddev: Duration,
+    /// Optional throughput: (units per iteration, unit label).
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    /// Units per second, if a throughput was attached.
+    pub fn rate(&self) -> Option<f64> {
+        self.throughput.map(|(units, _)| units / self.mean.as_secs_f64())
+    }
+
+    /// Render a human line like
+    /// `fig7/c1-row-major     12.3ms ± 0.4ms   38.2 Mcycles/s`.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10.3?} ± {:>8.3?}  ({} iters)",
+            self.name, self.mean, self.stddev, self.iters
+        );
+        if let (Some(rate), Some((_, unit))) = (self.rate(), self.throughput) {
+            s.push_str(&format!("  {:>12.2} {unit}/s", rate));
+        }
+        s
+    }
+}
+
+/// Run `f` repeatedly for at least `min_time` (after one warmup call) and
+/// collect timing statistics. `throughput` attaches a per-iteration unit
+/// count (e.g. simulated cycles) for rate reporting.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    min_time: Duration,
+    throughput: Option<(f64, &'static str)>,
+    mut f: F,
+) -> BenchResult {
+    // Warmup.
+    f();
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < min_time || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u32,
+        mean: Duration::from_secs_f64(mean),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        throughput,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let r = bench("spin", Duration::from_millis(20), Some((100.0, "ops")), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.rate().unwrap() > 0.0);
+        let line = r.render();
+        assert!(line.contains("spin"));
+        assert!(line.contains("ops/s"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic PRNG, largest-remainder
+//! integer apportionment, ASCII table rendering, and a tiny property-testing
+//! harness used throughout the test-suite (no external crates are available
+//! offline, so these substitute for `rand`/`proptest`/`prettytable`).
+
+pub mod apportion;
+pub mod bench;
+pub mod prng;
+pub mod proptest;
+pub mod table;
+
+pub use apportion::largest_remainder;
+pub use prng::SplitMix64;
+pub use table::Table;

@@ -1,0 +1,104 @@
+//! Integration tests over the PJRT runtime: artifacts must load, compile,
+//! execute, and reproduce the JAX/Pallas numerics recorded at AOT time.
+//!
+//! These tests need `make artifacts` to have run (the Makefile `test`
+//! target guarantees it); they are skipped gracefully when artifacts are
+//! missing so `cargo test` alone stays green in a fresh checkout.
+
+use noctt::runtime::{smoke_test, Artifact, LenetRuntime, TensorFile};
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::env::var("NOCTT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    std::path::Path::new(&dir).join("smoke.hlo.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn smoke_computation_round_trips() {
+    let dir = require_artifacts!();
+    smoke_test(&dir).expect("smoke artifact must execute correctly");
+}
+
+#[test]
+fn lenet_matches_aot_golden_batch8() {
+    let dir = require_artifacts!();
+    let rt = LenetRuntime::load(&dir, 8).expect("load lenet_b8");
+    let tv = TensorFile::load(&format!("{dir}/testvec.bin")).unwrap();
+    let input = tv.get("input").unwrap();
+    let golden = tv.get("logits").unwrap();
+    let logits = rt.infer(&input.data).expect("inference");
+    assert_eq!(logits.len(), golden.data.len());
+    for (i, (g, w)) in logits.iter().zip(&golden.data).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3,
+            "logit {i}: rust {g} vs jax {w} — AOT/PJRT numerics diverged"
+        );
+    }
+}
+
+#[test]
+fn lenet_batch1_slice_matches_batch8() {
+    let dir = require_artifacts!();
+    let rt8 = LenetRuntime::load(&dir, 8).unwrap();
+    let rt1 = LenetRuntime::load(&dir, 1).unwrap();
+    let tv = TensorFile::load(&format!("{dir}/testvec.bin")).unwrap();
+    let input = tv.get("input").unwrap();
+    let all = rt8.infer(&input.data).unwrap();
+    let first = rt1.infer(&input.data[..32 * 32]).unwrap();
+    for (i, (a, b)) in all[..10].iter().zip(&first).enumerate() {
+        assert!((a - b).abs() < 1e-4, "logit {i}: batch8 {a} vs batch1 {b}");
+    }
+}
+
+#[test]
+fn classify_returns_valid_classes() {
+    let dir = require_artifacts!();
+    let rt = LenetRuntime::load(&dir, 8).unwrap();
+    let tv = TensorFile::load(&format!("{dir}/testvec.bin")).unwrap();
+    let classes = rt.classify(&tv.get("input").unwrap().data).unwrap();
+    assert_eq!(classes.len(), 8);
+    assert!(classes.iter().all(|&c| c < 10));
+}
+
+#[test]
+fn infer_rejects_wrong_batch() {
+    let dir = require_artifacts!();
+    let rt = LenetRuntime::load(&dir, 1).unwrap();
+    assert!(rt.infer(&vec![0.0; 3 * 32 * 32]).is_err(), "wrong batch must error");
+}
+
+#[test]
+fn weights_file_contains_canonical_params() {
+    let dir = require_artifacts!();
+    let wf = TensorFile::load(&format!("{dir}/lenet_weights.bin")).unwrap();
+    assert_eq!(wf.tensors().len(), 14);
+    let names: Vec<&str> = wf.tensors().iter().map(|t| t.name.as_str()).collect();
+    assert_eq!(names, noctt::runtime::lenet::PARAM_ORDER.to_vec());
+    assert_eq!(wf.get("c1_w").unwrap().dims, vec![6, 1, 5, 5]);
+    assert_eq!(wf.get("out_b").unwrap().dims, vec![10]);
+}
+
+#[test]
+fn artifact_reports_platform_and_path() {
+    let dir = require_artifacts!();
+    let art = Artifact::load(&format!("{dir}/smoke.hlo.txt")).unwrap();
+    assert_eq!(art.platform(), "cpu");
+    assert!(art.path().ends_with("smoke.hlo.txt"));
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let err = Artifact::load("/nonexistent/nothing.hlo.txt");
+    assert!(err.is_err());
+}

@@ -1,0 +1,213 @@
+//! Property-based tests over the coordinator's invariants, using the
+//! crate's own mini property harness (`noctt::util::proptest` — external
+//! proptest/quickcheck are unavailable offline).
+
+use noctt::accel::Simulation;
+use noctt::config::PlatformConfig;
+use noctt::dnn::LayerSpec;
+use noctt::mapping::{self, run_layer, Strategy};
+use noctt::metrics::unevenness_u64;
+use noctt::noc::{Mesh, Network, PacketKind};
+use noctt::util::apportion::{inverse_proportional, largest_remainder};
+use noctt::util::proptest::forall;
+
+
+// ------------------------------------------------------------- apportionment
+
+#[test]
+fn prop_largest_remainder_conserves_and_bounds() {
+    forall("largest remainder conservation", 300, |rng| {
+        let n = rng.range(1, 20) as usize;
+        let total = rng.below(100_000);
+        let weights: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+        let counts = largest_remainder(total, &weights);
+        assert_eq!(counts.len(), n);
+        assert_eq!(counts.iter().sum::<u64>(), total, "total not conserved");
+        // Quota property: each count within 1 of its exact share.
+        let sum: f64 = weights.iter().sum();
+        if sum > 0.0 {
+            for (i, &c) in counts.iter().enumerate() {
+                let quota = weights[i] / sum * total as f64;
+                assert!(
+                    (c as f64 - quota).abs() <= 1.0 + 1e-9,
+                    "count {c} deviates from quota {quota:.3} by more than 1"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_inverse_proportional_ordering() {
+    forall("faster PEs never get fewer tasks", 200, |rng| {
+        let n = rng.range(2, 16) as usize;
+        let total = rng.range(100, 50_000);
+        let times: Vec<f64> = (0..n).map(|_| 10.0 + rng.f64() * 90.0).collect();
+        let counts = inverse_proportional(total, &times);
+        for i in 0..n {
+            for j in 0..n {
+                // Strictly faster (by enough that quotas differ by > 2) ⇒
+                // at least as many tasks.
+                if times[i] < times[j] - 1e-9 {
+                    assert!(
+                        counts[i] + 2 >= counts[j],
+                        "t[{i}]={:.2} < t[{j}]={:.2} but counts {} < {}",
+                        times[i],
+                        times[j],
+                        counts[i],
+                        counts[j]
+                    );
+                }
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------------- routing
+
+#[test]
+fn prop_xy_path_is_minimal_and_in_mesh() {
+    forall("xy path minimality", 300, |rng| {
+        let w = rng.range(2, 8) as usize;
+        let h = rng.range(2, 8) as usize;
+        let mesh = Mesh::new(w, h);
+        let a = rng.index(mesh.len());
+        let b = rng.index(mesh.len());
+        let path = mesh.xy_path(a, b);
+        assert_eq!(path.len() - 1, mesh.hop_distance(a, b), "non-minimal path");
+        assert_eq!(*path.first().unwrap(), a);
+        assert_eq!(*path.last().unwrap(), b);
+        for pair in path.windows(2) {
+            assert_eq!(mesh.hop_distance(pair[0], pair[1]), 1, "non-adjacent hop");
+        }
+    });
+}
+
+// ------------------------------------------------------------------- network
+
+#[test]
+fn prop_network_never_loses_or_duplicates_packets() {
+    forall("packet conservation under random traffic", 40, |rng| {
+        let cfg = PlatformConfig::default_2mc();
+        let mut net = Network::new(&cfg);
+        let nodes = cfg.num_nodes();
+        let n_packets = rng.range(1, 60);
+        let mut sent = Vec::new();
+        for _ in 0..n_packets {
+            let src = rng.index(nodes);
+            let mut dst = rng.index(nodes);
+            while dst == src {
+                dst = rng.index(nodes);
+            }
+            let flits = rng.range(1, 24);
+            let kind = *rng.choose(&[PacketKind::Request, PacketKind::Response, PacketKind::Result]);
+            sent.push(net.send(src, dst, kind, flits, rng.below(50), 0));
+        }
+        net.run_to_quiescence(1_000_000);
+        let mut delivered = 0u64;
+        for id in sent {
+            let p = net.packet(id);
+            assert!(p.delivered(), "packet {id} lost");
+            delivered += 1;
+        }
+        assert_eq!(net.stats().packets_delivered, delivered, "duplicate deliveries");
+    });
+}
+
+#[test]
+fn prop_network_latency_at_least_minimal() {
+    forall("latency lower bound", 60, |rng| {
+        let cfg = PlatformConfig::default_2mc();
+        let mut net = Network::new(&cfg);
+        let nodes = cfg.num_nodes();
+        let src = rng.index(nodes);
+        let mut dst = rng.index(nodes);
+        while dst == src {
+            dst = rng.index(nodes);
+        }
+        let flits = rng.range(1, 22);
+        let id = net.send(src, dst, PacketKind::Response, flits, 0, 0);
+        net.run_to_quiescence(100_000);
+        let p = net.packet(id);
+        let hops = net.mesh().hop_distance(src, dst) as u64;
+        // Head needs ≥ 1 cycle per hop; tail trails ≥ flits−1 cycles.
+        let floor = hops + (flits - 1);
+        assert!(
+            p.network_latency() >= floor,
+            "{src}→{dst} ({flits} flits): latency {} below physical floor {floor}",
+            p.network_latency()
+        );
+    });
+}
+
+// ---------------------------------------------------------------- simulation
+
+#[test]
+fn prop_simulation_executes_exactly_the_budgets() {
+    forall("budget conservation", 25, |rng| {
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("p", 5, 1.0, 1);
+        let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
+        let budgets: Vec<u64> = (0..14).map(|_| rng.below(12)).collect();
+        sim.add_budgets(&budgets);
+        let res = sim.run_until_done();
+        assert_eq!(res.task_counts(), budgets, "executed counts differ from budgets");
+        assert_eq!(res.records.len() as u64, budgets.iter().sum::<u64>());
+        // Travel-time decomposition holds for every record.
+        for r in &res.records {
+            assert_eq!(r.t_req() + r.t_mem() + r.t_resp() + r.t_comp(), r.travel_time());
+        }
+    });
+}
+
+#[test]
+fn prop_simulation_deterministic_for_fixed_budgets() {
+    forall("simulation determinism", 10, |rng| {
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("p", rng.range(1, 7) * 2 - 1, 1.0, 1);
+        let budgets: Vec<u64> = (0..14).map(|_| rng.below(8)).collect();
+        let run = || {
+            let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
+            sim.add_budgets(&budgets);
+            let r = sim.run_until_done();
+            (r.latency, r.drained_at, r.finish.clone())
+        };
+        assert_eq!(run(), run());
+    });
+}
+
+// ------------------------------------------------------------------- mapping
+
+#[test]
+fn prop_every_strategy_conserves_tasks() {
+    forall("strategies conserve tasks", 12, |rng| {
+        let cfg = PlatformConfig::default_2mc();
+        let tasks = rng.range(14, 600);
+        let kernel = *rng.choose(&[1u64, 3, 5]);
+        let layer = LayerSpec::conv("p", kernel, 1.0, tasks);
+        let window = rng.range(1, 12);
+        let strategy = *rng.choose(&[
+            Strategy::RowMajor,
+            Strategy::Distance,
+            Strategy::StaticLatency,
+            Strategy::Sampling(window),
+        ]);
+        let run = run_layer(&cfg, &layer, strategy);
+        assert_eq!(run.counts.iter().sum::<u64>(), tasks, "{}", strategy.label());
+        assert_eq!(run.summary.counts.iter().sum::<u64>(), tasks, "{}", strategy.label());
+    });
+}
+
+#[test]
+fn prop_row_major_counts_differ_by_at_most_one() {
+    forall("row-major evenness", 200, |rng| {
+        let pes = rng.range(1, 40) as usize;
+        let total = rng.below(100_000);
+        let counts = mapping::row_major::counts(total, pes);
+        let max = counts.iter().max().unwrap();
+        let min = counts.iter().min().unwrap();
+        assert!(max - min <= 1, "row-major spread {max}-{min}");
+        assert_eq!(counts.iter().sum::<u64>(), total);
+        assert!(unevenness_u64(&counts) <= 1.0);
+    });
+}
