@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
         if si == 0 {
             base_total = total;
         }
-        let mut row = vec![s.label()];
+        let mut row = vec![s.label().to_string()];
         row.extend(lat.iter().map(u64::to_string));
         row.push(total.to_string());
         row.push(fmt_pct(improvement(base_total, total)));

@@ -1,76 +1,109 @@
-//! Mapping sweep: where does each strategy win?
+//! Mapping sweep — the runnable tour of the redesigned API.
 //!
-//! Sweeps the three §5 knobs — mapping iterations (task scale), packet
-//! size (kernel), and NoC architecture — and prints the crossover
-//! analysis: the regimes where static information (distance, Eq. 6) is
-//! enough, and where the measured travel time is required.
+//! Demonstrates the three public pillars end to end:
+//!
+//! 1. **Registry** (`mapping::registry`): strategies are resolved by name,
+//!    and a custom strategy (`corner-heavy`, defined below) registers
+//!    itself and joins every sweep *without touching any crate dispatch
+//!    code*.
+//! 2. **Builder** (`PlatformConfig::builder`): platforms beyond the §5.1
+//!    presets — here a non-square 4×8 mesh and an 8×8 mesh with four
+//!    centre MCs — validated at `build()`.
+//! 3. **Scenario engine** (`experiments::engine::Scenario`): one
+//!    declarative {platforms × layers × mappers} grid replaces the three
+//!    hand-rolled sweep loops this example used to carry.
 //!
 //! Run: `cargo run --release --example mapping_sweep`
 
-use noctt::config::{PlacementPreset, PlatformConfig};
+use std::borrow::Cow;
+
+use noctt::config::PlatformConfig;
 use noctt::dnn::{lenet5, LayerSpec};
-use noctt::mapping::{run_layer, Strategy};
-use noctt::metrics::improvement;
+use noctt::experiments::engine::Scenario;
+use noctt::mapping::{registry, MapCtx, Mapper};
 use noctt::util::Table;
 
-fn improvements(cfg: &PlatformConfig, layer: &LayerSpec) -> Vec<(String, f64)> {
-    let base = run_layer(cfg, layer, Strategy::RowMajor).summary.latency;
-    [Strategy::Distance, Strategy::StaticLatency, Strategy::Sampling(10), Strategy::PostRun]
-        .into_iter()
-        .map(|s| (s.label(), improvement(base, run_layer(cfg, layer, s).summary.latency)))
-        .collect()
+/// A toy custom strategy: pile extra work onto the mesh corners (the worst
+/// possible idea on this platform — corners are farthest from the MCs —
+/// which makes it a nice visible baseline for how much mapping matters).
+struct CornerHeavy;
+
+impl Mapper for CornerHeavy {
+    fn label(&self) -> Cow<'static, str> {
+        Cow::Borrowed("corner-heavy")
+    }
+
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        let (w, h) = (ctx.cfg.mesh_width, ctx.cfg.mesh_height);
+        let corners = [0, w - 1, w * (h - 1), w * h - 1];
+        let pe_nodes = ctx.cfg.pe_nodes();
+        // Corner PEs get weight 3, everyone else weight 1.
+        let weights: Vec<f64> = pe_nodes
+            .iter()
+            .map(|n| if corners.contains(n) { 3.0 } else { 1.0 })
+            .collect();
+        noctt::util::largest_remainder(ctx.layer.tasks, &weights)
+    }
 }
 
 fn main() {
-    let cfg = PlatformConfig::default_2mc();
+    // 1. Registry: builtins + one custom registration.
+    let mut reg = registry();
+    reg.register("corner-heavy", "3x weight on mesh corners (demo)", |s| {
+        (s == "corner-heavy").then(|| Box::new(CornerHeavy) as Box<dyn Mapper>)
+    });
+    println!("registered strategies: {:?}\n", reg.names());
 
-    println!("== task-scale sweep (C1 output channels; Fig. 8 axis) ==");
-    let mut t = Table::new(["channels", "tasks", "distance", "static-latency", "sampling-10", "post-run"]);
-    for ch in [3u64, 6, 12, 24, 48] {
-        let layer = lenet5(ch).remove(0);
-        let imp = improvements(&cfg, &layer);
-        t.row([
-            ch.to_string(),
-            layer.tasks.to_string(),
-            format!("{:+.2}%", imp[0].1 * 100.0),
-            format!("{:+.2}%", imp[1].1 * 100.0),
-            format!("{:+.2}%", imp[2].1 * 100.0),
-            format!("{:+.2}%", imp[3].1 * 100.0),
-        ]);
+    // 2. Builder: the paper's platform plus two it could not express.
+    let paper = PlatformConfig::default_2mc();
+    let tall = PlatformConfig::builder()
+        .mesh(4, 8)
+        .mc_nodes([13, 18])
+        .build()
+        .expect("4x8 mesh with 2 central MCs");
+    let big = PlatformConfig::builder()
+        .mesh(8, 8)
+        .mc_nodes([27, 28, 35, 36])
+        .flit_bits(512)
+        .build()
+        .expect("8x8 mesh with 4 centre MCs and wide flits");
+
+    // 3. One scenario grid: 3 platforms × 2 layers × 5 mappers.
+    let mut c1 = lenet5(6).remove(0);
+    c1.tasks /= 4; // keep the example around a minute
+    let k9 = LayerSpec::conv("k9", 9, 1.0, c1.tasks);
+    let mappers =
+        ["row-major", "distance", "static-latency", "sampling-10", "corner-heavy"];
+    let results = Scenario::new("mapping-sweep")
+        .registry(reg)
+        .platform("4x4/2mc (paper)", paper)
+        .platform("4x8/2mc", tall)
+        .platform("8x8/4mc/512b", big)
+        .layer(c1)
+        .layer(k9)
+        .mappers(mappers)
+        .run()
+        .expect("sweep grid");
+
+    // Render: one row per (platform, layer), improvements vs row-major.
+    let mut t = Table::new(
+        std::iter::once("platform / layer".to_string())
+            .chain(mappers.iter().skip(1).map(|m| format!("{m} vs row-major"))),
+    );
+    for (pi, plabel) in results.platform_labels.iter().enumerate() {
+        for (li, layer) in results.layers.iter().enumerate() {
+            let mut row = vec![format!("{plabel} / {}", layer.name)];
+            for mi in 1..mappers.len() {
+                row.push(format!("{:+.2}%", results.improvement(pi, li, 0, mi) * 100.0));
+            }
+            t.row(row);
+        }
     }
     println!("{t}");
-
-    println!("== packet-size sweep (kernel; Fig. 9 axis) ==");
-    let mut t = Table::new(["kernel", "flits", "distance", "static-latency", "sampling-10", "post-run"]);
-    for k in [1u64, 3, 5, 7, 9, 11, 13] {
-        let layer = LayerSpec::conv(&format!("k{k}"), k, 1.0, 4704);
-        let flits = layer.profile(&cfg).resp_flits;
-        let imp = improvements(&cfg, &layer);
-        t.row([
-            format!("{k}x{k}"),
-            flits.to_string(),
-            format!("{:+.2}%", imp[0].1 * 100.0),
-            format!("{:+.2}%", imp[1].1 * 100.0),
-            format!("{:+.2}%", imp[2].1 * 100.0),
-            format!("{:+.2}%", imp[3].1 * 100.0),
-        ]);
-    }
-    println!("{t}");
-    println!("(improvements collapse past the 64 GB/s memory-bandwidth knee, k ≥ 9 — see EXPERIMENTS.md)");
-
-    println!("\n== architecture sweep (Fig. 10 axis) ==");
-    let mut t = Table::new(["architecture", "distance", "static-latency", "sampling-10", "post-run"]);
-    for p in [PlacementPreset::TwoMc, PlacementPreset::FourMc] {
-        let cfg = PlatformConfig::preset(p);
-        let layer = lenet5(6).remove(0);
-        let imp = improvements(&cfg, &layer);
-        t.row([
-            format!("{:?}", p),
-            format!("{:+.2}%", imp[0].1 * 100.0),
-            format!("{:+.2}%", imp[1].1 * 100.0),
-            format!("{:+.2}%", imp[2].1 * 100.0),
-            format!("{:+.2}%", imp[3].1 * 100.0),
-        ]);
-    }
-    println!("{t}");
+    println!(
+        "\nReading: travel-time sampling keeps winning as the mesh grows; the static\n\
+         strategies drift (distance over-corrects, corner-heavy shows the cost of a\n\
+         deliberately bad plan). All five strategies — including the one registered\n\
+         by this example — went through the same Scenario entry point."
+    );
 }

@@ -75,7 +75,125 @@ pub struct PlatformConfig {
     pub mem_model: MemModel,
 }
 
+/// Builder for [`PlatformConfig`]: arbitrary W×H meshes, arbitrary MC
+/// placements, and every flit/VC/memory knob, validated at
+/// [`build`](PlatformBuilder::build) time.
+///
+/// Starts from the paper's §5.1 constants, so a builder only names what it
+/// changes:
+///
+/// ```
+/// use noctt::config::PlatformConfig;
+///
+/// // An 8x8 mesh with four centre MCs and wide flits.
+/// let cfg = PlatformConfig::builder()
+///     .mesh(8, 8)
+///     .mc_nodes([27, 28, 35, 36])
+///     .flit_bits(512)
+///     .build()
+///     .unwrap();
+/// assert_eq!(cfg.num_pes(), 60);
+///
+/// // Invalid configurations fail at build, not deep inside the simulator.
+/// assert!(PlatformConfig::builder().mesh(2, 2).mc_nodes([9]).build().is_err());
+/// ```
+#[derive(Debug, Clone)]
+pub struct PlatformBuilder {
+    cfg: PlatformConfig,
+}
+
+impl PlatformBuilder {
+    /// Mesh dimensions (columns × rows).
+    pub fn mesh(mut self, width: usize, height: usize) -> Self {
+        self.cfg.mesh_width = width;
+        self.cfg.mesh_height = height;
+        self
+    }
+
+    /// Node ids hosting memory controllers; every other node hosts a PE.
+    pub fn mc_nodes<I: IntoIterator<Item = usize>>(mut self, nodes: I) -> Self {
+        self.cfg.mc_nodes = nodes.into_iter().collect();
+        self
+    }
+
+    /// Virtual channels per physical link.
+    pub fn num_vcs(mut self, vcs: usize) -> Self {
+        self.cfg.num_vcs = vcs;
+        self
+    }
+
+    /// Flit buffer depth per VC.
+    pub fn vc_depth(mut self, depth: usize) -> Self {
+        self.cfg.vc_depth = depth;
+        self
+    }
+
+    /// Bits carried by one flit (the Fig. 9/Table 1 knob).
+    pub fn flit_bits(mut self, bits: u64) -> Self {
+        self.cfg.flit_bits = bits;
+        self
+    }
+
+    /// Bits per datum.
+    pub fn data_bits(mut self, bits: u64) -> Self {
+        self.cfg.data_bits = bits;
+        self
+    }
+
+    /// Router cycles per PE cycle.
+    pub fn pe_clock_ratio(mut self, ratio: u64) -> Self {
+        self.cfg.pe_clock_ratio = ratio;
+        self
+    }
+
+    /// MAC units per PE.
+    pub fn macs_per_pe(mut self, macs: u64) -> Self {
+        self.cfg.macs_per_pe = macs;
+        self
+    }
+
+    /// Memory bandwidth in bytes per router cycle.
+    pub fn mem_bytes_per_cycle(mut self, bytes: u64) -> Self {
+        self.cfg.mem_bytes_per_cycle = bytes;
+        self
+    }
+
+    /// Fixed packetization overhead at each NI, in router cycles.
+    pub fn ni_packetize_cycles(mut self, cycles: u64) -> Self {
+        self.cfg.ni_packetize_cycles = cycles;
+        self
+    }
+
+    /// No-load per-hop head-flit latency for the Eq. 6 static estimate.
+    pub fn static_hop_cycles(mut self, cycles: u64) -> Self {
+        self.cfg.static_hop_cycles = cycles;
+        self
+    }
+
+    /// Memory-controller service discipline.
+    pub fn mem_model(mut self, model: MemModel) -> Self {
+        self.cfg.mem_model = model;
+        self
+    }
+
+    /// Validate and return the configuration. Every structural error —
+    /// mesh too small, MC ids out of range or duplicated, no PE left, a
+    /// flit smaller than one datum — is reported here rather than deep
+    /// inside the simulator.
+    pub fn build(self) -> anyhow::Result<PlatformConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
 impl PlatformConfig {
+    /// Start a [`PlatformBuilder`] from the paper's §5.1 defaults
+    /// (4x4 mesh, MCs at nodes 9/10, 256-bit flits, 4 VCs × 4-flit
+    /// buffers, queued 64 GB/s memory).
+    pub fn builder() -> PlatformBuilder {
+        PlatformBuilder { cfg: Self::default_2mc() }
+    }
+
     /// The paper's default platform (§5.1): 4x4 mesh, 2 MCs, 14 PEs.
     pub fn default_2mc() -> Self {
         Self::preset(PlacementPreset::TwoMc)
@@ -86,7 +204,8 @@ impl PlatformConfig {
         Self::preset(PlacementPreset::FourMc)
     }
 
-    /// Build a platform from a placement preset with §5.1 constants.
+    /// Build a platform from a placement preset with §5.1 constants
+    /// (a builder shortcut).
     pub fn preset(p: PlacementPreset) -> Self {
         let mc_nodes = match p {
             PlacementPreset::TwoMc => vec![9, 10],
@@ -222,6 +341,49 @@ mod tests {
         assert_eq!(p.compute_cycles(128), 20);
         assert_eq!(p.compute_cycles(64), 10);
         assert_eq!(p.compute_cycles(65), 20);
+    }
+
+    #[test]
+    fn builder_defaults_match_preset() {
+        let built = PlatformConfig::builder().build().unwrap();
+        assert_eq!(built, PlatformConfig::default_2mc());
+    }
+
+    #[test]
+    fn builder_builds_non_square_and_large_meshes() {
+        let p = PlatformConfig::builder().mesh(4, 8).mc_nodes([13, 18]).build().unwrap();
+        assert_eq!(p.num_nodes(), 32);
+        assert_eq!(p.num_pes(), 30);
+        assert!(!p.pe_nodes().contains(&13));
+
+        let p = PlatformConfig::builder()
+            .mesh(8, 8)
+            .mc_nodes([27, 28, 35, 36])
+            .flit_bits(512)
+            .num_vcs(2)
+            .vc_depth(8)
+            .mem_model(MemModel::Parallel)
+            .build()
+            .unwrap();
+        assert_eq!(p.num_pes(), 60);
+        assert_eq!(p.flit_bits, 512);
+        assert_eq!(p.num_vcs, 2);
+        assert_eq!(p.vc_depth, 8);
+        assert_eq!(p.mem_model, MemModel::Parallel);
+    }
+
+    #[test]
+    fn builder_rejects_invalid_at_build() {
+        // MC out of the shrunken mesh.
+        assert!(PlatformConfig::builder().mesh(2, 2).build().is_err());
+        // Duplicate MCs.
+        assert!(PlatformConfig::builder().mc_nodes([9, 9]).build().is_err());
+        // No PE left.
+        assert!(PlatformConfig::builder().mesh(2, 2).mc_nodes([0, 1, 2, 3]).build().is_err());
+        // Flit smaller than a datum.
+        assert!(PlatformConfig::builder().flit_bits(8).build().is_err());
+        // 1-wide mesh.
+        assert!(PlatformConfig::builder().mesh(1, 16).mc_nodes([0]).build().is_err());
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //!    most one task per 22 cycles. Ablated by widening the flit
 //!    (256 → 512 → 1024 bits → fewer flits per response).
 //!
+//! The ablation grid is a four-platform [`Scenario`]: every
+//! {memory model × flit width} variant built with
+//! [`PlatformConfig::builder`], crossed with the kernel sweep layers.
+//!
 //! Finding (see the rendered table): swapping the memory discipline
 //! changes *nothing* — the knee is entirely the NoC-side serialization.
 //! Widening flits moves the knee out and restores both unevenness and the
@@ -20,11 +24,16 @@
 
 use crate::config::{MemModel, PlatformConfig};
 use crate::dnn::LayerSpec;
-use crate::mapping::{run_layer, Strategy};
-use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
+use super::engine::Scenario;
 use super::Report;
+
+/// Memory disciplines ablated.
+pub const MODELS: [MemModel; 2] = [MemModel::Queued, MemModel::Parallel];
+
+/// Flit widths ablated (bits).
+pub const FLIT_BITS: [u64; 2] = [256, 1024];
 
 /// One ablation observation.
 #[derive(Debug, Clone, Copy)]
@@ -43,31 +52,42 @@ pub struct Obs {
     pub sw10_improvement: f64,
 }
 
-fn observe(cfg: &PlatformConfig, kernel: u64, tasks: u64) -> (u64, f64, f64) {
-    let layer = LayerSpec::conv(&format!("k{kernel}"), kernel, 1.0, tasks);
-    let base = run_layer(cfg, &layer, Strategy::RowMajor);
-    let sw10 = run_layer(cfg, &layer, Strategy::Sampling(10));
-    (
-        layer.profile(cfg).resp_flits,
-        base.summary.rho_accum,
-        improvement(base.summary.latency, sw10.summary.latency),
-    )
-}
-
 /// Run the full ablation grid — memory discipline × flit width — over an
 /// unsaturated (k=5) and the saturated (k=13) Fig. 9 point.
 pub fn data(quick: bool) -> Vec<Obs> {
     let kernels: &[u64] = if quick { &[5, 9] } else { &[1, 5, 9, 13] };
     let tasks = if quick { 4704 / 8 } else { 4704 };
+    let mut scenario = Scenario::new("ablation")
+        .layers(kernels.iter().map(|&k| LayerSpec::conv(&format!("k{k}"), k, 1.0, tasks)))
+        .mapper("row-major")
+        .mapper("sampling-10");
+    for model in MODELS {
+        for flit_bits in FLIT_BITS {
+            let cfg = PlatformConfig::builder()
+                .mem_model(model)
+                .flit_bits(flit_bits)
+                .build()
+                .expect("ablation platform");
+            scenario = scenario.platform(format!("{model:?}/{flit_bits}b"), cfg);
+        }
+    }
+    let results = scenario.run().expect("ablation grid");
+    // Observation order matches the pre-engine report: kernel-major, then
+    // memory model, then flit width.
     let mut out = Vec::new();
-    for &kernel in kernels {
-        for model in [MemModel::Queued, MemModel::Parallel] {
-            for flit_bits in [256u64, 1024] {
-                let mut cfg = PlatformConfig::default_2mc();
-                cfg.mem_model = model;
-                cfg.flit_bits = flit_bits;
-                let (resp_flits, rho, imp) = observe(&cfg, kernel, tasks);
-                out.push(Obs { kernel, model, flit_bits, resp_flits, rho, sw10_improvement: imp });
+    for (li, &kernel) in kernels.iter().enumerate() {
+        for (di, model) in MODELS.into_iter().enumerate() {
+            for (fi, flit_bits) in FLIT_BITS.into_iter().enumerate() {
+                let pi = di * FLIT_BITS.len() + fi;
+                let base = results.run(pi, li, 0);
+                out.push(Obs {
+                    kernel,
+                    model,
+                    flit_bits,
+                    resp_flits: results.layers[li].profile(&results.platforms[pi]).resp_flits,
+                    rho: base.summary.rho_accum,
+                    sw10_improvement: results.improvement(pi, li, 0, 1),
+                });
             }
         }
     }

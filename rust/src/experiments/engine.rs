@@ -1,0 +1,348 @@
+//! The [`Scenario`]/sweep engine: one entry point for every experiment.
+//!
+//! A scenario is a declarative grid — {platforms × layers × mappers} —
+//! executed cell by cell through the same pipeline
+//! ([`Mapper::execute`]), with shared result collection in
+//! [`SweepResults`]. Every figure/table module of [`crate::experiments`]
+//! builds its grid here instead of hand-rolling nested loops, and any new
+//! sweep (larger meshes, new strategies, new networks) is a few builder
+//! calls:
+//!
+//! ```no_run
+//! use noctt::config::PlatformConfig;
+//! use noctt::dnn::lenet5;
+//! use noctt::experiments::engine::Scenario;
+//!
+//! let results = Scenario::new("demo")
+//!     .platform("2mc", PlatformConfig::default_2mc())
+//!     .platform(
+//!         "8x8/4mc",
+//!         PlatformConfig::builder().mesh(8, 8).mc_nodes([27, 28, 35, 36]).build().unwrap(),
+//!     )
+//!     .layer(lenet5(6).remove(0))
+//!     .mapper("row-major")
+//!     .mapper("sampling-10")
+//!     .run()
+//!     .unwrap();
+//! let base = results.run(0, 0, 0).summary.latency;
+//! let ours = results.run(0, 0, 1).summary.latency;
+//! assert!(ours <= base);
+//! ```
+//!
+//! Mappers are resolved by name through a [`Registry`] (a custom registry
+//! — e.g. with experimental strategies — can be swapped in with
+//! [`Scenario::registry`], or a boxed implementation pushed directly with
+//! [`Scenario::mapper_impl`]).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::PlatformConfig;
+use crate::dnn::LayerSpec;
+use crate::mapping::{self, MapCtx, MappedRun, Mapper, Registry};
+
+/// A mapper slot: either a name resolved through the registry at
+/// [`Scenario::run`] time, or a concrete implementation.
+enum MapperSlot {
+    Spec(String),
+    Impl(Box<dyn Mapper>),
+}
+
+/// A declarative experiment grid: {platforms × layers × mappers}.
+pub struct Scenario {
+    name: String,
+    registry: Registry,
+    platforms: Vec<(String, PlatformConfig)>,
+    layers: Vec<LayerSpec>,
+    mappers: Vec<MapperSlot>,
+}
+
+impl Scenario {
+    /// Start an empty scenario with the builtin strategy registry.
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            registry: mapping::registry(),
+            platforms: Vec::new(),
+            layers: Vec::new(),
+            mappers: Vec::new(),
+        }
+    }
+
+    /// Replace the registry used to resolve mapper names.
+    pub fn registry(mut self, registry: Registry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    /// Add a labeled platform to the grid.
+    pub fn platform(mut self, label: impl Into<String>, cfg: PlatformConfig) -> Self {
+        self.platforms.push((label.into(), cfg));
+        self
+    }
+
+    /// Add one layer to the grid.
+    pub fn layer(mut self, layer: LayerSpec) -> Self {
+        self.layers.push(layer);
+        self
+    }
+
+    /// Add several layers to the grid.
+    pub fn layers<I: IntoIterator<Item = LayerSpec>>(mut self, layers: I) -> Self {
+        self.layers.extend(layers);
+        self
+    }
+
+    /// Add a mapper by registry name (resolved at [`run`](Self::run)).
+    pub fn mapper(mut self, spec: impl Into<String>) -> Self {
+        self.mappers.push(MapperSlot::Spec(spec.into()));
+        self
+    }
+
+    /// Add several mappers by registry name.
+    pub fn mappers<'a, I: IntoIterator<Item = &'a str>>(mut self, specs: I) -> Self {
+        for s in specs {
+            self.mappers.push(MapperSlot::Spec(s.to_string()));
+        }
+        self
+    }
+
+    /// Add a concrete mapper implementation (bypasses the registry —
+    /// useful for one-off or experimental strategies).
+    pub fn mapper_impl(mut self, mapper: Box<dyn Mapper>) -> Self {
+        self.mappers.push(MapperSlot::Impl(mapper));
+        self
+    }
+
+    /// Execute the full grid and collect the results.
+    ///
+    /// Fails fast — before any simulation — on an empty grid dimension, an
+    /// invalid platform, or a mapper name the registry does not know.
+    pub fn run(self) -> Result<SweepResults> {
+        ensure!(!self.platforms.is_empty(), "scenario '{}' has no platforms", self.name);
+        ensure!(!self.layers.is_empty(), "scenario '{}' has no layers", self.name);
+        ensure!(!self.mappers.is_empty(), "scenario '{}' has no mappers", self.name);
+        for (label, cfg) in &self.platforms {
+            cfg.validate()
+                .with_context(|| format!("scenario '{}', platform '{label}'", self.name))?;
+        }
+        let mappers: Vec<Box<dyn Mapper>> = self
+            .mappers
+            .into_iter()
+            .map(|slot| match slot {
+                MapperSlot::Impl(m) => Ok(m),
+                MapperSlot::Spec(spec) => self.registry.resolve(&spec).with_context(|| {
+                    format!(
+                        "scenario '{}': unknown mapper '{spec}' (registered: {:?})",
+                        self.name,
+                        self.registry.names()
+                    )
+                }),
+            })
+            .collect::<Result<_>>()?;
+
+        let mut cells = Vec::with_capacity(self.platforms.len() * self.layers.len() * mappers.len());
+        for (pi, (_, cfg)) in self.platforms.iter().enumerate() {
+            for (li, layer) in self.layers.iter().enumerate() {
+                let ctx = MapCtx::new(cfg, layer);
+                for (mi, mapper) in mappers.iter().enumerate() {
+                    cells.push(Cell { platform: pi, layer: li, mapper: mi, run: mapper.execute(&ctx) });
+                }
+            }
+        }
+        let (platform_labels, platforms): (Vec<String>, Vec<PlatformConfig>) =
+            self.platforms.into_iter().unzip();
+        Ok(SweepResults {
+            scenario: self.name,
+            platform_labels,
+            platforms,
+            mapper_labels: mappers.iter().map(|m| m.label().to_string()).collect(),
+            layers: self.layers,
+            cells,
+        })
+    }
+}
+
+/// One executed grid point.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Platform index into [`SweepResults::platforms`].
+    pub platform: usize,
+    /// Layer index into [`SweepResults::layers`].
+    pub layer: usize,
+    /// Mapper index into [`SweepResults::mapper_labels`].
+    pub mapper: usize,
+    /// The mapped, executed run.
+    pub run: MappedRun,
+}
+
+/// Shared result collection of a [`Scenario`] run. Cells are stored
+/// platform-major, then layer, then mapper — the natural report order.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    /// Scenario name.
+    pub scenario: String,
+    /// Platform labels, grid order.
+    pub platform_labels: Vec<String>,
+    /// The platforms themselves, grid order.
+    pub platforms: Vec<PlatformConfig>,
+    /// The layers, grid order.
+    pub layers: Vec<LayerSpec>,
+    /// Resolved mapper labels, grid order.
+    pub mapper_labels: Vec<String>,
+    /// All executed cells.
+    pub cells: Vec<Cell>,
+}
+
+impl SweepResults {
+    fn index(&self, platform: usize, layer: usize, mapper: usize) -> usize {
+        (platform * self.layers.len() + layer) * self.mapper_labels.len() + mapper
+    }
+
+    /// The cell at a grid point (indices are grid order).
+    pub fn cell(&self, platform: usize, layer: usize, mapper: usize) -> &Cell {
+        &self.cells[self.index(platform, layer, mapper)]
+    }
+
+    /// The run at a grid point.
+    pub fn run(&self, platform: usize, layer: usize, mapper: usize) -> &MappedRun {
+        &self.cell(platform, layer, mapper).run
+    }
+
+    /// Look a cell up by labels.
+    pub fn get(&self, platform: &str, layer: &str, mapper: &str) -> Option<&Cell> {
+        let p = self.platform_labels.iter().position(|l| l == platform)?;
+        let l = self.layers.iter().position(|x| x.name == layer)?;
+        let m = self.mapper_labels.iter().position(|x| x == mapper)?;
+        Some(self.cell(p, l, m))
+    }
+
+    /// All runs of one (platform, layer) in mapper order.
+    pub fn runs_for(&self, platform: usize, layer: usize) -> Vec<&MappedRun> {
+        (0..self.mapper_labels.len()).map(|m| self.run(platform, layer, m)).collect()
+    }
+
+    /// One mapper's runs across all layers of a platform, in layer order.
+    pub fn mapper_series(&self, platform: usize, mapper: usize) -> Vec<&MappedRun> {
+        (0..self.layers.len()).map(|l| self.run(platform, l, mapper)).collect()
+    }
+
+    /// Latency improvement of `mapper` over `baseline` on one
+    /// (platform, layer), as a positive fraction when faster.
+    pub fn improvement(&self, platform: usize, layer: usize, baseline: usize, mapper: usize) -> f64 {
+        crate::metrics::improvement(
+            self.run(platform, layer, baseline).summary.latency,
+            self.run(platform, layer, mapper).summary.latency,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::registry;
+
+    fn tiny_layer(name: &str, tasks: u64) -> LayerSpec {
+        LayerSpec::conv(name, 3, 1.0, tasks)
+    }
+
+    #[test]
+    fn grid_runs_every_cell_in_order() {
+        let res = Scenario::new("t")
+            .platform("2mc", PlatformConfig::default_2mc())
+            .platform("4mc", PlatformConfig::default_4mc())
+            .layer(tiny_layer("a", 28))
+            .layer(tiny_layer("b", 56))
+            .mapper("row-major")
+            .mapper("distance")
+            .run()
+            .unwrap();
+        assert_eq!(res.cells.len(), 2 * 2 * 2);
+        assert_eq!(res.mapper_labels, vec!["row-major", "distance"]);
+        // Cell (1, 1, 1): 4mc platform (12 PEs), layer b, distance.
+        let c = res.cell(1, 1, 1);
+        assert_eq!((c.platform, c.layer, c.mapper), (1, 1, 1));
+        assert_eq!(c.run.counts.len(), 12);
+        assert_eq!(c.run.counts.iter().sum::<u64>(), 56);
+        // Label lookup agrees with index lookup.
+        let by_label = res.get("4mc", "b", "distance").unwrap();
+        assert_eq!(by_label.run.summary.latency, c.run.summary.latency);
+    }
+
+    #[test]
+    fn unknown_mapper_fails_before_simulating() {
+        let err = Scenario::new("t")
+            .platform("2mc", PlatformConfig::default_2mc())
+            .layer(tiny_layer("a", 28))
+            .mapper("no-such-mapper")
+            .run()
+            .unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("no-such-mapper"), "{msg}");
+        assert!(msg.contains("row-major"), "should list known mappers: {msg}");
+    }
+
+    #[test]
+    fn empty_dimensions_are_rejected() {
+        assert!(Scenario::new("t").run().is_err());
+        assert!(Scenario::new("t")
+            .platform("p", PlatformConfig::default_2mc())
+            .mapper("row-major")
+            .run()
+            .is_err());
+    }
+
+    #[test]
+    fn invalid_platform_is_rejected_with_its_label() {
+        // A raw config that bypassed the builder: 3x3 mesh leaves the
+        // default MCs (nodes 9/10) out of range.
+        let mut cfg = PlatformConfig::default_2mc();
+        cfg.mesh_width = 3;
+        cfg.mesh_height = 3;
+        let err = Scenario::new("t")
+            .platform("broken", cfg)
+            .layer(tiny_layer("a", 28))
+            .mapper("row-major")
+            .run()
+            .unwrap_err();
+        assert!(format!("{err:?}").contains("broken"));
+    }
+
+    #[test]
+    fn custom_registry_and_boxed_mappers_plug_in() {
+        use crate::mapping::{MapCtx, Mapper};
+        use std::borrow::Cow;
+
+        struct Reverse;
+        impl Mapper for Reverse {
+            fn label(&self) -> Cow<'static, str> {
+                Cow::Borrowed("reverse")
+            }
+            fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+                let mut c = crate::mapping::row_major::counts(ctx.layer.tasks, ctx.num_pes());
+                c.reverse();
+                c
+            }
+        }
+
+        let mut reg = registry();
+        reg.register("reverse", "row-major from the last PE", |s| {
+            (s == "reverse").then(|| Box::new(Reverse) as Box<dyn Mapper>)
+        });
+        let res = Scenario::new("t")
+            .registry(reg)
+            .platform("2mc", PlatformConfig::default_2mc())
+            .layer(tiny_layer("a", 30))
+            .mapper("reverse")
+            .mapper_impl(Box::new(Reverse))
+            .run()
+            .unwrap();
+        assert_eq!(res.mapper_labels, vec!["reverse", "reverse"]);
+        // 30 tasks over 14 PEs reversed: the tail 2 extra tasks land on the
+        // last two PEs.
+        let c = &res.run(0, 0, 0).counts;
+        assert_eq!(c.iter().sum::<u64>(), 30);
+        assert_eq!(c[12], 3);
+        assert_eq!(c[13], 3);
+        assert_eq!(res.run(0, 0, 1).counts, *c);
+    }
+}

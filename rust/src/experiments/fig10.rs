@@ -8,11 +8,18 @@
 
 use crate::config::{PlacementPreset, PlatformConfig};
 use crate::dnn::lenet5;
-use crate::mapping::{run_layer, MappedRun, Strategy};
+use crate::mapping::MappedRun;
 use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
+use super::engine::Scenario;
 use super::Report;
+
+/// Mappings compared in Fig. 10 (registry names).
+pub const MAPPERS: [&str; 3] = ["row-major", "sampling-10", "post-run"];
+
+/// Architectures compared in Fig. 10, in paper order.
+pub const PRESETS: [PlacementPreset; 2] = [PlacementPreset::TwoMc, PlacementPreset::FourMc];
 
 /// One architecture's results.
 #[derive(Debug)]
@@ -23,27 +30,30 @@ pub struct ArchPoint {
     pub mcs: usize,
     /// PE count.
     pub pes: usize,
-    /// Row-major / sampling-10 / post-run runs.
+    /// Runs in [`MAPPERS`] order.
     pub runs: Vec<MappedRun>,
-}
-
-/// Mappings compared in Fig. 10.
-pub fn strategies() -> Vec<Strategy> {
-    vec![Strategy::RowMajor, Strategy::Sampling(10), Strategy::PostRun]
 }
 
 /// Run both architectures on C1.
 pub fn data(quick: bool) -> Vec<ArchPoint> {
-    [PlacementPreset::TwoMc, PlacementPreset::FourMc]
+    let mut layer = lenet5(6).remove(0);
+    if quick {
+        layer.tasks /= 4;
+    }
+    let mut scenario = Scenario::new("fig10").layer(layer).mappers(MAPPERS);
+    for preset in PRESETS {
+        let cfg = PlatformConfig::preset(preset);
+        scenario = scenario.platform(format!("{} MCs", cfg.mc_nodes.len()), cfg);
+    }
+    let results = scenario.run().expect("fig10 grid");
+    PRESETS
         .into_iter()
-        .map(|preset| {
-            let cfg = PlatformConfig::preset(preset);
-            let mut layer = lenet5(6).remove(0);
-            if quick {
-                layer.tasks /= 4;
-            }
-            let runs = strategies().iter().map(|&s| run_layer(&cfg, &layer, s)).collect();
-            ArchPoint { preset, mcs: cfg.mc_nodes.len(), pes: cfg.num_pes(), runs }
+        .enumerate()
+        .map(|(pi, preset)| ArchPoint {
+            preset,
+            mcs: results.platforms[pi].mc_nodes.len(),
+            pes: results.platforms[pi].num_pes(),
+            runs: results.runs_for(pi, 0).into_iter().cloned().collect(),
         })
         .collect()
 }
@@ -75,7 +85,7 @@ pub fn run(quick: bool) -> Report {
             t.row([
                 format!("{} MCs", p.mcs),
                 p.pes.to_string(),
-                r.strategy.label(),
+                r.mapper.to_string(),
                 r.summary.latency.to_string(),
                 fmt_pct(r.summary.rho_accum),
                 fmt_pct(improvement(base, r.summary.latency)),

@@ -13,17 +13,21 @@
 
 use crate::config::PlatformConfig;
 use crate::dnn::{lenet5, LayerSpec};
-use crate::mapping::{run_layer, Strategy};
 use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
+use super::engine::Scenario;
 use super::Report;
+
+/// The six Fig. 11 mappings (registry names), in paper order.
+pub const MAPPERS: [&str; 6] =
+    ["row-major", "distance", "sampling-1", "sampling-5", "sampling-10", "post-run"];
 
 /// Per-layer latencies for one strategy.
 #[derive(Debug, Clone)]
 pub struct StrategySeries {
-    /// The mapping.
-    pub strategy: Strategy,
+    /// The mapping's registry name / label.
+    pub mapper: String,
     /// Latency of each of the 7 layers, cycles.
     pub layer_latency: Vec<u64>,
     /// Whole-model latency (sum — layers run back-to-back).
@@ -41,7 +45,6 @@ pub struct Fig11Data {
 
 /// Run the whole model under every Fig. 11 strategy.
 pub fn data(quick: bool) -> Fig11Data {
-    let cfg = PlatformConfig::default_2mc();
     let mut layers = lenet5(6);
     if quick {
         // Shrink only the big early layers; keep the small-layer fallback
@@ -52,13 +55,18 @@ pub fn data(quick: bool) -> Fig11Data {
             }
         }
     }
-    let series = Strategy::fig11_set()
-        .into_iter()
-        .map(|s| {
+    let results = Scenario::new("fig11")
+        .platform("2mc", PlatformConfig::default_2mc())
+        .layers(layers.clone())
+        .mappers(MAPPERS)
+        .run()
+        .expect("fig11 grid");
+    let series = (0..MAPPERS.len())
+        .map(|mi| {
             let layer_latency: Vec<u64> =
-                layers.iter().map(|l| run_layer(&cfg, l, s).summary.latency).collect();
+                results.mapper_series(0, mi).iter().map(|r| r.summary.latency).collect();
             let total = layer_latency.iter().sum();
-            StrategySeries { strategy: s, layer_latency, total }
+            StrategySeries { mapper: results.mapper_labels[mi].clone(), layer_latency, total }
         })
         .collect();
     Fig11Data { layers, series }
@@ -74,7 +82,7 @@ pub fn run(quick: bool) -> Report {
             .chain(["overall".to_string()]),
     );
     for s in &d.series {
-        let mut row = vec![s.strategy.label()];
+        let mut row = vec![s.mapper.clone()];
         row.extend(s.layer_latency.iter().map(u64::to_string));
         row.push(s.total.to_string());
         t.row(row);
@@ -93,7 +101,7 @@ pub fn run(quick: bool) -> Report {
         ("post-run", Some(0.1037)),
     ];
     for (s, (_, paper)) in d.series.iter().zip(paper_overall) {
-        let mut row = vec![s.strategy.label()];
+        let mut row = vec![s.mapper.clone()];
         for (i, &l) in s.layer_latency.iter().enumerate() {
             row.push(fmt_pct(improvement(base.layer_latency[i], l)));
         }
@@ -172,6 +180,13 @@ mod tests {
         let sw10 = &d.series[4].layer_latency;
         assert_eq!(b[6], sw10[6], "OUT must be identical under fallback");
         assert_eq!(b[5], sw10[5], "F6 must be identical under fallback");
+    }
+
+    #[test]
+    fn series_carry_registry_labels() {
+        let d = data(true);
+        let labels: Vec<&str> = d.series.iter().map(|s| s.mapper.as_str()).collect();
+        assert_eq!(labels, MAPPERS.to_vec());
     }
 
     #[test]

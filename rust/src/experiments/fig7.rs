@@ -12,22 +12,21 @@
 
 use crate::config::PlatformConfig;
 use crate::dnn::{lenet5, LayerSpec};
-use crate::mapping::{distance::pe_distances, run_layer, MappedRun, Strategy};
+use crate::mapping::{distance::pe_distances, MappedRun};
 use crate::util::{table::fmt_pct, Table};
 
+use super::engine::Scenario;
 use super::Report;
 
-/// The four mappings shown in Fig. 7, in subfigure order.
-pub fn strategies() -> Vec<Strategy> {
-    vec![Strategy::RowMajor, Strategy::Distance, Strategy::Sampling(10), Strategy::PostRun]
-}
+/// The four mappings shown in Fig. 7 (registry names), in subfigure order.
+pub const MAPPERS: [&str; 4] = ["row-major", "distance", "sampling-10", "post-run"];
 
 /// Data behind the figure: one [`MappedRun`] per strategy.
 #[derive(Debug)]
 pub struct Fig7Data {
     /// The layer simulated (C1 by default; smaller when `quick`).
     pub layer: LayerSpec,
-    /// Runs in [`strategies`] order.
+    /// Runs in [`MAPPERS`] order.
     pub runs: Vec<MappedRun>,
     /// PE dense indices ordered by (distance, node) — the paper's x-axis.
     pub pe_order: Vec<usize>,
@@ -42,7 +41,13 @@ pub fn data(quick: bool) -> Fig7Data {
     if quick {
         layer.tasks = 4704 / 8;
     }
-    let runs: Vec<MappedRun> = strategies().iter().map(|&s| run_layer(&cfg, &layer, s)).collect();
+    let results = Scenario::new("fig7")
+        .platform("2mc", cfg.clone())
+        .layer(layer.clone())
+        .mappers(MAPPERS)
+        .run()
+        .expect("fig7 grid");
+    let runs: Vec<MappedRun> = results.cells.iter().map(|c| c.run.clone()).collect();
     let d = pe_distances(&cfg);
     let pe_nodes = cfg.pe_nodes();
     let mut pe_order: Vec<usize> = (0..cfg.num_pes()).collect();
@@ -69,7 +74,7 @@ pub fn run(quick: bool) -> Report {
         ),
     );
     for r in &d.runs {
-        let mut row = vec![r.strategy.label()];
+        let mut row = vec![r.mapper.to_string()];
         for &i in &d.pe_order {
             row.push(match r.summary.mean_travel[i] {
                 Some(m) => format!("{m:.1}"),
@@ -87,7 +92,7 @@ pub fn run(quick: bool) -> Report {
         for &i in &d.pe_order {
             let t = &r.result.totals[i];
             acc.row([
-                r.strategy.label(),
+                r.mapper.to_string(),
                 format!("n{}(d{})", d.pe_nodes[i], dists[i]),
                 t.tasks.to_string(),
                 t.req.to_string(),
@@ -105,9 +110,9 @@ pub fn run(quick: bool) -> Report {
     let paper_accum = [("row-major", 0.2209), ("distance", 0.5803), ("sampling-10", 0.0581), ("post-run", 0.0624)];
     let mut rho = Table::new(["mapping", "ρ avg (ours)", "ρ accum (ours)", "ρ accum (paper)", "latency (cycles)"]);
     for (r, (label, paper)) in d.runs.iter().zip(paper_accum) {
-        debug_assert_eq!(r.strategy.label().split('-').next(), label.split('-').next());
+        debug_assert_eq!(r.mapper, label);
         rho.row([
-            r.strategy.label(),
+            r.mapper.to_string(),
             fmt_pct(r.summary.rho_avg),
             fmt_pct(r.summary.rho_accum),
             fmt_pct(paper),
@@ -142,6 +147,13 @@ mod tests {
         // Slowest PE dominates: both travel-time variants beat row-major.
         assert!(post.summary.latency < even.summary.latency);
         assert!(sw10.summary.latency < even.summary.latency);
+    }
+
+    #[test]
+    fn runs_carry_registry_labels() {
+        let d = data(true);
+        let labels: Vec<&str> = d.runs.iter().map(|r| r.mapper.as_ref()).collect();
+        assert_eq!(labels, MAPPERS.to_vec());
     }
 
     #[test]

@@ -12,19 +12,18 @@
 
 use crate::config::PlatformConfig;
 use crate::dnn::lenet5;
-use crate::mapping::{run_layer, MappedRun, Strategy};
+use crate::mapping::MappedRun;
 use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
+use super::engine::Scenario;
 use super::Report;
 
 /// Output-channel sweep of Fig. 8 (§5.1: "from 3 to 48 … default is 6").
 pub const CHANNELS: [u64; 5] = [3, 6, 12, 24, 48];
 
-/// Mappings compared in Fig. 8.
-pub fn strategies() -> Vec<Strategy> {
-    vec![Strategy::RowMajor, Strategy::Distance, Strategy::Sampling(10), Strategy::PostRun]
-}
+/// Mappings compared in Fig. 8 (registry names).
+pub const MAPPERS: [&str; 4] = ["row-major", "distance", "sampling-10", "post-run"];
 
 /// One sweep point: all strategy runs for a channel count.
 #[derive(Debug)]
@@ -35,7 +34,7 @@ pub struct SweepPoint {
     pub tasks: u64,
     /// Row-major mapping iterations.
     pub iterations: u64,
-    /// Runs in [`strategies`] order.
+    /// Runs in [`MAPPERS`] order.
     pub runs: Vec<MappedRun>,
 }
 
@@ -43,16 +42,23 @@ pub struct SweepPoint {
 pub fn data(quick: bool) -> Vec<SweepPoint> {
     let cfg = PlatformConfig::default_2mc();
     let channels: Vec<u64> = if quick { vec![3, 6] } else { CHANNELS.to_vec() };
+    let layers: Vec<_> = channels.iter().map(|&ch| lenet5(ch).remove(0)).collect();
+    let results = Scenario::new("fig8")
+        .platform("2mc", cfg.clone())
+        .layers(layers)
+        .mappers(MAPPERS)
+        .run()
+        .expect("fig8 grid");
     channels
         .into_iter()
-        .map(|ch| {
-            let layer = lenet5(ch).remove(0);
-            let runs = strategies().iter().map(|&s| run_layer(&cfg, &layer, s)).collect();
+        .enumerate()
+        .map(|(li, ch)| {
+            let layer = &results.layers[li];
             SweepPoint {
                 channels: ch,
                 tasks: layer.tasks,
                 iterations: layer.mapping_iterations(cfg.num_pes() as u64),
-                runs,
+                runs: results.runs_for(0, li).into_iter().cloned().collect(),
             }
         })
         .collect()
@@ -95,7 +101,7 @@ pub fn run(quick: bool) -> Report {
                 p.channels.to_string(),
                 p.tasks.to_string(),
                 p.iterations.to_string(),
-                r.strategy.label(),
+                r.mapper.to_string(),
                 format!("{:.1}%", low * 100.0),
                 format!("{:.1}%", high * 100.0),
                 r.summary.latency.to_string(),

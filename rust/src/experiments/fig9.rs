@@ -11,23 +11,20 @@
 
 use crate::config::PlatformConfig;
 use crate::dnn::LayerSpec;
-use crate::mapping::{run_layer, MappedRun, Strategy};
+use crate::mapping::MappedRun;
 use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
+use super::engine::Scenario;
 use super::table1::KERNELS;
 use super::Report;
 
-/// Mappings compared in Fig. 9.
-pub fn strategies() -> Vec<Strategy> {
-    vec![
-        Strategy::RowMajor,
-        Strategy::Distance,
-        Strategy::StaticLatency,
-        Strategy::Sampling(10),
-        Strategy::PostRun,
-    ]
-}
+/// Mappings compared in Fig. 9 (registry names).
+pub const MAPPERS: [&str; 5] =
+    ["row-major", "distance", "static-latency", "sampling-10", "post-run"];
+
+/// Mapper indices (into [`MAPPERS`]) of the travel-time family.
+const TRAVEL_TIME_MAPPERS: std::ops::Range<usize> = 3..5;
 
 /// One kernel-size point.
 #[derive(Debug)]
@@ -36,7 +33,7 @@ pub struct KernelPoint {
     pub kernel: u64,
     /// Response flits.
     pub flits: u64,
-    /// Runs in [`strategies`] order.
+    /// Runs in [`MAPPERS`] order.
     pub runs: Vec<MappedRun>,
 }
 
@@ -45,13 +42,21 @@ pub fn data(quick: bool) -> Vec<KernelPoint> {
     let cfg = PlatformConfig::default_2mc();
     let kernels: Vec<u64> = if quick { vec![1, 5, 13] } else { KERNELS.to_vec() };
     let tasks = if quick { 4704 / 8 } else { 4704 };
+    let layers: Vec<_> =
+        kernels.iter().map(|&k| LayerSpec::conv(&format!("k{k}"), k, 1.0, tasks)).collect();
+    let results = Scenario::new("fig9")
+        .platform("2mc", cfg.clone())
+        .layers(layers)
+        .mappers(MAPPERS)
+        .run()
+        .expect("fig9 grid");
     kernels
         .into_iter()
-        .map(|k| {
-            let layer = LayerSpec::conv(&format!("k{k}"), k, 1.0, tasks);
-            let flits = layer.profile(&cfg).resp_flits;
-            let runs = strategies().iter().map(|&s| run_layer(&cfg, &layer, s)).collect();
-            KernelPoint { kernel: k, flits, runs }
+        .enumerate()
+        .map(|(li, k)| KernelPoint {
+            kernel: k,
+            flits: results.layers[li].profile(&cfg).resp_flits,
+            runs: results.runs_for(0, li).into_iter().cloned().collect(),
         })
         .collect()
 }
@@ -63,15 +68,15 @@ pub fn run(quick: bool) -> Report {
     let mut best = 0.0f64;
     for p in &points {
         let base = p.runs[0].summary.latency;
-        for r in &p.runs {
+        for (mi, r) in p.runs.iter().enumerate() {
             let imp = improvement(base, r.summary.latency);
-            if matches!(r.strategy, Strategy::Sampling(_) | Strategy::PostRun) {
+            if TRAVEL_TIME_MAPPERS.contains(&mi) {
                 best = best.max(imp);
             }
             t.row([
                 format!("{0}x{0}", p.kernel),
                 p.flits.to_string(),
-                r.strategy.label(),
+                r.mapper.to_string(),
                 r.summary.latency.to_string(),
                 fmt_pct(imp),
                 fmt_pct(r.summary.rho_accum),

@@ -12,12 +12,23 @@
 //! | [`ablation`] | extension — memory-service discipline vs. saturation |
 //! | [`heatmap`] | extension — per-router congestion heatmap |
 //!
+//! Every mapping-comparison experiment (fig7–fig11, ablation) builds a
+//! declarative {platforms × layers × mappers} grid on the
+//! [`engine::Scenario`] sweep engine and renders its
+//! [`engine::SweepResults`]; strategies are resolved by
+//! [registry](crate::mapping::registry) name, so a newly registered
+//! mapper can join any sweep without touching these modules. Two modules
+//! stay standalone by nature: [`table1`] is pure packet-size math (no
+//! simulation), and [`heatmap`] drives the [`Simulation`](crate::accel::Simulation)
+//! directly for raw per-router port counters the grid does not collect.
+//!
 //! Absolute cycle counts differ from the paper (different testbeds); the
 //! *shape* — who wins, by roughly what factor, where the crossovers sit —
 //! is the reproduction target, and each report prints the paper's numbers
 //! next to ours.
 
 pub mod ablation;
+pub mod engine;
 pub mod fig10;
 pub mod heatmap;
 pub mod fig11;
@@ -25,6 +36,8 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod table1;
+
+pub use engine::{Scenario, SweepResults};
 
 /// A rendered experiment report (markdown).
 #[derive(Debug, Clone)]

@@ -1,9 +1,47 @@
 //! # noctt — Travel-Time Based Task Mapping for NoC-Based DNN Accelerators
 //!
 //! A from-scratch reproduction of Chen, Zhu & Lu, *"Travel Time Based Task
-//! Mapping for NoC-Based DNN Accelerator"* (LNCS, 2024).
+//! Mapping for NoC-Based DNN Accelerator"* (LNCS, 2024), grown around an
+//! open, composable experiment API.
 //!
-//! The crate is organised in layers:
+//! ## The three public pillars
+//!
+//! 1. **[`mapping::Mapper`]** — the object-safe strategy trait, with a
+//!    name → constructor **[`mapping::registry`]**. The five paper
+//!    strategies (row-major, distance, static-latency, post-run,
+//!    sampling-window) are builtin registrations, all selectable by name
+//!    from the CLI (`noctt sim --strategy <name>`); new strategies
+//!    register on a [`mapping::Registry`] and join any
+//!    [`experiments::engine::Scenario`] sweep — no dispatch code changes.
+//! 2. **[`config::PlatformConfig::builder`]** — arbitrary W×H meshes, MC
+//!    placements, and flit/VC/memory knobs with validation at `build()`;
+//!    the paper's §5.1 presets are builder shortcuts.
+//! 3. **[`experiments::engine::Scenario`]** — the declarative
+//!    {platforms × layers × mappers} sweep engine with shared result
+//!    collection ([`experiments::engine::SweepResults`]); every
+//!    figure/table module builds its grid here.
+//!
+//! ```
+//! use noctt::config::PlatformConfig;
+//! use noctt::dnn::lenet5;
+//! use noctt::experiments::engine::Scenario;
+//!
+//! // Row-major vs the paper's sampling-window mapper on a non-default
+//! // platform, through the one experiment entry point.
+//! let mut layer = lenet5(6).remove(0);
+//! layer.tasks /= 8; // keep the doc test quick
+//! let results = Scenario::new("doc")
+//!     .platform("4x8", PlatformConfig::builder().mesh(4, 8).mc_nodes([13, 18]).build().unwrap())
+//!     .layer(layer)
+//!     .mapper("row-major")
+//!     .mapper("sampling-10")
+//!     .run()
+//!     .unwrap();
+//! let sw10 = results.get("4x8", "C1", "sampling-10").unwrap();
+//! assert_eq!(sw10.run.counts.iter().sum::<u64>(), results.layers[0].tasks);
+//! ```
+//!
+//! ## Layers underneath
 //!
 //! * [`noc`] — a cycle-accurate 2-D-mesh virtual-channel Network-on-Chip
 //!   simulator (5-stage routers, credit-based flow control, X-Y routing).
@@ -12,14 +50,14 @@
 //!   engine that drives them against the NoC.
 //! * [`dnn`] — the DNN workload model: layers, tasks, packet sizing, and the
 //!   LeNet-5 network used throughout the paper's evaluation.
-//! * [`mapping`] — the five task-mapping strategies under study: row-major
-//!   (even), distance-based, static-latency, post-run travel-time, and
-//!   sampling-window travel-time mapping (the paper's contribution).
+//! * [`mapping`] — the [`mapping::Mapper`] trait, registry, and the five
+//!   builtin strategies under study.
 //! * [`metrics`] — unevenness (Eq. 9) and per-PE timing statistics.
-//! * [`experiments`] — one module per figure/table of the paper's
-//!   evaluation section; each regenerates the corresponding result.
+//! * [`experiments`] — the [`experiments::engine`] plus one module per
+//!   figure/table of the paper's evaluation section.
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
-//!   LeNet artifacts (HLO text) and executes them for functional inference.
+//!   LeNet artifacts (HLO text) and executes them for functional inference
+//!   (stubbed without the `pjrt` cargo feature).
 //! * [`config`] — the experiment/platform configuration system.
 //! * [`util`] — deterministic PRNG, table printing, and a tiny
 //!   property-testing harness used by the test-suite.

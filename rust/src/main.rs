@@ -2,13 +2,21 @@
 //! inspection, and PJRT LeNet inference, all from the command line.
 //!
 //! ```text
-//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|all> [--quick]
-//! noctt sim --layer <C1|S2|C3|S4|C5|F6|OUT|k<N>> --strategy <name> [--mcs 2|4] [--channels N]
-//! noctt platform [--mcs 2|4]
+//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|ablation|heatmap|all> [--quick]
+//! noctt sim --layer <C1|S2|C3|S4|C5|F6|OUT|k<N>> --strategy <name>
+//!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...] [--channels N]
+//! noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //! noctt infer [--artifacts DIR] [--batch 1|8]
 //! noctt smoke [--artifacts DIR]
 //! noctt report
 //! ```
+//!
+//! Strategies are resolved by name through [`noctt::mapping::registry`]
+//! (the builtin set, including parameterized families like
+//! `sampling-<W>`), so `--strategy` needs no dispatch code here. Custom
+//! strategies plug in programmatically: register them on a
+//! [`Registry`](noctt::mapping::Registry) and run them through a
+//! [`Scenario`](noctt::experiments::engine::Scenario).
 //!
 //! (clap is unavailable in the offline build environment; argument parsing
 //! is a small hand-rolled layer in [`args`].)
@@ -18,15 +26,16 @@ use anyhow::{bail, Context, Result};
 use noctt::config::PlatformConfig;
 use noctt::dnn::{lenet5, LayerSpec};
 use noctt::experiments;
-use noctt::mapping::{distance::pe_distances, run_layer, Strategy};
+use noctt::mapping::{self, distance::pe_distances, run_layer, MapCtx, Mapper, Strategy};
 use noctt::metrics::improvement;
 use noctt::runtime::{LenetRuntime, TensorFile};
 use noctt::util::{table::fmt_pct, Table};
 
 mod args {
-    //! Minimal flag parser: `--key value` pairs + positionals.
+    //! Minimal flag parser: `--key value` / `--key=value` pairs +
+    //! positionals; a bare `--` ends flag parsing.
 
-    use anyhow::{bail, Result};
+    use anyhow::{bail, ensure, Result};
     use std::collections::HashMap;
 
     /// Parsed command line: positionals + `--key value` flags
@@ -38,18 +47,50 @@ mod args {
 
     impl Args {
         /// Parse from `std::env::args` (excluding argv\[0\]).
+        ///
+        /// Value-taking rules:
+        /// * `--key=value` always binds `value`, whatever it looks like;
+        /// * `--key value` binds the next token unless it is itself a
+        ///   `--flag` — so negative numbers (`--offset -3`) are values,
+        ///   never swallowed as a following flag;
+        /// * a bare `--` ends flag parsing (everything after is
+        ///   positional);
+        /// * duplicate flags are an error naming the command context.
         pub fn parse(argv: impl Iterator<Item = String>) -> Result<Self> {
-            let mut positional = Vec::new();
-            let mut flags = HashMap::new();
+            let mut positional: Vec<String> = Vec::new();
+            let mut flags: HashMap<String, String> = HashMap::new();
             let mut iter = argv.peekable();
+            let mut flags_done = false;
             while let Some(a) = iter.next() {
+                if flags_done {
+                    positional.push(a);
+                    continue;
+                }
+                if a == "--" {
+                    flags_done = true;
+                    continue;
+                }
                 if let Some(key) = a.strip_prefix("--") {
-                    let value = match iter.peek() {
-                        Some(v) if !v.starts_with("--") => iter.next().unwrap(),
-                        _ => "true".to_string(),
+                    let (key, value) = match key.split_once('=') {
+                        Some((k, v)) => (k.to_string(), v.to_string()),
+                        None => {
+                            let value = match iter.peek() {
+                                // Next token is the value unless it is a
+                                // flag itself; "-3" style negatives are
+                                // values.
+                                Some(v) if !v.starts_with("--") => iter.next().unwrap(),
+                                _ => "true".to_string(),
+                            };
+                            (key.to_string(), value)
+                        }
                     };
-                    if flags.insert(key.to_string(), value).is_some() {
-                        bail!("duplicate flag --{key}");
+                    ensure!(!key.is_empty(), "empty flag name ('--=' or '--')");
+                    if flags.insert(key.clone(), value).is_some() {
+                        let ctx = match positional.first() {
+                            Some(cmd) => format!("in `noctt {cmd}`"),
+                            None => "before any command".to_string(),
+                        };
+                        bail!("duplicate flag --{key} {ctx}");
                     }
                 } else {
                     positional.push(a);
@@ -58,9 +99,14 @@ mod args {
             Ok(Self { positional, flags })
         }
 
+        /// Flag value, if present.
+        pub fn get(&self, key: &str) -> Option<&str> {
+            self.flags.get(key).map(String::as_str)
+        }
+
         /// Flag value with default.
         pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
-            self.flags.get(key).map(String::as_str).unwrap_or(default)
+            self.get(key).unwrap_or(default)
         }
 
         /// Boolean flag.
@@ -68,45 +114,130 @@ mod args {
             self.flags.contains_key(key)
         }
     }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn parse(tokens: &[&str]) -> Result<Args> {
+            Args::parse(tokens.iter().map(|s| s.to_string()))
+        }
+
+        #[test]
+        fn positionals_and_flags_mix() {
+            let a = parse(&["exp", "fig7", "--quick", "--mcs", "4"]).unwrap();
+            assert_eq!(a.positional, vec!["exp", "fig7"]);
+            assert_eq!(a.get("quick"), Some("true"));
+            assert_eq!(a.get("mcs"), Some("4"));
+            assert!(a.has("quick"));
+            assert!(!a.has("window"));
+        }
+
+        #[test]
+        fn negative_number_values_are_not_swallowed_as_flags() {
+            let a = parse(&["sim", "--offset", "-3", "--scale", "-0.5"]).unwrap();
+            assert_eq!(a.get("offset"), Some("-3"));
+            assert_eq!(a.get("scale"), Some("-0.5"));
+            assert_eq!(a.positional, vec!["sim"]);
+        }
+
+        #[test]
+        fn equals_syntax_binds_any_value() {
+            let a = parse(&["sim", "--offset=-3", "--name=--weird", "--empty="]).unwrap();
+            assert_eq!(a.get("offset"), Some("-3"));
+            assert_eq!(a.get("name"), Some("--weird"));
+            assert_eq!(a.get("empty"), Some(""));
+        }
+
+        #[test]
+        fn flag_followed_by_flag_is_boolean() {
+            let a = parse(&["exp", "--quick", "--mcs", "2"]).unwrap();
+            assert_eq!(a.get("quick"), Some("true"));
+            assert_eq!(a.get("mcs"), Some("2"));
+        }
+
+        #[test]
+        fn double_dash_ends_flag_parsing() {
+            let a = parse(&["sim", "--quick", "--", "--not-a-flag"]).unwrap();
+            assert_eq!(a.positional, vec!["sim", "--not-a-flag"]);
+            assert!(a.has("quick"));
+        }
+
+        #[test]
+        fn duplicate_flag_error_names_the_command() {
+            let err = parse(&["sim", "--mcs", "2", "--mcs", "4"]).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("--mcs"), "{msg}");
+            assert!(msg.contains("noctt sim"), "must name the command: {msg}");
+        }
+
+        #[test]
+        fn duplicate_flag_before_any_command() {
+            let err = parse(&["--a", "1", "--a", "2"]).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("--a"), "{msg}");
+            assert!(msg.contains("before any command"), "{msg}");
+        }
+
+        #[test]
+        fn empty_flag_name_is_rejected() {
+            assert!(parse(&["--=x"]).is_err());
+        }
+    }
 }
 
 fn usage() -> ! {
+    let reg = mapping::registry();
+    let strategies: Vec<String> =
+        reg.entries().iter().map(|e| format!("  {:<16} {}", e.name(), e.help())).collect();
     eprintln!(
         "noctt — travel-time based task mapping for NoC-based DNN accelerators\n\
          \n\
          Usage:\n\
-         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|all> [--quick]   regenerate paper results\n\
-         \x20 noctt sim --layer <C1..OUT|k<N>> --strategy <s> [--mcs 2|4]   one mapped layer run\n\
-         \x20             [--channels N] [--window W]\n\
-         \x20 noctt platform [--mcs 2|4]                                    platform inventory\n\
-         \x20 noctt infer [--artifacts DIR] [--batch 1|8]                   PJRT LeNet inference\n\
-         \x20 noctt smoke [--artifacts DIR]                                 PJRT smoke test\n\
-         \x20 noctt report                                                  all experiments (markdown)\n\
+         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|ablation|heatmap|all> [--quick]\n\
+         \x20 noctt sim --layer <C1..OUT|k<N>> --strategy <s> [--mcs 2|4]\n\
+         \x20           [--mesh WxH] [--mc-at n1,n2,...] [--channels N]\n\
+         \x20 noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]\n\
+         \x20 noctt infer [--artifacts DIR] [--batch 1|8]\n\
+         \x20 noctt smoke [--artifacts DIR]\n\
+         \x20 noctt report\n\
          \n\
-         Strategies: row-major | distance | static-latency | post-run | sampling-<W>"
+         Strategies (registry names):\n{}",
+        strategies.join("\n")
     );
     std::process::exit(2);
 }
 
-fn parse_strategy(s: &str) -> Result<Strategy> {
-    Ok(match s {
-        "row-major" => Strategy::RowMajor,
-        "distance" => Strategy::Distance,
-        "static-latency" => Strategy::StaticLatency,
-        "post-run" => Strategy::PostRun,
-        _ => match s.strip_prefix("sampling-") {
-            Some(w) => Strategy::Sampling(w.parse().context("sampling window")?),
-            None => bail!("unknown strategy '{s}'"),
-        },
-    })
+/// Resolve a strategy name through the mapper registry.
+fn resolve_mapper(spec: &str) -> Result<Box<dyn Mapper>> {
+    let reg = mapping::registry();
+    let names = reg.names();
+    reg.resolve(spec)
+        .with_context(|| format!("unknown strategy '{spec}' (registered: {names:?})"))
 }
 
+/// Build the platform from the CLI knobs: `--mcs` preset shortcuts plus
+/// the builder's `--mesh WxH` / `--mc-at n1,n2,...` overrides.
 fn parse_platform(a: &args::Args) -> Result<PlatformConfig> {
+    let mut b = PlatformConfig::builder();
     match a.get_or("mcs", "2") {
-        "2" => Ok(PlatformConfig::default_2mc()),
-        "4" => Ok(PlatformConfig::default_4mc()),
+        "2" => {}
+        "4" => b = b.mc_nodes(PlatformConfig::default_4mc().mc_nodes),
         other => bail!("--mcs must be 2 or 4, got {other}"),
     }
+    if let Some(mesh) = a.get("mesh") {
+        let (w, h) = mesh.split_once('x').context("--mesh needs WxH, e.g. 8x8")?;
+        b = b.mesh(w.parse().context("--mesh width")?, h.parse().context("--mesh height")?);
+    }
+    if let Some(list) = a.get("mc-at") {
+        let nodes: Vec<usize> = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .context("--mc-at needs a comma-separated node id list, e.g. 27,28,35,36")?;
+        b = b.mc_nodes(nodes);
+    }
+    b.build()
 }
 
 fn parse_layer(a: &args::Args, cfg: &PlatformConfig) -> Result<LayerSpec> {
@@ -144,8 +275,8 @@ fn cmd_exp(a: &args::Args) -> Result<()> {
 fn cmd_sim(a: &args::Args) -> Result<()> {
     let cfg = parse_platform(a)?;
     let layer = parse_layer(a, &cfg)?;
-    let strategy = parse_strategy(a.get_or("strategy", "sampling-10"))?;
-    let run = run_layer(&cfg, &layer, strategy);
+    let mapper = resolve_mapper(a.get_or("strategy", "sampling-10"))?;
+    let run = mapper.execute(&MapCtx::new(&cfg, &layer));
     let base = run_layer(&cfg, &layer, Strategy::RowMajor);
 
     println!(
@@ -153,7 +284,7 @@ fn cmd_sim(a: &args::Args) -> Result<()> {
         layer.name,
         layer.tasks,
         layer.profile(&cfg).resp_flits,
-        strategy.label()
+        run.mapper
     );
     let d = pe_distances(&cfg);
     let mut t = Table::new(["PE node", "dist", "tasks", "mean travel", "accum travel", "finish"]);
@@ -180,7 +311,6 @@ fn cmd_sim(a: &args::Args) -> Result<()> {
 
 fn cmd_platform(a: &args::Args) -> Result<()> {
     let cfg = parse_platform(a)?;
-    cfg.validate()?;
     println!(
         "mesh {}x{} | {} MCs at {:?} | {} PEs | {} VCs x {}-flit buffers | flit {} bits",
         cfg.mesh_width,

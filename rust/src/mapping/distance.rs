@@ -13,9 +13,26 @@
 //! non-linear cost of multi-flit packets — exactly the gap the travel-time
 //! mapper closes.
 
+use std::borrow::Cow;
+
 use crate::config::PlatformConfig;
+use crate::mapping::{MapCtx, Mapper};
 use crate::noc::Mesh;
 use crate::util::apportion::inverse_proportional;
+
+/// Distance-based mapping — the registered §3.3 [`Mapper`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Distance;
+
+impl Mapper for Distance {
+    fn label(&self) -> Cow<'static, str> {
+        Cow::Borrowed("distance")
+    }
+
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        counts(ctx.cfg, ctx.layer.tasks)
+    }
+}
 
 /// Hop distance from each PE (dense order) to its nearest MC.
 pub fn pe_distances(cfg: &PlatformConfig) -> Vec<u64> {

@@ -1,0 +1,67 @@
+//! The [`Mapper`] plugin trait and its execution context.
+//!
+//! A mapper answers one question — *how many tasks of a layer does each PE
+//! get?* — and optionally controls *how* the layer is executed to answer
+//! it (the sampling-window mapper interleaves measurement and mapping in a
+//! single platform run; the post-run mapper pays an extra profiling run).
+//!
+//! The trait is object-safe: strategies live behind `Box<dyn Mapper>` in
+//! the [registry](crate::mapping::registry) and in the
+//! [`Scenario`](crate::experiments::engine::Scenario) engine, so new
+//! mappings plug in without touching any dispatch code in
+//! `mapping/mod.rs`.
+
+use std::borrow::Cow;
+
+use crate::config::PlatformConfig;
+use crate::dnn::LayerSpec;
+use crate::mapping::{run_precomputed, MappedRun};
+
+/// Everything a mapper may consult when planning: the platform and the
+/// layer. Borrowed, cheap to construct per mapping decision.
+#[derive(Debug, Clone, Copy)]
+pub struct MapCtx<'a> {
+    /// The platform to map onto.
+    pub cfg: &'a PlatformConfig,
+    /// The layer being mapped.
+    pub layer: &'a LayerSpec,
+}
+
+impl<'a> MapCtx<'a> {
+    /// Bundle a platform and a layer into a mapping context.
+    pub fn new(cfg: &'a PlatformConfig, layer: &'a LayerSpec) -> Self {
+        Self { cfg, layer }
+    }
+
+    /// Number of PEs available on the platform.
+    pub fn num_pes(&self) -> usize {
+        self.cfg.num_pes()
+    }
+}
+
+/// A task-mapping strategy.
+///
+/// Implement [`counts`](Mapper::counts) for purely *planned* mappings
+/// (row-major, distance, static-latency): return per-PE task counts
+/// summing to `ctx.layer.tasks`, and the default
+/// [`execute`](Mapper::execute) drives them through the platform.
+///
+/// *Online* mappings — ones that measure the running platform — override
+/// `execute` as well: the sampling-window mapper runs the sampled phase,
+/// measures, then adds the residual budgets mid-run; the post-run oracle
+/// performs an extra profiling run. Their `counts` must still return the
+/// final (conserving) allocation, even if producing it costs a
+/// measurement run.
+pub trait Mapper: Send + Sync {
+    /// Stable display label used in tables and the CLI (e.g. "sampling-10").
+    fn label(&self) -> Cow<'static, str>;
+
+    /// Planned per-PE task counts; must sum to `ctx.layer.tasks`.
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64>;
+
+    /// Map and execute the layer. The default runs [`counts`](Mapper::counts)
+    /// as a precomputed budget; online mappers override this.
+    fn execute(&self, ctx: &MapCtx<'_>) -> MappedRun {
+        run_precomputed(ctx.cfg, ctx.layer, self.label(), self.counts(ctx), false)
+    }
+}

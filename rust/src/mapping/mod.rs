@@ -1,31 +1,60 @@
-//! The five task-mapping strategies under study (§3–§4).
+//! Task-mapping strategies as pluggable [`Mapper`] implementations.
 //!
-//! Every strategy answers the same question: *how many tasks of a layer
-//! does each PE get?* The engine then executes those budgets on the
-//! cycle-accurate platform.
+//! Every mapping strategy answers the same question: *how many tasks of a
+//! layer does each PE get?* The engine then executes those budgets on the
+//! cycle-accurate platform. This module provides the open plugin surface
+//! around that question:
 //!
-//! * [`row_major`] — even mapping in row order (§3.2, the baseline).
-//! * [`distance`] — counts inversely proportional to the hop distance to
-//!   the nearest MC (§3.3, Eq. 1–2).
-//! * [`static_latency`] — counts inversely proportional to an analytic
-//!   no-load latency estimate (§4.2, Eq. 6).
-//! * [`travel_time`] — the paper's contribution: counts inversely
-//!   proportional to *measured* travel times, either recorded post-run
-//!   (Eq. 4–5, the oracle) or sampled in a short window at the start of
-//!   the layer (Eq. 7–8, Fig. 6 — with a row-major fallback for layers too
-//!   small to sample).
+//! * [`Mapper`] — the object-safe strategy trait: a `label`, planned
+//!   per-PE [`counts`](Mapper::counts), and an overridable
+//!   [`execute`](Mapper::execute) hook for *online* mappers that measure
+//!   the running platform (sampling window) or pay an extra profiling run
+//!   (post-run).
+//! * [`MapCtx`] — the platform + layer context a mapper plans against.
+//! * [`registry`] — the name → constructor [`Registry`]: strategies are
+//!   selected by name (`"row-major"`, `"sampling-10"`, …) from the CLI,
+//!   the experiment tables, and the
+//!   [`Scenario`](crate::experiments::engine::Scenario) sweep engine. New
+//!   strategies register themselves; **no dispatch code here changes**.
+//!
+//! The five strategies under study in the paper (§3–§4) are the builtin
+//! registrations:
+//!
+//! * [`row_major::RowMajor`] — even mapping in row order (§3.2, baseline).
+//! * [`distance::Distance`] — counts inversely proportional to the hop
+//!   distance to the nearest MC (§3.3, Eq. 1–2).
+//! * [`static_latency::StaticLatency`] — counts inversely proportional to
+//!   an analytic no-load latency estimate (§4.2, Eq. 6).
+//! * [`travel_time::PostRun`] — counts inversely proportional to travel
+//!   times recorded in a full profiling run (Eq. 4–5, the oracle).
+//! * [`travel_time::Sampling`] — the paper's contribution: travel times
+//!   sampled in a short window at the start of the layer (Eq. 7–8,
+//!   Fig. 6 — with a row-major fallback for layers too small to sample).
+//!
+//! The [`Strategy`] enum survives as a thin back-compat shim over the
+//! builtins (it implements [`Mapper`] by delegation); new code should use
+//! the registry or the mapper types directly.
 
 pub mod distance;
+pub mod mapper;
+pub mod registry;
 pub mod row_major;
 pub mod static_latency;
 pub mod travel_time;
+
+pub use mapper::{MapCtx, Mapper};
+pub use registry::{registry, Registry, RegistryEntry};
+
+use std::borrow::Cow;
 
 use crate::accel::{SimResult, Simulation};
 use crate::config::PlatformConfig;
 use crate::dnn::LayerSpec;
 use crate::metrics::RunSummary;
 
-/// Mapping strategy selector.
+/// Mapping strategy selector — a thin back-compat shim over the builtin
+/// [`Mapper`] implementations. Prefer the [`registry`] for anything
+/// name-driven.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     /// Even mapping in row order (baseline).
@@ -41,14 +70,26 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    /// Short label used in experiment tables.
-    pub fn label(&self) -> String {
+    /// Short label used in experiment tables. Borrowed for the
+    /// non-parameterized arms — no allocation in experiment inner loops.
+    pub fn label(&self) -> Cow<'static, str> {
         match self {
-            Strategy::RowMajor => "row-major".into(),
-            Strategy::Distance => "distance".into(),
-            Strategy::StaticLatency => "static-latency".into(),
-            Strategy::PostRun => "post-run".into(),
-            Strategy::Sampling(w) => format!("sampling-{w}"),
+            Strategy::RowMajor => Cow::Borrowed("row-major"),
+            Strategy::Distance => Cow::Borrowed("distance"),
+            Strategy::StaticLatency => Cow::Borrowed("static-latency"),
+            Strategy::PostRun => Cow::Borrowed("post-run"),
+            Strategy::Sampling(w) => Cow::Owned(format!("sampling-{w}")),
+        }
+    }
+
+    /// The equivalent boxed [`Mapper`].
+    pub fn to_mapper(&self) -> Box<dyn Mapper> {
+        match self {
+            Strategy::RowMajor => Box::new(row_major::RowMajor),
+            Strategy::Distance => Box::new(distance::Distance),
+            Strategy::StaticLatency => Box::new(static_latency::StaticLatency),
+            Strategy::PostRun => Box::new(travel_time::PostRun),
+            Strategy::Sampling(w) => Box::new(travel_time::Sampling(*w)),
         }
     }
 
@@ -65,11 +106,25 @@ impl Strategy {
     }
 }
 
+impl Mapper for Strategy {
+    fn label(&self) -> Cow<'static, str> {
+        Strategy::label(self)
+    }
+
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        self.to_mapper().counts(ctx)
+    }
+
+    fn execute(&self, ctx: &MapCtx<'_>) -> MappedRun {
+        self.to_mapper().execute(ctx)
+    }
+}
+
 /// Outcome of mapping + executing one layer.
 #[derive(Debug, Clone)]
 pub struct MappedRun {
-    /// Strategy that produced it.
-    pub strategy: Strategy,
+    /// Label of the mapper that produced it (e.g. "sampling-10").
+    pub mapper: Cow<'static, str>,
     /// Planned per-PE task counts (sum = layer tasks).
     pub counts: Vec<u64>,
     /// Metric summary of the executed run.
@@ -81,24 +136,17 @@ pub struct MappedRun {
     pub extra_run: bool,
 }
 
-/// Map and execute `layer` on the platform with `strategy`.
+/// Map and execute `layer` on the platform with `strategy` (back-compat
+/// entry point; equivalent to `strategy.to_mapper().execute(..)`).
 pub fn run_layer(cfg: &PlatformConfig, layer: &LayerSpec, strategy: Strategy) -> MappedRun {
-    match strategy {
-        Strategy::RowMajor => run_precomputed(cfg, layer, strategy, row_major::counts(layer.tasks, cfg.num_pes()), false),
-        Strategy::Distance => run_precomputed(cfg, layer, strategy, distance::counts(cfg, layer.tasks), false),
-        Strategy::StaticLatency => {
-            run_precomputed(cfg, layer, strategy, static_latency::counts(cfg, layer), false)
-        }
-        Strategy::PostRun => travel_time::run_post_run(cfg, layer),
-        Strategy::Sampling(w) => travel_time::run_sampling(cfg, layer, w),
-    }
+    strategy.to_mapper().execute(&MapCtx::new(cfg, layer))
 }
 
 /// Execute a layer with fully precomputed counts.
 pub(crate) fn run_precomputed(
     cfg: &PlatformConfig,
     layer: &LayerSpec,
-    strategy: Strategy,
+    label: Cow<'static, str>,
     counts: Vec<u64>,
     extra_run: bool,
 ) -> MappedRun {
@@ -106,17 +154,17 @@ pub(crate) fn run_precomputed(
     let mut sim = Simulation::new(cfg, layer.profile(cfg));
     sim.add_budgets(&counts);
     let result = sim.run_until_done();
-    finish(strategy, counts, result, extra_run)
+    finish(label, counts, result, extra_run)
 }
 
 pub(crate) fn finish(
-    strategy: Strategy,
+    label: Cow<'static, str>,
     counts: Vec<u64>,
     result: SimResult,
     extra_run: bool,
 ) -> MappedRun {
     let summary = RunSummary::from_result(&result);
-    MappedRun { strategy, counts, summary, result, extra_run }
+    MappedRun { mapper: label, counts, summary, result, extra_run }
 }
 
 #[cfg(test)]
@@ -128,6 +176,18 @@ mod tests {
         assert_eq!(Strategy::RowMajor.label(), "row-major");
         assert_eq!(Strategy::Sampling(10).label(), "sampling-10");
         assert_eq!(Strategy::fig11_set().len(), 6);
+        // Non-parameterized labels borrow — no allocation.
+        assert!(matches!(Strategy::Distance.label(), Cow::Borrowed(_)));
+        assert!(matches!(Strategy::Sampling(3).label(), Cow::Owned(_)));
+    }
+
+    #[test]
+    fn strategy_shim_matches_registry_mappers() {
+        let reg = registry();
+        for s in Strategy::fig11_set() {
+            let via_registry = reg.resolve(&s.label()).expect("every builtin resolves");
+            assert_eq!(via_registry.label(), s.label());
+        }
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Name → constructor registry for [`Mapper`] implementations.
+//!
+//! The registry is how strategies are selected everywhere outside the
+//! crate: the CLI (`noctt sim --strategy <name>`), the
+//! [`Scenario`](crate::experiments::engine::Scenario) sweep engine, and
+//! the experiment tables all resolve strategies by name. Each entry owns a
+//! small parser, so *families* of strategies register once — the builtin
+//! `sampling-<W>` entry accepts any window (`sampling-1`, `sampling-10`,
+//! …).
+//!
+//! Adding a strategy does not touch any dispatch code:
+//!
+//! ```
+//! use noctt::mapping::{registry, MapCtx, Mapper};
+//! use std::borrow::Cow;
+//!
+//! struct FirstPeOnly;
+//! impl Mapper for FirstPeOnly {
+//!     fn label(&self) -> Cow<'static, str> {
+//!         Cow::Borrowed("first-pe-only")
+//!     }
+//!     fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+//!         let mut c = vec![0; ctx.num_pes()];
+//!         c[0] = ctx.layer.tasks;
+//!         c
+//!     }
+//! }
+//!
+//! let mut reg = registry();
+//! reg.register("first-pe-only", "everything on the first PE", |s| {
+//!     (s == "first-pe-only").then(|| Box::new(FirstPeOnly) as Box<dyn Mapper>)
+//! });
+//! assert!(reg.resolve("first-pe-only").is_some());
+//! assert!(reg.resolve("sampling-10").is_some()); // builtins still there
+//! ```
+
+use crate::mapping::{distance, row_major, static_latency, travel_time, Mapper};
+
+type Ctor = Box<dyn Fn(&str) -> Option<Box<dyn Mapper>> + Send + Sync>;
+
+/// One registered strategy (or strategy family).
+pub struct RegistryEntry {
+    name: &'static str,
+    help: &'static str,
+    ctor: Ctor,
+}
+
+impl RegistryEntry {
+    /// Canonical name shown in help text (`sampling-<W>` for families).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// One-line description.
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+}
+
+impl std::fmt::Debug for RegistryEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RegistryEntry").field("name", &self.name).finish()
+    }
+}
+
+/// An ordered collection of strategy constructors, resolved by name.
+#[derive(Debug, Default)]
+pub struct Registry {
+    entries: Vec<RegistryEntry>,
+}
+
+impl Registry {
+    /// An empty registry (no builtins).
+    pub fn empty() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// A registry pre-populated with the five paper strategies.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::empty();
+        r.register("row-major", "even mapping in row order (baseline, §3.2)", |s| {
+            (s == "row-major" || s == "even")
+                .then(|| Box::new(row_major::RowMajor) as Box<dyn Mapper>)
+        });
+        r.register("distance", "counts inversely proportional to MC hop distance (§3.3)", |s| {
+            (s == "distance").then(|| Box::new(distance::Distance) as Box<dyn Mapper>)
+        });
+        r.register("static-latency", "counts from the Eq. 6 no-load latency estimate (§4.2)", |s| {
+            (s == "static-latency").then(|| Box::new(static_latency::StaticLatency) as Box<dyn Mapper>)
+        });
+        r.register("post-run", "oracle travel-time mapping with an extra profiling run (§4.2)", |s| {
+            (s == "post-run").then(|| Box::new(travel_time::PostRun) as Box<dyn Mapper>)
+        });
+        r.register("sampling-<W>", "sampling-window travel-time mapping, window W >= 1 (§4.2)", |s| {
+            s.strip_prefix("sampling-")
+                .and_then(|w| w.parse::<u64>().ok())
+                .filter(|&w| w >= 1)
+                .map(|w| Box::new(travel_time::Sampling(w)) as Box<dyn Mapper>)
+        });
+        r
+    }
+
+    /// Register a strategy (family). `ctor` receives the requested name and
+    /// returns a mapper when it recognises it. Later registrations are
+    /// tried after earlier ones, so builtins keep their names.
+    pub fn register<F>(&mut self, name: &'static str, help: &'static str, ctor: F) -> &mut Self
+    where
+        F: Fn(&str) -> Option<Box<dyn Mapper>> + Send + Sync + 'static,
+    {
+        self.entries.push(RegistryEntry { name, help, ctor: Box::new(ctor) });
+        self
+    }
+
+    /// Resolve a strategy name (e.g. `"sampling-10"`) to a mapper.
+    pub fn resolve(&self, spec: &str) -> Option<Box<dyn Mapper>> {
+        self.entries.iter().find_map(|e| (e.ctor)(spec))
+    }
+
+    /// Canonical names of all registered strategies, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(RegistryEntry::name).collect()
+    }
+
+    /// The registered entries (for help text).
+    pub fn entries(&self) -> &[RegistryEntry] {
+        &self.entries
+    }
+}
+
+/// The default registry: all builtin strategies of the paper.
+pub fn registry() -> Registry {
+    Registry::with_builtins()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::dnn::LayerSpec;
+    use crate::mapping::MapCtx;
+
+    #[test]
+    fn builtin_names_resolve() {
+        let reg = registry();
+        for name in ["row-major", "even", "distance", "static-latency", "post-run", "sampling-1", "sampling-10"] {
+            assert!(reg.resolve(name).is_some(), "builtin '{name}' must resolve");
+        }
+        assert!(reg.resolve("sampling-0").is_none(), "window 0 is invalid");
+        assert!(reg.resolve("sampling-x").is_none());
+        assert!(reg.resolve("no-such-mapper").is_none());
+        assert_eq!(reg.names().len(), 5);
+    }
+
+    #[test]
+    fn resolved_labels_round_trip() {
+        let reg = registry();
+        for name in ["row-major", "distance", "static-latency", "post-run", "sampling-7"] {
+            let m = reg.resolve(name).unwrap();
+            assert_eq!(m.label(), name, "label must round-trip through the registry");
+        }
+    }
+
+    #[test]
+    fn custom_registration_is_resolvable_and_runs() {
+        struct Toy;
+        impl Mapper for Toy {
+            fn label(&self) -> std::borrow::Cow<'static, str> {
+                std::borrow::Cow::Borrowed("toy")
+            }
+            fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+                crate::mapping::row_major::counts(ctx.layer.tasks, ctx.num_pes())
+            }
+        }
+        let mut reg = registry();
+        reg.register("toy", "test-only strategy", |s| {
+            (s == "toy").then(|| Box::new(Toy) as Box<dyn Mapper>)
+        });
+        let m = reg.resolve("toy").expect("registered strategy must resolve");
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("t", 3, 1.0, 28);
+        let run = m.execute(&MapCtx::new(&cfg, &layer));
+        assert_eq!(run.mapper, "toy");
+        assert_eq!(run.counts.iter().sum::<u64>(), 28);
+    }
+}

@@ -5,6 +5,24 @@
 //! tasks." One *mapping iteration* hands one task to every PE in row
 //! order; the tail iteration may run short.
 
+use std::borrow::Cow;
+
+use crate::mapping::{MapCtx, Mapper};
+
+/// Even (row-major) mapping — the registered baseline [`Mapper`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RowMajor;
+
+impl Mapper for RowMajor {
+    fn label(&self) -> Cow<'static, str> {
+        Cow::Borrowed("row-major")
+    }
+
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        counts(ctx.layer.tasks, ctx.num_pes())
+    }
+}
+
 /// Per-PE task counts for even mapping of `total` tasks over `num_pes`
 /// PEs in row order: every PE gets `total / num_pes`, and the first
 /// `total % num_pes` PEs (row order) one more (the tail iteration).

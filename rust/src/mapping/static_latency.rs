@@ -18,10 +18,27 @@
 //! shows it works well for small flit counts and degrades as congestion
 //! grows (Fig. 9), motivating measured travel times.
 
+use std::borrow::Cow;
+
 use crate::config::PlatformConfig;
 use crate::dnn::LayerSpec;
 use crate::mapping::distance::pe_distances;
+use crate::mapping::{MapCtx, Mapper};
 use crate::util::apportion::inverse_proportional;
+
+/// Static-latency mapping — the registered §4.2/Eq. 6 [`Mapper`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticLatency;
+
+impl Mapper for StaticLatency {
+    fn label(&self) -> Cow<'static, str> {
+        Cow::Borrowed("static-latency")
+    }
+
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        counts(ctx.cfg, ctx.layer)
+    }
+}
 
 /// Per-flit serialization latency (cycles) used by Eq. 6.
 const T_FLIT: u64 = 1;

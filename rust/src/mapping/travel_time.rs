@@ -4,24 +4,76 @@
 //! per-PE travel times (Eq. 4–5), which implicitly capture the NoC
 //! architecture **and** its dynamic congestion:
 //!
-//! * **Post-run** (§4.2): an extra profiling run records exact travel
+//! * [`PostRun`] (§4.2): an extra profiling run records exact travel
 //!   times for every task; the mapped run then balances perfectly up to
 //!   integer rounding. The oracle — best results, but pays a full extra
 //!   run of time and energy.
-//! * **Sampling window** (§4.2, Fig. 6): the first `window` tasks of each
+//! * [`Sampling`] (§4.2, Fig. 6): the first `window` tasks of each
 //!   PE are mapped evenly and their travel times averaged (Eq. 7); only
 //!   the *residual* tasks are then redistributed (Eq. 8). No extra run.
 //!   Layers too small to sample fall back to row-major (the flowchart's
 //!   left route).
+//!
+//! These are the two *online* [`Mapper`]s: they override
+//! [`Mapper::execute`] because measurement is part of how they map.
+
+use std::borrow::Cow;
 
 use crate::accel::Simulation;
 use crate::config::PlatformConfig;
 use crate::dnn::LayerSpec;
-use crate::mapping::{finish, row_major, run_precomputed, MappedRun, Strategy};
+use crate::mapping::{finish, row_major, run_precomputed, MapCtx, MappedRun, Mapper};
 use crate::util::apportion::inverse_proportional;
 
-/// Mean travel time per PE from a set of records; `fallback` substitutes
-/// for PEs with no completed tasks (can happen only with zero budgets).
+/// Post-run travel-time mapping — the registered oracle [`Mapper`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PostRun;
+
+impl Mapper for PostRun {
+    fn label(&self) -> Cow<'static, str> {
+        Cow::Borrowed("post-run")
+    }
+
+    /// The Eq. 4–5 allocation. Costs a full profiling run to produce.
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        post_run_counts(ctx.cfg, ctx.layer)
+    }
+
+    fn execute(&self, ctx: &MapCtx<'_>) -> MappedRun {
+        run_post_run(ctx.cfg, ctx.layer)
+    }
+}
+
+/// Sampling-window travel-time mapping — the registered [`Mapper`] for the
+/// paper's contribution. The field is the window length W ≥ 1.
+#[derive(Debug, Clone, Copy)]
+pub struct Sampling(pub u64);
+
+impl Mapper for Sampling {
+    fn label(&self) -> Cow<'static, str> {
+        Cow::Owned(format!("sampling-{}", self.0))
+    }
+
+    /// The final allocation (window + Eq. 8 residual). For layers big
+    /// enough to sample this costs a measurement run of the platform;
+    /// small layers take the free row-major fallback.
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        let n = ctx.num_pes();
+        if ctx.layer.tasks < self.0 * n as u64 {
+            row_major::counts(ctx.layer.tasks, n)
+        } else {
+            run_sampling(ctx.cfg, ctx.layer, self.0).counts
+        }
+    }
+
+    fn execute(&self, ctx: &MapCtx<'_>) -> MappedRun {
+        run_sampling(ctx.cfg, ctx.layer, self.0)
+    }
+}
+
+/// Mean travel time per PE from a set of records; the global mean
+/// substitutes for PEs with no completed tasks (can happen only with zero
+/// budgets).
 fn mean_travel_per_pe(records: &[crate::accel::TaskRecord], num_pes: usize) -> Vec<f64> {
     let mut sum = vec![0u64; num_pes];
     let mut cnt = vec![0u64; num_pes];
@@ -43,17 +95,23 @@ fn mean_travel_per_pe(records: &[crate::accel::TaskRecord], num_pes: usize) -> V
         .collect()
 }
 
-/// Post-run travel-time mapping: profile with an extra even-mapped run,
-/// then execute with counts solving Eq. 4–5 on the recorded times.
-pub fn run_post_run(cfg: &PlatformConfig, layer: &LayerSpec) -> MappedRun {
+/// The Eq. 4–5 post-run allocation: profile with an even-mapped run, then
+/// apportion inversely to the recorded mean travel times.
+pub fn post_run_counts(cfg: &PlatformConfig, layer: &LayerSpec) -> Vec<u64> {
     // Extra run (the cost the paper attributes to this oracle).
     let probe_counts = row_major::counts(layer.tasks, cfg.num_pes());
     let mut probe = Simulation::new(cfg, layer.profile(cfg));
     probe.add_budgets(&probe_counts);
     let probe_res = probe.run_until_done();
     let times = mean_travel_per_pe(&probe_res.records, cfg.num_pes());
-    let counts = inverse_proportional(layer.tasks, &times);
-    run_precomputed(cfg, layer, Strategy::PostRun, counts, true)
+    inverse_proportional(layer.tasks, &times)
+}
+
+/// Post-run travel-time mapping: profile with an extra even-mapped run,
+/// then execute with counts solving Eq. 4–5 on the recorded times.
+pub fn run_post_run(cfg: &PlatformConfig, layer: &LayerSpec) -> MappedRun {
+    let counts = post_run_counts(cfg, layer);
+    run_precomputed(cfg, layer, Cow::Borrowed("post-run"), counts, true)
 }
 
 /// Sampling-window travel-time mapping (Fig. 6).
@@ -65,12 +123,13 @@ pub fn run_post_run(cfg: &PlatformConfig, layer: &LayerSpec) -> MappedRun {
 ///   and continue the *same* platform run — no extra run needed.
 pub fn run_sampling(cfg: &PlatformConfig, layer: &LayerSpec, window: u64) -> MappedRun {
     assert!(window >= 1, "sampling window must be at least 1");
+    let label = Cow::Owned(format!("sampling-{window}"));
     let n = cfg.num_pes();
     let sampled_total = window * n as u64;
     if layer.tasks < sampled_total {
         // Fig. 6 left route: small layer, sample-free row-major mapping.
         let counts = row_major::counts(layer.tasks, n);
-        return run_precomputed(cfg, layer, Strategy::Sampling(window), counts, false);
+        return run_precomputed(cfg, layer, label, counts, false);
     }
     let mut sim = Simulation::new(cfg, layer.profile(cfg));
     // Phase 1: the sampling window, mapped evenly.
@@ -83,7 +142,7 @@ pub fn run_sampling(cfg: &PlatformConfig, layer: &LayerSpec, window: u64) -> Map
     sim.add_budgets(&residual_counts);
     let result = sim.run_until_done();
     let counts: Vec<u64> = residual_counts.iter().map(|c| c + window).collect();
-    finish(Strategy::Sampling(window), counts, result, false)
+    finish(label, counts, result, false)
 }
 
 #[cfg(test)]
@@ -100,16 +159,20 @@ mod tests {
         LayerSpec::conv("test-c1", 5, 1.0, 4704 / 8)
     }
 
+    fn row_major_run(cfg: &PlatformConfig, l: &LayerSpec) -> MappedRun {
+        run_precomputed(
+            cfg,
+            l,
+            Cow::Borrowed("row-major"),
+            row_major::counts(l.tasks, cfg.num_pes()),
+            false,
+        )
+    }
+
     #[test]
     fn post_run_balances_accumulated_time() {
         let l = layer();
-        let even = run_precomputed(
-            &cfg(),
-            &l,
-            Strategy::RowMajor,
-            row_major::counts(l.tasks, 14),
-            false,
-        );
+        let even = row_major_run(&cfg(), &l);
         let post = run_post_run(&cfg(), &l);
         assert!(post.extra_run);
         assert!(
@@ -153,13 +216,7 @@ mod tests {
     #[test]
     fn sampling_improves_over_row_major() {
         let l = layer();
-        let even = run_precomputed(
-            &cfg(),
-            &l,
-            Strategy::RowMajor,
-            row_major::counts(l.tasks, 14),
-            false,
-        );
+        let even = row_major_run(&cfg(), &l);
         let sw10 = run_sampling(&cfg(), &l, 10);
         assert!(
             sw10.summary.latency < even.summary.latency,
@@ -196,5 +253,19 @@ mod tests {
             .collect();
         let rho = unevenness(&accum);
         assert!(rho < 0.25, "oracle unevenness should be small, got {rho:.4}");
+    }
+
+    #[test]
+    fn mapper_counts_match_execute_counts() {
+        // The trait's `counts` must agree with the allocation `execute`
+        // actually uses — for both online mappers and the fallback route.
+        let c = cfg();
+        let l = layer();
+        let ctx = MapCtx::new(&c, &l);
+        assert_eq!(PostRun.counts(&ctx), run_post_run(&c, &l).counts);
+        assert_eq!(Sampling(10).counts(&ctx), run_sampling(&c, &l, 10).counts);
+        let small = LayerSpec::fc("F6", 120, 84);
+        let sctx = MapCtx::new(&c, &small);
+        assert_eq!(Sampling(10).counts(&sctx), row_major::counts(84, 14));
     }
 }

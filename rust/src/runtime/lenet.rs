@@ -4,11 +4,12 @@
 //! the 14 parameters in the canonical order written by the AOT step; the
 //! runtime keeps the weight literals resident and feeds them alongside
 //! each input batch.
+//!
+//! Compiled without the `pjrt` feature, [`LenetRuntime`] is an
+//! API-compatible stub whose `load` fails with an explanatory error (see
+//! the [module docs](super) on feature gating).
 
-use anyhow::{ensure, Context, Result};
-
-use super::weights::TensorFile;
-use super::Artifact;
+use anyhow::Result;
 
 /// Canonical parameter order — must match `python/compile/model.PARAM_ORDER`.
 pub const PARAM_ORDER: [&str; 14] = [
@@ -17,18 +18,20 @@ pub const PARAM_ORDER: [&str; 14] = [
 ];
 
 /// A ready-to-run LeNet: compiled executable + resident weights.
+#[cfg(feature = "pjrt")]
 pub struct LenetRuntime {
-    artifact: Artifact,
+    artifact: super::Artifact,
     weights: Vec<xla::Literal>,
     batch: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl LenetRuntime {
     /// Load the batch-`batch` artifact and weights from `artifact_dir`.
     pub fn load(artifact_dir: &str, batch: usize) -> Result<Self> {
         let hlo = format!("{artifact_dir}/lenet_b{batch}.hlo.txt");
-        let artifact = Artifact::load(&hlo)?;
-        let wf = TensorFile::load(&format!("{artifact_dir}/lenet_weights.bin"))?;
+        let artifact = super::Artifact::load(&hlo)?;
+        let wf = super::weights::TensorFile::load(&format!("{artifact_dir}/lenet_weights.bin"))?;
         let mut weights = Vec::with_capacity(PARAM_ORDER.len());
         for name in PARAM_ORDER {
             weights.push(wf.get(name)?.to_literal()?);
@@ -49,6 +52,7 @@ impl LenetRuntime {
     /// Run inference. `images` is `(batch, 1, 32, 32)` row-major f32.
     /// Returns `(batch, 10)` logits, row-major.
     pub fn infer(&self, images: &[f32]) -> Result<Vec<f32>> {
+        use anyhow::{ensure, Context};
         let expect = self.batch * 32 * 32;
         ensure!(
             images.len() == expect,
@@ -74,15 +78,88 @@ impl LenetRuntime {
     /// Argmax class per batch element.
     pub fn classify(&self, images: &[f32]) -> Result<Vec<usize>> {
         let logits = self.infer(images)?;
-        Ok(logits
-            .chunks(10)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite logits"))
-                    .map(|(i, _)| i)
-                    .expect("non-empty row")
-            })
-            .collect())
+        Ok(argmax_rows(&logits))
+    }
+}
+
+/// Stub runtime compiled without the `pjrt` feature: `load` always fails.
+#[cfg(not(feature = "pjrt"))]
+pub struct LenetRuntime {
+    batch: usize,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LenetRuntime {
+    /// Always fails: the PJRT bindings are not compiled in.
+    pub fn load(artifact_dir: &str, batch: usize) -> Result<Self> {
+        use anyhow::Context;
+        let _ = batch;
+        Err(super::pjrt_unavailable())
+            .with_context(|| format!("loading LeNet artifacts from {artifact_dir}"))
+    }
+
+    /// The batch size this executable was lowered for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Stub platform name.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Stub inference: always fails.
+    pub fn infer(&self, _images: &[f32]) -> Result<Vec<f32>> {
+        Err(super::pjrt_unavailable())
+    }
+
+    /// Stub classification: always fails.
+    pub fn classify(&self, _images: &[f32]) -> Result<Vec<usize>> {
+        Err(super::pjrt_unavailable())
+    }
+}
+
+/// Argmax per 10-wide row (shared by the real and stub runtimes' tests).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+fn argmax_rows(logits: &[f32]) -> Vec<usize> {
+    logits
+        .chunks(10)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite logits"))
+                .map(|(i, _)| i)
+                .expect("non-empty row")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_order_is_canonical() {
+        assert_eq!(PARAM_ORDER.len(), 14);
+        assert_eq!(PARAM_ORDER[0], "c1_w");
+        assert_eq!(PARAM_ORDER[13], "out_b");
+    }
+
+    #[test]
+    fn argmax_picks_the_largest_logit() {
+        let mut row = vec![0.0f32; 10];
+        row[7] = 3.5;
+        let mut row2 = vec![1.0f32; 10];
+        row2[2] = 9.0;
+        let logits: Vec<f32> = row.into_iter().chain(row2).collect();
+        assert_eq!(argmax_rows(&logits), vec![7, 2]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = LenetRuntime::load("nowhere", 8).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("pjrt"), "error should name the feature: {msg}");
     }
 }

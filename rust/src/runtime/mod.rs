@@ -9,6 +9,15 @@
 //! * [`weights`] — reader for the NCTW tensor container written by
 //!   `python/compile/aot.py` (`lenet_weights.bin`, `testvec.bin`).
 //! * [`lenet`] — the compiled LeNet executable with a typed `infer` API.
+//!
+//! # Feature gating
+//!
+//! The PJRT bindings (`xla` crate) need a native XLA toolchain that the
+//! offline build environment does not provide, so everything touching
+//! `xla::` is compiled only with the **`pjrt`** cargo feature. Without it,
+//! API-compatible stubs take their place: they type-check identically for
+//! callers and return a clear error at run time. The cycle-accurate NoC
+//! simulator and all experiments are independent of this feature.
 
 pub mod lenet;
 pub mod weights;
@@ -19,12 +28,14 @@ pub use weights::{Tensor, TensorFile};
 use anyhow::{Context, Result};
 
 /// A compiled HLO artifact ready to execute on the PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Artifact {
     client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
     path: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifact {
     /// Load and compile `path` (HLO text) on a fresh CPU client.
     pub fn load(path: &str) -> Result<Self> {
@@ -61,8 +72,42 @@ impl Artifact {
     }
 }
 
+/// Stub artifact compiled without the `pjrt` feature: loading always fails
+/// with an explanatory error; the type exists so callers compile unchanged.
+#[cfg(not(feature = "pjrt"))]
+pub struct Artifact {
+    path: String,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Artifact {
+    /// Always fails: the PJRT bindings are not compiled in.
+    pub fn load(path: &str) -> Result<Self> {
+        Err(pjrt_unavailable()).with_context(|| format!("loading HLO artifact {path}"))
+    }
+
+    /// Stub platform name.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Source path of the artifact.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub(crate) fn pjrt_unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "the PJRT runtime is unavailable: noctt was built without the `pjrt` cargo \
+         feature (it needs the `xla` crate and a native XLA toolchain)"
+    )
+}
+
 /// Smoke-test the PJRT path with `artifacts/smoke.hlo.txt`:
 /// `matmul([[1,2],[3,4]], ones) + 2 == [[5,5],[9,9]]`.
+#[cfg(feature = "pjrt")]
 pub fn smoke_test(artifact_dir: &str) -> Result<()> {
     let art = Artifact::load(&format!("{artifact_dir}/smoke.hlo.txt"))?;
     let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
@@ -71,4 +116,10 @@ pub fn smoke_test(artifact_dir: &str) -> Result<()> {
     let vals = out.to_vec::<f32>()?;
     anyhow::ensure!(vals == vec![5., 5., 9., 9.], "smoke mismatch: {vals:?}");
     Ok(())
+}
+
+/// Stub smoke test compiled without the `pjrt` feature: always fails.
+#[cfg(not(feature = "pjrt"))]
+pub fn smoke_test(artifact_dir: &str) -> Result<()> {
+    Err(pjrt_unavailable()).with_context(|| format!("smoke test in {artifact_dir}"))
 }

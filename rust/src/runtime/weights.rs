@@ -32,7 +32,8 @@ impl Tensor {
         self.data.is_empty()
     }
 
-    /// Convert to an XLA literal with this tensor's shape.
+    /// Convert to an XLA literal with this tensor's shape (PJRT builds only).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
         xla::Literal::vec1(&self.data)

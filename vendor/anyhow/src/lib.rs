@@ -1,0 +1,229 @@
+//! Offline API-compatible subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! vendored shim provides the surface `noctt` uses:
+//!
+//! * [`Error`] — a context-carrying error value;
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Semantics match the real crate for this subset: any `std::error::Error`
+//! converts via `?`, context wraps outermost-first, `Display` shows the
+//! outermost message and `Debug` shows the full cause chain.
+
+use std::fmt;
+
+/// A context-carrying error: a stack of messages, outermost context first,
+/// root cause last.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { stack: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.stack.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// All messages, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.stack.first().map(String::as_str).unwrap_or("unknown error"))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")?;
+        if self.stack.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.stack[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut stack = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            stack.push(s.to_string());
+            source = s.source();
+        }
+        Self { stack }
+    }
+}
+
+/// `Result` with a defaulted [`Error`] type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return ::core::result::Result::Err($crate::anyhow!($($t)*)) };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("Condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+mod private {
+    /// Conversion into [`Error`](super::Error) for anything that can be an
+    /// error source. The blanket impl covers `std` errors; the concrete
+    /// impl lets context wrap an existing `Error` (the two are disjoint —
+    /// `Error` deliberately does not implement `std::error::Error`).
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let e: Result<()> = Err(io_err()).context("opening config");
+        let e = e.unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(e.root_cause(), "missing thing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("missing thing"), "{dbg}");
+    }
+
+    #[test]
+    fn context_stacks_on_shim_errors_too() {
+        fn inner() -> Result<u32> {
+            bail!("root failure {}", 7);
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.root_cause(), "root failure 7");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("no value for {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "no value for x");
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn ensure_and_bail_forms() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(12).unwrap_err().to_string().contains("x too big: 12"));
+        assert!(check(5).unwrap_err().to_string().contains("x != 5"));
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("value {n}");
+        assert_eq!(b.to_string(), "value 3");
+        let c = anyhow!("{} and {}", 1, 2);
+        assert_eq!(c.to_string(), "1 and 2");
+    }
+}
