@@ -24,8 +24,8 @@ fn main() {
         for b in (a + 1)..16usize {
             let mut cfg = PlatformConfig::default_2mc();
             cfg.mc_nodes = vec![a, b];
-            let base = run_layer(&cfg, &layer, Strategy::RowMajor);
-            let sw10 = run_layer(&cfg, &layer, Strategy::Sampling(10));
+            let base = run_layer(&cfg, &layer, Strategy::RowMajor).expect("sweep run");
+            let sw10 = run_layer(&cfg, &layer, Strategy::Sampling(10)).expect("sweep run");
             results.push((
                 a,
                 b,

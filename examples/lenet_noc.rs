@@ -65,8 +65,10 @@ fn main() -> anyhow::Result<()> {
     );
     let mut base_total = 0u64;
     for (si, s) in strategies.iter().enumerate() {
-        let lat: Vec<u64> =
-            layers.iter().map(|l| run_layer(&cfg, l, *s).summary.latency).collect();
+        let lat: Vec<u64> = layers
+            .iter()
+            .map(|l| run_layer(&cfg, l, *s).expect("layer run").summary.latency)
+            .collect();
         let total: u64 = lat.iter().sum();
         if si == 0 {
             base_total = total;

@@ -11,7 +11,9 @@
 //!    centre MCs — validated at `build()`.
 //! 3. **Scenario engine** (`experiments::engine::Scenario`): one
 //!    declarative {platforms × layers × mappers} grid replaces the three
-//!    hand-rolled sweep loops this example used to carry.
+//!    hand-rolled sweep loops this example used to carry — and runs its
+//!    30 cells **in parallel** via `.jobs(..)` with results identical to
+//!    the serial order (swap in `.jobs(1)` and compare: same numbers).
 //!
 //! Run: `cargo run --release --example mapping_sweep`
 
@@ -21,7 +23,7 @@ use noctt::config::PlatformConfig;
 use noctt::dnn::{lenet5, LayerSpec};
 use noctt::experiments::engine::Scenario;
 use noctt::mapping::{registry, MapCtx, Mapper};
-use noctt::util::Table;
+use noctt::util::{Table, ThreadPool};
 
 /// A toy custom strategy: pile extra work onto the mesh corners (the worst
 /// possible idea on this platform — corners are farthest from the MCs —
@@ -68,9 +70,15 @@ fn main() {
         .build()
         .expect("8x8 mesh with 4 centre MCs and wide flits");
 
-    // 3. One scenario grid: 3 platforms × 2 layers × 5 mappers.
+    // 3. One scenario grid: 3 platforms × 2 layers × 5 mappers — 30
+    //    independent cycle-accurate simulations, spread over every core
+    //    by .jobs(). The NOCTT_JOBS env var (or the CLI's --jobs) sets
+    //    the same knob when .jobs() is omitted; .jobs(1) is the serial
+    //    path and produces the identical SweepResults.
+    let workers = ThreadPool::available();
+    println!("running the sweep on {workers} worker thread(s)\n");
     let mut c1 = lenet5(6).remove(0);
-    c1.tasks /= 4; // keep the example around a minute
+    c1.tasks /= 4; // keep the example quick
     let k9 = LayerSpec::conv("k9", 9, 1.0, c1.tasks);
     let mappers =
         ["row-major", "distance", "static-latency", "sampling-10", "corner-heavy"];
@@ -82,6 +90,7 @@ fn main() {
         .layer(c1)
         .layer(k9)
         .mappers(mappers)
+        .jobs(workers)
         .run()
         .expect("sweep grid");
 

@@ -14,8 +14,8 @@ fn main() {
     // LeNet C1: 4704 convolution tasks, 4-flit responses (Table 1).
     let layer = &lenet5(6)[0];
 
-    let base = run_layer(&cfg, layer, Strategy::RowMajor);
-    let ours = run_layer(&cfg, layer, Strategy::Sampling(10));
+    let base = run_layer(&cfg, layer, Strategy::RowMajor).expect("C1 run");
+    let ours = run_layer(&cfg, layer, Strategy::Sampling(10)).expect("C1 run");
 
     println!("layer {} — {} tasks on {} PEs", layer.name, layer.tasks, cfg.num_pes());
     println!("row-major    : {} cycles (ρ_accum {:.2}%)", base.summary.latency, base.summary.rho_accum * 100.0);

@@ -1,6 +1,9 @@
 //! Microbenchmarks of the simulator hot paths: the network clock step
 //! (idle and loaded), the full co-simulation step, injection throughput,
 //! and the mapping math. These are the §Perf optimisation targets.
+//!
+//! Supports the same `--smoke` / `--json <path>` flags as
+//! `paper_benches` (see `noctt::util::bench::BenchArgs`).
 
 use std::time::Duration;
 
@@ -9,11 +12,16 @@ use noctt::config::PlatformConfig;
 use noctt::dnn::LayerSpec;
 use noctt::noc::{Network, PacketKind};
 use noctt::util::apportion::inverse_proportional;
-use noctt::util::bench::{bench, BenchResult};
+use noctt::util::bench::{bench, BenchArgs, BenchResult};
 
 const T: Duration = Duration::from_millis(1200);
 
 fn main() {
+    let args = BenchArgs::from_env().unwrap_or_else(|e| {
+        eprintln!("noc_microbench: {e}");
+        std::process::exit(2);
+    });
+    let t = args.min_time(T);
     let mut results: Vec<BenchResult> = Vec::new();
     let cfg = PlatformConfig::default_2mc();
 
@@ -21,7 +29,7 @@ fn main() {
     {
         let mut net = Network::new(&cfg);
         const STEPS: u64 = 10_000;
-        results.push(bench("network/step-idle-x10k", T, Some((STEPS as f64, "cycles")), || {
+        results.push(bench("network/step-idle-x10k", t, Some((STEPS as f64, "cycles")), || {
             for _ in 0..STEPS {
                 net.step();
             }
@@ -30,7 +38,7 @@ fn main() {
 
     // Saturated fabric: every PE streams 22-flit packets at both MCs.
     {
-        results.push(bench("network/step-saturated-x2k", T, Some((2000.0, "cycles")), || {
+        results.push(bench("network/step-saturated-x2k", t, Some((2000.0, "cycles")), || {
             let mut net = Network::new(&cfg);
             for (i, pe) in cfg.pe_nodes().into_iter().enumerate() {
                 for _ in 0..4 {
@@ -51,7 +59,7 @@ fn main() {
         let mut sim = Simulation::new(&cfg, profile);
         sim.add_budgets(&vec![u64::MAX / 2 / 14; 14]); // endless work
         const STEPS: u64 = 5_000;
-        results.push(bench("sim/step-busy-x5k", T, Some((STEPS as f64, "cycles")), || {
+        results.push(bench("sim/step-busy-x5k", t, Some((STEPS as f64, "cycles")), || {
             for _ in 0..STEPS {
                 sim.step();
             }
@@ -62,23 +70,20 @@ fn main() {
     {
         let layer = LayerSpec::conv("small", 5, 1.0, 140);
         let profile = layer.profile(&cfg);
-        results.push(bench("sim/full-run-140-tasks", T, Some((140.0, "tasks")), || {
+        results.push(bench("sim/full-run-140-tasks", t, Some((140.0, "tasks")), || {
             let mut sim = Simulation::new(&cfg, profile);
             sim.add_budgets(&vec![10; 14]);
-            std::hint::black_box(sim.run_until_done());
+            std::hint::black_box(sim.run_until_done().expect("bench run"));
         }));
     }
 
     // Mapping math: Eq. 4–5 apportionment at PE scale.
     {
         let times: Vec<f64> = (0..14).map(|i| 40.0 + i as f64).collect();
-        results.push(bench("mapping/inverse-proportional-14", T, Some((1.0, "calls")), || {
+        results.push(bench("mapping/inverse-proportional-14", t, Some((1.0, "calls")), || {
             std::hint::black_box(inverse_proportional(4704, &times));
         }));
     }
 
-    println!("\n== noc_microbench ==");
-    for r in &results {
-        println!("{}", r.render());
-    }
+    args.finish("noc_microbench", &results).expect("writing bench output");
 }

@@ -1,78 +1,150 @@
-//! End-to-end benchmarks: one per paper table/figure.
+//! End-to-end benchmarks: one per paper table/figure, plus the
+//! serial-vs-parallel sweep comparison.
 //!
 //! Each bench times the *regeneration* of one evaluation artefact and
 //! reports simulator throughput (simulated router cycles per wall second
 //! and tasks per second). Run with `cargo bench` (or `make bench`); the
 //! §Perf section of EXPERIMENTS.md records the tracked numbers.
+//!
+//! Flags (forwarded by `cargo bench -- …`):
+//!
+//! * `--smoke` — CI smoke mode: 30 ms windows and trimmed workloads, so
+//!   the job catches panics/deadlocks quickly instead of tracking perf;
+//! * `--json <path>` — write one JSON object per bench (plus the
+//!   `fig7-sweep/speedup-vs-serial` entry) for the perf trajectory.
 
 use std::time::Duration;
 
 use noctt::config::{PlacementPreset, PlatformConfig};
 use noctt::dnn::{lenet5, LayerSpec};
-use noctt::experiments::table1;
+use noctt::experiments::engine::Scenario;
+use noctt::experiments::{fig7, table1};
 use noctt::mapping::{run_layer, Strategy};
-use noctt::util::bench::{bench, BenchResult};
+use noctt::util::bench::{bench, speedup, BenchArgs, BenchResult};
+use noctt::util::ThreadPool;
 
 const T: Duration = Duration::from_millis(1500);
 
 fn simulated_cycles(cfg: &PlatformConfig, layer: &LayerSpec, s: Strategy) -> f64 {
-    run_layer(cfg, layer, s).result.drained_at as f64
+    run_layer(cfg, layer, s).expect("bench run").result.drained_at as f64
 }
 
 fn main() {
+    let args = BenchArgs::from_env().unwrap_or_else(|e| {
+        eprintln!("paper_benches: {e}");
+        std::process::exit(2);
+    });
+    let t = args.min_time(T);
     let mut results: Vec<BenchResult> = Vec::new();
     let cfg = PlatformConfig::default_2mc();
-    let c1 = lenet5(6).remove(0);
+    let mut c1 = lenet5(6).remove(0);
+    if args.smoke {
+        c1.tasks /= 8;
+    }
 
     // table1 — packet-size law (pure computation, no simulation).
-    results.push(bench("table1/kernel-packet-law", T, Some((7.0, "rows")), || {
+    results.push(bench("table1/kernel-packet-law", t, Some((7.0, "rows")), || {
         std::hint::black_box(table1::rows());
     }));
 
     // fig7 — C1 under the four §5.2 mappings.
     let cycles = simulated_cycles(&cfg, &c1, Strategy::RowMajor);
-    results.push(bench("fig7/c1-row-major", T, Some((cycles, "sim-cycles")), || {
-        std::hint::black_box(run_layer(&cfg, &c1, Strategy::RowMajor));
+    results.push(bench("fig7/c1-row-major", t, Some((cycles, "sim-cycles")), || {
+        std::hint::black_box(run_layer(&cfg, &c1, Strategy::RowMajor).expect("bench run"));
     }));
-    results.push(bench("fig7/c1-sampling-10", T, Some((c1.tasks as f64, "tasks")), || {
-        std::hint::black_box(run_layer(&cfg, &c1, Strategy::Sampling(10)));
+    results.push(bench("fig7/c1-sampling-10", t, Some((c1.tasks as f64, "tasks")), || {
+        std::hint::black_box(run_layer(&cfg, &c1, Strategy::Sampling(10)).expect("bench run"));
     }));
-    results.push(bench("fig7/c1-post-run(2 runs)", T, Some((2.0 * c1.tasks as f64, "tasks")), || {
-        std::hint::black_box(run_layer(&cfg, &c1, Strategy::PostRun));
+    results.push(bench("fig7/c1-post-run(2 runs)", t, Some((2.0 * c1.tasks as f64, "tasks")), || {
+        std::hint::black_box(run_layer(&cfg, &c1, Strategy::PostRun).expect("bench run"));
     }));
 
+    // fig7 sweep — the whole four-mapper grid through the Scenario
+    // engine, serial (jobs(1), the exact old path) vs the machine's full
+    // parallelism. The speedup ratio is the tracked number.
+    {
+        let sweep_layer = {
+            let mut l = lenet5(6).remove(0);
+            l.tasks /= if args.smoke { 16 } else { 4 };
+            l
+        };
+        let run_sweep = |jobs: usize| {
+            Scenario::new("fig7-bench")
+                .platform("2mc", cfg.clone())
+                .layer(sweep_layer.clone())
+                .mappers(fig7::MAPPERS)
+                .jobs(jobs)
+                .run()
+                .expect("fig7 sweep")
+        };
+        let cells = fig7::MAPPERS.len() as f64;
+        let serial = bench("fig7-sweep/jobs-1", t, Some((cells, "cells")), || {
+            std::hint::black_box(run_sweep(1));
+        });
+        let jobs = ThreadPool::available();
+        // Stable name (no core count) so the perf trajectory keys one
+        // series across machines; the actual width is printed below.
+        let parallel = bench("fig7-sweep/jobs-max", t, Some((cells, "cells")), || {
+            std::hint::black_box(run_sweep(jobs));
+        });
+        let ratio = speedup(&serial, &parallel);
+        println!(
+            "fig7-sweep speedup: {ratio:.2}x with {jobs} workers (serial {:?} → parallel {:?})",
+            serial.mean, parallel.mean
+        );
+        // Record the ratio in the JSON trajectory as its own entry: mean
+        // is the parallel sweep's; the rate field carries the ratio
+        // (units-per-iteration × iterations-per-second = x-serial ratio).
+        let mut speedup_entry = parallel.clone();
+        speedup_entry.name = "fig7-sweep/speedup-vs-serial".to_string();
+        speedup_entry.throughput = Some((ratio * speedup_entry.mean.as_secs_f64(), "x-serial"));
+        results.push(serial);
+        results.push(parallel);
+        results.push(speedup_entry);
+    }
+
     // fig8 — the 8x task-scale point (the heaviest single simulation).
-    let big = lenet5(48).remove(0);
+    let big = {
+        let mut l = lenet5(48).remove(0);
+        if args.smoke {
+            l.tasks /= 32;
+        }
+        l
+    };
     let cycles = simulated_cycles(&cfg, &big, Strategy::RowMajor);
-    results.push(bench("fig8/c1x8-row-major", T, Some((cycles, "sim-cycles")), || {
-        std::hint::black_box(run_layer(&cfg, &big, Strategy::RowMajor));
+    results.push(bench("fig8/c1x8-row-major", t, Some((cycles, "sim-cycles")), || {
+        std::hint::black_box(run_layer(&cfg, &big, Strategy::RowMajor).expect("bench run"));
     }));
 
     // fig9 — the largest packet size (22 flits, bandwidth-saturated).
-    let k13 = LayerSpec::conv("k13", 13, 1.0, 4704);
+    let k13 = LayerSpec::conv("k13", 13, 1.0, if args.smoke { 4704 / 8 } else { 4704 });
     let cycles = simulated_cycles(&cfg, &k13, Strategy::RowMajor);
-    results.push(bench("fig9/k13-row-major", T, Some((cycles, "sim-cycles")), || {
-        std::hint::black_box(run_layer(&cfg, &k13, Strategy::RowMajor));
+    results.push(bench("fig9/k13-row-major", t, Some((cycles, "sim-cycles")), || {
+        std::hint::black_box(run_layer(&cfg, &k13, Strategy::RowMajor).expect("bench run"));
     }));
 
     // fig10 — the 4-MC architecture.
     let cfg4 = PlatformConfig::preset(PlacementPreset::FourMc);
     let cycles = simulated_cycles(&cfg4, &c1, Strategy::Sampling(10));
-    results.push(bench("fig10/c1-4mc-sampling-10", T, Some((cycles, "sim-cycles")), || {
-        std::hint::black_box(run_layer(&cfg4, &c1, Strategy::Sampling(10)));
+    results.push(bench("fig10/c1-4mc-sampling-10", t, Some((cycles, "sim-cycles")), || {
+        std::hint::black_box(run_layer(&cfg4, &c1, Strategy::Sampling(10)).expect("bench run"));
     }));
 
     // fig11 — the whole seven-layer model under the headline mapping.
-    let layers = lenet5(6);
+    let mut layers = lenet5(6);
+    if args.smoke {
+        for l in &mut layers {
+            if l.tasks > 600 {
+                l.tasks /= 8;
+            }
+        }
+    }
     let total_tasks: u64 = layers.iter().map(|l| l.tasks).sum();
-    results.push(bench("fig11/lenet-sampling-10", T, Some((total_tasks as f64, "tasks")), || {
+    results.push(bench("fig11/lenet-sampling-10", t, Some((total_tasks as f64, "tasks")), || {
         for l in &layers {
-            std::hint::black_box(run_layer(&cfg, l, Strategy::Sampling(10)));
+            std::hint::black_box(run_layer(&cfg, l, Strategy::Sampling(10)).expect("bench run"));
         }
     }));
 
-    println!("\n== paper_benches ==");
-    for r in &results {
-        println!("{}", r.render());
-    }
+    args.finish("paper_benches", &results).expect("writing bench output");
 }

@@ -14,15 +14,14 @@
 //! sampling-window mapper (Fig. 6) allocates the residual tasks after the
 //! sampled phase without restarting the platform.
 
+use anyhow::{bail, Result};
+
 use crate::accel::mc::Mc;
 use crate::accel::pe::Pe;
 use crate::accel::record::{PePhaseTotals, TaskRecord};
 use crate::config::PlatformConfig;
 use crate::dnn::TaskProfile;
-use crate::noc::{Network, PacketId, PacketKind};
-
-/// Hard per-phase cycle cap — hit only on a simulator bug (deadlock).
-const MAX_PHASE_CYCLES: u64 = 2_000_000_000;
+use crate::noc::{Network, NetworkStats, PacketId, PacketKind};
 
 /// Outcome of a completed simulation phase/run.
 #[derive(Debug, Clone)]
@@ -38,6 +37,10 @@ pub struct SimResult {
     pub latency: u64,
     /// Cycle at which the whole platform went quiescent (results drained).
     pub drained_at: u64,
+    /// Network traffic statistics at snapshot time (per-port switching
+    /// counters, latency sums) — lets sweep consumers (e.g. the congestion
+    /// heatmap) read NoC-level data without re-driving the simulator.
+    pub net: NetworkStats,
 }
 
 impl SimResult {
@@ -153,8 +156,10 @@ impl Simulation {
     /// drained (result packets delivered).
     ///
     /// Returns the aggregate result over *all* records accumulated so far
-    /// (across phases, if budgets were added in stages).
-    pub fn run_until_done(&mut self) -> SimResult {
+    /// (across phases, if budgets were added in stages). Fails with a
+    /// descriptive error — not a hung worker — if the phase exceeds the
+    /// platform's `max_phase_cycles` cap (a deadlock).
+    pub fn run_until_done(&mut self) -> Result<SimResult> {
         let start = self.net.now();
         loop {
             let pes_done = self.pes.iter().all(Pe::done);
@@ -162,27 +167,46 @@ impl Simulation {
             if pes_done && mcs_idle && self.net.quiescent() {
                 break;
             }
-            assert!(
-                self.net.now() - start < MAX_PHASE_CYCLES,
-                "simulation failed to converge — deadlock?"
-            );
+            if self.net.now() - start >= self.cfg.max_phase_cycles {
+                bail!("{}", self.deadlock_report("run", start));
+            }
             self.step();
         }
-        self.result()
+        Ok(self.result())
     }
 
     /// Run until every PE has completed its budget (network may still be
     /// draining result packets). Used between sampling and residual phases.
-    pub fn run_until_budgets_met(&mut self) -> SimResult {
+    pub fn run_until_budgets_met(&mut self) -> Result<SimResult> {
         let start = self.net.now();
         while !self.pes.iter().all(Pe::done) {
-            assert!(
-                self.net.now() - start < MAX_PHASE_CYCLES,
-                "sampling phase failed to converge — deadlock?"
-            );
+            if self.net.now() - start >= self.cfg.max_phase_cycles {
+                bail!("{}", self.deadlock_report("sampling phase", start));
+            }
             self.step();
         }
-        self.result()
+        Ok(self.result())
+    }
+
+    /// Describe a non-converging phase: which platform, how much work was
+    /// outstanding, and where the cap sat. The sweep engine prepends the
+    /// {platform × layer × mapper} cell on top of this.
+    fn deadlock_report(&self, phase: &str, start: u64) -> String {
+        let outstanding: u64 =
+            self.pes.iter().map(|p| p.budget() - p.completed()).sum();
+        format!(
+            "{phase} failed to converge within max_phase_cycles = {} \
+             (phase started at cycle {start}, now {}; {}x{} mesh, {} MCs at {:?}, \
+             {} PEs, {} tasks outstanding) — deadlock?",
+            self.cfg.max_phase_cycles,
+            self.net.now(),
+            self.cfg.mesh_width,
+            self.cfg.mesh_height,
+            self.cfg.mc_nodes.len(),
+            self.cfg.mc_nodes,
+            self.pes.len(),
+            outstanding,
+        )
     }
 
     /// Aggregate the records into a [`SimResult`] snapshot.
@@ -194,7 +218,14 @@ impl Simulation {
         }
         let finish: Vec<u64> = self.pes.iter().map(|p| p.last_done).collect();
         let latency = finish.iter().copied().max().unwrap_or(0);
-        SimResult { records: self.records.clone(), totals, finish, latency, drained_at: self.net.now() }
+        SimResult {
+            records: self.records.clone(),
+            totals,
+            finish,
+            latency,
+            drained_at: self.net.now(),
+            net: self.net.stats().clone(),
+        }
     }
 
     /// One router-clock cycle of the whole platform.
@@ -302,7 +333,7 @@ mod tests {
         let mut counts = vec![0u64; 14];
         counts[0] = 1; // PE dense index 0 = node 0 (farthest)
         sim.add_budgets(&counts);
-        let res = sim.run_until_done();
+        let res = sim.run_until_done().unwrap();
         assert_eq!(res.records.len(), 1);
         let r = &res.records[0];
         assert_eq!(r.pe, 0);
@@ -327,7 +358,7 @@ mod tests {
             let mut counts = vec![0u64; 14];
             counts[idx] = 1;
             sim.add_budgets(&counts);
-            sim.run_until_done().records[0].travel_time()
+            sim.run_until_done().unwrap().records[0].travel_time()
         };
         assert!(run_one(near_idx) < run_one(far_idx));
     }
@@ -338,7 +369,7 @@ mod tests {
         let profile = c1_profile(&cfg);
         let mut sim = Simulation::new(&cfg, profile);
         sim.add_budgets(&vec![1; 14]);
-        let res = sim.run_until_done();
+        let res = sim.run_until_done().unwrap();
         assert_eq!(res.records.len(), 14);
         assert!(res.task_counts().iter().all(|&c| c == 1));
         // Contention at 2 MCs: travel times spread out.
@@ -355,7 +386,7 @@ mod tests {
         let mut counts = vec![0u64; 14];
         counts[3] = 5;
         sim.add_budgets(&counts);
-        let res = sim.run_until_done();
+        let res = sim.run_until_done().unwrap();
         assert_eq!(res.records.len(), 5);
         // Strictly increasing issue and completion times; next issue is at
         // or after previous completion (sequential loop).
@@ -370,10 +401,10 @@ mod tests {
         let profile = c1_profile(&cfg);
         let mut sim = Simulation::new(&cfg, profile);
         sim.add_budgets(&vec![2; 14]);
-        let phase1 = sim.run_until_budgets_met();
+        let phase1 = sim.run_until_budgets_met().unwrap();
         assert_eq!(phase1.records.len(), 28);
         sim.add_budgets(&vec![1; 14]);
-        let phase2 = sim.run_until_done();
+        let phase2 = sim.run_until_done().unwrap();
         assert_eq!(phase2.records.len(), 42);
         assert!(phase2.latency > phase1.latency);
     }
@@ -385,10 +416,41 @@ mod tests {
         let run = || {
             let mut sim = Simulation::new(&cfg, profile);
             sim.add_budgets(&vec![10; 14]);
-            let r = sim.run_until_done();
+            let r = sim.run_until_done().unwrap();
             (r.latency, r.drained_at, r.records.len())
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn per_cell_state_is_send() {
+        // The sweep engine executes one Simulation per grid cell on pool
+        // workers; everything a cell owns must cross a thread boundary.
+        // (Compile-time audit: no Rc/RefCell/raw-pointer state anywhere in
+        // the platform model.)
+        fn assert_send<T: Send>() {}
+        assert_send::<Simulation>();
+        assert_send::<crate::noc::Network>();
+        assert_send::<Pe>();
+        assert_send::<Mc>();
+        assert_send::<SimResult>();
+        assert_send::<crate::mapping::MappedRun>();
+        assert_send::<anyhow::Error>();
+    }
+
+    #[test]
+    fn exceeding_the_cycle_cap_is_a_descriptive_error() {
+        // A 10-cycle cap cannot finish even one C1 task: the run must
+        // return a deadlock report, not spin to the default 2e9 cap.
+        let cfg = PlatformConfig::builder().max_phase_cycles(10).build().unwrap();
+        let profile = c1_profile(&cfg);
+        let mut sim = Simulation::new(&cfg, profile);
+        sim.add_budgets(&vec![1; 14]);
+        let err = sim.run_until_done().unwrap_err().to_string();
+        assert!(err.contains("max_phase_cycles = 10"), "{err}");
+        assert!(err.contains("4x4 mesh"), "must name the platform: {err}");
+        assert!(err.contains("14 tasks outstanding"), "must count the stuck work: {err}");
+        assert!(err.contains("deadlock"), "{err}");
     }
 
     #[test]

@@ -73,6 +73,12 @@ pub struct PlatformConfig {
     pub static_hop_cycles: u64,
     /// Memory-controller service discipline (see [`MemModel`]).
     pub mem_model: MemModel,
+    /// Hard per-phase cycle cap for the co-simulation engine: a phase that
+    /// fails to converge within this many cycles is reported as a
+    /// descriptive error (deadlock) instead of spinning forever. The
+    /// default is far above any legitimate run; tests shrink it to
+    /// exercise the error path.
+    pub max_phase_cycles: u64,
 }
 
 /// Builder for [`PlatformConfig`]: arbitrary W×H meshes, arbitrary MC
@@ -176,6 +182,13 @@ impl PlatformBuilder {
         self
     }
 
+    /// Hard per-phase cycle cap before a simulation run reports a
+    /// deadlock error (default 2 × 10⁹).
+    pub fn max_phase_cycles(mut self, cycles: u64) -> Self {
+        self.cfg.max_phase_cycles = cycles;
+        self
+    }
+
     /// Validate and return the configuration. Every structural error —
     /// mesh too small, MC ids out of range or duplicated, no PE left, a
     /// flit smaller than one datum — is reported here rather than deep
@@ -225,6 +238,7 @@ impl PlatformConfig {
             ni_packetize_cycles: 2,
             static_hop_cycles: 4,
             mem_model: MemModel::Queued,
+            max_phase_cycles: 2_000_000_000,
         }
     }
 
@@ -280,6 +294,7 @@ impl PlatformConfig {
         anyhow::ensure!(self.num_vcs >= 1 && self.vc_depth >= 1, "need VCs and buffers");
         anyhow::ensure!(self.flit_bits >= self.data_bits, "flit smaller than one datum");
         anyhow::ensure!(self.pe_clock_ratio >= 1, "PE clock ratio must be >= 1");
+        anyhow::ensure!(self.max_phase_cycles >= 1, "max_phase_cycles must be >= 1");
         Ok(())
     }
 }
@@ -384,6 +399,14 @@ mod tests {
         assert!(PlatformConfig::builder().flit_bits(8).build().is_err());
         // 1-wide mesh.
         assert!(PlatformConfig::builder().mesh(1, 16).mc_nodes([0]).build().is_err());
+    }
+
+    #[test]
+    fn max_phase_cycles_is_configurable_and_validated() {
+        let p = PlatformConfig::builder().max_phase_cycles(1_000).build().unwrap();
+        assert_eq!(p.max_phase_cycles, 1_000);
+        assert_eq!(PlatformConfig::default_2mc().max_phase_cycles, 2_000_000_000);
+        assert!(PlatformConfig::builder().max_phase_cycles(0).build().is_err());
     }
 
     #[test]

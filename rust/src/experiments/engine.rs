@@ -33,12 +33,38 @@
 //! — e.g. with experimental strategies — can be swapped in with
 //! [`Scenario::registry`], or a boxed implementation pushed directly with
 //! [`Scenario::mapper_impl`]).
+//!
+//! # Parallel sweeps
+//!
+//! Grid cells are independent cycle-accurate simulations, so
+//! [`Scenario::run`] executes them on a chunk-stealing
+//! [`ThreadPool`](crate::util::ThreadPool): cells are enumerated up
+//! front, workers steal indices from the shared range, and every
+//! [`Cell`] is written back into its grid slot. **Results are bit-for-bit
+//! identical to the serial order for any worker count** — each cell is a
+//! self-contained deterministic simulation (no shared PRNG, no static
+//! scratch; see the `Send` audit in `accel::sim`), and only the wall-clock
+//! order of execution varies.
+//!
+//! The worker count resolves in priority order:
+//!
+//! 1. [`Scenario::jobs`] — explicit on the scenario; `jobs(1)` is the
+//!    exact old serial path (no threads spawned);
+//! 2. the `NOCTT_JOBS` environment variable (how the CLI's `--jobs` flag
+//!    travels; rejected with a descriptive error if not a positive
+//!    integer);
+//! 3. the machine's available parallelism.
+//!
+//! A cell whose simulation fails to converge (the platform's
+//! `max_phase_cycles` deadlock cap) fails the sweep with the
+//! {platform × layer × mapper} cell named, instead of hanging a worker.
 
 use anyhow::{ensure, Context, Result};
 
 use crate::config::PlatformConfig;
 use crate::dnn::LayerSpec;
 use crate::mapping::{self, MapCtx, MappedRun, Mapper, Registry};
+use crate::util::threadpool::{parse_jobs, ThreadPool};
 
 /// A mapper slot: either a name resolved through the registry at
 /// [`Scenario::run`] time, or a concrete implementation.
@@ -47,6 +73,11 @@ enum MapperSlot {
     Impl(Box<dyn Mapper>),
 }
 
+/// Marker error for cells cancelled after another cell already failed
+/// the sweep — filtered out of error reporting so the *first real*
+/// failure (with its cell named) is what surfaces.
+const CELL_SKIPPED: &str = "cell skipped: an earlier cell already failed the sweep";
+
 /// A declarative experiment grid: {platforms × layers × mappers}.
 pub struct Scenario {
     name: String,
@@ -54,6 +85,7 @@ pub struct Scenario {
     platforms: Vec<(String, PlatformConfig)>,
     layers: Vec<LayerSpec>,
     mappers: Vec<MapperSlot>,
+    jobs: Option<usize>,
 }
 
 impl Scenario {
@@ -65,7 +97,17 @@ impl Scenario {
             platforms: Vec::new(),
             layers: Vec::new(),
             mappers: Vec::new(),
+            jobs: None,
         }
+    }
+
+    /// Worker threads for [`run`](Self::run). `1` forces the exact serial
+    /// path; `0` is rejected at run time. When unset, `NOCTT_JOBS` and
+    /// then the machine's available parallelism decide (see the module
+    /// docs on determinism — the results are identical either way).
+    pub fn jobs(mut self, n: usize) -> Self {
+        self.jobs = Some(n);
+        self
     }
 
     /// Replace the registry used to resolve mapper names.
@@ -113,14 +155,18 @@ impl Scenario {
         self
     }
 
-    /// Execute the full grid and collect the results.
+    /// Execute the full grid — in parallel, deterministically — and
+    /// collect the results.
     ///
     /// Fails fast — before any simulation — on an empty grid dimension, an
-    /// invalid platform, or a mapper name the registry does not know.
+    /// invalid platform, an invalid jobs knob, or a mapper name the
+    /// registry does not know. Fails after the sweep (with the cell named)
+    /// if any cell's simulation does not converge.
     pub fn run(self) -> Result<SweepResults> {
         ensure!(!self.platforms.is_empty(), "scenario '{}' has no platforms", self.name);
         ensure!(!self.layers.is_empty(), "scenario '{}' has no layers", self.name);
         ensure!(!self.mappers.is_empty(), "scenario '{}' has no mappers", self.name);
+        let jobs = self.resolve_jobs()?;
         for (label, cfg) in &self.platforms {
             cfg.validate()
                 .with_context(|| format!("scenario '{}', platform '{label}'", self.name))?;
@@ -140,15 +186,75 @@ impl Scenario {
             })
             .collect::<Result<_>>()?;
 
-        let mut cells = Vec::with_capacity(self.platforms.len() * self.layers.len() * mappers.len());
-        for (pi, (_, cfg)) in self.platforms.iter().enumerate() {
-            for (li, layer) in self.layers.iter().enumerate() {
-                let ctx = MapCtx::new(cfg, layer);
-                for (mi, mapper) in mappers.iter().enumerate() {
-                    cells.push(Cell { platform: pi, layer: li, mapper: mi, run: mapper.execute(&ctx) });
+        // Enumerate the grid up front (platform-major, then layer, then
+        // mapper — the serial report order), then execute the cells on the
+        // pool. Each worker builds its own MapCtx and Simulation, so cells
+        // share nothing but read-only platform/layer/mapper references;
+        // writing results back by cell index makes the output order — and
+        // therefore SweepResults — identical for any worker count.
+        let mut specs =
+            Vec::with_capacity(self.platforms.len() * self.layers.len() * mappers.len());
+        for pi in 0..self.platforms.len() {
+            for li in 0..self.layers.len() {
+                for mi in 0..mappers.len() {
+                    specs.push((pi, li, mi));
                 }
             }
         }
+        let pool = ThreadPool::new(jobs);
+        let platforms_ref = &self.platforms;
+        let layers_ref = &self.layers;
+        let mappers_ref = &mappers;
+        let name_ref = &self.name;
+        // One failed cell cancels the cells that have not started yet —
+        // a deadlocked cell burns its whole max_phase_cycles cap, and a
+        // systemic failure must not pay that cap once per remaining cell.
+        // Cells already in flight still finish, so when several cells
+        // fail concurrently the *reported* cell may vary run to run; the
+        // successful-sweep results remain fully deterministic.
+        let failed = std::sync::atomic::AtomicBool::new(false);
+        let runs: Vec<Result<MappedRun>> = pool.map(specs.len(), |i| {
+            if failed.load(std::sync::atomic::Ordering::Relaxed) {
+                return Err(anyhow::anyhow!(CELL_SKIPPED));
+            }
+            let (pi, li, mi) = specs[i];
+            let (plabel, cfg) = &platforms_ref[pi];
+            let layer = &layers_ref[li];
+            let mapper = &mappers_ref[mi];
+            let run = mapper.execute(&MapCtx::new(cfg, layer)).with_context(|| {
+                format!(
+                    "scenario '{name_ref}': cell {{platform '{plabel}' × layer '{}' × mapper '{}'}} failed",
+                    layer.name,
+                    mapper.label()
+                )
+            });
+            if run.is_err() {
+                failed.store(true, std::sync::atomic::Ordering::Relaxed);
+            }
+            run
+        });
+        let mut cells = Vec::with_capacity(specs.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut skipped = 0usize;
+        for (&(pi, li, mi), run) in specs.iter().zip(runs) {
+            match run {
+                Ok(run) => cells.push(Cell { platform: pi, layer: li, mapper: mi, run }),
+                Err(e) if e.to_string() == CELL_SKIPPED => skipped += 1,
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(if skipped > 0 {
+                e.context(format!("sweep aborted early ({skipped} cells skipped)"))
+            } else {
+                e
+            });
+        }
+
         let (platform_labels, platforms): (Vec<String>, Vec<PlatformConfig>) =
             self.platforms.into_iter().unzip();
         Ok(SweepResults {
@@ -159,6 +265,25 @@ impl Scenario {
             layers: self.layers,
             cells,
         })
+    }
+
+    /// Resolve the worker count: explicit [`jobs`](Self::jobs), then the
+    /// `NOCTT_JOBS` environment variable, then available parallelism.
+    fn resolve_jobs(&self) -> Result<usize> {
+        match self.jobs {
+            Some(n) => {
+                ensure!(
+                    n >= 1,
+                    "scenario '{}': jobs(0) is invalid — need at least one worker",
+                    self.name
+                );
+                Ok(n)
+            }
+            None => match std::env::var("NOCTT_JOBS") {
+                Ok(v) => parse_jobs(&v, "NOCTT_JOBS"),
+                Err(_) => Ok(ThreadPool::available()),
+            },
+        }
     }
 }
 
@@ -305,6 +430,89 @@ mod tests {
             .run()
             .unwrap_err();
         assert!(format!("{err:?}").contains("broken"));
+    }
+
+    #[test]
+    fn jobs_zero_is_rejected_by_run() {
+        let err = Scenario::new("t")
+            .platform("2mc", PlatformConfig::default_2mc())
+            .layer(tiny_layer("a", 28))
+            .mapper("row-major")
+            .jobs(0)
+            .run()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("jobs(0)"), "{msg}");
+        assert!(msg.contains("'t'"), "must name the scenario: {msg}");
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial_grid_exactly() {
+        let build = |jobs: usize| {
+            Scenario::new("par")
+                .platform("2mc", PlatformConfig::default_2mc())
+                .platform("4mc", PlatformConfig::default_4mc())
+                .layer(tiny_layer("a", 28))
+                .layer(tiny_layer("b", 56))
+                .mapper("row-major")
+                .mapper("distance")
+                .jobs(jobs)
+                .run()
+                .unwrap()
+        };
+        let serial = build(1);
+        let parallel = build(4);
+        assert_eq!(serial.cells.len(), parallel.cells.len());
+        for (s, p) in serial.cells.iter().zip(&parallel.cells) {
+            assert_eq!((s.platform, s.layer, s.mapper), (p.platform, p.layer, p.mapper));
+            assert_eq!(s.run.counts, p.run.counts);
+            assert_eq!(s.run.summary.latency, p.run.summary.latency);
+            assert_eq!(s.run.result.records.len(), p.run.result.records.len());
+        }
+    }
+
+    #[test]
+    fn deadlocked_cell_fails_the_sweep_with_the_cell_named() {
+        // A 10-cycle phase cap cannot complete any cell; the sweep must
+        // return an error naming the {platform × layer × mapper} cell
+        // instead of hanging a worker.
+        let broken =
+            PlatformConfig::builder().max_phase_cycles(10).build().unwrap();
+        for jobs in [1usize, 4] {
+            let err = Scenario::new("dl")
+                .platform("capped", broken.clone())
+                .layer(tiny_layer("a", 28))
+                .mapper("row-major")
+                .jobs(jobs)
+                .run()
+                .unwrap_err();
+            let msg = format!("{err:?}");
+            assert!(msg.contains("capped"), "jobs={jobs}: platform missing: {msg}");
+            assert!(msg.contains("'a'"), "jobs={jobs}: layer missing: {msg}");
+            assert!(msg.contains("row-major"), "jobs={jobs}: mapper missing: {msg}");
+            assert!(msg.contains("deadlock"), "jobs={jobs}: cause missing: {msg}");
+        }
+    }
+
+    #[test]
+    fn sweep_aborts_early_after_the_first_deadlocked_cell() {
+        // On the serial path the first cell fails, the remaining three
+        // are skipped (not simulated to their cycle caps), and the error
+        // reports both the failing cell and the skip count.
+        let broken = PlatformConfig::builder().max_phase_cycles(10).build().unwrap();
+        let err = Scenario::new("dl-multi")
+            .platform("capped", broken)
+            .layer(tiny_layer("a", 28))
+            .layer(tiny_layer("b", 28))
+            .mapper("row-major")
+            .mapper("distance")
+            .jobs(1)
+            .run()
+            .unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("3 cells skipped"), "{msg}");
+        assert!(msg.contains("row-major"), "first failing cell must be named: {msg}");
+        assert!(msg.contains("'a'"), "{msg}");
     }
 
     #[test]

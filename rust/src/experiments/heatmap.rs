@@ -6,14 +6,18 @@
 //! on the links feeding the two MC columns (nodes 9/10) and on the MCs'
 //! local ejection ports, which is exactly why nearer PEs see shorter
 //! `T_req`/`T_resp` and why distance alone (Eq. 1) under-corrects.
+//!
+//! Like every other simulating experiment this one runs through the
+//! [`Scenario`] engine (the per-router port counters ride along in
+//! [`SimResult::net`](crate::accel::SimResult)), so it shares the
+//! parallel sweep path and the jobs knob.
 
 use crate::config::PlatformConfig;
 use crate::dnn::lenet5;
-use crate::mapping::row_major;
-use crate::accel::Simulation;
 use crate::noc::topology::{NUM_PORTS, PORT_NAMES};
 use crate::util::Table;
 
+use super::engine::Scenario;
 use super::Report;
 
 /// Per-node switched-flit counts for C1 under row-major mapping.
@@ -23,10 +27,13 @@ pub fn data(quick: bool) -> Vec<[u64; NUM_PORTS]> {
     if quick {
         layer.tasks /= 8;
     }
-    let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
-    sim.add_budgets(&row_major::counts(layer.tasks, cfg.num_pes()));
-    sim.run_until_done();
-    sim.network_stats().switched_per_port.clone()
+    let results = Scenario::new("heatmap")
+        .platform("2mc", cfg)
+        .layer(layer)
+        .mapper("row-major")
+        .run()
+        .expect("heatmap grid");
+    results.run(0, 0, 0).result.net.switched_per_port.clone()
 }
 
 /// Render the report.
@@ -85,12 +92,13 @@ mod tests {
         let cfg = PlatformConfig::default_2mc();
         let mut layer = lenet5(6).remove(0);
         layer.tasks /= 16;
-        let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
+        let mut sim = crate::accel::Simulation::new(&cfg, layer.profile(&cfg));
         sim.add_budgets(&crate::mapping::row_major::counts(layer.tasks, cfg.num_pes()));
-        sim.run_until_done();
-        let stats = sim.network_stats();
-        let per_port_sum: u64 = stats.switched_per_port.iter().flat_map(|p| p.iter()).sum();
-        assert_eq!(per_port_sum, stats.flits_switched);
+        let res = sim.run_until_done().unwrap();
+        let per_port_sum: u64 = res.net.switched_per_port.iter().flat_map(|p| p.iter()).sum();
+        assert_eq!(per_port_sum, res.net.flits_switched);
+        // The snapshot in SimResult matches the live counters.
+        assert_eq!(res.net.flits_switched, sim.network_stats().flits_switched);
     }
 
     #[test]

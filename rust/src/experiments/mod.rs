@@ -12,15 +12,18 @@
 //! | [`ablation`] | extension — memory-service discipline vs. saturation |
 //! | [`heatmap`] | extension — per-router congestion heatmap |
 //!
-//! Every mapping-comparison experiment (fig7–fig11, ablation) builds a
+//! Every simulating experiment (fig7–fig11, ablation, heatmap) builds a
 //! declarative {platforms × layers × mappers} grid on the
 //! [`engine::Scenario`] sweep engine and renders its
 //! [`engine::SweepResults`]; strategies are resolved by
 //! [registry](crate::mapping::registry) name, so a newly registered
-//! mapper can join any sweep without touching these modules. Two modules
-//! stay standalone by nature: [`table1`] is pure packet-size math (no
-//! simulation), and [`heatmap`] drives the [`Simulation`](crate::accel::Simulation)
-//! directly for raw per-router port counters the grid does not collect.
+//! mapper can join any sweep without touching these modules. The grid
+//! cells execute in parallel on the crate's
+//! [`ThreadPool`](crate::util::ThreadPool) with deterministic results
+//! (see the [engine docs](engine) — `--jobs`/`NOCTT_JOBS` control the
+//! worker count). [`table1`] is pure packet-size math with no simulation
+//! and stays serial — seven nanosecond-scale rows sit far below the
+//! pool's profitability threshold.
 //!
 //! Absolute cycle counts differ from the paper (different testbeds); the
 //! *shape* — who wins, by roughly what factor, where the crossovers sit —

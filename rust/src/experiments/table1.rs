@@ -34,6 +34,13 @@ pub struct Row {
 }
 
 /// Compute the table rows.
+///
+/// Deliberately serial: the seven rows are nanosecond-scale packet math,
+/// far below the profitability threshold of the sweep engine's
+/// [`ThreadPool`](crate::util::ThreadPool) (whose per-`map` thread spawns
+/// would dominate — and pollute the `table1/kernel-packet-law` bench).
+/// Simulating experiments run parallel through `Scenario`; this one
+/// stays a plain iterator.
 pub fn rows() -> Vec<Row> {
     let cfg = PlatformConfig::default_2mc();
     KERNELS

@@ -41,6 +41,22 @@
 //! assert_eq!(sw10.run.counts.iter().sum::<u64>(), results.layers[0].tasks);
 //! ```
 //!
+//! ## Parallel sweeps
+//!
+//! Grid cells are independent simulations, so
+//! [`experiments::engine::Scenario::run`] executes them on the crate's
+//! chunk-stealing [`util::ThreadPool`] (std-only — no rayon). The worker
+//! count comes from [`Scenario::jobs`](experiments::engine::Scenario::jobs),
+//! the `NOCTT_JOBS` environment variable, or the machine's available
+//! parallelism, in that order; the CLI exposes it as `--jobs N`.
+//!
+//! **Determinism guarantee:** `jobs(k)` yields a `SweepResults` that is
+//! bit-for-bit identical to the serial path (`jobs(1)`) for every `k` —
+//! cells share no mutable state (no global PRNG, no static scratch; the
+//! platform model is plain owned data, audited `Send` in `accel`), and
+//! each result is written back into its grid slot by index. Parallelism
+//! changes wall-clock time, never numbers.
+//!
 //! ## Layers underneath
 //!
 //! * [`noc`] — a cycle-accurate 2-D-mesh virtual-channel Network-on-Chip

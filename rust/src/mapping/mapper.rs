@@ -13,6 +13,8 @@
 
 use std::borrow::Cow;
 
+use anyhow::Result;
+
 use crate::config::PlatformConfig;
 use crate::dnn::LayerSpec;
 use crate::mapping::{run_precomputed, MappedRun};
@@ -52,6 +54,14 @@ impl<'a> MapCtx<'a> {
 /// performs an extra profiling run. Their `counts` must still return the
 /// final (conserving) allocation, even if producing it costs a
 /// measurement run.
+///
+/// The `Send + Sync` bounds are what let the
+/// [`Scenario`](crate::experiments::engine::Scenario) engine execute grid
+/// cells on pool workers: a `Box<dyn Mapper>` is shared by reference
+/// across threads, and [`execute`](Mapper::execute) must be callable from
+/// any of them. Mappers therefore keep per-run state on the stack (every
+/// builtin is a zero-sized or `Copy` struct); a mapper that cached
+/// mutable scratch in `&self` would need its own interior locking.
 pub trait Mapper: Send + Sync {
     /// Stable display label used in tables and the CLI (e.g. "sampling-10").
     fn label(&self) -> Cow<'static, str>;
@@ -61,7 +71,11 @@ pub trait Mapper: Send + Sync {
 
     /// Map and execute the layer. The default runs [`counts`](Mapper::counts)
     /// as a precomputed budget; online mappers override this.
-    fn execute(&self, ctx: &MapCtx<'_>) -> MappedRun {
+    ///
+    /// Fails when the platform run does not converge (the simulator's
+    /// `max_phase_cycles` deadlock cap) — sweep engines surface the error
+    /// with the failing cell named instead of hanging a worker.
+    fn execute(&self, ctx: &MapCtx<'_>) -> Result<MappedRun> {
         run_precomputed(ctx.cfg, ctx.layer, self.label(), self.counts(ctx), false)
     }
 }

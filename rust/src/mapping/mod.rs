@@ -47,6 +47,8 @@ pub use registry::{registry, Registry, RegistryEntry};
 
 use std::borrow::Cow;
 
+use anyhow::Result;
+
 use crate::accel::{SimResult, Simulation};
 use crate::config::PlatformConfig;
 use crate::dnn::LayerSpec;
@@ -115,7 +117,7 @@ impl Mapper for Strategy {
         self.to_mapper().counts(ctx)
     }
 
-    fn execute(&self, ctx: &MapCtx<'_>) -> MappedRun {
+    fn execute(&self, ctx: &MapCtx<'_>) -> Result<MappedRun> {
         self.to_mapper().execute(ctx)
     }
 }
@@ -138,7 +140,8 @@ pub struct MappedRun {
 
 /// Map and execute `layer` on the platform with `strategy` (back-compat
 /// entry point; equivalent to `strategy.to_mapper().execute(..)`).
-pub fn run_layer(cfg: &PlatformConfig, layer: &LayerSpec, strategy: Strategy) -> MappedRun {
+/// Fails only when the platform run hits the deadlock cycle cap.
+pub fn run_layer(cfg: &PlatformConfig, layer: &LayerSpec, strategy: Strategy) -> Result<MappedRun> {
     strategy.to_mapper().execute(&MapCtx::new(cfg, layer))
 }
 
@@ -149,12 +152,12 @@ pub(crate) fn run_precomputed(
     label: Cow<'static, str>,
     counts: Vec<u64>,
     extra_run: bool,
-) -> MappedRun {
+) -> Result<MappedRun> {
     debug_assert_eq!(counts.iter().sum::<u64>(), layer.tasks, "counts must conserve tasks");
     let mut sim = Simulation::new(cfg, layer.profile(cfg));
     sim.add_budgets(&counts);
-    let result = sim.run_until_done();
-    finish(label, counts, result, extra_run)
+    let result = sim.run_until_done()?;
+    Ok(finish(label, counts, result, extra_run))
 }
 
 pub(crate) fn finish(
@@ -195,7 +198,7 @@ mod tests {
         let cfg = PlatformConfig::default_2mc();
         let layer = LayerSpec::conv("mini", 5, 1.0, 140);
         for s in Strategy::fig11_set() {
-            let run = run_layer(&cfg, &layer, s);
+            let run = run_layer(&cfg, &layer, s).unwrap();
             assert_eq!(
                 run.counts.iter().sum::<u64>(),
                 140,

@@ -178,7 +178,7 @@ mod tests {
         let m = reg.resolve("toy").expect("registered strategy must resolve");
         let cfg = PlatformConfig::default_2mc();
         let layer = LayerSpec::conv("t", 3, 1.0, 28);
-        let run = m.execute(&MapCtx::new(&cfg, &layer));
+        let run = m.execute(&MapCtx::new(&cfg, &layer)).unwrap();
         assert_eq!(run.mapper, "toy");
         assert_eq!(run.counts.iter().sum::<u64>(), 28);
     }

@@ -19,6 +19,8 @@
 
 use std::borrow::Cow;
 
+use anyhow::Result;
+
 use crate::accel::Simulation;
 use crate::config::PlatformConfig;
 use crate::dnn::LayerSpec;
@@ -34,12 +36,14 @@ impl Mapper for PostRun {
         Cow::Borrowed("post-run")
     }
 
-    /// The Eq. 4–5 allocation. Costs a full profiling run to produce.
+    /// The Eq. 4–5 allocation. Costs a full profiling run to produce (and
+    /// panics if that run deadlocks — use [`execute`](Mapper::execute) for
+    /// the recoverable-error path).
     fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
-        post_run_counts(ctx.cfg, ctx.layer)
+        post_run_counts(ctx.cfg, ctx.layer).expect("post-run profiling run did not converge")
     }
 
-    fn execute(&self, ctx: &MapCtx<'_>) -> MappedRun {
+    fn execute(&self, ctx: &MapCtx<'_>) -> Result<MappedRun> {
         run_post_run(ctx.cfg, ctx.layer)
     }
 }
@@ -55,18 +59,22 @@ impl Mapper for Sampling {
     }
 
     /// The final allocation (window + Eq. 8 residual). For layers big
-    /// enough to sample this costs a measurement run of the platform;
-    /// small layers take the free row-major fallback.
+    /// enough to sample this costs a measurement run of the platform (and
+    /// panics if that run deadlocks — use [`execute`](Mapper::execute) for
+    /// the recoverable-error path); small layers take the free row-major
+    /// fallback.
     fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
         let n = ctx.num_pes();
         if ctx.layer.tasks < self.0 * n as u64 {
             row_major::counts(ctx.layer.tasks, n)
         } else {
-            run_sampling(ctx.cfg, ctx.layer, self.0).counts
+            run_sampling(ctx.cfg, ctx.layer, self.0)
+                .expect("sampling measurement run did not converge")
+                .counts
         }
     }
 
-    fn execute(&self, ctx: &MapCtx<'_>) -> MappedRun {
+    fn execute(&self, ctx: &MapCtx<'_>) -> Result<MappedRun> {
         run_sampling(ctx.cfg, ctx.layer, self.0)
     }
 }
@@ -97,20 +105,20 @@ fn mean_travel_per_pe(records: &[crate::accel::TaskRecord], num_pes: usize) -> V
 
 /// The Eq. 4–5 post-run allocation: profile with an even-mapped run, then
 /// apportion inversely to the recorded mean travel times.
-pub fn post_run_counts(cfg: &PlatformConfig, layer: &LayerSpec) -> Vec<u64> {
+pub fn post_run_counts(cfg: &PlatformConfig, layer: &LayerSpec) -> Result<Vec<u64>> {
     // Extra run (the cost the paper attributes to this oracle).
     let probe_counts = row_major::counts(layer.tasks, cfg.num_pes());
     let mut probe = Simulation::new(cfg, layer.profile(cfg));
     probe.add_budgets(&probe_counts);
-    let probe_res = probe.run_until_done();
+    let probe_res = probe.run_until_done()?;
     let times = mean_travel_per_pe(&probe_res.records, cfg.num_pes());
-    inverse_proportional(layer.tasks, &times)
+    Ok(inverse_proportional(layer.tasks, &times))
 }
 
 /// Post-run travel-time mapping: profile with an extra even-mapped run,
 /// then execute with counts solving Eq. 4–5 on the recorded times.
-pub fn run_post_run(cfg: &PlatformConfig, layer: &LayerSpec) -> MappedRun {
-    let counts = post_run_counts(cfg, layer);
+pub fn run_post_run(cfg: &PlatformConfig, layer: &LayerSpec) -> Result<MappedRun> {
+    let counts = post_run_counts(cfg, layer)?;
     run_precomputed(cfg, layer, Cow::Borrowed("post-run"), counts, true)
 }
 
@@ -121,7 +129,7 @@ pub fn run_post_run(cfg: &PlatformConfig, layer: &LayerSpec) -> MappedRun {
 ///   per-PE sampled means `T_s` (Eq. 7), allocate the residual
 ///   `Task_all − Task_sampled` inversely proportional to `T_s` (Eq. 8),
 ///   and continue the *same* platform run — no extra run needed.
-pub fn run_sampling(cfg: &PlatformConfig, layer: &LayerSpec, window: u64) -> MappedRun {
+pub fn run_sampling(cfg: &PlatformConfig, layer: &LayerSpec, window: u64) -> Result<MappedRun> {
     assert!(window >= 1, "sampling window must be at least 1");
     let label = Cow::Owned(format!("sampling-{window}"));
     let n = cfg.num_pes();
@@ -134,15 +142,15 @@ pub fn run_sampling(cfg: &PlatformConfig, layer: &LayerSpec, window: u64) -> Map
     let mut sim = Simulation::new(cfg, layer.profile(cfg));
     // Phase 1: the sampling window, mapped evenly.
     sim.add_budgets(&vec![window; n]);
-    let phase1 = sim.run_until_budgets_met();
+    let phase1 = sim.run_until_budgets_met()?;
     let t_s = mean_travel_per_pe(&phase1.records, n);
     // Phase 2: residual tasks, Eq. 7–8.
     let residual = layer.tasks - sampled_total;
     let residual_counts = inverse_proportional(residual, &t_s);
     sim.add_budgets(&residual_counts);
-    let result = sim.run_until_done();
+    let result = sim.run_until_done()?;
     let counts: Vec<u64> = residual_counts.iter().map(|c| c + window).collect();
-    finish(label, counts, result, false)
+    Ok(finish(label, counts, result, false))
 }
 
 #[cfg(test)]
@@ -167,13 +175,14 @@ mod tests {
             row_major::counts(l.tasks, cfg.num_pes()),
             false,
         )
+        .unwrap()
     }
 
     #[test]
     fn post_run_balances_accumulated_time() {
         let l = layer();
         let even = row_major_run(&cfg(), &l);
-        let post = run_post_run(&cfg(), &l);
+        let post = run_post_run(&cfg(), &l).unwrap();
         assert!(post.extra_run);
         assert!(
             post.summary.rho_accum < even.summary.rho_accum,
@@ -186,7 +195,7 @@ mod tests {
 
     #[test]
     fn post_run_gives_fewer_tasks_to_far_pes() {
-        let post = run_post_run(&cfg(), &layer());
+        let post = run_post_run(&cfg(), &layer()).unwrap();
         let nodes = cfg().pe_nodes();
         let far = post.counts[nodes.iter().position(|&n| n == 0).unwrap()];
         let near = post.counts[nodes.iter().position(|&n| n == 5).unwrap()];
@@ -196,7 +205,7 @@ mod tests {
     #[test]
     fn sampling_small_layer_falls_back_to_row_major() {
         let small = LayerSpec::fc("F6", 120, 84);
-        let run = run_sampling(&cfg(), &small, 10); // needs 140 > 84
+        let run = run_sampling(&cfg(), &small, 10).unwrap(); // needs 140 > 84
         assert_eq!(run.counts, row_major::counts(84, 14));
         assert!(!run.extra_run);
     }
@@ -204,7 +213,7 @@ mod tests {
     #[test]
     fn sampling_uses_window_then_residual() {
         let l = layer();
-        let run = run_sampling(&cfg(), &l, 10);
+        let run = run_sampling(&cfg(), &l, 10).unwrap();
         assert_eq!(run.counts.iter().sum::<u64>(), l.tasks);
         // Every PE executed at least its window.
         assert!(run.summary.counts.iter().all(|&c| c >= 10), "{:?}", run.summary.counts);
@@ -217,7 +226,7 @@ mod tests {
     fn sampling_improves_over_row_major() {
         let l = layer();
         let even = row_major_run(&cfg(), &l);
-        let sw10 = run_sampling(&cfg(), &l, 10);
+        let sw10 = run_sampling(&cfg(), &l, 10).unwrap();
         assert!(
             sw10.summary.latency < even.summary.latency,
             "sampling-10 {} should beat row-major {}",
@@ -231,9 +240,9 @@ mod tests {
         // ρ(sw10) should be closer to the oracle than ρ(sw1) on a layer
         // with enough tasks (the §5.6 trend).
         let l = layer();
-        let post = run_post_run(&cfg(), &l);
-        let sw1 = run_sampling(&cfg(), &l, 1);
-        let sw10 = run_sampling(&cfg(), &l, 10);
+        let post = run_post_run(&cfg(), &l).unwrap();
+        let sw1 = run_sampling(&cfg(), &l, 1).unwrap();
+        let sw10 = run_sampling(&cfg(), &l, 10).unwrap();
         let d1 = (sw1.summary.latency as f64 - post.summary.latency as f64).abs();
         let d10 = (sw10.summary.latency as f64 - post.summary.latency as f64).abs();
         assert!(
@@ -244,7 +253,7 @@ mod tests {
 
     #[test]
     fn balanced_runs_have_low_unevenness() {
-        let post = run_post_run(&cfg(), &layer());
+        let post = run_post_run(&cfg(), &layer()).unwrap();
         let accum: Vec<Option<f64>> = post
             .result
             .totals
@@ -262,8 +271,8 @@ mod tests {
         let c = cfg();
         let l = layer();
         let ctx = MapCtx::new(&c, &l);
-        assert_eq!(PostRun.counts(&ctx), run_post_run(&c, &l).counts);
-        assert_eq!(Sampling(10).counts(&ctx), run_sampling(&c, &l, 10).counts);
+        assert_eq!(PostRun.counts(&ctx), run_post_run(&c, &l).unwrap().counts);
+        assert_eq!(Sampling(10).counts(&ctx), run_sampling(&c, &l, 10).unwrap().counts);
         let small = LayerSpec::fc("F6", 120, 84);
         let sctx = MapCtx::new(&c, &small);
         assert_eq!(Sampling(10).counts(&sctx), row_major::counts(84, 14));

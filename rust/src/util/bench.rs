@@ -3,7 +3,20 @@
 //! Measures wall-clock over repeated runs with warmup, reports mean ±
 //! standard deviation and optional throughput. Used by the `cargo bench`
 //! targets (`rust/benches/*`, `harness = false`).
+//!
+//! Two extras support the perf-regression CI pipeline:
+//!
+//! * [`BenchArgs`] parses the flags `cargo bench -- --smoke --json <path>`
+//!   forwards to a `harness = false` target: `--smoke` shortens the
+//!   measurement window (CI smoke mode — catches panics/deadlocks, not
+//!   regressions), `--json` selects a machine-readable output file.
+//! * [`BenchResult::to_json`] / [`write_json`] emit one JSON object per
+//!   bench (`name`, `iters`, `mean_ns`, `stddev_ns`, `rate`, `rate_unit`)
+//!   so the repo's perf trajectory can accumulate as `BENCH_*.json`
+//!   artifacts.
 
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.
@@ -38,6 +51,132 @@ impl BenchResult {
             s.push_str(&format!("  {:>12.2} {unit}/s", rate));
         }
         s
+    }
+
+    /// One machine-readable JSON object:
+    /// `{"name":…,"iters":…,"mean_ns":…,"stddev_ns":…,"rate":…,"rate_unit":…}`
+    /// (`rate`/`rate_unit` are `null` when no throughput was attached).
+    pub fn to_json(&self) -> String {
+        let (rate, unit) = match (self.rate(), self.throughput) {
+            (Some(rate), Some((_, unit))) => {
+                (format!("{rate}"), format!("\"{}\"", escape_json(unit)))
+            }
+            _ => ("null".to_string(), "null".to_string()),
+        };
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"stddev_ns\":{},\"rate\":{},\"rate_unit\":{}}}",
+            escape_json(&self.name),
+            self.iters,
+            self.mean.as_nanos(),
+            self.stddev.as_nanos(),
+            rate,
+            unit,
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write a JSON array of bench results — one object per bench — to `path`.
+pub fn write_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut file = std::fs::File::create(path)?;
+    writeln!(file, "[")?;
+    for (i, r) in results.iter().enumerate() {
+        let comma = if i + 1 < results.len() { "," } else { "" };
+        writeln!(file, "  {}{comma}", r.to_json())?;
+    }
+    writeln!(file, "]")?;
+    Ok(())
+}
+
+/// Wall-clock speedup of `fast` over `slow` (e.g. a parallel sweep over
+/// its serial twin): `slow.mean / fast.mean`.
+pub fn speedup(slow: &BenchResult, fast: &BenchResult) -> f64 {
+    slow.mean.as_secs_f64() / fast.mean.as_secs_f64()
+}
+
+/// Flags a `harness = false` bench target receives from
+/// `cargo bench -- --smoke --json <path>`.
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    /// Short smoke mode: tiny measurement windows and trimmed workloads —
+    /// catches panics and deadlocks in CI, not perf regressions.
+    pub smoke: bool,
+    /// Write machine-readable results here (see [`write_json`]).
+    pub json: Option<PathBuf>,
+}
+
+impl BenchArgs {
+    /// Parse from an argument iterator (excluding argv[0]). Unknown flags
+    /// are ignored — cargo forwards its own flags to bench binaries — but
+    /// a `--json` with a missing or flag-shaped value is a loud error,
+    /// not a silently dropped output file.
+    pub fn parse(argv: impl Iterator<Item = String>) -> anyhow::Result<Self> {
+        let mut args = Self::default();
+        let mut iter = argv.peekable();
+        while let Some(a) = iter.next() {
+            match a.as_str() {
+                "--smoke" => args.smoke = true,
+                "--json" => match iter.peek() {
+                    Some(path) if !path.starts_with("--") => {
+                        args.json = Some(PathBuf::from(iter.next().unwrap()));
+                    }
+                    _ => anyhow::bail!(
+                        "--json needs a file path argument (e.g. --json bench.json)"
+                    ),
+                },
+                other => {
+                    if let Some(path) = other.strip_prefix("--json=") {
+                        anyhow::ensure!(
+                            !path.is_empty(),
+                            "--json needs a file path argument (got an empty '--json=')"
+                        );
+                        args.json = Some(PathBuf::from(path));
+                    }
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// The measurement window: `full` normally, 30 ms in smoke mode.
+    pub fn min_time(&self, full: Duration) -> Duration {
+        if self.smoke {
+            Duration::from_millis(30)
+        } else {
+            full
+        }
+    }
+
+    /// Render + print every result, then write the JSON file if requested.
+    /// The standard tail of a bench main.
+    pub fn finish(&self, header: &str, results: &[BenchResult]) -> std::io::Result<()> {
+        println!("\n== {header} =={}", if self.smoke { " (smoke)" } else { "" });
+        for r in results {
+            println!("{}", r.render());
+        }
+        if let Some(path) = &self.json {
+            write_json(path, results)?;
+            println!("wrote {} bench results to {}", results.len(), path.display());
+        }
+        Ok(())
     }
 }
 
@@ -89,5 +228,88 @@ mod tests {
         let line = r.render();
         assert!(line.contains("spin"));
         assert!(line.contains("ops/s"));
+    }
+
+    fn fixed(name: &str, mean_ns: u64, throughput: Option<(f64, &'static str)>) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 5,
+            mean: Duration::from_nanos(mean_ns),
+            stddev: Duration::from_nanos(3),
+            throughput,
+        }
+    }
+
+    #[test]
+    fn json_object_carries_all_fields() {
+        let j = fixed("fig7/row-major", 1_500, Some((300.0, "sim-cycles"))).to_json();
+        assert!(j.contains("\"name\":\"fig7/row-major\""), "{j}");
+        assert!(j.contains("\"iters\":5"), "{j}");
+        assert!(j.contains("\"mean_ns\":1500"), "{j}");
+        assert!(j.contains("\"stddev_ns\":3"), "{j}");
+        assert!(j.contains("\"rate\":200000000"), "{j}");
+        assert!(j.contains("\"rate_unit\":\"sim-cycles\""), "{j}");
+    }
+
+    #[test]
+    fn json_without_throughput_has_null_rate() {
+        let j = fixed("plain", 10, None).to_json();
+        assert!(j.contains("\"rate\":null"), "{j}");
+        assert!(j.contains("\"rate_unit\":null"), "{j}");
+    }
+
+    #[test]
+    fn json_escapes_special_characters() {
+        let j = fixed("we\"ird\\name", 10, None).to_json();
+        assert!(j.contains("we\\\"ird\\\\name"), "{j}");
+    }
+
+    #[test]
+    fn write_json_produces_a_parsable_array() {
+        let path = std::env::temp_dir().join("noctt-bench-test.json");
+        let results =
+            vec![fixed("a", 10, Some((5.0, "ops"))), fixed("b", 20, None)];
+        write_json(&path, &results).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.trim_start().starts_with('['), "{text}");
+        assert!(text.trim_end().ends_with(']'), "{text}");
+        assert_eq!(text.matches("\"name\"").count(), 2, "{text}");
+        // Exactly one separating comma between the two objects.
+        assert_eq!(text.matches("},").count(), 1, "{text}");
+    }
+
+    #[test]
+    fn bench_args_parse_smoke_and_json() {
+        let parse = |tokens: &[&str]| BenchArgs::parse(tokens.iter().map(|s| s.to_string()));
+        let a = parse(&["--smoke", "--json", "out.json"]).unwrap();
+        assert!(a.smoke);
+        assert_eq!(a.json.as_deref(), Some(Path::new("out.json")));
+        let a = parse(&["--json=x.json", "--bench"]).unwrap(); // cargo noise ignored
+        assert!(!a.smoke);
+        assert_eq!(a.json.as_deref(), Some(Path::new("x.json")));
+        let a = parse(&[]).unwrap();
+        assert!(!a.smoke && a.json.is_none());
+        assert_eq!(a.min_time(Duration::from_secs(1)), Duration::from_secs(1));
+        let smoke = parse(&["--smoke"]).unwrap();
+        assert_eq!(smoke.min_time(Duration::from_secs(1)), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn bench_args_reject_json_without_a_path() {
+        let parse = |tokens: &[&str]| BenchArgs::parse(tokens.iter().map(|s| s.to_string()));
+        // A following flag must not be swallowed as the file name.
+        let err = parse(&["--json", "--smoke"]).unwrap_err().to_string();
+        assert!(err.contains("--json"), "{err}");
+        // Bare trailing --json and empty --json= fail loudly too.
+        assert!(parse(&["--json"]).is_err());
+        assert!(parse(&["--json="]).is_err());
+    }
+
+    #[test]
+    fn speedup_is_a_ratio_of_means() {
+        let slow = fixed("serial", 1_000, None);
+        let fast = fixed("parallel", 250, None);
+        assert!((speedup(&slow, &fast) - 4.0).abs() < 1e-9);
     }
 }

@@ -1,14 +1,17 @@
 //! Small self-contained utilities: deterministic PRNG, largest-remainder
-//! integer apportionment, ASCII table rendering, and a tiny property-testing
-//! harness used throughout the test-suite (no external crates are available
-//! offline, so these substitute for `rand`/`proptest`/`prettytable`).
+//! integer apportionment, ASCII table rendering, a chunk-stealing thread
+//! pool, and a tiny property-testing harness used throughout the
+//! test-suite (no external crates are available offline, so these
+//! substitute for `rand`/`proptest`/`prettytable`/`rayon`).
 
 pub mod apportion;
 pub mod bench;
 pub mod prng;
 pub mod proptest;
 pub mod table;
+pub mod threadpool;
 
 pub use apportion::largest_remainder;
 pub use prng::SplitMix64;
 pub use table::Table;
+pub use threadpool::ThreadPool;

@@ -1,0 +1,227 @@
+//! A dependency-free chunk-stealing thread pool (std::thread + channels).
+//!
+//! The offline build environment has no `rayon`, so the parallel sweep
+//! engine ([`crate::experiments::engine::Scenario`]) runs on this pool
+//! instead. The design is deliberately small:
+//!
+//! * **Work stealing over an index range.** [`ThreadPool::map`] enumerates
+//!   jobs `0..jobs` up front; workers race on a shared atomic cursor, so a
+//!   worker that draws cheap cells immediately steals the next index from
+//!   the range instead of idling behind a static partition.
+//! * **Deterministic output order.** Each result travels back over a
+//!   channel tagged with its job index and is written into its slot, so
+//!   the returned `Vec` is bit-for-bit identical to the serial order
+//!   regardless of worker count or scheduling.
+//! * **Serial escape hatch.** A pool of one thread (or a single job) runs
+//!   everything inline on the caller's thread — the exact pre-pool code
+//!   path, with no thread spawned at all.
+//! * **Panic propagation.** A panicking job cancels the remaining range
+//!   and the original panic payload resurfaces on the caller's thread.
+//!
+//! Workers are scoped ([`std::thread::scope`]), so jobs may borrow from
+//! the caller's stack; nothing here requires `'static` data.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// A fixed-width pool of worker threads for indexed parallel maps.
+///
+/// The pool itself is just a thread-count policy; threads are spawned
+/// per [`map`](Self::map) call as scoped workers and joined before it
+/// returns, so a `ThreadPool` is cheap to build and carries no state
+/// between calls (nothing to poison, nothing shared across sweeps).
+#[derive(Debug, Clone)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// A pool of `threads` workers. Clamped to at least one; one means
+    /// strictly serial execution on the caller's thread.
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// The machine's available parallelism (1 when it cannot be probed).
+    pub fn available() -> usize {
+        std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1)
+    }
+
+    /// Worker count this pool runs with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(jobs - 1)` across the pool's workers and
+    /// return the results **in index order** (identical to the serial
+    /// `(0..jobs).map(f).collect()`).
+    ///
+    /// Every index is executed exactly once (work conservation). If a job
+    /// panics, the remaining range is cancelled, all workers are joined,
+    /// and the original panic payload is re-raised here.
+    pub fn map<T, F>(&self, jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads == 1 || jobs <= 1 {
+            // The exact serial path: caller's thread, ascending order.
+            return (0..jobs).map(f).collect();
+        }
+        let workers = self.threads.min(jobs);
+        let cursor = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+        let mut slots: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
+        let mut panic_payload = None;
+        std::thread::scope(|scope| {
+            let cursor = &cursor;
+            let f = &f;
+            for _ in 0..workers {
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs {
+                        break;
+                    }
+                    let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+                    let panicked = result.is_err();
+                    // A closed channel means the collector gave up
+                    // (another job panicked); stop pulling work either way.
+                    if tx.send((i, result)).is_err() || panicked {
+                        break;
+                    }
+                });
+            }
+            drop(tx); // collector's loop ends when the last worker exits
+            for (i, result) in rx {
+                match result {
+                    Ok(value) => slots[i] = Some(value),
+                    Err(payload) => {
+                        // Cancel the rest of the range, then let the scope
+                        // join the workers before re-raising below.
+                        cursor.store(jobs, Ordering::Relaxed);
+                        panic_payload = Some(payload);
+                        break;
+                    }
+                }
+            }
+        });
+        if let Some(payload) = panic_payload {
+            resume_unwind(payload);
+        }
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("every job index sends exactly one result"))
+            .collect()
+    }
+}
+
+/// Parse a jobs knob (`--jobs`, `NOCTT_JOBS`): a positive integer.
+/// Errors name `origin` so the user knows which knob to fix.
+pub fn parse_jobs(value: &str, origin: &str) -> anyhow::Result<usize> {
+    let n: usize = value
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{origin} must be a positive integer, got '{value}'"))?;
+    anyhow::ensure!(n >= 1, "{origin} must be at least 1 (0 workers cannot make progress)");
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+
+    #[test]
+    fn map_preserves_index_order_at_any_width() {
+        let expect: Vec<usize> = (0..97).map(|i| i * i).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let pool = ThreadPool::new(threads);
+            assert_eq!(pool.map(97, |i| i * i), expect, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn work_conservation_every_index_runs_exactly_once() {
+        let seen = Mutex::new(Vec::new());
+        let pool = ThreadPool::new(4);
+        let out = pool.map(200, |i| {
+            seen.lock().unwrap().push(i);
+            i
+        });
+        assert_eq!(out, (0..200).collect::<Vec<_>>());
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 200, "no index may run twice or be dropped");
+        let uniq: HashSet<usize> = seen.iter().copied().collect();
+        assert_eq!(uniq.len(), 200);
+    }
+
+    #[test]
+    fn zero_jobs_and_zero_threads_are_harmless() {
+        assert_eq!(ThreadPool::new(0).threads(), 1, "clamped to one worker");
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map(1, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn panicking_job_propagates_the_original_payload() {
+        let pool = ThreadPool::new(4);
+        let caught = std::panic::catch_unwind(|| {
+            pool.map(64, |i| {
+                if i == 7 {
+                    panic!("job 7 exploded");
+                }
+                i
+            })
+        });
+        let payload = caught.expect_err("panic must cross the pool");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+            .unwrap_or("");
+        assert!(msg.contains("job 7 exploded"), "payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn serial_pool_panics_too() {
+        let pool = ThreadPool::new(1);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map(3, |i| {
+                if i == 2 {
+                    panic!("serial path panics unchanged");
+                }
+                i
+            })
+        }));
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn jobs_may_borrow_caller_state() {
+        let data: Vec<u64> = (0..50).collect();
+        let pool = ThreadPool::new(3);
+        let doubled = pool.map(data.len(), |i| data[i] * 2);
+        assert_eq!(doubled[49], 98);
+    }
+
+    #[test]
+    fn parse_jobs_accepts_positive_integers_only() {
+        assert_eq!(parse_jobs("1", "--jobs").unwrap(), 1);
+        assert_eq!(parse_jobs(" 8 ", "NOCTT_JOBS").unwrap(), 8);
+        for bad in ["0", "-1", "abc", "", "1.5"] {
+            let err = parse_jobs(bad, "--jobs").unwrap_err().to_string();
+            assert!(err.contains("--jobs"), "error must name the knob: {err}");
+        }
+        let err = parse_jobs("x", "NOCTT_JOBS").unwrap_err().to_string();
+        assert!(err.contains("NOCTT_JOBS"), "{err}");
+    }
+
+    #[test]
+    fn available_parallelism_is_at_least_one() {
+        assert!(ThreadPool::available() >= 1);
+    }
+}

@@ -66,7 +66,7 @@ fn prop_cheap_mappers_conserve_tasks_on_random_platforms() {
             cfg.mc_nodes.len()
         );
         // Executing the plan must run exactly those counts.
-        let run = mapper.execute(&ctx);
+        let run = mapper.execute(&ctx).unwrap();
         assert_eq!(run.counts, counts, "{spec}: executed plan differs");
         assert_eq!(run.summary.counts.iter().sum::<u64>(), layer.tasks, "{spec}: executed total");
     });
@@ -80,7 +80,7 @@ fn prop_online_mappers_conserve_tasks_on_random_platforms() {
         let layer = random_layer(rng);
         let spec = *rng.choose(&ONLINE_MAPPERS);
         let mapper = reg.resolve(spec).expect("builtin resolves");
-        let run = mapper.execute(&MapCtx::new(&cfg, &layer));
+        let run = mapper.execute(&MapCtx::new(&cfg, &layer)).unwrap();
         assert_eq!(
             run.counts.iter().sum::<u64>(),
             layer.tasks,
@@ -103,7 +103,7 @@ fn prop_non_square_meshes_explicitly() {
         let layer = LayerSpec::conv("ns", 3, 1.0, 500);
         for spec in CHEAP_MAPPERS.iter().chain(&["sampling-2", "post-run"]) {
             let mapper = reg.resolve(spec).unwrap();
-            let run = mapper.execute(&MapCtx::new(&cfg, &layer));
+            let run = mapper.execute(&MapCtx::new(&cfg, &layer)).unwrap();
             assert_eq!(
                 run.counts.iter().sum::<u64>(),
                 500,

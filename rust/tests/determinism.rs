@@ -1,0 +1,112 @@
+//! The parallel-sweep determinism suite: `Scenario::run` must produce a
+//! `SweepResults` that is bit-for-bit identical to the serial path for
+//! **any** worker count.
+//!
+//! The grid here is the acceptance shape from the issue: 2 platforms ×
+//! 2 layers × 3 mappers (12 cells), executed with `jobs(1)`, `jobs(2)`
+//! and `jobs(8)`, fingerprinted down to per-PE totals, task records and
+//! network counters. `jobs(1)` is the exact old serial path, so equality
+//! against it *is* the regression test for the parallel engine.
+
+use noctt::config::PlatformConfig;
+use noctt::dnn::LayerSpec;
+use noctt::experiments::engine::{Scenario, SweepResults};
+use noctt::util::ThreadPool;
+
+/// The 2 × 2 × 3 acceptance grid. `sampling-2` exercises the two-phase
+/// online path (measurement + residual) under parallel execution.
+fn grid(jobs: usize) -> SweepResults {
+    Scenario::new("determinism")
+        .platform("2mc", PlatformConfig::default_2mc())
+        .platform("4mc", PlatformConfig::default_4mc())
+        .layer(LayerSpec::conv("a", 3, 1.0, 160))
+        .layer(LayerSpec::conv("b", 5, 1.0, 300))
+        .mapper("row-major")
+        .mapper("distance")
+        .mapper("sampling-2")
+        .jobs(jobs)
+        .run()
+        .expect("determinism grid")
+}
+
+/// Everything observable about a sweep, flattened for equality checks:
+/// latencies, drain times, planned counts, per-PE totals (all four
+/// travel-time components), per-PE finish times, record counts and
+/// switched-flit counters, cell by cell.
+fn fingerprint(results: &SweepResults) -> Vec<(usize, usize, usize, Vec<u64>)> {
+    results
+        .cells
+        .iter()
+        .map(|c| {
+            let mut obs = vec![
+                c.run.summary.latency,
+                c.run.result.drained_at,
+                c.run.result.records.len() as u64,
+                c.run.result.net.flits_switched,
+                c.run.extra_run as u64,
+            ];
+            obs.extend(&c.run.counts);
+            obs.extend(&c.run.result.finish);
+            obs.extend(c.run.summary.counts.iter());
+            for t in &c.run.result.totals {
+                obs.extend([t.tasks, t.req, t.mem, t.resp, t.comp]);
+            }
+            (c.platform, c.layer, c.mapper, obs)
+        })
+        .collect()
+}
+
+#[test]
+fn jobs_1_2_and_8_produce_identical_sweep_results() {
+    let serial = grid(1);
+    let two = grid(2);
+    let eight = grid(8);
+    assert_eq!(serial.cells.len(), 12, "2 platforms × 2 layers × 3 mappers");
+    let fp = fingerprint(&serial);
+    assert_eq!(fp, fingerprint(&two), "jobs(2) diverged from the serial path");
+    assert_eq!(fp, fingerprint(&eight), "jobs(8) diverged from the serial path");
+    // Labels and grid metadata are order-stable too.
+    assert_eq!(serial.mapper_labels, two.mapper_labels);
+    assert_eq!(serial.platform_labels, eight.platform_labels);
+}
+
+#[test]
+fn oversubscribed_pool_matches_too() {
+    // More workers than cells: the cursor runs dry and extra workers exit
+    // without stealing anything — results still land in grid order.
+    let serial = grid(1);
+    let over = grid(64);
+    assert_eq!(fingerprint(&serial), fingerprint(&over));
+}
+
+#[test]
+fn default_jobs_resolution_is_deterministic_as_well() {
+    // No explicit .jobs(): the engine picks NOCTT_JOBS or available
+    // parallelism — whatever it resolves to, the numbers must match the
+    // serial fingerprint. (This is the configuration every figure module
+    // runs with.)
+    let implicit = Scenario::new("determinism-default")
+        .platform("2mc", PlatformConfig::default_2mc())
+        .layer(LayerSpec::conv("a", 3, 1.0, 160))
+        .mapper("row-major")
+        .mapper("sampling-2")
+        .run()
+        .expect("implicit-jobs grid");
+    let serial = Scenario::new("determinism-default")
+        .platform("2mc", PlatformConfig::default_2mc())
+        .layer(LayerSpec::conv("a", 3, 1.0, 160))
+        .mapper("row-major")
+        .mapper("sampling-2")
+        .jobs(1)
+        .run()
+        .expect("serial grid");
+    assert_eq!(fingerprint(&implicit), fingerprint(&serial));
+}
+
+#[test]
+fn pool_width_beyond_the_machine_is_safe() {
+    // Sanity: ThreadPool clamps nothing upward — 8 workers on any core
+    // count is legal, it just means idle stealers.
+    assert_eq!(ThreadPool::new(8).threads(), 8);
+    assert!(ThreadPool::available() >= 1);
+}

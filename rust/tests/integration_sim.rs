@@ -13,9 +13,9 @@ use noctt::metrics::improvement;
 fn headline_c1_shape() {
     let cfg = PlatformConfig::default_2mc();
     let c1 = &lenet5(6)[0];
-    let base = run_layer(&cfg, c1, Strategy::RowMajor);
-    let sw10 = run_layer(&cfg, c1, Strategy::Sampling(10));
-    let post = run_layer(&cfg, c1, Strategy::PostRun);
+    let base = run_layer(&cfg, c1, Strategy::RowMajor).unwrap();
+    let sw10 = run_layer(&cfg, c1, Strategy::Sampling(10)).unwrap();
+    let post = run_layer(&cfg, c1, Strategy::PostRun).unwrap();
 
     assert!(
         (0.15..0.40).contains(&base.summary.rho_accum),
@@ -35,7 +35,7 @@ fn headline_c1_shape() {
 fn per_task_times_in_paper_order_of_magnitude() {
     let cfg = PlatformConfig::default_2mc();
     let c1 = &lenet5(6)[0];
-    let base = run_layer(&cfg, c1, Strategy::RowMajor);
+    let base = run_layer(&cfg, c1, Strategy::RowMajor).unwrap();
     for (i, m) in base.summary.mean_travel.iter().enumerate() {
         let m = m.expect("every PE used under row-major");
         assert!(
@@ -53,7 +53,7 @@ fn mc_load_is_balanced_under_row_major() {
     let layer = LayerSpec::conv("b", 5, 1.0, 1400);
     let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
     sim.add_budgets(&vec![100; 14]);
-    let res = sim.run_until_done();
+    let res = sim.run_until_done().unwrap();
     assert_eq!(res.records.len(), 1400);
     // 7 PEs per MC → both serve 700 requests.
     // (The Simulation does not expose MCs directly; infer from assignment.)
@@ -68,7 +68,7 @@ fn whole_lenet_layer_latency_profile() {
     let cfg = PlatformConfig::default_2mc();
     let lat: Vec<u64> = lenet5(6)
         .iter()
-        .map(|l| run_layer(&cfg, l, Strategy::RowMajor).summary.latency)
+        .map(|l| run_layer(&cfg, l, Strategy::RowMajor).unwrap().summary.latency)
         .collect();
     let c1 = lat[0];
     for (i, &l) in lat.iter().enumerate().skip(1) {
@@ -84,9 +84,9 @@ fn whole_lenet_layer_latency_profile() {
 fn sampling_fallback_for_all_windows() {
     let cfg = PlatformConfig::default_2mc();
     let tiny = LayerSpec::fc("OUT", 84, 10);
-    let base = run_layer(&cfg, &tiny, Strategy::RowMajor);
+    let base = run_layer(&cfg, &tiny, Strategy::RowMajor).unwrap();
     for w in [1u64, 5, 10, 100] {
-        let run = run_layer(&cfg, &tiny, Strategy::Sampling(w));
+        let run = run_layer(&cfg, &tiny, Strategy::Sampling(w)).unwrap();
         assert_eq!(
             run.summary.latency, base.summary.latency,
             "window {w}: fallback must match row-major exactly"
@@ -100,7 +100,7 @@ fn sampling_fallback_for_all_windows() {
 fn four_mc_platform_runs_whole_model() {
     let cfg = PlatformConfig::preset(PlacementPreset::FourMc);
     for l in &lenet5(6) {
-        let run = run_layer(&cfg, l, Strategy::Sampling(10));
+        let run = run_layer(&cfg, l, Strategy::Sampling(10)).unwrap();
         assert_eq!(run.counts.len(), 12);
         assert_eq!(run.counts.iter().sum::<u64>(), l.tasks, "layer {}", l.name);
     }
@@ -117,7 +117,7 @@ fn non_default_mesh_sizes() {
         cfg.mc_nodes = mcs;
         cfg.validate().unwrap();
         let layer = LayerSpec::conv("m", 3, 1.0, 200);
-        let run = run_layer(&cfg, &layer, Strategy::Sampling(5));
+        let run = run_layer(&cfg, &layer, Strategy::Sampling(5)).unwrap();
         assert_eq!(run.counts.iter().sum::<u64>(), 200, "{w}x{h}");
         assert!(run.summary.latency > 0);
     }
@@ -131,11 +131,11 @@ fn pipeline_is_deterministic() {
     let layer = LayerSpec::conv("d", 5, 1.0, 588);
     let once: Vec<u64> = Strategy::fig11_set()
         .iter()
-        .map(|&s| run_layer(&cfg, &layer, s).summary.latency)
+        .map(|&s| run_layer(&cfg, &layer, s).unwrap().summary.latency)
         .collect();
     let twice: Vec<u64> = Strategy::fig11_set()
         .iter()
-        .map(|&s| run_layer(&cfg, &layer, s).summary.latency)
+        .map(|&s| run_layer(&cfg, &layer, s).unwrap().summary.latency)
         .collect();
     assert_eq!(once, twice);
 }

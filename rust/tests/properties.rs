@@ -150,7 +150,7 @@ fn prop_simulation_executes_exactly_the_budgets() {
         let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
         let budgets: Vec<u64> = (0..14).map(|_| rng.below(12)).collect();
         sim.add_budgets(&budgets);
-        let res = sim.run_until_done();
+        let res = sim.run_until_done().unwrap();
         assert_eq!(res.task_counts(), budgets, "executed counts differ from budgets");
         assert_eq!(res.records.len() as u64, budgets.iter().sum::<u64>());
         // Travel-time decomposition holds for every record.
@@ -169,7 +169,7 @@ fn prop_simulation_deterministic_for_fixed_budgets() {
         let run = || {
             let mut sim = Simulation::new(&cfg, layer.profile(&cfg));
             sim.add_budgets(&budgets);
-            let r = sim.run_until_done();
+            let r = sim.run_until_done().unwrap();
             (r.latency, r.drained_at, r.finish.clone())
         };
         assert_eq!(run(), run());
@@ -192,7 +192,7 @@ fn prop_every_strategy_conserves_tasks() {
             Strategy::StaticLatency,
             Strategy::Sampling(window),
         ]);
-        let run = run_layer(&cfg, &layer, strategy);
+        let run = run_layer(&cfg, &layer, strategy).unwrap();
         assert_eq!(run.counts.iter().sum::<u64>(), tasks, "{}", strategy.label());
         assert_eq!(run.summary.counts.iter().sum::<u64>(), tasks, "{}", strategy.label());
     });
