@@ -3,14 +3,20 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use noctt::config::PlatformConfig;
+use noctt::config::{PlatformConfig, SteppingMode};
 use noctt::dnn::lenet5;
 use noctt::mapping::{run_layer, Strategy};
 use noctt::metrics::improvement;
 
 fn main() {
     // The paper's default platform: 4x4 mesh, MCs at nodes 9/10, 14 PEs.
+    // The simulator core is event-driven by default (active-set scheduling
+    // + idle-cycle fast-forward); results are bit-identical to the dense
+    // every-component-every-cycle loop, which stays available as a
+    // debugging oracle through the builder:
+    //     PlatformConfig::builder().stepping(SteppingMode::Dense).build()
     let cfg = PlatformConfig::default_2mc();
+    assert_eq!(cfg.stepping, SteppingMode::EventDriven);
     // LeNet C1: 4704 convolution tasks, 4-flit responses (Table 1).
     let layer = &lenet5(6)[0];
 

@@ -1,18 +1,19 @@
 //! Microbenchmarks of the simulator hot paths: the network clock step
-//! (idle and loaded), the full co-simulation step, injection throughput,
-//! and the mapping math. These are the §Perf optimisation targets.
+//! (idle and loaded), the full co-simulation step, the event-driven vs
+//! dense stepping modes, and the mapping math. These are the §Perf
+//! optimisation targets.
 //!
-//! Supports the same `--smoke` / `--json <path>` flags as
-//! `paper_benches` (see `noctt::util::bench::BenchArgs`).
+//! Supports the same `--smoke` / `--json <path>` / `--only <substr>`
+//! flags as `paper_benches` (see `noctt::util::bench::BenchArgs`).
 
 use std::time::Duration;
 
 use noctt::accel::Simulation;
-use noctt::config::PlatformConfig;
+use noctt::config::{PlatformConfig, SteppingMode};
 use noctt::dnn::LayerSpec;
 use noctt::noc::{Network, PacketKind};
 use noctt::util::apportion::inverse_proportional;
-use noctt::util::bench::{bench, BenchArgs, BenchResult};
+use noctt::util::bench::{bench, speedup, BenchArgs, BenchResult};
 
 const T: Duration = Duration::from_millis(1200);
 
@@ -25,60 +26,90 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
     let cfg = PlatformConfig::default_2mc();
 
-    // Idle fabric: the floor cost of one cycle over 16 routers.
-    {
+    // Idle fabric: the floor cost of one cycle over 16 routers. With
+    // active-set scheduling this is O(1) per cycle — empty worklists.
+    if args.selected("network/step-idle-x10k") {
         let mut net = Network::new(&cfg);
         const STEPS: u64 = 10_000;
-        results.push(bench("network/step-idle-x10k", t, Some((STEPS as f64, "cycles")), || {
-            for _ in 0..STEPS {
-                net.step();
-            }
-        }));
+        results.push(
+            bench("network/step-idle-x10k", t, Some((STEPS as f64, "cycles")), || {
+                for _ in 0..STEPS {
+                    net.step();
+                }
+            })
+            .with_sim_cycles(STEPS as f64),
+        );
     }
 
     // Saturated fabric: every PE streams 22-flit packets at both MCs.
-    {
-        results.push(bench("network/step-saturated-x2k", t, Some((2000.0, "cycles")), || {
-            let mut net = Network::new(&cfg);
-            for (i, pe) in cfg.pe_nodes().into_iter().enumerate() {
-                for _ in 0..4 {
-                    net.send(pe, if i % 2 == 0 { 9 } else { 10 }, PacketKind::Response, 22, 0, 0);
-                    net.send(if i % 2 == 0 { 9 } else { 10 }, pe, PacketKind::Response, 22, 0, 0);
+    if args.selected("network/step-saturated-x2k") {
+        results.push(
+            bench("network/step-saturated-x2k", t, Some((2000.0, "cycles")), || {
+                let mut net = Network::new(&cfg);
+                for (i, pe) in cfg.pe_nodes().into_iter().enumerate() {
+                    for _ in 0..4 {
+                        net.send(pe, if i % 2 == 0 { 9 } else { 10 }, PacketKind::Response, 22, 0, 0);
+                        net.send(if i % 2 == 0 { 9 } else { 10 }, pe, PacketKind::Response, 22, 0, 0);
+                    }
                 }
-            }
-            for _ in 0..2000 {
-                net.step();
-            }
-        }));
+                for _ in 0..2000 {
+                    net.step();
+                }
+            })
+            .with_sim_cycles(2000.0),
+        );
     }
 
     // Full co-simulation step rate on the C1 profile.
-    {
+    if args.selected("sim/step-busy-x5k") {
         let layer = LayerSpec::conv("C1", 5, 1.0, 4704);
         let profile = layer.profile(&cfg);
         let mut sim = Simulation::new(&cfg, profile);
         sim.add_budgets(&vec![u64::MAX / 2 / 14; 14]); // endless work
         const STEPS: u64 = 5_000;
-        results.push(bench("sim/step-busy-x5k", t, Some((STEPS as f64, "cycles")), || {
-            for _ in 0..STEPS {
-                sim.step();
-            }
-        }));
+        results.push(
+            bench("sim/step-busy-x5k", t, Some((STEPS as f64, "cycles")), || {
+                for _ in 0..STEPS {
+                    sim.step();
+                }
+            })
+            .with_sim_cycles(STEPS as f64),
+        );
     }
 
-    // One complete small-layer run (engine setup + run + drain).
-    {
+    // One complete small-layer run (engine setup + run + drain), in both
+    // stepping modes — the tracked event-driven-vs-dense core speedup.
+    if args.selected("sim/full-run") {
         let layer = LayerSpec::conv("small", 5, 1.0, 140);
         let profile = layer.profile(&cfg);
-        results.push(bench("sim/full-run-140-tasks", t, Some((140.0, "tasks")), || {
-            let mut sim = Simulation::new(&cfg, profile);
+        let mut dense_cfg = cfg.clone();
+        dense_cfg.stepping = SteppingMode::Dense;
+        let run = |cfg: &PlatformConfig| {
+            let mut sim = Simulation::new(cfg, profile);
             sim.add_budgets(&vec![10; 14]);
-            std::hint::black_box(sim.run_until_done().expect("bench run"));
-        }));
+            sim.run_until_done().expect("bench run")
+        };
+        let cycles = run(&cfg).drained_at as f64;
+        let event = bench("sim/full-run-140-tasks", t, Some((140.0, "tasks")), || {
+            std::hint::black_box(run(&cfg));
+        })
+        .with_sim_cycles(cycles);
+        let dense = bench("sim/full-run-140-tasks-dense", t, Some((140.0, "tasks")), || {
+            std::hint::black_box(run(&dense_cfg));
+        })
+        .with_sim_cycles(cycles);
+        println!(
+            "event-driven vs dense stepping: {:.2}x (dense {:?} → event {:?})",
+            speedup(&dense, &event),
+            dense.mean,
+            event.mean
+        );
+        results.push(event);
+        results.push(dense);
     }
 
     // Mapping math: Eq. 4–5 apportionment at PE scale.
-    {
+    if args.selected("mapping/inverse-proportional-14") {
         let times: Vec<f64> = (0..14).map(|i| 40.0 + i as f64).collect();
         results.push(bench("mapping/inverse-proportional-14", t, Some((1.0, "calls")), || {
             std::hint::black_box(inverse_proportional(4704, &times));

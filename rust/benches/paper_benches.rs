@@ -11,7 +11,11 @@
 //! * `--smoke` — CI smoke mode: 30 ms windows and trimmed workloads, so
 //!   the job catches panics/deadlocks quickly instead of tracking perf;
 //! * `--json <path>` — write one JSON object per bench (plus the
-//!   `fig7-sweep/speedup-vs-serial` entry) for the perf trajectory.
+//!   `fig7-sweep/speedup-vs-serial` entry) for the perf trajectory;
+//! * `--only <substr>` — run only matching benches. The CI perf gate uses
+//!   `--only fig7-sweep` to time the sweep at full windows and diff its
+//!   `mean_ns` against the committed `BENCH_baseline.json` (recorded with
+//!   `cargo bench --bench paper_benches -- --json BENCH_baseline.json`).
 
 use std::time::Duration;
 
@@ -43,26 +47,51 @@ fn main() {
     }
 
     // table1 — packet-size law (pure computation, no simulation).
-    results.push(bench("table1/kernel-packet-law", t, Some((7.0, "rows")), || {
-        std::hint::black_box(table1::rows());
-    }));
+    if args.selected("table1/kernel-packet-law") {
+        results.push(bench("table1/kernel-packet-law", t, Some((7.0, "rows")), || {
+            std::hint::black_box(table1::rows());
+        }));
+    }
 
     // fig7 — C1 under the four §5.2 mappings.
-    let cycles = simulated_cycles(&cfg, &c1, Strategy::RowMajor);
-    results.push(bench("fig7/c1-row-major", t, Some((cycles, "sim-cycles")), || {
-        std::hint::black_box(run_layer(&cfg, &c1, Strategy::RowMajor).expect("bench run"));
-    }));
-    results.push(bench("fig7/c1-sampling-10", t, Some((c1.tasks as f64, "tasks")), || {
-        std::hint::black_box(run_layer(&cfg, &c1, Strategy::Sampling(10)).expect("bench run"));
-    }));
-    results.push(bench("fig7/c1-post-run(2 runs)", t, Some((2.0 * c1.tasks as f64, "tasks")), || {
-        std::hint::black_box(run_layer(&cfg, &c1, Strategy::PostRun).expect("bench run"));
-    }));
+    if args.selected("fig7/c1-row-major") {
+        let cycles = simulated_cycles(&cfg, &c1, Strategy::RowMajor);
+        results.push(
+            bench("fig7/c1-row-major", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(run_layer(&cfg, &c1, Strategy::RowMajor).expect("bench run"));
+            })
+            .with_sim_cycles(cycles),
+        );
+    }
+    if args.selected("fig7/c1-sampling-10") {
+        // Capture the simulated-cycle span from inside the measured
+        // closure (every iteration covers the same span) instead of
+        // paying an extra un-timed run up front.
+        let cycles = std::cell::Cell::new(0.0);
+        let b = bench("fig7/c1-sampling-10", t, Some((c1.tasks as f64, "tasks")), || {
+            let r = run_layer(&cfg, &c1, Strategy::Sampling(10)).expect("bench run");
+            cycles.set(r.result.drained_at as f64);
+            std::hint::black_box(r);
+        });
+        results.push(b.with_sim_cycles(cycles.get()));
+    }
+    if args.selected("fig7/c1-post-run(2 runs)") {
+        results.push(bench(
+            "fig7/c1-post-run(2 runs)",
+            t,
+            Some((2.0 * c1.tasks as f64, "tasks")),
+            || {
+                std::hint::black_box(run_layer(&cfg, &c1, Strategy::PostRun).expect("bench run"));
+            },
+        ));
+    }
 
     // fig7 sweep — the whole four-mapper grid through the Scenario
     // engine, serial (jobs(1), the exact old path) vs the machine's full
-    // parallelism. The speedup ratio is the tracked number.
-    {
+    // parallelism. The speedup ratio is the tracked number, and the
+    // jobs-1 mean is the perf-gate series diffed against
+    // BENCH_baseline.json in CI.
+    if args.selected("fig7-sweep") {
         let sweep_layer = {
             let mut l = lenet5(6).remove(0);
             l.tasks /= if args.smoke { 16 } else { 4 };
@@ -77,16 +106,24 @@ fn main() {
                 .run()
                 .expect("fig7 sweep")
         };
+        // Simulated cycles covered by one sweep iteration (all cells),
+        // captured from the measured runs themselves — every iteration
+        // covers the identical span, so no extra un-timed sweep is paid.
+        let sweep_cycles = std::cell::Cell::new(0.0);
         let cells = fig7::MAPPERS.len() as f64;
         let serial = bench("fig7-sweep/jobs-1", t, Some((cells, "cells")), || {
-            std::hint::black_box(run_sweep(1));
-        });
+            let r = run_sweep(1);
+            sweep_cycles.set(r.cells.iter().map(|c| c.run.result.drained_at as f64).sum());
+            std::hint::black_box(r);
+        })
+        .with_sim_cycles(sweep_cycles.get());
         let jobs = ThreadPool::available();
         // Stable name (no core count) so the perf trajectory keys one
         // series across machines; the actual width is printed below.
         let parallel = bench("fig7-sweep/jobs-max", t, Some((cells, "cells")), || {
             std::hint::black_box(run_sweep(jobs));
-        });
+        })
+        .with_sim_cycles(sweep_cycles.get());
         let ratio = speedup(&serial, &parallel);
         println!(
             "fig7-sweep speedup: {ratio:.2}x with {jobs} workers (serial {:?} → parallel {:?})",
@@ -104,47 +141,71 @@ fn main() {
     }
 
     // fig8 — the 8x task-scale point (the heaviest single simulation).
-    let big = {
-        let mut l = lenet5(48).remove(0);
-        if args.smoke {
-            l.tasks /= 32;
-        }
-        l
-    };
-    let cycles = simulated_cycles(&cfg, &big, Strategy::RowMajor);
-    results.push(bench("fig8/c1x8-row-major", t, Some((cycles, "sim-cycles")), || {
-        std::hint::black_box(run_layer(&cfg, &big, Strategy::RowMajor).expect("bench run"));
-    }));
+    if args.selected("fig8/c1x8-row-major") {
+        let big = {
+            let mut l = lenet5(48).remove(0);
+            if args.smoke {
+                l.tasks /= 32;
+            }
+            l
+        };
+        let cycles = simulated_cycles(&cfg, &big, Strategy::RowMajor);
+        results.push(
+            bench("fig8/c1x8-row-major", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(run_layer(&cfg, &big, Strategy::RowMajor).expect("bench run"));
+            })
+            .with_sim_cycles(cycles),
+        );
+    }
 
     // fig9 — the largest packet size (22 flits, bandwidth-saturated).
-    let k13 = LayerSpec::conv("k13", 13, 1.0, if args.smoke { 4704 / 8 } else { 4704 });
-    let cycles = simulated_cycles(&cfg, &k13, Strategy::RowMajor);
-    results.push(bench("fig9/k13-row-major", t, Some((cycles, "sim-cycles")), || {
-        std::hint::black_box(run_layer(&cfg, &k13, Strategy::RowMajor).expect("bench run"));
-    }));
+    if args.selected("fig9/k13-row-major") {
+        let k13 = LayerSpec::conv("k13", 13, 1.0, if args.smoke { 4704 / 8 } else { 4704 });
+        let cycles = simulated_cycles(&cfg, &k13, Strategy::RowMajor);
+        results.push(
+            bench("fig9/k13-row-major", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(run_layer(&cfg, &k13, Strategy::RowMajor).expect("bench run"));
+            })
+            .with_sim_cycles(cycles),
+        );
+    }
 
     // fig10 — the 4-MC architecture.
-    let cfg4 = PlatformConfig::preset(PlacementPreset::FourMc);
-    let cycles = simulated_cycles(&cfg4, &c1, Strategy::Sampling(10));
-    results.push(bench("fig10/c1-4mc-sampling-10", t, Some((cycles, "sim-cycles")), || {
-        std::hint::black_box(run_layer(&cfg4, &c1, Strategy::Sampling(10)).expect("bench run"));
-    }));
+    if args.selected("fig10/c1-4mc-sampling-10") {
+        let cfg4 = PlatformConfig::preset(PlacementPreset::FourMc);
+        let cycles = simulated_cycles(&cfg4, &c1, Strategy::Sampling(10));
+        results.push(
+            bench("fig10/c1-4mc-sampling-10", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(
+                    run_layer(&cfg4, &c1, Strategy::Sampling(10)).expect("bench run"),
+                );
+            })
+            .with_sim_cycles(cycles),
+        );
+    }
 
     // fig11 — the whole seven-layer model under the headline mapping.
-    let mut layers = lenet5(6);
-    if args.smoke {
-        for l in &mut layers {
-            if l.tasks > 600 {
-                l.tasks /= 8;
+    if args.selected("fig11/lenet-sampling-10") {
+        let mut layers = lenet5(6);
+        if args.smoke {
+            for l in &mut layers {
+                if l.tasks > 600 {
+                    l.tasks /= 8;
+                }
             }
         }
+        let total_tasks: u64 = layers.iter().map(|l| l.tasks).sum();
+        results.push(bench(
+            "fig11/lenet-sampling-10",
+            t,
+            Some((total_tasks as f64, "tasks")),
+            || {
+                for l in &layers {
+                    std::hint::black_box(run_layer(&cfg, l, Strategy::Sampling(10)).expect("bench run"));
+                }
+            },
+        ));
     }
-    let total_tasks: u64 = layers.iter().map(|l| l.tasks).sum();
-    results.push(bench("fig11/lenet-sampling-10", t, Some((total_tasks as f64, "tasks")), || {
-        for l in &layers {
-            std::hint::black_box(run_layer(&cfg, l, Strategy::Sampling(10)).expect("bench run"));
-        }
-    }));
 
     args.finish("paper_benches", &results).expect("writing bench output");
 }

@@ -105,6 +105,32 @@ impl Mc {
         self.queue.is_empty() && self.in_service.is_none() && self.outstanding.is_empty()
     }
 
+    /// Earliest future cycle (strictly after `now`) at which this MC can
+    /// complete or start an access, or `None` when idle. The engine's
+    /// fast-forward may skip to — but never past — this cycle.
+    ///
+    /// Queued model: the in-service access finishes at its recorded
+    /// completion cycle; nothing behind it can move earlier. A non-empty
+    /// queue with no access in service (only possible transiently) starts
+    /// on the very next tick. Parallel model: the earliest outstanding
+    /// completion, clamped to `now + 1` because [`tick`](Self::tick)
+    /// finishes at most one access per cycle.
+    pub fn next_event_at(&self, now: u64) -> Option<u64> {
+        match self.model {
+            MemModel::Queued => match self.in_service {
+                Some((_, done_at)) => Some(done_at.max(now + 1)),
+                None if !self.queue.is_empty() => Some(now + 1),
+                None => None,
+            },
+            MemModel::Parallel => {
+                if !self.queue.is_empty() {
+                    return Some(now + 1);
+                }
+                self.outstanding.iter().map(|&(_, done)| done.max(now + 1)).min()
+            }
+        }
+    }
+
     /// Requests waiting behind the one in service.
     pub fn backlog(&self) -> usize {
         self.queue.len()
@@ -137,6 +163,32 @@ mod tests {
         mc.on_request(0, 0);
         assert_eq!(mc.tick(0, 0), None);
         assert_eq!(mc.tick(1, 0), Some(0));
+    }
+
+    #[test]
+    fn next_event_is_the_in_service_completion() {
+        let mut mc = Mc::new(9);
+        assert_eq!(mc.next_event_at(0), None, "idle MC has no events");
+        mc.on_request(3, 10);
+        assert_eq!(mc.next_event_at(10), Some(11), "queued request starts next tick");
+        mc.tick(10, 4); // enters service, done at 14
+        assert_eq!(mc.next_event_at(10), Some(14));
+        mc.on_request(7, 11);
+        assert_eq!(mc.next_event_at(11), Some(14), "FIFO: the queue waits for service");
+        mc.tick(14, 4);
+        assert_eq!(mc.next_event_at(14), Some(18), "next access entered service");
+    }
+
+    #[test]
+    fn parallel_next_event_is_earliest_outstanding() {
+        let mut mc = Mc::with_model(9, MemModel::Parallel);
+        mc.on_request(0, 0);
+        mc.on_request(1, 2);
+        assert_eq!(mc.next_event_at(2), Some(3), "undrained queue forces a dense tick");
+        mc.tick(2, 10); // both outstanding: done at 10 and 12
+        assert_eq!(mc.next_event_at(2), Some(10));
+        assert_eq!(mc.tick(10, 10), Some(0));
+        assert_eq!(mc.next_event_at(10), Some(12));
     }
 
     #[test]

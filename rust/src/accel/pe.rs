@@ -92,6 +92,23 @@ impl Pe {
         matches!(self.state, PeState::Idle) && self.issued < self.budget
     }
 
+    /// Earliest future cycle (strictly after `now`) at which this PE can
+    /// act on its own, or `None` when it is waiting on the network (or has
+    /// no budget left). The engine's fast-forward may skip to — but never
+    /// past — this cycle:
+    ///
+    /// * computing → the MAC array finishes at `done_at`;
+    /// * idle with budget → it issues on the very next engine step;
+    /// * waiting → the response tail is a *network* event, reported by
+    ///   [`Network::next_event_at`](crate::noc::Network::next_event_at).
+    pub fn next_event_at(&self, now: u64) -> Option<u64> {
+        match self.state {
+            PeState::Computing { done_at, .. } => Some(done_at.max(now + 1)),
+            PeState::Idle if self.issued < self.budget => Some(now + 1),
+            _ => None,
+        }
+    }
+
     /// Mark a request issued at `now`.
     pub fn note_issued(&mut self, now: u64) {
         debug_assert!(self.wants_issue(), "PE {} cannot issue now", self.index);
@@ -188,6 +205,21 @@ mod tests {
         pe.add_budget(3);
         assert!(!pe.done());
         assert!(pe.wants_issue());
+    }
+
+    #[test]
+    fn next_event_tracks_state() {
+        let mut pe = Pe::new(0, 5, 9);
+        assert_eq!(pe.next_event_at(0), None, "no budget, no events");
+        pe.add_budget(1);
+        assert_eq!(pe.next_event_at(7), Some(8), "idle with budget issues next step");
+        pe.note_issued(8);
+        assert_eq!(pe.next_event_at(8), None, "waiting is a network event");
+        pe.on_response(30, 15, 20, 10);
+        assert_eq!(pe.next_event_at(30), Some(40), "compute finishes at done_at");
+        assert_eq!(pe.next_event_at(39), Some(40));
+        pe.try_complete(40).unwrap();
+        assert_eq!(pe.next_event_at(40), None, "budget exhausted");
     }
 
     #[test]

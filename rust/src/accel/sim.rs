@@ -13,13 +13,26 @@
 //! The engine supports growing per-PE budgets mid-run, which is how the
 //! sampling-window mapper (Fig. 6) allocates the residual tasks after the
 //! sampled phase without restarting the platform.
+//!
+//! # Simulation performance
+//!
+//! With the default [`SteppingMode::EventDriven`] the run loops skip
+//! provably-idle stretches: [`Simulation::next_event_at`] takes the
+//! minimum of the network's next event (wires/worklists/`ready_at`, see
+//! [`Network::next_event_at`]), every PE's next completion and every MC's
+//! next service completion, and jumps the clock straight there when the
+//! gap exceeds one cycle. Because every component reports a *lower bound*
+//! on its next possible action, no event can fall inside a skipped gap —
+//! results are bit-identical to [`SteppingMode::Dense`] stepping (the
+//! `equivalence.rs` suite enforces this on multiple platforms, including
+//! an 8×8 mesh).
 
 use anyhow::{bail, Result};
 
 use crate::accel::mc::Mc;
 use crate::accel::pe::Pe;
 use crate::accel::record::{PePhaseTotals, TaskRecord};
-use crate::config::PlatformConfig;
+use crate::config::{PlatformConfig, SteppingMode};
 use crate::dnn::TaskProfile;
 use crate::noc::{Network, NetworkStats, PacketId, PacketKind};
 
@@ -152,6 +165,74 @@ impl Simulation {
         self.net.stats()
     }
 
+    /// Read-only view of the network fabric (packet table, stats,
+    /// next-event probe).
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// Earliest future cycle at which *any* platform component can act:
+    /// the minimum of the network's next event, every PE's next compute
+    /// completion (or pending issue) and every MC's next service
+    /// completion. `None` means nothing will ever happen again (the run is
+    /// either complete or truly deadlocked). Each contribution is a lower
+    /// bound, so the run loops may jump the clock to `next - 1` without
+    /// missing an event — the fast-forward safety argument lives with each
+    /// component's `next_event_at`.
+    pub fn next_event_at(&self) -> Option<u64> {
+        let now = self.net.now();
+        let mut next = self.net.next_event_at();
+        let mut merge = |e: Option<u64>| {
+            if let Some(e) = e {
+                next = Some(match next {
+                    Some(n) => n.min(e),
+                    None => e,
+                });
+            }
+        };
+        for pe in &self.pes {
+            merge(pe.next_event_at(now));
+        }
+        for mc in &self.mcs {
+            merge(mc.next_event_at(now));
+        }
+        next
+    }
+
+    /// Event-driven fast-forward: if the next platform event is more than
+    /// one cycle away, jump the clock to just before it (clamped to the
+    /// phase cycle cap so deadlock detection still fires at the same
+    /// cycle as dense stepping). Returns `true` if the clock moved — the
+    /// caller re-checks its exit/cap conditions before stepping. No-op in
+    /// [`SteppingMode::Dense`].
+    fn fast_forward(&mut self, phase_start: u64) -> bool {
+        if self.cfg.stepping == SteppingMode::Dense {
+            return false;
+        }
+        let now = self.net.now();
+        // Busy-fabric early out: while any wire or router is active the
+        // network alone pins the next event to now + 1, so no skip is
+        // possible — don't pay the O(PEs + MCs) merge every hot cycle.
+        if self.net.next_event_at() == Some(now + 1) {
+            return false;
+        }
+        let cap = phase_start + self.cfg.max_phase_cycles;
+        let target = match self.next_event_at() {
+            Some(next) if next > now + 1 => (next - 1).min(cap),
+            Some(_) => return false,
+            // No component will ever act again: a genuine deadlock. Jump
+            // to the cap so the caller reports it without spinning through
+            // up to `max_phase_cycles` no-op steps.
+            None => cap,
+        };
+        if target > now {
+            self.net.skip_to(target);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Run until every PE has completed its budget **and** the network has
     /// drained (result packets delivered).
     ///
@@ -170,6 +251,9 @@ impl Simulation {
             if self.net.now() - start >= self.cfg.max_phase_cycles {
                 bail!("{}", self.deadlock_report("run", start));
             }
+            if self.fast_forward(start) {
+                continue; // re-check the cap at the new cycle
+            }
             self.step();
         }
         Ok(self.result())
@@ -182,6 +266,9 @@ impl Simulation {
         while !self.pes.iter().all(Pe::done) {
             if self.net.now() - start >= self.cfg.max_phase_cycles {
                 bail!("{}", self.deadlock_report("sampling phase", start));
+            }
+            if self.fast_forward(start) {
+                continue;
             }
             self.step();
         }
@@ -230,7 +317,10 @@ impl Simulation {
 
     /// One router-clock cycle of the whole platform.
     pub fn step(&mut self) {
-        self.net.step();
+        match self.cfg.stepping {
+            SteppingMode::EventDriven => self.net.step(),
+            SteppingMode::Dense => self.net.step_dense(),
+        }
         let now = self.net.now();
 
         // 2. Packet deliveries.
@@ -420,6 +510,28 @@ mod tests {
             (r.latency, r.drained_at, r.records.len())
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn event_driven_and_dense_results_are_identical() {
+        let cfg = PlatformConfig::default_2mc();
+        let mut dense_cfg = cfg.clone();
+        dense_cfg.stepping = crate::config::SteppingMode::Dense;
+        let profile = c1_profile(&cfg);
+        let run = |cfg: &PlatformConfig| {
+            let mut sim = Simulation::new(cfg, profile);
+            sim.add_budgets(&vec![5; 14]);
+            sim.run_until_done().unwrap()
+        };
+        let ev = run(&cfg);
+        let de = run(&dense_cfg);
+        assert_eq!(ev.records, de.records, "fast-forward changed the records");
+        assert_eq!(ev.latency, de.latency);
+        assert_eq!(ev.drained_at, de.drained_at);
+        assert_eq!(ev.finish, de.finish);
+        assert_eq!(ev.net.flits_switched, de.net.flits_switched);
+        assert_eq!(ev.net.flits_injected, de.net.flits_injected);
+        assert_eq!(ev.net.cycles, de.net.cycles, "both clocks cover the same span");
     }
 
     #[test]

@@ -8,4 +8,4 @@
 
 pub mod platform;
 
-pub use platform::{MemModel, PlacementPreset, PlatformBuilder, PlatformConfig};
+pub use platform::{MemModel, PlacementPreset, PlatformBuilder, PlatformConfig, SteppingMode};

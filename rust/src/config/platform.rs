@@ -39,6 +39,29 @@ pub enum MemModel {
     Parallel,
 }
 
+/// How the co-simulation engine advances the clock.
+///
+/// Both modes produce **bit-identical** [`SimResult`](crate::accel::SimResult)s
+/// — the `equivalence.rs` suite holds them against each other on every
+/// tested platform — they differ only in wall-clock cost:
+///
+/// * [`SteppingMode::EventDriven`] — **default**: the NoC touches only
+///   active routers/NIs each cycle (worklists), and the engine jumps the
+///   clock over provably-idle stretches (all PEs computing, MCs serving,
+///   fabric quiescent) straight to the next completion/`ready_at` event.
+/// * [`SteppingMode::Dense`] — the pre-worklist behaviour: every router
+///   and NI is visited every cycle and no cycle is skipped. Keep it for
+///   debugging and as the equivalence oracle; it is typically several
+///   times slower.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SteppingMode {
+    /// Active-set scheduling + idle-cycle fast-forward (default).
+    #[default]
+    EventDriven,
+    /// Walk every component every cycle; never skip a cycle.
+    Dense,
+}
+
 /// Full platform configuration. Time unit throughout the simulator is one
 /// **router cycle** (NoC clock, 2 GHz by default → 0.5 ns).
 #[derive(Debug, Clone, PartialEq)]
@@ -79,6 +102,9 @@ pub struct PlatformConfig {
     /// default is far above any legitimate run; tests shrink it to
     /// exercise the error path.
     pub max_phase_cycles: u64,
+    /// Clock-advance strategy (see [`SteppingMode`]). Results are
+    /// bit-identical across modes; only wall-clock time differs.
+    pub stepping: SteppingMode,
 }
 
 /// Builder for [`PlatformConfig`]: arbitrary W×H meshes, arbitrary MC
@@ -189,6 +215,14 @@ impl PlatformBuilder {
         self
     }
 
+    /// Clock-advance strategy: event-driven (default) or the dense
+    /// every-component-every-cycle debug fallback. Bit-identical results
+    /// either way.
+    pub fn stepping(mut self, mode: SteppingMode) -> Self {
+        self.cfg.stepping = mode;
+        self
+    }
+
     /// Validate and return the configuration. Every structural error —
     /// mesh too small, MC ids out of range or duplicated, no PE left, a
     /// flit smaller than one datum — is reported here rather than deep
@@ -239,6 +273,7 @@ impl PlatformConfig {
             static_hop_cycles: 4,
             mem_model: MemModel::Queued,
             max_phase_cycles: 2_000_000_000,
+            stepping: SteppingMode::EventDriven,
         }
     }
 
@@ -407,6 +442,13 @@ mod tests {
         assert_eq!(p.max_phase_cycles, 1_000);
         assert_eq!(PlatformConfig::default_2mc().max_phase_cycles, 2_000_000_000);
         assert!(PlatformConfig::builder().max_phase_cycles(0).build().is_err());
+    }
+
+    #[test]
+    fn stepping_mode_defaults_to_event_driven() {
+        assert_eq!(PlatformConfig::default_2mc().stepping, SteppingMode::EventDriven);
+        let dense = PlatformConfig::builder().stepping(SteppingMode::Dense).build().unwrap();
+        assert_eq!(dense.stepping, SteppingMode::Dense);
     }
 
     #[test]

@@ -57,6 +57,37 @@
 //! each result is written back into its grid slot by index. Parallelism
 //! changes wall-clock time, never numbers.
 //!
+//! ## Simulation performance
+//!
+//! Inside each cell the simulator core is **event-driven** (the
+//! between-cells counterpart of the parallel sweep above):
+//!
+//! * **Active-set scheduling** — [`noc::Network::step`] keeps worklists of
+//!   the routers holding buffered flits or pending RC/VA work and the NIs
+//!   with queued or streaming packets, pushed on state transitions (flit
+//!   arrival, packet enqueue) and dropped at end-of-step compaction when a
+//!   component goes quiescent. Pipeline stages touch only active
+//!   components, so an idle or lightly-loaded mesh costs O(active) per
+//!   cycle instead of O(W×H) — the regime that dominates large meshes.
+//! * **Idle-cycle fast-forward** — [`noc::Network::next_event_at`],
+//!   [`accel::Simulation::next_event_at`] and the PE/MC
+//!   next-completion probes let the run loops jump the clock straight
+//!   over compute-only or memory-only stretches where the fabric is
+//!   quiescent, instead of spinning empty cycles.
+//!
+//! Both optimisations are **bit-identical** to the naive loop: the
+//! worklists are visited in the same ascending order the dense walk uses,
+//! and a skip only covers cycles every component has proven it cannot
+//! act in. [`config::SteppingMode::Dense`] (a
+//! [`config::PlatformConfig::builder`] knob) re-enables the
+//! walk-everything-every-cycle loop as a debugging oracle, and the
+//! `equivalence.rs` suite pins event-driven == dense on multiple
+//! platforms up to 8×8. The perf trajectory is tracked by
+//! `BENCH_baseline.json` at the repo root plus a CI gate that fails on
+//! >25% regression of the fig7 sweep; `util::bench` reports
+//! `cycles_per_sec` so simulator speed is visible independently of sweep
+//! width.
+//!
 //! ## Layers underneath
 //!
 //! * [`noc`] — a cycle-accurate 2-D-mesh virtual-channel Network-on-Chip

@@ -13,6 +13,46 @@
 //! Stages run in reverse pipeline order so a flit advances at most one
 //! stage per cycle (3-cycle per-hop head latency + 1-cycle link, see
 //! [`router`](super::router)).
+//!
+//! # Simulation performance: active-set scheduling
+//!
+//! Stages 2–5 are **event-driven**: instead of walking all W×H routers and
+//! NIs every cycle, the network keeps worklists of the components that can
+//! actually make progress and touches only those. The invariants:
+//!
+//! * A **router** is in the worklist iff [`Router::needs_step`] holds —
+//!   it has a buffered flit, or an input VC waiting in RC or VA. It
+//!   *enters* on [`Router::accept_flit`] (the only way a flit appears) and
+//!   *leaves* at end-of-step compaction once drained. Credit returns never
+//!   wake a quiescent router: SA needs a buffered flit, and `buffered > 0`
+//!   already keeps the router scheduled, so credits need no hook. A router
+//!   holding only an open wormhole (owned output VC, empty buffers) is
+//!   correctly dropped — it can do nothing until its next flit arrives,
+//!   which re-schedules it.
+//! * An **NI** is in the worklist iff it is not [`Ni::idle`] — it enters on
+//!   [`Network::send`] (packet enqueue) and leaves at compaction once its
+//!   queue and streaming slot are empty. A credit-stalled or
+//!   not-yet-`ready_at` NI stays scheduled (it is not idle).
+//!
+//! Worklists are sorted before use each cycle, so components are visited in
+//! ascending node order — exactly the order the dense loop visits them —
+//! making event-driven results **bit-identical** to [`Network::step_dense`]
+//! (the debug fallback that walks every component; the `equivalence.rs`
+//! suite enforces this).
+//!
+//! # Idle-cycle fast-forward
+//!
+//! [`Network::next_event_at`] reports the earliest future cycle at which
+//! the fabric can act: `now + 1` while anything is staged on a wire or a
+//! router/NI is scheduled, otherwise the earliest queued-packet `ready_at`
+//! across NIs, otherwise `None` (fully quiescent). The safety argument:
+//! with empty wires and an empty router worklist, *no* router can change
+//! state on its own (every stage needs a buffered flit or a pending RC/VA
+//! entry), and a non-streaming NI's first possible action is its front
+//! packet's `ready_at` — so every cycle strictly before the reported one
+//! is provably a no-op and [`Network::skip_to`] may jump straight over the
+//! gap without simulating it. The co-simulation engine combines this with
+//! PE/MC completion times to skip compute-only stretches entirely.
 
 use crate::config::PlatformConfig;
 use crate::noc::flit::{Flit, PacketId, PacketInfo, PacketKind, T_NEVER};
@@ -23,8 +63,10 @@ use crate::noc::topology::{Mesh, NodeId, Port, PORT_LOCAL};
 /// Aggregate traffic statistics.
 #[derive(Debug, Clone, Default)]
 pub struct NetworkStats {
-    /// Cycles simulated.
+    /// Cycles simulated (including fast-forwarded idle cycles).
     pub cycles: u64,
+    /// Flits injected by any NI into its local router port.
+    pub flits_injected: u64,
     /// Flits that crossed any router crossbar.
     pub flits_switched: u64,
     /// Packets fully delivered (tail ejected).
@@ -78,6 +120,12 @@ pub struct Network {
     delivered: Vec<(PacketId, u64)>,
     /// Packets created but not yet tail-delivered (O(1) quiescence).
     undelivered: u64,
+    /// Active-set worklists (see module docs): nodes whose router/NI can
+    /// make progress, plus membership flags for O(1) dedup.
+    router_worklist: Vec<NodeId>,
+    router_scheduled: Vec<bool>,
+    ni_worklist: Vec<NodeId>,
+    ni_scheduled: Vec<bool>,
     /// Reusable per-cycle scratch (swap targets for the wire stages and
     /// the switched-flit list; avoids per-cycle allocation).
     wires_scratch: Vec<FlitWire>,
@@ -106,6 +154,10 @@ impl Network {
             ni_credit_wires: Vec::new(),
             delivered: Vec::new(),
             undelivered: 0,
+            router_worklist: Vec::with_capacity(num_nodes),
+            router_scheduled: vec![false; num_nodes],
+            ni_worklist: Vec::with_capacity(num_nodes),
+            ni_scheduled: vec![false; num_nodes],
             wires_scratch: Vec::new(),
             credits_scratch: Vec::new(),
             ni_credits_scratch: Vec::new(),
@@ -117,7 +169,8 @@ impl Network {
         }
     }
 
-    /// Current cycle (number of completed [`step`](Self::step)s).
+    /// Current cycle (number of completed [`step`](Self::step)s plus any
+    /// fast-forwarded idle cycles).
     pub fn now(&self) -> u64 {
         self.cycle
     }
@@ -142,6 +195,24 @@ impl Network {
         &self.stats
     }
 
+    /// Put `node`'s router on the active worklist (flit arrival).
+    #[inline]
+    fn schedule_router(&mut self, node: NodeId) {
+        if !self.router_scheduled[node] {
+            self.router_scheduled[node] = true;
+            self.router_worklist.push(node);
+        }
+    }
+
+    /// Put `node`'s NI on the active worklist (packet enqueue).
+    #[inline]
+    fn schedule_ni(&mut self, node: NodeId) {
+        if !self.ni_scheduled[node] {
+            self.ni_scheduled[node] = true;
+            self.ni_worklist.push(node);
+        }
+    }
+
     /// Create a packet and hand it to `src`'s NI. Injection of the first
     /// flit begins after the NI packetization delay (`ready_at`).
     ///
@@ -161,6 +232,7 @@ impl Network {
         let id = self.packets.len() as PacketId;
         self.packets.push(PacketInfo::new(id, src, dst, kind, num_flits, self.cycle, tag));
         self.nis[src].enqueue(id, dst as u16, num_flits, ready_at);
+        self.schedule_ni(src);
         self.undelivered += 1;
         id
     }
@@ -201,20 +273,91 @@ impl Network {
         q
     }
 
-    /// Advance one router-clock cycle.
+    /// Earliest future cycle at which the fabric can change state, or
+    /// `None` when it is fully quiescent (no queued packets either).
+    ///
+    /// `now + 1` while any wire carries a flit or credit, any router is
+    /// scheduled, or any NI is streaming;
+    /// otherwise the earliest front-of-queue `ready_at` across NIs. Every
+    /// cycle strictly before the returned one is provably a no-op (see the
+    /// module-level fast-forward safety argument), so callers may
+    /// [`skip_to`](Self::skip_to)`(next - 1)`.
+    pub fn next_event_at(&self) -> Option<u64> {
+        if !self.flit_wires.is_empty()
+            || !self.credit_wires.is_empty()
+            || !self.ni_credit_wires.is_empty()
+            || !self.router_worklist.is_empty()
+        {
+            return Some(self.cycle + 1);
+        }
+        let mut next: Option<u64> = None;
+        for &node in &self.ni_worklist {
+            if let Some(e) = self.nis[node].next_event_at(self.cycle) {
+                next = Some(match next {
+                    Some(n) => n.min(e),
+                    None => e,
+                });
+            }
+        }
+        next
+    }
+
+    /// Jump the clock to `target` without simulating the intervening
+    /// cycles. Only legal while the fabric has no in-flight work and
+    /// `target` is before the next event ([`next_event_at`]); both are
+    /// asserted in debug builds.
+    pub fn skip_to(&mut self, target: u64) {
+        debug_assert!(target >= self.cycle, "skip_to({target}) behind cycle {}", self.cycle);
+        debug_assert!(
+            self.flit_wires.is_empty()
+                && self.credit_wires.is_empty()
+                && self.ni_credit_wires.is_empty()
+                && self.router_worklist.is_empty(),
+            "skip_to with in-flight fabric work"
+        );
+        debug_assert!(
+            self.next_event_at().map_or(true, |e| target < e),
+            "skip_to({target}) would jump past the next event"
+        );
+        if target > self.cycle {
+            self.cycle = target;
+            self.stats.cycles = target;
+        }
+    }
+
+    /// Advance one router-clock cycle, touching only active components
+    /// (see the module docs for the worklist invariants).
     pub fn step(&mut self) {
+        self.step_impl(false);
+    }
+
+    /// Advance one router-clock cycle the pre-worklist way: walk **every**
+    /// router and NI. Kept as the debug/equivalence fallback — results are
+    /// bit-identical to [`step`](Self::step) because inactive components'
+    /// stages are no-ops; the `equivalence.rs` suite holds the two modes
+    /// against each other. Select it engine-wide with
+    /// [`SteppingMode::Dense`](crate::config::SteppingMode).
+    pub fn step_dense(&mut self) {
+        self.step_impl(true);
+    }
+
+    fn step_impl(&mut self, dense: bool) {
         self.cycle += 1;
         let now = self.cycle;
 
         // 1a. Wire stage: deliver flits staged last cycle (buffer write).
-        // Swap with persistent scratch so neither vector reallocates.
+        // Swap with persistent scratch so neither vector reallocates. An
+        // arriving flit is the only event that can wake a router.
         std::mem::swap(&mut self.flit_wires, &mut self.wires_scratch);
         for i in 0..self.wires_scratch.len() {
             let (node, port, vc, flit) = self.wires_scratch[i];
             self.routers[node].accept_flit(port, vc, flit);
+            self.schedule_router(node);
         }
         self.wires_scratch.clear();
-        // 1b. Credit returns staged last cycle.
+        // 1b. Credit returns staged last cycle. Credits never wake a
+        // quiescent component (SA needs a buffered flit; a credit-stalled
+        // NI is not idle), so no scheduling here.
         std::mem::swap(&mut self.credit_wires, &mut self.credits_scratch);
         for i in 0..self.credits_scratch.len() {
             let (node, port, vc) = self.credits_scratch[i];
@@ -228,18 +371,30 @@ impl Network {
         }
         self.ni_credits_scratch.clear();
 
-        // 2. NI injection: stage ≤1 flit per node onto the local-port wire.
-        for node in 0..self.nis.len() {
+        // Deterministic iteration: ascending node order — exactly the
+        // order the dense loop visits, so both modes stage wires (and thus
+        // per-router arrival orders) identically.
+        self.router_worklist.sort_unstable();
+        self.ni_worklist.sort_unstable();
+
+        // 2. NI injection: stage ≤1 flit per active node onto the
+        // local-port wire.
+        let ni_count = if dense { self.nis.len() } else { self.ni_worklist.len() };
+        for k in 0..ni_count {
+            let node = if dense { k } else { self.ni_worklist[k] };
             if let Some((vc, flit, first)) = self.nis[node].inject(now) {
                 if first {
                     self.packets[flit.packet as usize].t_first_flit_out = now;
                 }
+                self.stats.flits_injected += 1;
                 self.flit_wires.push((node, PORT_LOCAL, vc, flit));
             }
         }
 
-        // 3. SA + ST on every router.
-        for node in 0..self.routers.len() {
+        // 3. SA + ST on every active router.
+        let router_count = if dense { self.routers.len() } else { self.router_worklist.len() };
+        for k in 0..router_count {
+            let node = if dense { k } else { self.router_worklist[k] };
             if !self.routers[node].has_work() {
                 continue;
             }
@@ -270,9 +425,9 @@ impl Network {
                         p.t_delivered = now;
                         self.undelivered -= 1;
                         self.stats.packets_delivered += 1;
-                        let k = kind_index(p.kind);
-                        self.stats.delivered_by_kind[k] += 1;
-                        self.stats.latency_sum[k] += now - p.t_first_flit_out;
+                        let ki = kind_index(p.kind);
+                        self.stats.delivered_by_kind[ki] += 1;
+                        self.stats.latency_sum[ki] += now - p.t_first_flit_out;
                         self.delivered.push((m.flit.packet, now));
                     }
                 } else {
@@ -287,19 +442,49 @@ impl Network {
             self.moves_scratch = moves;
         }
 
-        // 4. VC allocation.
-        for r in &mut self.routers {
-            r.vc_allocate();
+        // 4. VC allocation on every active router.
+        for k in 0..router_count {
+            let node = if dense { k } else { self.router_worklist[k] };
+            self.routers[node].vc_allocate();
         }
-        // 5. Route computation.
-        for r in &mut self.routers {
-            r.route_compute(&self.mesh);
+        // 5. Route computation on every active router.
+        for k in 0..router_count {
+            let node = if dense { k } else { self.router_worklist[k] };
+            self.routers[node].route_compute(&self.mesh);
+        }
+
+        // Worklist compaction: drop components that went quiescent this
+        // cycle (they re-enter via accept_flit / send).
+        {
+            let routers = &self.routers;
+            let scheduled = &mut self.router_scheduled;
+            self.router_worklist.retain(|&n| {
+                if routers[n].needs_step() {
+                    true
+                } else {
+                    scheduled[n] = false;
+                    false
+                }
+            });
+        }
+        {
+            let nis = &self.nis;
+            let scheduled = &mut self.ni_scheduled;
+            self.ni_worklist.retain(|&n| {
+                if nis[n].idle() {
+                    scheduled[n] = false;
+                    false
+                } else {
+                    true
+                }
+            });
         }
         self.stats.cycles = self.cycle;
     }
 
-    /// Step until the fabric is quiescent or `max_cycles` elapse.
-    /// Returns the number of cycles stepped.
+    /// Step until the fabric is quiescent or `max_cycles` elapse, jumping
+    /// over provably-idle gaps (a waiting `ready_at`). Returns the number
+    /// of cycles covered (including skipped ones).
     pub fn run_to_quiescence(&mut self, max_cycles: u64) -> u64 {
         let start = self.cycle;
         while !self.quiescent() {
@@ -307,6 +492,12 @@ impl Network {
                 self.cycle - start < max_cycles,
                 "network failed to drain within {max_cycles} cycles — deadlock?"
             );
+            if let Some(next) = self.next_event_at() {
+                if next > self.cycle + 1 {
+                    // Clamp so the deadlock cap above still fires.
+                    self.skip_to((next - 1).min(start + max_cycles));
+                }
+            }
             self.step();
         }
         self.cycle - start
@@ -336,6 +527,7 @@ mod tests {
         let lat = p.network_latency();
         assert!((4..=10).contains(&lat), "1-hop single-flit latency {lat}");
         assert_eq!(n.stats().packets_delivered, 1);
+        assert_eq!(n.stats().flits_injected, 1);
     }
 
     #[test]
@@ -413,9 +605,68 @@ mod tests {
         n.run_to_quiescence(1000);
         let c = n.now();
         assert!(n.quiescent());
+        assert_eq!(n.next_event_at(), None, "quiescent fabric has no events");
         n.step();
         assert!(n.quiescent());
         assert_eq!(n.now(), c + 1);
+    }
+
+    #[test]
+    fn idle_steps_touch_no_component() {
+        // After drain, the worklists are empty: an idle step is O(1).
+        let mut n = net();
+        n.send(5, 9, PacketKind::Request, 1, 0, 0);
+        n.run_to_quiescence(1000);
+        assert!(n.router_worklist.is_empty());
+        assert!(n.ni_worklist.is_empty());
+        assert!(n.router_scheduled.iter().all(|&s| !s));
+        assert!(n.ni_scheduled.iter().all(|&s| !s));
+    }
+
+    #[test]
+    fn fast_forward_jumps_to_ready_at_not_past_it() {
+        let mut n = net();
+        // Packet becomes ready at cycle 500; nothing else is in flight.
+        let id = n.send(5, 9, PacketKind::Request, 1, 500, 0);
+        assert_eq!(n.next_event_at(), Some(500));
+        let cycles = n.run_to_quiescence(10_000);
+        let p = n.packet(id);
+        assert!(p.delivered());
+        // First flit leaves the NI exactly at its ready_at.
+        assert_eq!(p.t_first_flit_out, 500);
+        // The run covered the skipped span but delivered promptly after.
+        assert!(cycles >= 500 && cycles < 520, "covered {cycles} cycles");
+    }
+
+    #[test]
+    fn event_and_dense_stepping_agree_cycle_by_cycle() {
+        let drive = |dense: bool| {
+            let mut n = net();
+            let cfg = PlatformConfig::default_2mc();
+            for (i, pe) in cfg.pe_nodes().into_iter().enumerate() {
+                n.send(pe, if i % 2 == 0 { 9 } else { 10 }, PacketKind::Response, 4, 0, 0);
+            }
+            for _ in 0..400 {
+                if dense {
+                    n.step_dense();
+                } else {
+                    n.step();
+                }
+            }
+            let mut obs: Vec<u64> = (0..n.num_packets())
+                .flat_map(|i| {
+                    let p = n.packet(i as u32);
+                    [p.t_first_flit_out, p.t_delivered]
+                })
+                .collect();
+            obs.extend([
+                n.stats().flits_injected,
+                n.stats().flits_switched,
+                n.stats().packets_delivered,
+            ]);
+            obs
+        };
+        assert_eq!(drive(false), drive(true), "event-driven diverged from dense stepping");
     }
 
     #[test]

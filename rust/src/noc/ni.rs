@@ -82,6 +82,23 @@ impl Ni {
         self.current.is_none() && self.queue.is_empty()
     }
 
+    /// Earliest future cycle (strictly after `now`) at which this NI can
+    /// emit a flit, or `None` when idle.
+    ///
+    /// While a packet is streaming the NI may emit every cycle (a stall is
+    /// resolved by a credit already in flight), so the answer is `now + 1`.
+    /// Otherwise the queue is FIFO — only the *front* packet's `ready_at`
+    /// matters, because a later-ready packet cannot overtake it. This is
+    /// the NI's contribution to
+    /// [`Network::next_event_at`](crate::noc::Network::next_event_at):
+    /// the fast-forward path may skip to (but never past) this cycle.
+    pub fn next_event_at(&self, now: u64) -> Option<u64> {
+        if self.current.is_some() {
+            return Some(now + 1);
+        }
+        self.queue.front().map(|&(_, _, _, ready)| ready.max(now + 1))
+    }
+
     /// Credit return from the router (a local-port buffer slot freed).
     pub fn add_credit(&mut self, vc: usize) {
         self.vc_credits[vc] += 1;
@@ -199,6 +216,23 @@ mod tests {
         let (_, f2, first) = ni.inject(2).unwrap();
         assert_eq!(f2.packet, 1);
         assert!(first);
+    }
+
+    #[test]
+    fn next_event_reflects_queue_and_streaming_state() {
+        let mut ni = Ni::new(0, 4, 4);
+        assert_eq!(ni.next_event_at(0), None, "idle NI has no events");
+        // Queued packet ready at 50: the event is its ready_at…
+        ni.enqueue(0, 9, 3, 50);
+        assert_eq!(ni.next_event_at(10), Some(50));
+        // …but never in the past once the clock has caught up.
+        assert_eq!(ni.next_event_at(60), Some(61));
+        // Streaming: one flit possible every cycle.
+        let _ = ni.inject(50).expect("starts streaming at 50");
+        assert_eq!(ni.next_event_at(50), Some(51));
+        // A later-ready packet behind the streaming one does not matter.
+        ni.enqueue(1, 9, 1, 1000);
+        assert_eq!(ni.next_event_at(50), Some(51));
     }
 
     #[test]

@@ -32,12 +32,31 @@ pub struct BenchResult {
     pub stddev: Duration,
     /// Optional throughput: (units per iteration, unit label).
     pub throughput: Option<(f64, &'static str)>,
+    /// Simulated router cycles covered by one iteration, when the bench
+    /// drives the simulator (`None` for pure-math benches). Feeds the
+    /// `cycles_per_sec` line so the perf trajectory tracks raw simulator
+    /// speed independently of sweep width or workload shape.
+    pub sim_cycles: Option<f64>,
 }
 
 impl BenchResult {
     /// Units per second, if a throughput was attached.
     pub fn rate(&self) -> Option<f64> {
         self.throughput.map(|(units, _)| units / self.mean.as_secs_f64())
+    }
+
+    /// Attach the simulated-cycle count covered by one iteration
+    /// (`cycles_simulated` / `cycles_per_sec` in the JSON output).
+    pub fn with_sim_cycles(mut self, cycles: f64) -> Self {
+        self.sim_cycles = Some(cycles);
+        self
+    }
+
+    /// Simulated cycles per wall-clock second — the simulator-speed line
+    /// (`cycles_simulated / wall`), if [`sim_cycles`](Self::sim_cycles)
+    /// was attached.
+    pub fn cycles_per_sec(&self) -> Option<f64> {
+        self.sim_cycles.map(|c| c / self.mean.as_secs_f64())
     }
 
     /// Render a human line like
@@ -50,12 +69,18 @@ impl BenchResult {
         if let (Some(rate), Some((_, unit))) = (self.rate(), self.throughput) {
             s.push_str(&format!("  {:>12.2} {unit}/s", rate));
         }
+        if let Some(cps) = self.cycles_per_sec() {
+            s.push_str(&format!("  {:>9.2} Mcycles/s", cps / 1e6));
+        }
         s
     }
 
     /// One machine-readable JSON object:
-    /// `{"name":…,"iters":…,"mean_ns":…,"stddev_ns":…,"rate":…,"rate_unit":…}`
-    /// (`rate`/`rate_unit` are `null` when no throughput was attached).
+    /// `{"name":…,"iters":…,"mean_ns":…,"stddev_ns":…,"rate":…,"rate_unit":…,`
+    /// `"cycles_simulated":…,"cycles_per_sec":…}`
+    /// (`rate`/`rate_unit` are `null` when no throughput was attached;
+    /// the cycle fields are `null` for benches that do not drive the
+    /// simulator).
     pub fn to_json(&self) -> String {
         let (rate, unit) = match (self.rate(), self.throughput) {
             (Some(rate), Some((_, unit))) => {
@@ -63,14 +88,18 @@ impl BenchResult {
             }
             _ => ("null".to_string(), "null".to_string()),
         };
+        let cycles = self.sim_cycles.map_or("null".to_string(), |c| format!("{c}"));
+        let cps = self.cycles_per_sec().map_or("null".to_string(), |c| format!("{c}"));
         format!(
-            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"stddev_ns\":{},\"rate\":{},\"rate_unit\":{}}}",
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"stddev_ns\":{},\"rate\":{},\"rate_unit\":{},\"cycles_simulated\":{},\"cycles_per_sec\":{}}}",
             escape_json(&self.name),
             self.iters,
             self.mean.as_nanos(),
             self.stddev.as_nanos(),
             rate,
             unit,
+            cycles,
+            cps,
         )
     }
 }
@@ -116,6 +145,11 @@ pub struct BenchArgs {
     pub smoke: bool,
     /// Write machine-readable results here (see [`write_json`]).
     pub json: Option<PathBuf>,
+    /// Run only benches whose name contains this substring
+    /// (`--only fig7-sweep`). The CI perf gate uses this to time the
+    /// fig7 sweep at full measurement windows without paying for the
+    /// whole suite.
+    pub only: Option<String>,
 }
 
 impl BenchArgs {
@@ -137,6 +171,14 @@ impl BenchArgs {
                         "--json needs a file path argument (e.g. --json bench.json)"
                     ),
                 },
+                "--only" => match iter.peek() {
+                    Some(pat) if !pat.starts_with("--") => {
+                        args.only = Some(iter.next().unwrap());
+                    }
+                    _ => anyhow::bail!(
+                        "--only needs a bench-name substring (e.g. --only fig7-sweep)"
+                    ),
+                },
                 other => {
                     if let Some(path) = other.strip_prefix("--json=") {
                         anyhow::ensure!(
@@ -144,11 +186,28 @@ impl BenchArgs {
                             "--json needs a file path argument (got an empty '--json=')"
                         );
                         args.json = Some(PathBuf::from(path));
+                    } else if let Some(pat) = other.strip_prefix("--only=") {
+                        anyhow::ensure!(
+                            !pat.is_empty(),
+                            "--only needs a bench-name substring (got an empty '--only=')"
+                        );
+                        args.only = Some(pat.to_string());
                     }
                 }
             }
         }
         Ok(args)
+    }
+
+    /// Should the bench (or bench group) called `name` run under the
+    /// current `--only` filter? No filter selects all. A bench is
+    /// selected when its name contains the pattern, **or** when the
+    /// pattern starts with its name — groups gate on a prefix of their
+    /// bench names, so `--only fig7-sweep/jobs-1` must still select the
+    /// group gated on `"fig7-sweep"` (but an unrelated longer pattern
+    /// must not).
+    pub fn selected(&self, name: &str) -> bool {
+        self.only.as_deref().map_or(true, |pat| name.contains(pat) || pat.starts_with(name))
     }
 
     /// Parse from the process environment.
@@ -169,6 +228,11 @@ impl BenchArgs {
     /// The standard tail of a bench main.
     pub fn finish(&self, header: &str, results: &[BenchResult]) -> std::io::Result<()> {
         println!("\n== {header} =={}", if self.smoke { " (smoke)" } else { "" });
+        if results.is_empty() {
+            if let Some(pat) = &self.only {
+                eprintln!("warning: --only {pat:?} matched no benches — nothing was measured");
+            }
+        }
         for r in results {
             println!("{}", r.render());
         }
@@ -210,6 +274,7 @@ pub fn bench<F: FnMut()>(
         mean: Duration::from_secs_f64(mean),
         stddev: Duration::from_secs_f64(var.sqrt()),
         throughput,
+        sim_cycles: None,
     }
 }
 
@@ -237,6 +302,7 @@ mod tests {
             mean: Duration::from_nanos(mean_ns),
             stddev: Duration::from_nanos(3),
             throughput,
+            sim_cycles: None,
         }
     }
 
@@ -256,6 +322,44 @@ mod tests {
         let j = fixed("plain", 10, None).to_json();
         assert!(j.contains("\"rate\":null"), "{j}");
         assert!(j.contains("\"rate_unit\":null"), "{j}");
+        assert!(j.contains("\"cycles_simulated\":null"), "{j}");
+        assert!(j.contains("\"cycles_per_sec\":null"), "{j}");
+    }
+
+    #[test]
+    fn sim_cycles_yield_a_cycles_per_sec_line() {
+        // 2000 simulated cycles per iteration at 1 µs/iter = 2 Gcycles/s.
+        let r = fixed("sim/step", 1_000, None).with_sim_cycles(2_000.0);
+        assert_eq!(r.sim_cycles, Some(2_000.0));
+        let cps = r.cycles_per_sec().unwrap();
+        assert!((cps - 2e9).abs() < 1.0, "{cps}");
+        let j = r.to_json();
+        assert!(j.contains("\"cycles_simulated\":2000"), "{j}");
+        assert!(j.contains("\"cycles_per_sec\":2000000000"), "{j}");
+        assert!(r.render().contains("Mcycles/s"), "{}", r.render());
+    }
+
+    #[test]
+    fn only_filter_selects_by_substring() {
+        let parse = |tokens: &[&str]| BenchArgs::parse(tokens.iter().map(|s| s.to_string()));
+        let a = parse(&["--only", "fig7-sweep"]).unwrap();
+        assert!(a.selected("fig7-sweep/jobs-1"));
+        assert!(a.selected("fig7-sweep/speedup-vs-serial"));
+        assert!(!a.selected("fig8/c1x8-row-major"));
+        // A full bench name also selects its (prefix-named) gate group.
+        let a = parse(&["--only", "fig7-sweep/jobs-1"]).unwrap();
+        assert!(a.selected("fig7-sweep"), "reverse match must select the group gate");
+        assert!(!a.selected("fig8/c1x8-row-major"));
+        let a = parse(&["--only=sim/"]).unwrap();
+        assert!(a.selected("sim/step-busy-x5k"));
+        assert!(!a.selected("network/step-idle"));
+        // No filter: everything runs.
+        let a = parse(&[]).unwrap();
+        assert!(a.selected("anything"));
+        // Missing pattern is a loud error, not a silent run-nothing.
+        assert!(parse(&["--only"]).is_err());
+        assert!(parse(&["--only", "--smoke"]).is_err());
+        assert!(parse(&["--only="]).is_err());
     }
 
     #[test]

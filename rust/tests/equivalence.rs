@@ -1,0 +1,188 @@
+//! The event-driven ⇄ dense stepping equivalence suite.
+//!
+//! The PR that introduced active-set scheduling and idle-cycle
+//! fast-forward promised **bit-identical** results: every observable of a
+//! [`SimResult`] — task records, per-PE totals, finish times, latency,
+//! drain cycle, and the network counters — must match the
+//! walk-everything-every-cycle fallback ([`SteppingMode::Dense`]) on every
+//! platform. This suite holds that line, the same way `determinism.rs`
+//! holds jobs(k) == jobs(1) for the parallel sweep engine.
+//!
+//! It also proves the fast-forward safety contract directly: stepping one
+//! cycle at a time, any cycle in which *anything* observable happens must
+//! have been predicted by `next_event_at()` — the skip logic can therefore
+//! never jump past an NI `ready_at`, a PE compute completion, or an MC
+//! service completion.
+
+use noctt::accel::{SimResult, Simulation};
+use noctt::config::{PlatformConfig, SteppingMode};
+use noctt::dnn::LayerSpec;
+use noctt::mapping::{run_layer, Strategy};
+
+/// Platforms under test: the paper's two presets plus large meshes where
+/// per-cycle O(nodes) work would dominate (the case the active set
+/// optimises) — including the 8×8 from the acceptance criteria.
+fn platforms() -> Vec<(&'static str, PlatformConfig)> {
+    vec![
+        ("2mc-4x4", PlatformConfig::default_2mc()),
+        ("4mc-4x4", PlatformConfig::default_4mc()),
+        (
+            "2mc-4x8",
+            PlatformConfig::builder().mesh(4, 8).mc_nodes([13, 18]).build().unwrap(),
+        ),
+        (
+            "4mc-8x8",
+            PlatformConfig::builder().mesh(8, 8).mc_nodes([27, 28, 35, 36]).build().unwrap(),
+        ),
+    ]
+}
+
+/// Flatten every observable of a [`SimResult`] into one comparable vector.
+fn fingerprint(r: &SimResult) -> Vec<u64> {
+    let mut fp = vec![r.latency, r.drained_at, r.records.len() as u64];
+    for rec in &r.records {
+        fp.extend([
+            rec.pe as u64,
+            rec.t_issue,
+            rec.t_req_arrive,
+            rec.t_resp_depart,
+            rec.t_resp_arrive,
+            rec.t_compute_done,
+        ]);
+    }
+    for t in &r.totals {
+        fp.extend([t.tasks, t.req, t.mem, t.resp, t.comp]);
+    }
+    fp.extend(&r.finish);
+    fp.extend([
+        r.net.cycles,
+        r.net.flits_injected,
+        r.net.flits_switched,
+        r.net.packets_delivered,
+    ]);
+    fp.extend(r.net.latency_sum);
+    fp.extend(r.net.delivered_by_kind);
+    for per_port in &r.net.switched_per_port {
+        fp.extend(per_port);
+    }
+    fp
+}
+
+fn dense(cfg: &PlatformConfig) -> PlatformConfig {
+    let mut d = cfg.clone();
+    d.stepping = SteppingMode::Dense;
+    d
+}
+
+#[test]
+fn direct_simulation_is_bit_identical_across_stepping_modes() {
+    for (name, cfg) in platforms() {
+        let layer = LayerSpec::conv("eq", 5, 1.0, 4 * cfg.num_pes() as u64);
+        let profile = layer.profile(&cfg);
+        let run = |cfg: &PlatformConfig| {
+            let mut sim = Simulation::new(cfg, profile);
+            // Skewed budgets: some PEs idle early (long quiescent tails),
+            // some loaded — exercises both fast-forward and contention.
+            let budgets: Vec<u64> =
+                (0..cfg.num_pes()).map(|i| (i % 3) as u64 + 1).collect();
+            sim.add_budgets(&budgets);
+            sim.run_until_done().expect("equivalence run")
+        };
+        let event = run(&cfg);
+        let fallback = run(&dense(&cfg));
+        assert_eq!(
+            fingerprint(&event),
+            fingerprint(&fallback),
+            "{name}: event-driven result diverged from dense stepping"
+        );
+    }
+}
+
+#[test]
+fn mapped_runs_are_bit_identical_across_stepping_modes() {
+    // Through the mapper layer, including the two-phase sampling flow
+    // (measurement phase + mid-run budget growth + residual phase).
+    for (name, cfg) in platforms() {
+        for strategy in [Strategy::RowMajor, Strategy::Sampling(2)] {
+            let layer = LayerSpec::conv("eq", 3, 1.0, 4 * cfg.num_pes() as u64);
+            let event = run_layer(&cfg, &layer, strategy).expect("event run");
+            let fallback = run_layer(&dense(&cfg), &layer, strategy).expect("dense run");
+            assert_eq!(
+                fingerprint(&event.result),
+                fingerprint(&fallback.result),
+                "{name}/{}: mapped run diverged across stepping modes",
+                strategy.label()
+            );
+            assert_eq!(event.counts, fallback.counts, "{name}: per-PE task plan diverged");
+        }
+    }
+}
+
+/// Everything observable that can change in one engine step. If any of
+/// these moves, the cycle "had an event".
+fn activity(sim: &Simulation) -> (u64, u64, u64, usize, usize) {
+    let s = sim.network_stats();
+    (
+        s.flits_injected,
+        s.flits_switched,
+        s.packets_delivered,
+        sim.network().num_packets(),
+        sim.records().len(),
+    )
+}
+
+#[test]
+fn next_event_at_never_skips_past_an_event() {
+    // Step densely, one cycle at a time; whenever an observable changes
+    // during a step, the *pre-step* next_event_at() must have predicted
+    // exactly that cycle. This is the no-missed-events half of the
+    // fast-forward contract (NI ready_at, PE completion, MC completion are
+    // all observable as injections, new packets, or records).
+    let big = PlatformConfig::builder().mesh(8, 8).mc_nodes([27, 28, 35, 36]).build().unwrap();
+    for (name, cfg) in [("2mc-4x4", PlatformConfig::default_2mc()), ("4mc-8x8", big)] {
+        let layer = LayerSpec::conv("eq", 5, 1.0, 2 * cfg.num_pes() as u64);
+        let profile = layer.profile(&cfg);
+        let mut sim = Simulation::new(&cfg, profile);
+        sim.add_budgets(&vec![2; cfg.num_pes()]);
+        let mut events_seen = 0u64;
+        for _ in 0..200_000 {
+            let now = sim.now();
+            let claim = sim.next_event_at();
+            if claim.is_none() {
+                break; // provably nothing left — the run is complete
+            }
+            let next = claim.unwrap();
+            assert!(next > now, "{name}: next_event_at() {next} not in the future (now {now})");
+            let before = activity(&sim);
+            sim.step();
+            if activity(&sim) != before {
+                events_seen += 1;
+                assert_eq!(
+                    next,
+                    now + 1,
+                    "{name}: events at cycle {} but next_event_at() claimed {next}",
+                    now + 1
+                );
+            }
+        }
+        assert!(events_seen > 0, "{name}: the run never produced an event");
+        assert_eq!(
+            sim.records().len(),
+            2 * cfg.num_pes(),
+            "{name}: run did not complete all tasks"
+        );
+        assert_eq!(sim.next_event_at(), None, "{name}: completed run still predicts events");
+    }
+}
+
+#[test]
+fn fast_forward_skips_the_same_span_dense_stepping_walks() {
+    // The event-driven clock must land on exactly the same final cycle:
+    // net.cycles counts skipped cycles too.
+    let cfg = PlatformConfig::default_2mc();
+    let layer = LayerSpec::conv("eq", 5, 1.0, 28);
+    let event = run_layer(&cfg, &layer, Strategy::RowMajor).expect("event");
+    let fallback = run_layer(&dense(&cfg), &layer, Strategy::RowMajor).expect("dense");
+    assert_eq!(event.result.drained_at, fallback.result.drained_at);
+    assert_eq!(event.result.net.cycles, fallback.result.net.cycles);
+}

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: diff one bench's mean_ns against the committed
+baseline.
+
+Usage:
+    check_bench_regression.py --baseline BENCH_baseline.json \
+        --current bench-fig7-gate.json --bench fig7-sweep/jobs-1 \
+        --max-regress-pct 25
+
+Exit codes: 0 = within budget (or bootstrap: no baseline entry yet),
+1 = regression above the threshold or the current run is missing the
+bench.
+
+Absolute mean_ns is machine-dependent: record / refresh the baseline on
+the SAME machine class that runs the gate. For the CI gate, download
+bench-fig7-gate.json from the bench-json artifact of a trusted main run
+and commit it as BENCH_baseline.json; for local use, record with:
+    cargo bench --bench paper_benches -- --only fig7-sweep --json BENCH_baseline.json
+(An empty baseline array keeps the gate in bootstrap mode, so the repo
+can carry the gate before the first recorded run.)
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_entry(path: str, name: str):
+    try:
+        with open(path, encoding="utf-8") as fh:
+            entries = json.load(fh)
+    except FileNotFoundError:
+        return None
+    for entry in entries:
+        if entry.get("name") == name:
+            return entry
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--current", required=True, help="fresh bench JSON to check")
+    ap.add_argument("--bench", required=True, help="bench name to compare")
+    ap.add_argument(
+        "--max-regress-pct",
+        type=float,
+        default=25.0,
+        help="fail when mean_ns regresses by more than this percentage",
+    )
+    args = ap.parse_args()
+
+    current = load_entry(args.current, args.bench)
+    if current is None:
+        print(f"FAIL: {args.current} has no entry named {args.bench!r} — did the bench run?")
+        return 1
+
+    baseline = load_entry(args.baseline, args.bench)
+    if baseline is None:
+        print(
+            f"bootstrap: {args.baseline} has no entry named {args.bench!r}; "
+            f"gate passes vacuously. Record one with:\n"
+            f"    cargo bench --bench paper_benches -- --json {args.baseline}"
+        )
+        return 0
+
+    base_ns = float(baseline["mean_ns"])
+    cur_ns = float(current["mean_ns"])
+    delta_pct = (cur_ns - base_ns) / base_ns * 100.0
+    speed = base_ns / cur_ns if cur_ns else float("inf")
+    print(
+        f"{args.bench}: baseline {base_ns / 1e6:.3f} ms, current {cur_ns / 1e6:.3f} ms "
+        f"({delta_pct:+.1f}%, {speed:.2f}x vs baseline)"
+    )
+    if delta_pct > args.max_regress_pct:
+        print(f"FAIL: regression exceeds the {args.max_regress_pct:.0f}% budget")
+        return 1
+    if delta_pct < -args.max_regress_pct:
+        print(
+            "note: substantially faster than the committed baseline — "
+            "consider re-recording BENCH_baseline.json to tighten the gate"
+        )
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
