@@ -7,19 +7,20 @@
 //!    itself and joins every sweep *without touching any crate dispatch
 //!    code*.
 //! 2. **Builder** (`PlatformConfig::builder`): platforms beyond the §5.1
-//!    presets — here a non-square 4×8 mesh and an 8×8 mesh with four
-//!    centre MCs — validated at `build()`.
+//!    presets — here a non-square 4×8 mesh, an 8×8 mesh with four centre
+//!    MCs, and a 4×4 **torus** with west-first partial-adaptive routing
+//!    (the `topology`/`routing` knobs) — validated at `build()`.
 //! 3. **Scenario engine** (`experiments::engine::Scenario`): one
 //!    declarative {platforms × layers × mappers} grid replaces the three
 //!    hand-rolled sweep loops this example used to carry — and runs its
-//!    30 cells **in parallel** via `.jobs(..)` with results identical to
+//!    40 cells **in parallel** via `.jobs(..)` with results identical to
 //!    the serial order (swap in `.jobs(1)` and compare: same numbers).
 //!
 //! Run: `cargo run --release --example mapping_sweep`
 
 use std::borrow::Cow;
 
-use noctt::config::PlatformConfig;
+use noctt::config::{PlatformConfig, RoutingAlgorithm, TopologyKind};
 use noctt::dnn::{lenet5, LayerSpec};
 use noctt::experiments::engine::Scenario;
 use noctt::mapping::{registry, MapCtx, Mapper};
@@ -69,8 +70,13 @@ fn main() {
         .flit_bits(512)
         .build()
         .expect("8x8 mesh with 4 centre MCs and wide flits");
+    let torus = PlatformConfig::builder()
+        .topology(TopologyKind::Torus)
+        .routing(RoutingAlgorithm::WestFirst)
+        .build()
+        .expect("4x4 torus with west-first routing");
 
-    // 3. One scenario grid: 3 platforms × 2 layers × 5 mappers — 30
+    // 3. One scenario grid: 4 platforms × 2 layers × 5 mappers — 40
     //    independent cycle-accurate simulations, spread over every core
     //    by .jobs(). The NOCTT_JOBS env var (or the CLI's --jobs) sets
     //    the same knob when .jobs() is omitted; .jobs(1) is the serial
@@ -87,6 +93,7 @@ fn main() {
         .platform("4x4/2mc (paper)", paper)
         .platform("4x8/2mc", tall)
         .platform("8x8/4mc/512b", big)
+        .platform("4x4-torus/west-first", torus)
         .layer(c1)
         .layer(k9)
         .mappers(mappers)

@@ -19,7 +19,7 @@
 
 use std::time::Duration;
 
-use noctt::config::{PlacementPreset, PlatformConfig};
+use noctt::config::{PlacementPreset, PlatformConfig, RoutingAlgorithm, TopologyKind};
 use noctt::dnn::{lenet5, LayerSpec};
 use noctt::experiments::engine::Scenario;
 use noctt::experiments::{fig7, table1};
@@ -178,6 +178,27 @@ fn main() {
             bench("fig10/c1-4mc-sampling-10", t, Some((cycles, "sim-cycles")), || {
                 std::hint::black_box(
                     run_layer(&cfg4, &c1, Strategy::Sampling(10)).expect("bench run"),
+                );
+            })
+            .with_sim_cycles(cycles),
+        );
+    }
+
+    // arch — the torus/west-first architecture cell: wrap wires, dateline
+    // VC classes, and adaptive route-compute all sit on the hot path here,
+    // so the bench-smoke job (and the perf trajectory) covers the
+    // topology/routing subsystem, not just the default mesh.
+    if args.selected("arch/c1-torus-west-first") {
+        let torus = PlatformConfig::builder()
+            .topology(TopologyKind::Torus)
+            .routing(RoutingAlgorithm::WestFirst)
+            .build()
+            .expect("torus platform");
+        let cycles = simulated_cycles(&torus, &c1, Strategy::Sampling(10));
+        results.push(
+            bench("arch/c1-torus-west-first", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(
+                    run_layer(&torus, &c1, Strategy::Sampling(10)).expect("bench run"),
                 );
             })
             .with_sim_cycles(cycles),

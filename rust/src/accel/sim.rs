@@ -93,9 +93,10 @@ impl Simulation {
         cfg.validate().expect("invalid platform");
         let net = Network::new(cfg);
         let mcs: Vec<Mc> = cfg.mc_nodes.iter().map(|&n| Mc::with_model(n, cfg.mem_model)).collect();
-        // Nearest-MC assignment; ties balanced by round-robin over the tied
+        // Nearest-MC assignment on the platform's actual topology (torus
+        // wrap links count); ties balanced by round-robin over the tied
         // set in PE order (deterministic).
-        let mesh = net.mesh().clone();
+        let topo = net.topology().clone();
         let mut tie_rr = 0usize;
         let pes: Vec<Pe> = cfg
             .pe_nodes()
@@ -105,14 +106,14 @@ impl Simulation {
                 let best = cfg
                     .mc_nodes
                     .iter()
-                    .map(|&mc| mesh.hop_distance(node, mc))
+                    .map(|&mc| topo.hop_distance(node, mc))
                     .min()
                     .expect("at least one MC");
                 let tied: Vec<usize> = cfg
                     .mc_nodes
                     .iter()
                     .copied()
-                    .filter(|&mc| mesh.hop_distance(node, mc) == best)
+                    .filter(|&mc| topo.hop_distance(node, mc) == best)
                     .collect();
                 let mc = tied[tie_rr % tied.len()];
                 if tied.len() > 1 {
@@ -283,12 +284,14 @@ impl Simulation {
             self.pes.iter().map(|p| p.budget() - p.completed()).sum();
         format!(
             "{phase} failed to converge within max_phase_cycles = {} \
-             (phase started at cycle {start}, now {}; {}x{} mesh, {} MCs at {:?}, \
+             (phase started at cycle {start}, now {}; {}x{} {}, {} routing, {} MCs at {:?}, \
              {} PEs, {} tasks outstanding) — deadlock?",
             self.cfg.max_phase_cycles,
             self.net.now(),
             self.cfg.mesh_width,
             self.cfg.mesh_height,
+            self.cfg.topology,
+            self.cfg.routing,
             self.cfg.mc_nodes.len(),
             self.cfg.mc_nodes,
             self.pes.len(),

@@ -4,8 +4,14 @@
 //! 2 GHz (Garnet-derived: 4 VCs per link, 4-flit buffers, X-Y routing),
 //! Simba-like PEs with 64 MAC units at 200 MHz, and DDR5-like memory
 //! controllers with 64 GB/s bandwidth (one 16-bit datum every 0.0625 router
-//! cycles).
+//! cycles). The architecture axis is open: the builder's
+//! [`topology`](PlatformBuilder::topology) / [`routing`](PlatformBuilder::routing)
+//! knobs select a torus fabric and/or a different routing algorithm (see
+//! [`crate::noc::topology`]).
 
 pub mod platform;
 
-pub use platform::{MemModel, PlacementPreset, PlatformBuilder, PlatformConfig, SteppingMode};
+pub use platform::{
+    MemModel, PlacementPreset, PlatformBuilder, PlatformConfig, RoutingAlgorithm, SteppingMode,
+    TopologyKind,
+};

@@ -1,5 +1,8 @@
 //! The accelerator platform description (§5.1 of the paper).
 
+use crate::noc::topology::Topology;
+pub use crate::noc::topology::{RoutingAlgorithm, TopologyKind};
+
 /// Memory-controller placement presets used in the evaluation.
 ///
 /// Placements are reverse-engineered from Fig. 1/Fig. 3: with MCs at mesh
@@ -66,10 +69,16 @@ pub enum SteppingMode {
 /// **router cycle** (NoC clock, 2 GHz by default → 0.5 ns).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlatformConfig {
-    /// Mesh width (columns).
+    /// Fabric width (columns).
     pub mesh_width: usize,
-    /// Mesh height (rows).
+    /// Fabric height (rows).
     pub mesh_height: usize,
+    /// Fabric shape: plain mesh (default) or wrap-around torus. A torus
+    /// needs W, H ≥ 3 and ≥ 2 VCs (dateline deadlock avoidance — see
+    /// [`crate::noc::topology`]).
+    pub topology: TopologyKind,
+    /// Routing algorithm the routers use (X-Y dimension order by default).
+    pub routing: RoutingAlgorithm,
     /// Node ids hosting memory controllers; every other node hosts a PE.
     pub mc_nodes: Vec<usize>,
     /// Virtual channels per physical link (paper: 4).
@@ -107,15 +116,16 @@ pub struct PlatformConfig {
     pub stepping: SteppingMode,
 }
 
-/// Builder for [`PlatformConfig`]: arbitrary W×H meshes, arbitrary MC
-/// placements, and every flit/VC/memory knob, validated at
-/// [`build`](PlatformBuilder::build) time.
+/// Builder for [`PlatformConfig`]: arbitrary W×H fabrics (mesh or torus,
+/// with selectable routing), arbitrary MC placements, and every
+/// flit/VC/memory knob, validated at [`build`](PlatformBuilder::build)
+/// time.
 ///
 /// Starts from the paper's §5.1 constants, so a builder only names what it
 /// changes:
 ///
 /// ```
-/// use noctt::config::PlatformConfig;
+/// use noctt::config::{PlatformConfig, RoutingAlgorithm, TopologyKind};
 ///
 /// // An 8x8 mesh with four centre MCs and wide flits.
 /// let cfg = PlatformConfig::builder()
@@ -126,8 +136,18 @@ pub struct PlatformConfig {
 ///     .unwrap();
 /// assert_eq!(cfg.num_pes(), 60);
 ///
+/// // A torus with west-first routing — the §5 architecture axis.
+/// let torus = PlatformConfig::builder()
+///     .topology(TopologyKind::Torus)
+///     .routing(RoutingAlgorithm::WestFirst)
+///     .build()
+///     .unwrap();
+/// assert_eq!(torus.topo().hop_distance(0, 3), 1, "wrap links shorten edge trips");
+///
 /// // Invalid configurations fail at build, not deep inside the simulator.
 /// assert!(PlatformConfig::builder().mesh(2, 2).mc_nodes([9]).build().is_err());
+/// // A torus needs W,H >= 3 for its wrap rings.
+/// assert!(PlatformConfig::builder().mesh(2, 4).mc_nodes([1]).topology(TopologyKind::Torus).build().is_err());
 /// ```
 #[derive(Debug, Clone)]
 pub struct PlatformBuilder {
@@ -135,10 +155,25 @@ pub struct PlatformBuilder {
 }
 
 impl PlatformBuilder {
-    /// Mesh dimensions (columns × rows).
+    /// Fabric dimensions (columns × rows).
     pub fn mesh(mut self, width: usize, height: usize) -> Self {
         self.cfg.mesh_width = width;
         self.cfg.mesh_height = height;
+        self
+    }
+
+    /// Fabric shape: [`TopologyKind::Mesh`] (default) or
+    /// [`TopologyKind::Torus`] (wrap links; needs W, H ≥ 3 and ≥ 2 VCs,
+    /// checked at [`build`](Self::build)).
+    pub fn topology(mut self, kind: TopologyKind) -> Self {
+        self.cfg.topology = kind;
+        self
+    }
+
+    /// Routing algorithm: X-Y (default), Y-X, or west-first
+    /// partial-adaptive (see [`RoutingAlgorithm`]).
+    pub fn routing(mut self, algo: RoutingAlgorithm) -> Self {
+        self.cfg.routing = algo;
         self
     }
 
@@ -261,6 +296,8 @@ impl PlatformConfig {
         Self {
             mesh_width: 4,
             mesh_height: 4,
+            topology: TopologyKind::Mesh,
+            routing: RoutingAlgorithm::XY,
             mc_nodes,
             num_vcs: 4,
             vc_depth: 4,
@@ -277,9 +314,18 @@ impl PlatformConfig {
         }
     }
 
-    /// Total node count in the mesh.
+    /// Total node count in the fabric.
     pub fn num_nodes(&self) -> usize {
         self.mesh_width * self.mesh_height
+    }
+
+    /// The fabric [`Topology`] this configuration describes (dimensions +
+    /// kind). All hop distances and routes — the simulator's, the static
+    /// mappers', the experiments' — must come from here, never from
+    /// hand-rolled Manhattan math, so that a torus platform bends every
+    /// layer consistently.
+    pub fn topo(&self) -> Topology {
+        Topology::with_kind(self.mesh_width, self.mesh_height, self.topology)
     }
 
     /// Node ids hosting PEs, ascending (row-major order — the paper's
@@ -316,6 +362,20 @@ impl PlatformConfig {
     /// Basic structural validation.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.mesh_width >= 2 && self.mesh_height >= 2, "mesh must be at least 2x2");
+        if self.topology == TopologyKind::Torus {
+            anyhow::ensure!(
+                self.mesh_width >= 3 && self.mesh_height >= 3,
+                "torus topology needs W,H >= 3 (got {}x{}): a 2-ring's wrap link duplicates \
+                 the internal link and the dateline scheme needs a real ring",
+                self.mesh_width,
+                self.mesh_height
+            );
+            anyhow::ensure!(
+                self.num_vcs >= 2,
+                "torus topology needs >= 2 VCs for the two dateline classes (got {})",
+                self.num_vcs
+            );
+        }
         anyhow::ensure!(!self.mc_nodes.is_empty(), "need at least one MC node");
         anyhow::ensure!(
             self.mc_nodes.iter().all(|&n| n < self.num_nodes()),
@@ -449,6 +509,40 @@ mod tests {
         assert_eq!(PlatformConfig::default_2mc().stepping, SteppingMode::EventDriven);
         let dense = PlatformConfig::builder().stepping(SteppingMode::Dense).build().unwrap();
         assert_eq!(dense.stepping, SteppingMode::Dense);
+    }
+
+    #[test]
+    fn topology_and_routing_knobs_build_and_validate() {
+        let p = PlatformConfig::builder()
+            .topology(TopologyKind::Torus)
+            .routing(RoutingAlgorithm::WestFirst)
+            .build()
+            .unwrap();
+        assert_eq!(p.topology, TopologyKind::Torus);
+        assert_eq!(p.routing, RoutingAlgorithm::WestFirst);
+        assert_eq!(p.topo().hop_distance(0, 3), 1, "topo() must be wrap-aware");
+
+        // Defaults stay the paper's mesh + X-Y.
+        let d = PlatformConfig::default_2mc();
+        assert_eq!(d.topology, TopologyKind::Mesh);
+        assert_eq!(d.routing, RoutingAlgorithm::XY);
+        assert_eq!(d.topo().hop_distance(0, 3), 3);
+
+        // Torus structural limits: W,H >= 3 and >= 2 VCs.
+        assert!(PlatformConfig::builder()
+            .mesh(2, 4)
+            .mc_nodes([1])
+            .topology(TopologyKind::Torus)
+            .build()
+            .is_err());
+        assert!(PlatformConfig::builder()
+            .topology(TopologyKind::Torus)
+            .num_vcs(1)
+            .build()
+            .is_err());
+        // The same shapes are fine as meshes.
+        assert!(PlatformConfig::builder().mesh(2, 4).mc_nodes([1]).build().is_ok());
+        assert!(PlatformConfig::builder().num_vcs(1).build().is_ok());
     }
 
     #[test]

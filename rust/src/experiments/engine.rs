@@ -8,25 +8,26 @@
 //! sweep (larger meshes, new strategies, new networks) is a few builder
 //! calls:
 //!
-//! ```no_run
-//! use noctt::config::PlatformConfig;
-//! use noctt::dnn::lenet5;
+//! ```
+//! use noctt::config::{PlatformConfig, TopologyKind};
+//! use noctt::dnn::LayerSpec;
 //! use noctt::experiments::engine::Scenario;
 //!
+//! // A small grid: the paper's mesh vs a torus, one layer, two mappers.
 //! let results = Scenario::new("demo")
 //!     .platform("2mc", PlatformConfig::default_2mc())
 //!     .platform(
-//!         "8x8/4mc",
-//!         PlatformConfig::builder().mesh(8, 8).mc_nodes([27, 28, 35, 36]).build().unwrap(),
+//!         "torus",
+//!         PlatformConfig::builder().topology(TopologyKind::Torus).build().unwrap(),
 //!     )
-//!     .layer(lenet5(6).remove(0))
+//!     .layer(LayerSpec::conv("demo", 3, 1.0, 140))
 //!     .mapper("row-major")
-//!     .mapper("sampling-10")
+//!     .mapper("sampling-2")
 //!     .run()
 //!     .unwrap();
-//! let base = results.run(0, 0, 0).summary.latency;
-//! let ours = results.run(0, 0, 1).summary.latency;
-//! assert!(ours <= base);
+//! assert_eq!(results.cells.len(), 4);
+//! let base = results.get("2mc", "demo", "row-major").unwrap();
+//! assert_eq!(base.run.counts.iter().sum::<u64>(), 140);
 //! ```
 //!
 //! Mappers are resolved by name through a [`Registry`] (a custom registry

@@ -9,6 +9,7 @@
 //! | [`fig9`]   | Fig. 9 — different packet sizes (kernel 1×1–13×13) |
 //! | [`fig10`]  | Fig. 10 — NoC architectures (2 MCs vs 4 MCs) |
 //! | [`fig11`]  | Fig. 11 — whole LeNet under all six mappings |
+//! | [`arch`]   | extension — {mesh, torus} × {xy, yx, west-first} sweep |
 //! | [`ablation`] | extension — memory-service discipline vs. saturation |
 //! | [`heatmap`] | extension — per-router congestion heatmap |
 //!
@@ -31,6 +32,7 @@
 //! next to ours.
 
 pub mod ablation;
+pub mod arch;
 pub mod engine;
 pub mod fig10;
 pub mod heatmap;
@@ -70,6 +72,7 @@ pub fn all_reports(quick: bool) -> Vec<Report> {
         fig9::run(quick),
         fig10::run(quick),
         fig11::run(quick),
+        arch::run(quick),
         ablation::run(quick),
         heatmap::run(quick),
     ]
@@ -84,15 +87,16 @@ pub fn run_by_id(id: &str, quick: bool) -> Option<Report> {
         "fig9" => Some(fig9::run(quick)),
         "fig10" => Some(fig10::run(quick)),
         "fig11" => Some(fig11::run(quick)),
+        "arch" => Some(arch::run(quick)),
         "ablation" => Some(ablation::run(quick)),
         "heatmap" => Some(heatmap::run(quick)),
         _ => None,
     }
 }
 
-/// Ids of all experiments, in paper order.
-pub const ALL_IDS: [&str; 8] =
-    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation", "heatmap"];
+/// Ids of all experiments, in paper order (extensions last).
+pub const ALL_IDS: [&str; 9] =
+    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "arch", "ablation", "heatmap"];
 
 #[cfg(test)]
 mod tests {

@@ -7,15 +7,20 @@
 //! ## The three public pillars
 //!
 //! 1. **[`mapping::Mapper`]** — the object-safe strategy trait, with a
-//!    name → constructor **[`mapping::registry`]**. The five paper
+//!    name → constructor **[`mapping::registry()`]**. The five paper
 //!    strategies (row-major, distance, static-latency, post-run,
 //!    sampling-window) are builtin registrations, all selectable by name
 //!    from the CLI (`noctt sim --strategy <name>`); new strategies
 //!    register on a [`mapping::Registry`] and join any
 //!    [`experiments::engine::Scenario`] sweep — no dispatch code changes.
-//! 2. **[`config::PlatformConfig::builder`]** — arbitrary W×H meshes, MC
-//!    placements, and flit/VC/memory knobs with validation at `build()`;
-//!    the paper's §5.1 presets are builder shortcuts.
+//! 2. **[`config::PlatformConfig::builder`]** — arbitrary W×H fabrics
+//!    (plain **mesh** or wrap-around **torus**, via
+//!    [`config::TopologyKind`]), selectable routing
+//!    ([`config::RoutingAlgorithm`]: X-Y, Y-X, or west-first
+//!    partial-adaptive), MC placements, and flit/VC/memory knobs with
+//!    validation at `build()`; the paper's §5.1 presets are builder
+//!    shortcuts, and the CLI exposes the fabric knobs as
+//!    `--topology mesh|torus` / `--routing xy|yx|west-first`.
 //! 3. **[`experiments::engine::Scenario`]** — the declarative
 //!    {platforms × layers × mappers} sweep engine with shared result
 //!    collection ([`experiments::engine::SweepResults`]); every
@@ -90,8 +95,11 @@
 //!
 //! ## Layers underneath
 //!
-//! * [`noc`] — a cycle-accurate 2-D-mesh virtual-channel Network-on-Chip
-//!   simulator (5-stage routers, credit-based flow control, X-Y routing).
+//! * [`noc`] — a cycle-accurate virtual-channel Network-on-Chip simulator
+//!   (5-stage routers, credit-based flow control) over a pluggable
+//!   topology/routing layer: W×H mesh or torus, X-Y / Y-X / west-first
+//!   routing, with the deadlock-freedom arguments (turn model, torus
+//!   dateline VC classes) documented in [`noc::topology`].
 //! * [`accel`] — the CNN accelerator device models (PE with 64 MACs, memory
 //!   controllers with a DDR5-like bandwidth model) and the co-simulation
 //!   engine that drives them against the NoC.

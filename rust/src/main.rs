@@ -2,10 +2,12 @@
 //! inspection, and PJRT LeNet inference, all from the command line.
 //!
 //! ```text
-//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|ablation|heatmap|all> [--quick] [--jobs N]
+//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|all> [--quick] [--jobs N]
 //! noctt sim --layer <C1|S2|C3|S4|C5|F6|OUT|k<N>> --strategy <name>
 //!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...] [--channels N]
+//!           [--topology mesh|torus] [--routing xy|yx|west-first]
 //! noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
+//!                [--topology mesh|torus] [--routing xy|yx|west-first]
 //! noctt infer [--artifacts DIR] [--batch 1|8]
 //! noctt smoke [--artifacts DIR]
 //! noctt report [--jobs N]
@@ -17,7 +19,7 @@
 //! `NOCTT_JOBS` environment variable, which can also be set directly.
 //! Results are identical for any worker count.
 //!
-//! Strategies are resolved by name through [`noctt::mapping::registry`]
+//! Strategies are resolved by name through [`noctt::mapping::registry()`]
 //! (the builtin set, including parameterized families like
 //! `sampling-<W>`), so `--strategy` needs no dispatch code here. Custom
 //! strategies plug in programmatically: register them on a
@@ -230,16 +232,20 @@ fn usage() -> ! {
         "noctt — travel-time based task mapping for NoC-based DNN accelerators\n\
          \n\
          Usage:\n\
-         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|ablation|heatmap|all> [--quick] [--jobs N]\n\
+         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|all> [--quick] [--jobs N]\n\
          \x20 noctt sim --layer <C1..OUT|k<N>> --strategy <s> [--mcs 2|4]\n\
          \x20           [--mesh WxH] [--mc-at n1,n2,...] [--channels N]\n\
+         \x20           [--topology mesh|torus] [--routing xy|yx|west-first]\n\
          \x20 noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]\n\
+         \x20                [--topology mesh|torus] [--routing xy|yx|west-first]\n\
          \x20 noctt infer [--artifacts DIR] [--batch 1|8]\n\
          \x20 noctt smoke [--artifacts DIR]\n\
          \x20 noctt report [--jobs N]\n\
          \n\
          --jobs N  sweep worker threads (default: all cores; 1 = serial;\n\
          \x20          also settable as the NOCTT_JOBS environment variable)\n\
+         --topology/--routing  the NoC architecture axis: wrap-around torus\n\
+         \x20          fabrics and Y-X / west-first partial-adaptive routing\n\
          \n\
          Strategies (registry names):\n{}",
         strategies.join("\n")
@@ -275,6 +281,12 @@ fn parse_platform(a: &args::Args) -> Result<PlatformConfig> {
             .collect::<Result<_, _>>()
             .context("--mc-at needs a comma-separated node id list, e.g. 27,28,35,36")?;
         b = b.mc_nodes(nodes);
+    }
+    if let Some(t) = a.get("topology") {
+        b = b.topology(t.parse().context("--topology takes mesh|torus")?);
+    }
+    if let Some(r) = a.get("routing") {
+        b = b.routing(r.parse().context("--routing takes xy|yx|west-first")?);
     }
     b.build()
 }
@@ -351,9 +363,11 @@ fn cmd_sim(a: &args::Args) -> Result<()> {
 fn cmd_platform(a: &args::Args) -> Result<()> {
     let cfg = parse_platform(a)?;
     println!(
-        "mesh {}x{} | {} MCs at {:?} | {} PEs | {} VCs x {}-flit buffers | flit {} bits",
+        "{} {}x{} | routing {} | {} MCs at {:?} | {} PEs | {} VCs x {}-flit buffers | flit {} bits",
+        cfg.topology,
         cfg.mesh_width,
         cfg.mesh_height,
+        cfg.routing,
         cfg.mc_nodes.len(),
         cfg.mc_nodes,
         cfg.num_pes(),

@@ -17,7 +17,6 @@ use std::borrow::Cow;
 
 use crate::config::PlatformConfig;
 use crate::mapping::{MapCtx, Mapper};
-use crate::noc::Mesh;
 use crate::util::apportion::inverse_proportional;
 
 /// Distance-based mapping — the registered §3.3 [`Mapper`].
@@ -34,15 +33,18 @@ impl Mapper for Distance {
     }
 }
 
-/// Hop distance from each PE (dense order) to its nearest MC.
+/// Hop distance from each PE (dense order) to its nearest MC, on the
+/// platform's actual topology — torus wrap links shorten the classes, so
+/// the distance oracle must come from [`PlatformConfig::topo`], never from
+/// hand-rolled Manhattan math.
 pub fn pe_distances(cfg: &PlatformConfig) -> Vec<u64> {
-    let mesh = Mesh::new(cfg.mesh_width, cfg.mesh_height);
+    let topo = cfg.topo();
     cfg.pe_nodes()
         .into_iter()
         .map(|pe| {
             cfg.mc_nodes
                 .iter()
-                .map(|&mc| mesh.hop_distance(pe, mc) as u64)
+                .map(|&mc| topo.hop_distance(pe, mc) as u64)
                 .min()
                 .expect("at least one MC")
         })
@@ -112,5 +114,29 @@ mod tests {
         for total in [1u64, 13, 14, 100, 4704, 37632] {
             assert_eq!(counts(&cfg, total).iter().sum::<u64>(), total);
         }
+    }
+
+    #[test]
+    fn torus_distances_come_from_the_wrapped_topology() {
+        use crate::config::TopologyKind;
+        // Edge MCs (top row) on a tall fabric: the mesh forces the bottom
+        // rows to walk the full height, the torus wraps straight up.
+        let mesh = PlatformConfig::builder().mesh(4, 8).mc_nodes([1, 2]).build().unwrap();
+        let torus = PlatformConfig::builder()
+            .mesh(4, 8)
+            .mc_nodes([1, 2])
+            .topology(TopologyKind::Torus)
+            .build()
+            .unwrap();
+        let dm = pe_distances(&mesh);
+        let dt = pe_distances(&torus);
+        // Wrap links can only ever shorten a distance…
+        for (i, (&t, &m)) in dt.iter().zip(&dm).enumerate() {
+            assert!(t <= m, "PE {i}: torus distance {t} exceeds mesh distance {m}");
+        }
+        // …and for the bottom rows they genuinely do.
+        assert!(dt.iter().max() < dm.iter().max(), "torus must shrink the worst case");
+        // And the allocation still conserves tasks.
+        assert_eq!(counts(&torus, 4704).iter().sum::<u64>(), 4704);
     }
 }

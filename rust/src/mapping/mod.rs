@@ -11,7 +11,7 @@
 //!   the running platform (sampling window) or pay an extra profiling run
 //!   (post-run).
 //! * [`MapCtx`] — the platform + layer context a mapper plans against.
-//! * [`registry`] — the name → constructor [`Registry`]: strategies are
+//! * [`registry`](mod@registry) — the name → constructor [`Registry`]: strategies are
 //!   selected by name (`"row-major"`, `"sampling-10"`, …) from the CLI,
 //!   the experiment tables, and the
 //!   [`Scenario`](crate::experiments::engine::Scenario) sweep engine. New
@@ -55,7 +55,7 @@ use crate::dnn::LayerSpec;
 use crate::metrics::RunSummary;
 
 /// Mapping strategy selector — a thin back-compat shim over the builtin
-/// [`Mapper`] implementations. Prefer the [`registry`] for anything
+/// [`Mapper`] implementations. Prefer the [`registry()`] for anything
 /// name-driven.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {

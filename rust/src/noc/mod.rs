@@ -1,15 +1,21 @@
-//! Cycle-accurate 2-D-mesh virtual-channel Network-on-Chip simulator.
+//! Cycle-accurate virtual-channel Network-on-Chip simulator with a
+//! pluggable topology/routing layer.
 //!
 //! This is the substrate the paper evaluates on (§5.1): a Garnet-derived
-//! behavioural VC network with X-Y dimension-order routing, four virtual
-//! channels per physical link, four-flit buffers per VC, credit-based flow
-//! control, and a pipelined router (buffer-write/route-compute → VC
-//! allocation → switch allocation → switch/link traversal, one cycle per
-//! stage, 1-cycle links and credit return).
+//! behavioural VC network — four virtual channels per physical link,
+//! four-flit buffers per VC, credit-based flow control, and a pipelined
+//! router (buffer-write/route-compute → VC allocation → switch allocation
+//! → switch/link traversal, one cycle per stage, 1-cycle links and credit
+//! return). The fabric shape and routing are platform knobs rather than
+//! hardwired: a W×H **mesh** or **torus** ([`topology::TopologyKind`])
+//! routed by X-Y, Y-X, or west-first partial-adaptive
+//! ([`topology::RoutingAlgorithm`]) — see [`topology`] for the routing
+//! legality and deadlock-freedom arguments (turn model, torus datelines).
 //!
 //! Structure:
 //! * [`flit`] — flit/packet wire types and the packet metadata table.
-//! * [`topology`] — mesh coordinates, hop distances, X-Y routing.
+//! * [`topology`] — fabric geometry, hop distances, routing algorithms,
+//!   and the torus dateline VC classes.
 //! * [`router`] — the 5-port VC router microarchitecture.
 //! * [`ni`] — network interfaces: packetization, injection, ejection.
 //! * [`network`] — wires routers + NIs together and advances the clock.
@@ -22,4 +28,4 @@ pub mod topology;
 
 pub use flit::{Flit, FlitKind, PacketId, PacketInfo, PacketKind};
 pub use network::{Network, NetworkStats};
-pub use topology::{Mesh, NodeId, Port, NUM_PORTS};
+pub use topology::{Mesh, NodeId, Port, RoutingAlgorithm, Topology, TopologyKind, NUM_PORTS};

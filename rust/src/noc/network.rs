@@ -58,7 +58,7 @@ use crate::config::PlatformConfig;
 use crate::noc::flit::{Flit, PacketId, PacketInfo, PacketKind, T_NEVER};
 use crate::noc::ni::Ni;
 use crate::noc::router::Router;
-use crate::noc::topology::{Mesh, NodeId, Port, PORT_LOCAL};
+use crate::noc::topology::{NodeId, Port, RoutingAlgorithm, Topology, PORT_LOCAL};
 
 /// Aggregate traffic statistics.
 #[derive(Debug, Clone, Default)]
@@ -77,7 +77,8 @@ pub struct NetworkStats {
     /// Delivered packet count by kind.
     pub delivered_by_kind: [u64; 3],
     /// Flits switched per router per output port (congestion heatmap:
-    /// `switched_per_port[node][port]`, ports as in [`topology`]).
+    /// `switched_per_port[node][port]`, ports as in
+    /// [`topology`](crate::noc::topology)).
     pub switched_per_port: Vec<[u64; crate::noc::topology::NUM_PORTS]>,
 }
 
@@ -107,7 +108,8 @@ type NiCreditWire = (NodeId, usize);
 
 /// The network fabric.
 pub struct Network {
-    mesh: Mesh,
+    topo: Topology,
+    routing: RoutingAlgorithm,
     routers: Vec<Router>,
     nis: Vec<Ni>,
     packets: Vec<PacketInfo>,
@@ -136,15 +138,17 @@ pub struct Network {
 }
 
 impl Network {
-    /// Build the fabric described by `cfg`.
+    /// Build the fabric described by `cfg` (mesh or torus, with the
+    /// configured routing algorithm).
     pub fn new(cfg: &PlatformConfig) -> Self {
-        let mesh = Mesh::new(cfg.mesh_width, cfg.mesh_height);
-        let num_nodes = mesh.len();
+        let topo = cfg.topo();
+        let num_nodes = topo.len();
         let routers =
-            (0..mesh.len()).map(|n| Router::new(n, cfg.num_vcs, cfg.vc_depth)).collect();
-        let nis = (0..mesh.len()).map(|n| Ni::new(n, cfg.num_vcs, cfg.vc_depth)).collect();
+            (0..num_nodes).map(|n| Router::new(n, cfg.num_vcs, cfg.vc_depth)).collect();
+        let nis = (0..num_nodes).map(|n| Ni::new(n, cfg.num_vcs, cfg.vc_depth)).collect();
         Self {
-            mesh,
+            topo,
+            routing: cfg.routing,
             routers,
             nis,
             packets: Vec::new(),
@@ -175,9 +179,20 @@ impl Network {
         self.cycle
     }
 
-    /// The mesh topology.
-    pub fn mesh(&self) -> &Mesh {
-        &self.mesh
+    /// The fabric topology (mesh or torus).
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// The fabric topology — back-compat alias for
+    /// [`topology`](Self::topology) from the mesh-only era.
+    pub fn mesh(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// The routing algorithm in use.
+    pub fn routing(&self) -> RoutingAlgorithm {
+        self.routing
     }
 
     /// Read-only packet table.
@@ -409,10 +424,10 @@ impl Network {
                     self.ni_credit_wires.push((node, m.in_vc));
                 } else {
                     let upstream = self
-                        .mesh
+                        .topo
                         .neighbor(node, m.in_port)
-                        .expect("flit arrived through an in-mesh port");
-                    let up_port = Mesh::opposite(m.in_port);
+                        .expect("flit arrived through a connected port");
+                    let up_port = Topology::opposite(m.in_port);
                     self.credit_wires.push((upstream, up_port, m.in_vc));
                 }
                 if m.out_port == PORT_LOCAL {
@@ -432,10 +447,10 @@ impl Network {
                     }
                 } else {
                     let next = self
-                        .mesh
+                        .topo
                         .neighbor(node, m.out_port)
-                        .expect("xy routing never exits the mesh");
-                    let in_port = Mesh::opposite(m.out_port);
+                        .expect("routing never exits the fabric");
+                    let in_port = Topology::opposite(m.out_port);
                     self.flit_wires.push((next, in_port, m.out_vc, m.flit));
                 }
             }
@@ -447,10 +462,11 @@ impl Network {
             let node = if dense { k } else { self.router_worklist[k] };
             self.routers[node].vc_allocate();
         }
-        // 5. Route computation on every active router.
+        // 5. Route computation on every active router (under the
+        // platform's routing algorithm on its topology).
         for k in 0..router_count {
             let node = if dense { k } else { self.router_worklist[k] };
-            self.routers[node].route_compute(&self.mesh);
+            self.routers[node].route_compute(&self.topo, self.routing);
         }
 
         // Worklist compaction: drop components that went quiescent this
@@ -596,6 +612,59 @@ mod tests {
             n.packet(id).network_latency()
         };
         assert!(loaded > solo, "congestion must add latency: solo {solo}, loaded {loaded}");
+    }
+
+    fn torus_net() -> Network {
+        use crate::config::TopologyKind;
+        Network::new(&PlatformConfig::builder().topology(TopologyKind::Torus).build().unwrap())
+    }
+
+    #[test]
+    fn torus_wrap_link_shortens_edge_to_edge_delivery() {
+        // 0 → 3: three hops on the mesh, one wrap hop on the torus.
+        let lat = |net: &mut Network| {
+            let id = net.send(0, 3, PacketKind::Request, 1, 0, 0);
+            net.run_to_quiescence(1000);
+            net.packet(id).network_latency()
+        };
+        let mesh = lat(&mut net());
+        let torus = lat(&mut torus_net());
+        assert!(torus < mesh, "wrap link must shorten the trip: torus {torus}, mesh {mesh}");
+    }
+
+    #[test]
+    fn torus_all_to_all_traffic_drains_without_deadlock() {
+        // Every node fires a multi-flit packet at its diagonally opposite
+        // node: half the hops cross wrap links, exercising the dateline VC
+        // classes under contention.
+        let mut n = torus_net();
+        let mut ids = Vec::new();
+        for node in 0..16usize {
+            let (x, y) = (node % 4, node / 4);
+            let dst = ((y + 2) % 4) * 4 + (x + 2) % 4;
+            ids.push(n.send(node, dst, PacketKind::Response, 8, 0, 0));
+        }
+        n.run_to_quiescence(100_000);
+        for id in ids {
+            assert!(n.packet(id).delivered(), "packet {id} lost on the torus");
+        }
+        assert_eq!(n.stats().packets_delivered, 16);
+    }
+
+    #[test]
+    fn west_first_routing_delivers_everything() {
+        let cfg =
+            PlatformConfig::builder().routing(RoutingAlgorithm::WestFirst).build().unwrap();
+        let mut n = Network::new(&cfg);
+        let mut ids = Vec::new();
+        for pe in cfg.pe_nodes() {
+            ids.push(n.send(pe, 9, PacketKind::Request, 2, 0, 0));
+            ids.push(n.send(pe, 10, PacketKind::Request, 4, 0, 0));
+        }
+        n.run_to_quiescence(100_000);
+        for id in ids {
+            assert!(n.packet(id).delivered(), "packet {id} lost under west-first");
+        }
     }
 
     #[test]

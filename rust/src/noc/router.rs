@@ -6,9 +6,17 @@
 //! 1. **BW** — buffer write: an arriving flit is written into the input VC
 //!    buffer ([`Router::accept_flit`], driven by the network's wire stage).
 //! 2. **RC** — route compute: an idle input VC with a head flit at its
-//!    buffer front computes the X-Y output port.
-//! 3. **VA** — VC allocation: the packet acquires a free VC on the chosen
-//!    output port (separable, round-robin among requesters).
+//!    buffer front computes the output port under the platform's
+//!    [`RoutingAlgorithm`] on its [`Topology`]. Deterministic algorithms
+//!    (X-Y, Y-X) yield one port; west-first partial-adaptive yields up to
+//!    three productive candidates and the router picks the one with the
+//!    most free downstream credits (ties break on candidate order — fully
+//!    deterministic, so runs stay reproducible). RC also records the legal
+//!    output-VC class for the hop ([`Topology::out_vc_range`] — the torus
+//!    dateline restriction; unconstrained on meshes).
+//! 3. **VA** — VC allocation: the packet acquires a free VC **within its
+//!    legal class** on the chosen output port (separable, round-robin
+//!    among requesters).
 //! 4. **SA + ST/LT** — switch allocation and traversal: per output port a
 //!    round-robin arbiter grants one buffered flit with downstream credit;
 //!    the flit traverses switch and link (the network stages its arrival at
@@ -33,15 +41,17 @@
 use std::collections::VecDeque;
 
 use crate::noc::flit::Flit;
-use crate::noc::topology::{Mesh, NodeId, Port, NUM_PORTS, PORT_LOCAL};
+use crate::noc::topology::{NodeId, Port, RoutingAlgorithm, Topology, NUM_PORTS, PORT_LOCAL};
 
 /// Per-input-VC pipeline state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum VcState {
     /// No packet in flight (buffer may still hold a queued next packet).
     Idle,
-    /// Head flit routed; waiting for an output VC.
-    RouteComputed { out_port: Port },
+    /// Head flit routed; waiting for an output VC in the hop's legal class
+    /// (`[vc_first, vc_first + vc_count)` — the torus dateline restriction;
+    /// the full VC set on meshes).
+    RouteComputed { out_port: Port, vc_first: usize, vc_count: usize },
     /// Output VC acquired; flits may be switched.
     Active { out_port: Port, out_vc: usize },
 }
@@ -247,31 +257,67 @@ impl Router {
     }
 
     /// **RC**: route-compute for every idle input VC whose buffer front is a
-    /// head flit.
-    pub fn route_compute(&mut self, mesh: &Mesh) {
+    /// head flit, under the platform's routing algorithm.
+    ///
+    /// For the partial-adaptive algorithm (west-first) the candidate port
+    /// with the most free downstream credits wins, ties breaking on the
+    /// algorithm's deterministic candidate order — local state only, so
+    /// event-driven and dense stepping see identical choices.
+    pub fn route_compute(&mut self, topo: &Topology, routing: RoutingAlgorithm) {
         if self.rc_pending.is_empty() {
             return;
         }
         for i in 0..self.rc_pending.len() {
             let (port, vc) = self.rc_pending[i];
-            let ivc = &mut self.inputs[port * self.num_vcs + vc];
+            let slot = port * self.num_vcs + vc;
             // Duplicate events are possible (arrival + tail-departure in the
             // same cycle); the state check makes processing idempotent.
-            if ivc.state != VcState::Idle {
+            if self.inputs[slot].state != VcState::Idle {
                 continue;
             }
-            if let Some(front) = ivc.buf.front() {
+            if let Some(&front) = self.inputs[slot].buf.front() {
                 debug_assert!(
                     front.kind.is_head(),
                     "router {}: non-head flit at front of idle VC [{port}][{vc}]",
                     self.node
                 );
-                let out_port = mesh.xy_route(self.node, front.dst as NodeId);
-                ivc.state = VcState::RouteComputed { out_port };
+                let dst = front.dst as NodeId;
+                let out_port = self.select_route(topo, routing, dst);
+                let (vc_first, vc_count) =
+                    topo.out_vc_range(self.num_vcs, self.node, out_port, dst);
+                self.inputs[slot].state = VcState::RouteComputed { out_port, vc_first, vc_count };
                 self.va_pending.push((port, vc));
             }
         }
         self.rc_pending.clear();
+    }
+
+    /// Pick the output port for a head flit to `dst`: the routing
+    /// algorithm's candidates, congestion-broken by free downstream
+    /// credits (deterministic; candidate order wins exact ties).
+    fn select_route(&self, topo: &Topology, routing: RoutingAlgorithm, dst: NodeId) -> Port {
+        let cands = topo.route_candidates(routing, self.node, dst);
+        let ports = cands.as_slice();
+        if ports.len() == 1 {
+            return ports[0];
+        }
+        let mut best = ports[0];
+        let mut best_credits = self.port_free_credits(best);
+        for &p in &ports[1..] {
+            let c = self.port_free_credits(p);
+            if c > best_credits {
+                best = p;
+                best_credits = c;
+            }
+        }
+        best
+    }
+
+    /// Total free downstream credits across all VCs of `port` (the local
+    /// congestion signal for adaptive routing).
+    fn port_free_credits(&self, port: Port) -> u32 {
+        let base = port * self.num_vcs;
+        (0..self.num_vcs).map(|v| self.out_credits[base + v] as u32).sum()
     }
 
     /// **VA**: allocate free output VCs to route-computed input VCs.
@@ -279,7 +325,8 @@ impl Router {
     /// Separable allocator with **global rotation fairness**: the shared
     /// waiting list is rotated by the single `va_rr` pointer
     /// (advanced once per granting cycle), then served in order, granting
-    /// each requester the lowest free VC on its output port. Requesters of
+    /// each requester the lowest free VC of its legal class on its output
+    /// port. Requesters of
     /// *different* output ports therefore share one rotation — a starved
     /// requester reaches the front of the rotation within `len` granting
     /// cycles regardless of which port it wants.
@@ -298,12 +345,16 @@ impl Router {
         let mut granted_any = false;
         for i in 0..self.va_scratch.len() {
             let (port, vc) = self.va_scratch[i];
-            let VcState::RouteComputed { out_port } = self.inputs[port * self.num_vcs + vc].state
+            let VcState::RouteComputed { out_port, vc_first, vc_count } =
+                self.inputs[port * self.num_vcs + vc].state
             else {
                 unreachable!("va_pending entry not in RouteComputed state");
             };
             let base = out_port * self.num_vcs;
-            let free = (0..self.num_vcs).find(|&ov| self.out_vc_owner[base + ov].is_none());
+            // Only the hop's legal VC class is searched (torus dateline
+            // restriction; `(0, num_vcs)` on meshes).
+            let free =
+                (vc_first..vc_first + vc_count).find(|&ov| self.out_vc_owner[base + ov].is_none());
             match free {
                 Some(out_vc) => {
                     self.out_vc_owner[base + out_vc] = Some((port, vc));
@@ -445,8 +496,14 @@ mod tests {
         Flit { packet: 0, seq: 0, dst, kind: FlitKind::HeadTail }
     }
 
-    fn mesh() -> Mesh {
-        Mesh::new(4, 4)
+    fn mesh() -> Topology {
+        Topology::new(4, 4)
+    }
+
+    /// Shorthand: the historical single-argument RC call (X-Y on the given
+    /// fabric), which most pipeline tests use.
+    fn rc(r: &mut Router, topo: &Topology) {
+        r.route_compute(topo, RoutingAlgorithm::XY);
     }
 
     #[test]
@@ -456,7 +513,7 @@ mod tests {
         r.accept_flit(PORT_LOCAL, 0, head_tail(1));
         // Nothing switches before RC/VA.
         assert!(r.switch_allocate().is_empty());
-        r.route_compute(&mesh());
+        rc(&mut r, &mesh());
         assert!(r.switch_allocate().is_empty(), "needs VA before SA");
         r.vc_allocate();
         let moves = r.switch_allocate();
@@ -472,7 +529,7 @@ mod tests {
     fn local_delivery_uses_local_port() {
         let mut r = Router::new(5, 4, 4);
         r.accept_flit(PORT_WEST, 1, head_tail(5));
-        r.route_compute(&mesh());
+        rc(&mut r, &mesh());
         r.vc_allocate();
         let moves = r.switch_allocate();
         assert_eq!(moves.len(), 1);
@@ -487,7 +544,7 @@ mod tests {
             r.out_credits[PORT_EAST * 4 + v] = 0;
         }
         r.accept_flit(PORT_LOCAL, 0, head_tail(1));
-        r.route_compute(&mesh());
+        rc(&mut r, &mesh());
         r.vc_allocate();
         assert!(r.switch_allocate().is_empty(), "no credits, no traversal");
         assert!(r.needs_step(), "credit-starved router stays in the active set");
@@ -511,7 +568,7 @@ mod tests {
         r.accept_flit(PORT_LOCAL, 0, f0[1]);
         r.accept_flit(PORT_LOCAL, 1, f1[0]);
         r.accept_flit(PORT_LOCAL, 1, f1[1]);
-        r.route_compute(&mesh());
+        rc(&mut r, &mesh());
         r.vc_allocate();
         // Both packets hold distinct output VCs; but only one flit per input
         // port (local) may traverse per cycle.
@@ -520,7 +577,7 @@ mod tests {
             for m in r.switch_allocate() {
                 sequence.push((m.flit.packet, m.flit.seq, m.out_vc));
             }
-            r.route_compute(&mesh());
+            rc(&mut r, &mesh());
             r.vc_allocate();
         }
         assert_eq!(sequence.len(), 4, "all four flits eventually switch: {sequence:?}");
@@ -556,7 +613,7 @@ mod tests {
         }
         let mut served = Vec::new();
         for _ in 0..12 {
-            r.route_compute(&mesh());
+            rc(&mut r, &mesh());
             r.vc_allocate();
             for m in r.switch_allocate() {
                 served.push(m.flit.packet);
@@ -590,7 +647,7 @@ mod tests {
         r.accept_flit(PORT_WEST, 0, mk(2));
         let mut served = Vec::new();
         for _ in 0..6 {
-            r.route_compute(&mesh());
+            rc(&mut r, &mesh());
             r.vc_allocate();
             for m in r.switch_allocate() {
                 served.push(m.flit.packet);
@@ -624,7 +681,7 @@ mod tests {
         r.accept_flit(PORT_WEST, 0, mk(3));
         let mut served = Vec::new();
         for _ in 0..8 {
-            r.route_compute(&mesh());
+            rc(&mut r, &mesh());
             r.vc_allocate();
             for m in r.switch_allocate() {
                 served.push(m.flit.packet);
@@ -635,6 +692,61 @@ mod tests {
         assert_eq!(r.active_by_out[PORT_EAST].entries.len(), 0);
         assert_eq!(r.active_by_out[PORT_EAST].dead, 0);
         assert!(r.is_quiescent());
+    }
+
+    #[test]
+    fn west_first_adaptive_avoids_the_congested_port() {
+        // Node 0 → node 10 (2,2): east and south are both productive. With
+        // equal credit the deterministic candidate order (east first) wins;
+        // with east credits exhausted the router adapts to south.
+        let m = mesh();
+        let mut r = Router::new(0, 4, 4);
+        r.accept_flit(PORT_LOCAL, 0, head_tail(10));
+        r.route_compute(&m, RoutingAlgorithm::WestFirst);
+        r.vc_allocate();
+        let moves = r.switch_allocate();
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].out_port, PORT_EAST, "equal credit: candidate order wins");
+
+        let mut r = Router::new(0, 4, 4);
+        for v in 0..4 {
+            r.out_credits[PORT_EAST * 4 + v] = 0;
+        }
+        r.accept_flit(PORT_LOCAL, 0, head_tail(10));
+        r.route_compute(&m, RoutingAlgorithm::WestFirst);
+        r.vc_allocate();
+        let moves = r.switch_allocate();
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].out_port, PORT_SOUTH, "credit-starved east: adapt to south");
+    }
+
+    #[test]
+    fn torus_wrap_hop_takes_a_high_class_vc() {
+        // Router 3 (3,0) on a 4x4 torus: a flit to node 0 goes east through
+        // the wrap link, so VA must grant a dateline (high-class) VC — with
+        // 4 VCs, VC 2 or 3.
+        let t = Topology::torus(4, 4);
+        let mut r = Router::new(3, 4, 4);
+        r.accept_flit(PORT_LOCAL, 0, head_tail(0));
+        r.route_compute(&t, RoutingAlgorithm::XY);
+        r.vc_allocate();
+        let moves = r.switch_allocate();
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].out_port, PORT_EAST);
+        assert!(
+            moves[0].out_vc >= 2,
+            "wrap hop must use the high VC class, got VC {}",
+            moves[0].out_vc
+        );
+
+        // A non-wrapping hop stays in the low class.
+        let mut r = Router::new(1, 4, 4);
+        r.accept_flit(PORT_LOCAL, 0, head_tail(2));
+        r.route_compute(&t, RoutingAlgorithm::XY);
+        r.vc_allocate();
+        let moves = r.switch_allocate();
+        assert_eq!(moves[0].out_port, PORT_EAST);
+        assert!(moves[0].out_vc < 2, "plain hop must use the low VC class");
     }
 
     /// Tombstones never linger past the compaction threshold: the physical
@@ -648,7 +760,7 @@ mod tests {
             // Cycle through the four non-east input ports.
             let port = [PORT_LOCAL, PORT_NORTH, PORT_SOUTH, PORT_WEST][round as usize % 4];
             r.accept_flit(port, (round as usize / 4) % 4, f);
-            r.route_compute(&mesh());
+            rc(&mut r, &mesh());
             r.vc_allocate();
             r.switch_allocate();
             let c = &r.active_by_out[PORT_EAST];

@@ -1,11 +1,64 @@
-//! 2-D mesh topology, node coordinates, and X-Y dimension-order routing.
+//! Pluggable NoC topology and routing: W×H **mesh** and **torus** fabrics
+//! with selectable routing algorithms (X-Y, Y-X, west-first).
 //!
 //! Nodes are numbered row-major: node `n` sits at `(x, y) = (n % W, n / W)`
 //! with `x` growing east and `y` growing south, matching the paper's Fig. 1
-//! numbering. X-Y routing first corrects the X offset, then Y — minimal,
-//! deterministic, and deadlock-free on a mesh, as used by Garnet (§5.1).
+//! numbering. A [`Topology`] owns the dimensions plus a [`TopologyKind`]
+//! (mesh or wrap-around torus) and answers the three questions every other
+//! layer asks:
+//!
+//! * **geometry** — [`coords`](Topology::coords) /
+//!   [`node_at`](Topology::node_at) / [`neighbor`](Topology::neighbor)
+//!   (wrap-aware on a torus);
+//! * **distance** — [`hop_distance`](Topology::hop_distance), the metric
+//!   behind the paper's distance classes (Fig. 3), taking the shorter way
+//!   around each torus ring;
+//! * **routing** — [`route`](Topology::route) /
+//!   [`route_candidates`](Topology::route_candidates) /
+//!   [`path`](Topology::path) for a [`RoutingAlgorithm`].
+//!
+//! # Deadlock freedom
+//!
+//! * **Mesh + X-Y / Y-X**: dimension-order routing is minimal,
+//!   deterministic, and deadlock-free, as used by Garnet (§5.1 of the
+//!   paper).
+//! * **Mesh + west-first**: the partial-adaptive turn model of Glass &
+//!   Ni — every hop west happens before any other direction, and turns
+//!   *into* west are never taken, which breaks all abstract cycles. The
+//!   adaptive choice among the remaining productive directions is made by
+//!   the router from local credit state with a deterministic tie-break
+//!   (see [`router`](super::router)), so runs stay reproducible.
+//! * **Torus**: wrap links close each row/column into a ring, which
+//!   re-introduces cyclic channel dependencies. The classic **dateline**
+//!   scheme breaks them: the VC set of every link is split into two
+//!   classes, packets whose remaining travel in the link's dimension still
+//!   crosses the wrap link use the *high* class, all others the *low*
+//!   class ([`out_vc_range`](Topology::out_vc_range)). Along any packet's
+//!   path the class switches high → low at most once (at the dateline), so
+//!   each class's channel-dependency graph is an acyclic chain. This is
+//!   why a torus platform requires at least two VCs and W, H ≥ 3 (enforced
+//!   by [`PlatformConfig::validate`](crate::config::PlatformConfig::validate)).
+//!   On a torus the `WestFirst` selection degrades to its dimension-order
+//!   core (X-Y with datelines): the turn-model argument does not survive
+//!   wrap links, so adaptivity is only offered on meshes.
+//!
+//! ```
+//! use noctt::noc::topology::{RoutingAlgorithm, Topology};
+//!
+//! let mesh = Topology::new(4, 4);
+//! let torus = Topology::torus(4, 4);
+//! // Corner to corner: the torus wraps (1 hop per dimension), the mesh walks.
+//! assert_eq!(mesh.hop_distance(0, 15), 6);
+//! assert_eq!(torus.hop_distance(0, 15), 2);
+//! // Routes are minimal on both fabrics.
+//! let path = torus.path(RoutingAlgorithm::XY, 0, 15);
+//! assert_eq!(path.len() - 1, torus.hop_distance(0, 15));
+//! ```
 
-/// Node identifier (row-major index into the mesh).
+use std::fmt;
+use std::str::FromStr;
+
+/// Node identifier (row-major index into the fabric).
 pub type NodeId = usize;
 
 /// Router port index.
@@ -27,28 +80,171 @@ pub const NUM_PORTS: usize = 5;
 /// Human-readable port names, indexed by [`Port`].
 pub const PORT_NAMES: [&str; NUM_PORTS] = ["local", "north", "east", "south", "west"];
 
-/// A W×H mesh.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct Mesh {
-    width: usize,
-    height: usize,
+/// The fabric shape: how (and whether) the W×H grid's edges connect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TopologyKind {
+    /// Plain 2-D mesh: edge routers have no link off the grid (default).
+    #[default]
+    Mesh,
+    /// 2-D torus: every row and column closes into a ring via wrap links.
+    /// Needs W, H ≥ 3 and ≥ 2 VCs (dateline classes) — see the module docs.
+    Torus,
 }
 
-impl Mesh {
-    /// Create a mesh; both dimensions must be ≥ 1.
-    pub fn new(width: usize, height: usize) -> Self {
-        assert!(width >= 1 && height >= 1, "degenerate mesh {width}x{height}");
-        Self { width, height }
+impl fmt::Display for TopologyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Torus => "torus",
+        })
+    }
+}
+
+impl FromStr for TopologyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "mesh" => Ok(TopologyKind::Mesh),
+            "torus" => Ok(TopologyKind::Torus),
+            other => Err(anyhow::anyhow!("unknown topology '{other}' (expected mesh|torus)")),
+        }
+    }
+}
+
+/// The routing algorithm a platform's routers use at route-compute time.
+///
+/// ```
+/// use noctt::noc::topology::RoutingAlgorithm;
+///
+/// // CLI strings round-trip through FromStr/Display.
+/// let r: RoutingAlgorithm = "west-first".parse().unwrap();
+/// assert_eq!(r, RoutingAlgorithm::WestFirst);
+/// assert_eq!(r.to_string(), "west-first");
+/// assert!("north-last".parse::<RoutingAlgorithm>().is_err());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingAlgorithm {
+    /// Dimension-order: correct X first, then Y (default; the paper's
+    /// baseline router).
+    #[default]
+    XY,
+    /// Dimension-order with the dimensions swapped: Y first, then X.
+    YX,
+    /// Glass & Ni west-first partial-adaptive (mesh only): all west hops
+    /// first, then adaptively east/north/south by downstream credit with a
+    /// deterministic tie-break. On a torus this degrades to `XY` (see the
+    /// module docs on deadlock freedom).
+    WestFirst,
+}
+
+impl fmt::Display for RoutingAlgorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            RoutingAlgorithm::XY => "xy",
+            RoutingAlgorithm::YX => "yx",
+            RoutingAlgorithm::WestFirst => "west-first",
+        })
+    }
+}
+
+impl FromStr for RoutingAlgorithm {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "xy" => Ok(RoutingAlgorithm::XY),
+            "yx" => Ok(RoutingAlgorithm::YX),
+            "west-first" => Ok(RoutingAlgorithm::WestFirst),
+            other => {
+                Err(anyhow::anyhow!("unknown routing '{other}' (expected xy|yx|west-first)"))
+            }
+        }
+    }
+}
+
+/// The legal output ports a routing algorithm offers for one hop, in
+/// deterministic preference order (≥ 1, ≤ 3 entries). Deterministic
+/// algorithms return exactly one; west-first may return up to three
+/// productive directions for the router to pick among by congestion.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteCandidates {
+    ports: [Port; 3],
+    len: u8,
+}
+
+impl RouteCandidates {
+    fn one(port: Port) -> Self {
+        Self { ports: [port, 0, 0], len: 1 }
     }
 
-    /// Mesh width (columns).
+    fn push(&mut self, port: Port) {
+        self.ports[self.len as usize] = port;
+        self.len += 1;
+    }
+
+    /// The candidates, preference order first.
+    pub fn as_slice(&self) -> &[Port] {
+        &self.ports[..self.len as usize]
+    }
+
+    /// The default choice (first candidate) — what a congestion-oblivious
+    /// caller (e.g. [`Topology::path`]) takes.
+    pub fn primary(&self) -> Port {
+        self.ports[0]
+    }
+}
+
+/// A W×H fabric of a given [`TopologyKind`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    width: usize,
+    height: usize,
+    kind: TopologyKind,
+}
+
+/// Backwards-compatible alias from the mesh-only era; [`Topology::new`]
+/// still constructs a plain mesh.
+pub type Mesh = Topology;
+
+impl Topology {
+    /// Create a plain W×H mesh; both dimensions must be ≥ 1.
+    pub fn new(width: usize, height: usize) -> Self {
+        Self::with_kind(width, height, TopologyKind::Mesh)
+    }
+
+    /// Create a W×H torus (wrap links); both dimensions must be ≥ 3 so
+    /// wrap links are distinct from the internal ones.
+    pub fn torus(width: usize, height: usize) -> Self {
+        Self::with_kind(width, height, TopologyKind::Torus)
+    }
+
+    /// Create a W×H fabric of the given kind.
+    pub fn with_kind(width: usize, height: usize, kind: TopologyKind) -> Self {
+        assert!(width >= 1 && height >= 1, "degenerate fabric {width}x{height}");
+        if kind == TopologyKind::Torus {
+            assert!(
+                width >= 3 && height >= 3,
+                "torus needs W,H >= 3, got {width}x{height}: a 2-ring's wrap link \
+                 duplicates the internal link and a 1-ring wraps onto itself"
+            );
+        }
+        Self { width, height, kind }
+    }
+
+    /// Fabric width (columns).
     pub fn width(&self) -> usize {
         self.width
     }
 
-    /// Mesh height (rows).
+    /// Fabric height (rows).
     pub fn height(&self) -> usize {
         self.height
+    }
+
+    /// Mesh or torus.
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
     }
 
     /// Total node count.
@@ -56,7 +252,7 @@ impl Mesh {
         self.width * self.height
     }
 
-    /// True for the degenerate 0-node mesh (never constructible).
+    /// True for the degenerate 0-node fabric (never constructible).
     pub fn is_empty(&self) -> bool {
         false
     }
@@ -73,58 +269,216 @@ impl Mesh {
         y * self.width + x
     }
 
-    /// Manhattan (hop) distance between two nodes — the metric behind the
-    /// paper's distance classes (Fig. 3).
+    /// Distance along one dimension of extent `len`: straight-line on a
+    /// mesh, the shorter way around the ring on a torus.
+    fn dim_distance(&self, a: usize, b: usize, len: usize) -> usize {
+        let d = a.abs_diff(b);
+        match self.kind {
+            TopologyKind::Mesh => d,
+            TopologyKind::Torus => d.min(len - d),
+        }
+    }
+
+    /// Hop distance between two nodes — the metric behind the paper's
+    /// distance classes (Fig. 3). On a torus each dimension takes the
+    /// shorter way around its ring, so it is never larger than the mesh
+    /// distance for the same coordinates.
     pub fn hop_distance(&self, a: NodeId, b: NodeId) -> usize {
         let (ax, ay) = self.coords(a);
         let (bx, by) = self.coords(b);
-        ax.abs_diff(bx) + ay.abs_diff(by)
+        self.dim_distance(ax, bx, self.width) + self.dim_distance(ay, by, self.height)
     }
 
-    /// The neighbour of `n` through `port`, if that port faces into the mesh.
+    /// The neighbour of `n` through `port`: `None` when the port faces off
+    /// a mesh edge (torus ports always connect — wrap links).
     pub fn neighbor(&self, n: NodeId, port: Port) -> Option<NodeId> {
         let (x, y) = self.coords(n);
+        let torus = self.kind == TopologyKind::Torus;
         match port {
             PORT_NORTH if y > 0 => Some(self.node_at(x, y - 1)),
+            PORT_NORTH if torus => Some(self.node_at(x, self.height - 1)),
             PORT_EAST if x + 1 < self.width => Some(self.node_at(x + 1, y)),
+            PORT_EAST if torus => Some(self.node_at(0, y)),
             PORT_SOUTH if y + 1 < self.height => Some(self.node_at(x, y + 1)),
+            PORT_SOUTH if torus => Some(self.node_at(x, 0)),
             PORT_WEST if x > 0 => Some(self.node_at(x - 1, y)),
+            PORT_WEST if torus => Some(self.node_at(self.width - 1, y)),
             _ => None,
         }
     }
 
-    /// X-Y dimension-order route: the output port a flit at `cur` must take
-    /// to reach `dst`. Returns [`PORT_LOCAL`] when already there.
-    pub fn xy_route(&self, cur: NodeId, dst: NodeId) -> Port {
+    /// The X-dimension step toward `dx`, or `None` when already aligned.
+    /// On a torus the shorter ring direction wins; exact ties (even extent,
+    /// opposite side) break east, deterministically.
+    fn x_step(&self, cx: usize, dx: usize) -> Option<Port> {
+        if dx == cx {
+            return None;
+        }
+        Some(match self.kind {
+            TopologyKind::Mesh => {
+                if dx > cx {
+                    PORT_EAST
+                } else {
+                    PORT_WEST
+                }
+            }
+            TopologyKind::Torus => {
+                let east = (dx + self.width - cx) % self.width;
+                if east <= self.width - east {
+                    PORT_EAST
+                } else {
+                    PORT_WEST
+                }
+            }
+        })
+    }
+
+    /// The Y-dimension step toward `dy`, or `None` when already aligned.
+    /// Torus ties break south.
+    fn y_step(&self, cy: usize, dy: usize) -> Option<Port> {
+        if dy == cy {
+            return None;
+        }
+        Some(match self.kind {
+            TopologyKind::Mesh => {
+                if dy > cy {
+                    PORT_SOUTH
+                } else {
+                    PORT_NORTH
+                }
+            }
+            TopologyKind::Torus => {
+                let south = (dy + self.height - cy) % self.height;
+                if south <= self.height - south {
+                    PORT_SOUTH
+                } else {
+                    PORT_NORTH
+                }
+            }
+        })
+    }
+
+    /// The legal output ports for a flit at `cur` heading to `dst`, in
+    /// deterministic preference order. Always at least one entry;
+    /// `[PORT_LOCAL]` when already there. All candidates are *productive*
+    /// (each reduces [`hop_distance`] by one), so every delivered path is
+    /// minimal.
+    pub fn route_candidates(
+        &self,
+        algo: RoutingAlgorithm,
+        cur: NodeId,
+        dst: NodeId,
+    ) -> RouteCandidates {
         let (cx, cy) = self.coords(cur);
         let (dx, dy) = self.coords(dst);
-        if dx > cx {
-            PORT_EAST
-        } else if dx < cx {
-            PORT_WEST
-        } else if dy > cy {
-            PORT_SOUTH
-        } else if dy < cy {
-            PORT_NORTH
-        } else {
-            PORT_LOCAL
+        match algo {
+            RoutingAlgorithm::XY => RouteCandidates::one(
+                self.x_step(cx, dx).or_else(|| self.y_step(cy, dy)).unwrap_or(PORT_LOCAL),
+            ),
+            RoutingAlgorithm::YX => RouteCandidates::one(
+                self.y_step(cy, dy).or_else(|| self.x_step(cx, dx)).unwrap_or(PORT_LOCAL),
+            ),
+            RoutingAlgorithm::WestFirst => {
+                if self.kind == TopologyKind::Torus {
+                    // Turn-model adaptivity is mesh-only; wrap links void
+                    // its acyclicity argument (module docs) — fall back to
+                    // the dimension-order core.
+                    return self.route_candidates(RoutingAlgorithm::XY, cur, dst);
+                }
+                if dx < cx {
+                    // Mandatory phase: all west hops happen first.
+                    return RouteCandidates::one(PORT_WEST);
+                }
+                let mut c = RouteCandidates { ports: [PORT_LOCAL; 3], len: 0 };
+                if dx > cx {
+                    c.push(PORT_EAST);
+                }
+                if dy < cy {
+                    c.push(PORT_NORTH);
+                }
+                if dy > cy {
+                    c.push(PORT_SOUTH);
+                }
+                if c.len == 0 {
+                    c.push(PORT_LOCAL);
+                }
+                c
+            }
         }
     }
 
-    /// The full X-Y path from `src` to `dst`, inclusive of both endpoints.
-    pub fn xy_path(&self, src: NodeId, dst: NodeId) -> Vec<NodeId> {
+    /// The output port a flit at `cur` takes toward `dst` under `algo`,
+    /// ignoring congestion (the first candidate). Returns [`PORT_LOCAL`]
+    /// when already there.
+    pub fn route(&self, algo: RoutingAlgorithm, cur: NodeId, dst: NodeId) -> Port {
+        self.route_candidates(algo, cur, dst).primary()
+    }
+
+    /// X-Y dimension-order route (back-compat shorthand for
+    /// [`route`](Self::route) with [`RoutingAlgorithm::XY`]).
+    pub fn xy_route(&self, cur: NodeId, dst: NodeId) -> Port {
+        self.route(RoutingAlgorithm::XY, cur, dst)
+    }
+
+    /// The congestion-oblivious path from `src` to `dst` under `algo`,
+    /// inclusive of both endpoints (each hop takes the primary candidate).
+    pub fn path(&self, algo: RoutingAlgorithm, src: NodeId, dst: NodeId) -> Vec<NodeId> {
         let mut path = vec![src];
         let mut cur = src;
         while cur != dst {
-            let port = self.xy_route(cur, dst);
-            cur = self.neighbor(cur, port).expect("xy_route must stay in-mesh");
+            let port = self.route(algo, cur, dst);
+            cur = self.neighbor(cur, port).expect("route must stay inside the fabric");
             path.push(cur);
         }
         path
     }
 
+    /// The full X-Y path (back-compat shorthand for [`path`](Self::path)).
+    pub fn xy_path(&self, src: NodeId, dst: NodeId) -> Vec<NodeId> {
+        self.path(RoutingAlgorithm::XY, src, dst)
+    }
+
+    /// The output-VC subset (as `(first, count)` of the link's `num_vcs`)
+    /// a packet at `node` heading to `dst` may acquire on `out_port`.
+    ///
+    /// On a mesh every VC is legal. On a torus this implements the
+    /// **dateline** classes (module docs): the lower half of the VCs while
+    /// the packet's remaining travel in the link's dimension does not wrap,
+    /// the upper half when it still crosses the wrap link. `num_vcs` must
+    /// be ≥ 2 on a torus (validated at platform build).
+    pub fn out_vc_range(
+        &self,
+        num_vcs: usize,
+        node: NodeId,
+        out_port: Port,
+        dst: NodeId,
+    ) -> (usize, usize) {
+        if self.kind == TopologyKind::Mesh || out_port == PORT_LOCAL {
+            return (0, num_vcs);
+        }
+        debug_assert!(num_vcs >= 2, "torus dateline classes need >= 2 VCs");
+        let (cx, cy) = self.coords(node);
+        let (dx, dy) = self.coords(dst);
+        // Travelling in a fixed ring direction, the remaining path crosses
+        // the wrap link exactly when the destination coordinate lies
+        // "behind" the current one in that direction.
+        let crosses_dateline = match out_port {
+            PORT_EAST => dx < cx,
+            PORT_WEST => dx > cx,
+            PORT_SOUTH => dy < cy,
+            PORT_NORTH => dy > cy,
+            _ => false,
+        };
+        let half = num_vcs / 2;
+        if crosses_dateline {
+            (half, num_vcs - half)
+        } else {
+            (0, half)
+        }
+    }
+
     /// The opposite cardinal port (the input port a flit arrives on at the
-    /// neighbour after leaving through `port`).
+    /// neighbour after leaving through `port` — wrap links included).
     pub fn opposite(port: Port) -> Port {
         match port {
             PORT_NORTH => PORT_SOUTH,
@@ -140,8 +494,12 @@ impl Mesh {
 mod tests {
     use super::*;
 
-    fn mesh4() -> Mesh {
-        Mesh::new(4, 4)
+    fn mesh4() -> Topology {
+        Topology::new(4, 4)
+    }
+
+    fn torus4() -> Topology {
+        Topology::torus(4, 4)
     }
 
     #[test]
@@ -193,6 +551,17 @@ mod tests {
     }
 
     #[test]
+    fn yx_route_corrects_y_first() {
+        let m = mesh4();
+        // 0 (0,0) → 10 (2,2): Y-X goes south first.
+        assert_eq!(m.route(RoutingAlgorithm::YX, 0, 10), PORT_SOUTH);
+        let path = m.path(RoutingAlgorithm::YX, 12, 3);
+        // 12 (0,3) → 3 (3,0): north through 8,4,0 then east 1,2,3.
+        assert_eq!(path, vec![12, 8, 4, 0, 1, 2, 3]);
+        assert_eq!(path.len() - 1, m.hop_distance(12, 3));
+    }
+
+    #[test]
     fn neighbors_at_edges() {
         let m = mesh4();
         assert_eq!(m.neighbor(0, PORT_NORTH), None);
@@ -201,6 +570,116 @@ mod tests {
         assert_eq!(m.neighbor(0, PORT_SOUTH), Some(4));
         assert_eq!(m.neighbor(15, PORT_SOUTH), None);
         assert_eq!(m.neighbor(15, PORT_EAST), None);
+    }
+
+    #[test]
+    fn torus_neighbors_wrap() {
+        let t = torus4();
+        assert_eq!(t.neighbor(0, PORT_NORTH), Some(12));
+        assert_eq!(t.neighbor(0, PORT_WEST), Some(3));
+        assert_eq!(t.neighbor(15, PORT_SOUTH), Some(3));
+        assert_eq!(t.neighbor(15, PORT_EAST), Some(12));
+        // Internal links are unchanged.
+        assert_eq!(t.neighbor(5, PORT_EAST), Some(6));
+        assert_eq!(t.neighbor(5, PORT_NORTH), Some(1));
+    }
+
+    #[test]
+    fn torus_distance_takes_the_short_way_around() {
+        let t = torus4();
+        let m = mesh4();
+        assert_eq!(t.hop_distance(0, 3), 1, "wrap west beats 3 east hops");
+        assert_eq!(t.hop_distance(0, 15), 2);
+        for a in 0..16 {
+            for b in 0..16 {
+                assert!(
+                    t.hop_distance(a, b) <= m.hop_distance(a, b),
+                    "torus distance must never exceed mesh: {a}→{b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn torus_route_wraps_and_breaks_ties_east_south() {
+        let t = torus4();
+        // 0 (0,0) → 3 (3,0): 1 hop west (wrap) vs 3 east — go west.
+        assert_eq!(t.route(RoutingAlgorithm::XY, 0, 3), PORT_WEST);
+        assert_eq!(t.path(RoutingAlgorithm::XY, 0, 3), vec![0, 3]);
+        // 0 (0,0) → 2 (2,0): exact tie (2 either way) breaks east.
+        assert_eq!(t.route(RoutingAlgorithm::XY, 0, 2), PORT_EAST);
+        // 0 (0,0) → 8 (0,2): exact Y tie breaks south.
+        assert_eq!(t.route(RoutingAlgorithm::XY, 0, 8), PORT_SOUTH);
+    }
+
+    #[test]
+    fn west_first_emits_mandatory_west_then_adaptive_candidates() {
+        let m = mesh4();
+        // 3 (3,0) → 4 (0,1): west is mandatory and the only candidate.
+        let c = m.route_candidates(RoutingAlgorithm::WestFirst, 3, 4);
+        assert_eq!(c.as_slice(), &[PORT_WEST]);
+        // 0 (0,0) → 10 (2,2): east and south are both productive.
+        let c = m.route_candidates(RoutingAlgorithm::WestFirst, 0, 10);
+        assert_eq!(c.as_slice(), &[PORT_EAST, PORT_SOUTH]);
+        // 8 (0,2) → 2 (2,0): east and north.
+        let c = m.route_candidates(RoutingAlgorithm::WestFirst, 8, 2);
+        assert_eq!(c.as_slice(), &[PORT_EAST, PORT_NORTH]);
+        // Arrived: local.
+        let c = m.route_candidates(RoutingAlgorithm::WestFirst, 10, 10);
+        assert_eq!(c.as_slice(), &[PORT_LOCAL]);
+    }
+
+    #[test]
+    fn west_first_on_torus_falls_back_to_dimension_order() {
+        let t = torus4();
+        for a in 0..16 {
+            for b in 0..16 {
+                assert_eq!(
+                    t.route_candidates(RoutingAlgorithm::WestFirst, a, b).as_slice(),
+                    t.route_candidates(RoutingAlgorithm::XY, a, b).as_slice(),
+                    "{a}→{b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dateline_vc_classes_split_at_the_wrap() {
+        let t = torus4();
+        // 0 (0,0) → 3 (3,0): one west hop through the wrap link — the
+        // remaining path crosses the x dateline (dst_x > cur_x) → high
+        // class.
+        assert_eq!(t.route(RoutingAlgorithm::XY, 0, 3), PORT_WEST);
+        assert_eq!(t.out_vc_range(4, 0, PORT_WEST, 3), (2, 2));
+        // 1 (1,0) → 0: plain west hop, no wrap ahead → low class.
+        assert_eq!(t.out_vc_range(4, 1, PORT_WEST, 0), (0, 2));
+        // 0 → 2 east (exact tie breaks east): no wrap ahead → low class.
+        assert_eq!(t.out_vc_range(4, 0, PORT_EAST, 2), (0, 2));
+        // 2 (2,0) → 0 east (tie breaks east): the path 2→3→0 still crosses
+        // the wrap link, so *both* remaining hops are high class…
+        assert_eq!(t.out_vc_range(4, 2, PORT_EAST, 0), (2, 2));
+        assert_eq!(t.out_vc_range(4, 3, PORT_EAST, 0), (2, 2));
+        // …and the class can only ever drop back to low after the wrap.
+        // Local ejection is unconstrained.
+        assert_eq!(t.out_vc_range(4, 3, PORT_LOCAL, 3), (0, 4));
+        // Meshes never constrain.
+        assert_eq!(mesh4().out_vc_range(4, 0, PORT_EAST, 3), (0, 4));
+    }
+
+    #[test]
+    fn kind_strings_round_trip() {
+        assert_eq!("mesh".parse::<TopologyKind>().unwrap(), TopologyKind::Mesh);
+        assert_eq!("torus".parse::<TopologyKind>().unwrap(), TopologyKind::Torus);
+        assert!("ring".parse::<TopologyKind>().is_err());
+        assert_eq!(TopologyKind::Torus.to_string(), "torus");
+        assert_eq!("xy".parse::<RoutingAlgorithm>().unwrap(), RoutingAlgorithm::XY);
+        assert_eq!("yx".parse::<RoutingAlgorithm>().unwrap(), RoutingAlgorithm::YX);
+        assert_eq!(
+            "west-first".parse::<RoutingAlgorithm>().unwrap(),
+            RoutingAlgorithm::WestFirst
+        );
+        assert!("east-first".parse::<RoutingAlgorithm>().is_err());
+        assert_eq!(RoutingAlgorithm::WestFirst.to_string(), "west-first");
     }
 
     #[test]
@@ -218,8 +697,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic]
+    fn degenerate_torus_panics() {
+        Topology::torus(2, 4);
+    }
+
+    #[test]
     fn rectangular_mesh() {
-        let m = Mesh::new(8, 2);
+        let m = Topology::new(8, 2);
         assert_eq!(m.len(), 16);
         assert_eq!(m.coords(9), (1, 1));
         assert_eq!(m.hop_distance(0, 15), 8);

@@ -9,7 +9,7 @@
 
 use std::borrow::Cow;
 
-use noctt::config::PlatformConfig;
+use noctt::config::{PlatformConfig, RoutingAlgorithm, TopologyKind};
 use noctt::dnn::LayerSpec;
 use noctt::experiments::engine::Scenario;
 use noctt::mapping::{registry, MapCtx, Mapper};
@@ -22,7 +22,9 @@ const CHEAP_MAPPERS: [&str; 3] = ["row-major", "distance", "static-latency"];
 const ONLINE_MAPPERS: [&str; 3] = ["sampling-1", "sampling-4", "post-run"];
 
 /// A random valid platform: W×H in [2, 8] each (non-square shapes
-/// included), 1–4 MCs at random distinct nodes, always ≥ 1 PE.
+/// included), 1–4 MCs at random distinct nodes, always ≥ 1 PE — and, when
+/// the shape allows it, sometimes a torus and/or a non-default routing
+/// algorithm, so every property here also covers the architecture axis.
 fn random_platform(rng: &mut SplitMix64) -> PlatformConfig {
     let w = rng.range(2, 8) as usize;
     let h = rng.range(2, 8) as usize;
@@ -31,11 +33,16 @@ fn random_platform(rng: &mut SplitMix64) -> PlatformConfig {
     let mut ids: Vec<usize> = (0..nodes).collect();
     rng.shuffle(&mut ids);
     ids.truncate(num_mcs);
-    PlatformConfig::builder()
-        .mesh(w, h)
-        .mc_nodes(ids)
-        .build()
-        .expect("randomly placed MCs on a valid mesh must validate")
+    let mut b = PlatformConfig::builder().mesh(w, h).mc_nodes(ids);
+    if w >= 3 && h >= 3 && rng.below(3) == 0 {
+        b = b.topology(TopologyKind::Torus);
+    }
+    b = b.routing(*rng.choose(&[
+        RoutingAlgorithm::XY,
+        RoutingAlgorithm::YX,
+        RoutingAlgorithm::WestFirst,
+    ]));
+    b.build().expect("randomly placed MCs on a valid fabric must validate")
 }
 
 /// A random small layer (kept small — every case runs the cycle-accurate

@@ -8,17 +8,23 @@
 //! network counters. `jobs(1)` is the exact old serial path, so equality
 //! against it *is* the regression test for the parallel engine.
 
-use noctt::config::PlatformConfig;
+use noctt::config::{PlatformConfig, RoutingAlgorithm, TopologyKind};
 use noctt::dnn::LayerSpec;
 use noctt::experiments::engine::{Scenario, SweepResults};
 use noctt::util::ThreadPool;
 
-/// The 2 × 2 × 3 acceptance grid. `sampling-2` exercises the two-phase
-/// online path (measurement + residual) under parallel execution.
+/// The 3 × 2 × 3 acceptance grid — the paper's two presets plus a torus,
+/// so the parallel-determinism line also covers wrap wires and dateline
+/// VCs. `sampling-2` exercises the two-phase online path (measurement +
+/// residual) under parallel execution.
 fn grid(jobs: usize) -> SweepResults {
     Scenario::new("determinism")
         .platform("2mc", PlatformConfig::default_2mc())
         .platform("4mc", PlatformConfig::default_4mc())
+        .platform(
+            "torus",
+            PlatformConfig::builder().topology(TopologyKind::Torus).build().unwrap(),
+        )
         .layer(LayerSpec::conv("a", 3, 1.0, 160))
         .layer(LayerSpec::conv("b", 5, 1.0, 300))
         .mapper("row-major")
@@ -61,7 +67,7 @@ fn jobs_1_2_and_8_produce_identical_sweep_results() {
     let serial = grid(1);
     let two = grid(2);
     let eight = grid(8);
-    assert_eq!(serial.cells.len(), 12, "2 platforms × 2 layers × 3 mappers");
+    assert_eq!(serial.cells.len(), 18, "3 platforms × 2 layers × 3 mappers");
     let fp = fingerprint(&serial);
     assert_eq!(fp, fingerprint(&two), "jobs(2) diverged from the serial path");
     assert_eq!(fp, fingerprint(&eight), "jobs(8) diverged from the serial path");
@@ -101,6 +107,34 @@ fn default_jobs_resolution_is_deterministic_as_well() {
         .run()
         .expect("serial grid");
     assert_eq!(fingerprint(&implicit), fingerprint(&serial));
+}
+
+#[test]
+fn torus_west_first_fig7_sweep_is_bit_identical_across_jobs() {
+    // The acceptance line of the topology/routing PR: the fig7 mapper
+    // grid on `--topology torus --routing west-first` must run end-to-end
+    // and produce bit-identical results at jobs(1) and jobs(8).
+    let torus = PlatformConfig::builder()
+        .topology(TopologyKind::Torus)
+        .routing(RoutingAlgorithm::WestFirst)
+        .build()
+        .expect("torus/west-first platform");
+    let sweep = |jobs: usize| {
+        Scenario::new("fig7-torus")
+            .platform("torus/west-first", torus.clone())
+            .layer(LayerSpec::conv("C1q", 5, 1.0, 588))
+            .mappers(noctt::experiments::fig7::MAPPERS)
+            .jobs(jobs)
+            .run()
+            .expect("torus fig7 sweep")
+    };
+    let serial = sweep(1);
+    assert_eq!(serial.cells.len(), noctt::experiments::fig7::MAPPERS.len());
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&sweep(8)),
+        "torus/west-first sweep diverged between jobs(1) and jobs(8)"
+    );
 }
 
 #[test]

@@ -15,13 +15,16 @@
 //! service completion.
 
 use noctt::accel::{SimResult, Simulation};
-use noctt::config::{PlatformConfig, SteppingMode};
+use noctt::config::{PlatformConfig, RoutingAlgorithm, SteppingMode, TopologyKind};
 use noctt::dnn::LayerSpec;
 use noctt::mapping::{run_layer, Strategy};
 
-/// Platforms under test: the paper's two presets plus large meshes where
+/// Platforms under test: the paper's two presets, large meshes where
 /// per-cycle O(nodes) work would dominate (the case the active set
-/// optimises) — including the 8×8 from the acceptance criteria.
+/// optimises — including the 8×8 from the acceptance criteria), and the
+/// topology/routing axis: a torus (wrap wires + dateline VC classes), a
+/// torus under west-first, and a mesh under Y-X and west-first adaptive
+/// routing.
 fn platforms() -> Vec<(&'static str, PlatformConfig)> {
     vec![
         ("2mc-4x4", PlatformConfig::default_2mc()),
@@ -33,6 +36,28 @@ fn platforms() -> Vec<(&'static str, PlatformConfig)> {
         (
             "4mc-8x8",
             PlatformConfig::builder().mesh(8, 8).mc_nodes([27, 28, 35, 36]).build().unwrap(),
+        ),
+        (
+            "2mc-4x4-torus",
+            PlatformConfig::builder().topology(TopologyKind::Torus).build().unwrap(),
+        ),
+        (
+            "2mc-4x8-torus-west-first",
+            PlatformConfig::builder()
+                .mesh(4, 8)
+                .mc_nodes([13, 18])
+                .topology(TopologyKind::Torus)
+                .routing(RoutingAlgorithm::WestFirst)
+                .build()
+                .unwrap(),
+        ),
+        (
+            "2mc-4x4-yx",
+            PlatformConfig::builder().routing(RoutingAlgorithm::YX).build().unwrap(),
+        ),
+        (
+            "2mc-4x4-west-first",
+            PlatformConfig::builder().routing(RoutingAlgorithm::WestFirst).build().unwrap(),
         ),
     ]
 }
@@ -139,7 +164,12 @@ fn next_event_at_never_skips_past_an_event() {
     // fast-forward contract (NI ready_at, PE completion, MC completion are
     // all observable as injections, new packets, or records).
     let big = PlatformConfig::builder().mesh(8, 8).mc_nodes([27, 28, 35, 36]).build().unwrap();
-    for (name, cfg) in [("2mc-4x4", PlatformConfig::default_2mc()), ("4mc-8x8", big)] {
+    let torus = PlatformConfig::builder().topology(TopologyKind::Torus).build().unwrap();
+    for (name, cfg) in [
+        ("2mc-4x4", PlatformConfig::default_2mc()),
+        ("4mc-8x8", big),
+        ("2mc-4x4-torus", torus),
+    ] {
         let layer = LayerSpec::conv("eq", 5, 1.0, 2 * cfg.num_pes() as u64);
         let profile = layer.profile(&cfg);
         let mut sim = Simulation::new(&cfg, profile);

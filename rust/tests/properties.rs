@@ -7,7 +7,8 @@ use noctt::config::PlatformConfig;
 use noctt::dnn::LayerSpec;
 use noctt::mapping::{self, run_layer, Strategy};
 use noctt::metrics::unevenness_u64;
-use noctt::noc::{Mesh, Network, PacketKind};
+use noctt::noc::topology::{NUM_PORTS, PORT_WEST};
+use noctt::noc::{Mesh, Network, PacketKind, RoutingAlgorithm, Topology, TopologyKind};
 use noctt::util::apportion::{inverse_proportional, largest_remainder};
 use noctt::util::proptest::forall;
 
@@ -81,6 +82,92 @@ fn prop_xy_path_is_minimal_and_in_mesh() {
             assert_eq!(mesh.hop_distance(pair[0], pair[1]), 1, "non-adjacent hop");
         }
     });
+}
+
+/// True when `from → to` is one legal fabric link (some port of `from`
+/// connects to `to`).
+fn adjacent(topo: &Topology, from: usize, to: usize) -> bool {
+    (0..NUM_PORTS).any(|p| topo.neighbor(from, p) == Some(to))
+}
+
+/// A hop `from → to` is a west move exactly when it leaves through the
+/// west port (mesh only — no wrap ambiguity).
+fn is_west_move(topo: &Topology, from: usize, to: usize) -> bool {
+    topo.neighbor(from, PORT_WEST) == Some(to)
+}
+
+#[test]
+fn routing_paths_are_minimal_connected_and_legal_on_every_topology() {
+    // Exhaustive over all node pairs on the ISSUE's shapes: every
+    // {topology × routing} pair must deliver, stay on fabric links, and be
+    // minimal (west-first included — all its candidate moves are
+    // productive). West-first must additionally never turn into west.
+    let algos =
+        [RoutingAlgorithm::XY, RoutingAlgorithm::YX, RoutingAlgorithm::WestFirst];
+    for (w, h) in [(3usize, 3usize), (4, 4), (4, 8)] {
+        for kind in [TopologyKind::Mesh, TopologyKind::Torus] {
+            let topo = Topology::with_kind(w, h, kind);
+            for algo in algos {
+                for a in 0..topo.len() {
+                    for b in 0..topo.len() {
+                        let path = topo.path(algo, a, b);
+                        let ctx = format!("{kind} {w}x{h}, {algo}, {a}→{b}");
+                        assert_eq!(*path.first().unwrap(), a, "{ctx}: wrong start");
+                        assert_eq!(*path.last().unwrap(), b, "{ctx}: wrong end");
+                        assert_eq!(
+                            path.len() - 1,
+                            topo.hop_distance(a, b),
+                            "{ctx}: non-minimal path {path:?}"
+                        );
+                        for pair in path.windows(2) {
+                            assert!(
+                                adjacent(&topo, pair[0], pair[1]),
+                                "{ctx}: hop {}→{} is not a fabric link",
+                                pair[0],
+                                pair[1]
+                            );
+                        }
+                        if algo == RoutingAlgorithm::WestFirst
+                            && kind == TopologyKind::Mesh
+                        {
+                            // Turn-model legality: once a non-west move is
+                            // made, west never reappears.
+                            let mut seen_non_west = false;
+                            for pair in path.windows(2) {
+                                if is_west_move(&topo, pair[0], pair[1]) {
+                                    assert!(
+                                        !seen_non_west,
+                                        "{ctx}: illegal turn into west in {path:?}"
+                                    );
+                                } else {
+                                    seen_non_west = true;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn torus_paths_never_exceed_mesh_paths() {
+    for (w, h) in [(3usize, 3usize), (4, 4), (4, 8)] {
+        let mesh = Topology::new(w, h);
+        let torus = Topology::torus(w, h);
+        for a in 0..mesh.len() {
+            for b in 0..mesh.len() {
+                assert!(
+                    torus.hop_distance(a, b) <= mesh.hop_distance(a, b),
+                    "{w}x{h}: torus {a}→{b} longer than mesh"
+                );
+                let tp = torus.path(RoutingAlgorithm::XY, a, b).len();
+                let mp = mesh.path(RoutingAlgorithm::XY, a, b).len();
+                assert!(tp <= mp, "{w}x{h}: torus path {a}→{b} longer than mesh path");
+            }
+        }
+    }
 }
 
 // ------------------------------------------------------------------- network
