@@ -20,9 +20,9 @@
 use std::time::Duration;
 
 use noctt::config::{PlacementPreset, PlatformConfig, RoutingAlgorithm, TopologyKind};
-use noctt::dnn::{lenet5, LayerSpec};
+use noctt::dnn::{lenet5, zoo, LayerSpec};
 use noctt::experiments::engine::Scenario;
-use noctt::experiments::{fig7, table1};
+use noctt::experiments::{fig7, quick_trim, table1};
 use noctt::mapping::{run_layer, Strategy};
 use noctt::util::bench::{bench, speedup, BenchArgs, BenchResult};
 use noctt::util::ThreadPool;
@@ -209,11 +209,7 @@ fn main() {
     if args.selected("fig11/lenet-sampling-10") {
         let mut layers = lenet5(6);
         if args.smoke {
-            for l in &mut layers {
-                if l.tasks > 600 {
-                    l.tasks /= 8;
-                }
-            }
+            quick_trim(&mut layers);
         }
         let total_tasks: u64 = layers.iter().map(|l| l.tasks).sum();
         results.push(bench(
@@ -223,6 +219,30 @@ fn main() {
             || {
                 for l in &layers {
                     std::hint::black_box(run_layer(&cfg, l, Strategy::Sampling(10)).expect("bench run"));
+                }
+            },
+        ));
+    }
+
+    // zoo — the MobileNet-lite full network under the headline mapping:
+    // depthwise/pointwise task profiles and the workload subsystem's
+    // many-small-packets regime sit on the measured path, so bench-smoke
+    // (and the perf trajectory) covers the model zoo, not just LeNet.
+    if args.selected("zoo/mobilenet-lite-full-nn") {
+        let mut wl = zoo::mobilenet_lite();
+        if args.smoke {
+            quick_trim(&mut wl.layers);
+        }
+        let total_tasks: u64 = wl.total_tasks();
+        results.push(bench(
+            "zoo/mobilenet-lite-full-nn",
+            t,
+            Some((total_tasks as f64, "tasks")),
+            || {
+                for l in &wl.layers {
+                    std::hint::black_box(
+                        run_layer(&cfg, l, Strategy::Sampling(10)).expect("bench run"),
+                    );
                 }
             },
         ));

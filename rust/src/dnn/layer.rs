@@ -1,5 +1,7 @@
 //! Layer shapes and the per-task cost profile they induce.
 
+use anyhow::{ensure, Result};
+
 use crate::config::PlatformConfig;
 
 /// The kinds of layer the workload model supports.
@@ -10,13 +12,25 @@ pub enum LayerKind {
     /// `in_channels_eff` may be fractional to model partial connectivity
     /// (LeNet-5's C3 connects each output map to 3–6 of the 6 input maps;
     /// the per-task average is 60/16 = 3.75 — the paper's constant-per-layer
-    /// cost model takes the average).
+    /// cost model takes the average). The MAC/word laws integerise with
+    /// `f64::round` (half away from zero): C3's 25 · 3.75 = 93.75 MACs
+    /// becomes 94, and its 2 · 25 · 3.75 = 187.5 words become 188.
     Conv { kernel: u64, in_channels_eff: f64 },
+    /// Depthwise 2-D convolution: `kernel`×`kernel` over a *single* input
+    /// map per output map (the MobileNet building block — a pointwise 1×1
+    /// companion is just [`LayerKind::Conv`] with `kernel = 1`).
+    DepthwiseConv { kernel: u64 },
     /// `kernel`×`kernel` average pooling (plus coefficient and bias, as in
     /// LeNet-5's trainable subsampling).
     Pool { kernel: u64 },
     /// Fully connected: one task = one output neuron over `in_features`.
     Fc { in_features: u64 },
+    /// Escape hatch for arbitrary traffic: a task costs exactly `macs`
+    /// multiply-accumulates and fetches exactly `resp_data_words` data
+    /// words — no shape law in between. Lets `.wl` files describe layers
+    /// (attention blocks, embeddings, synthetic stress patterns) the shape
+    /// vocabulary does not cover.
+    Custom { macs: u64, resp_data_words: u64 },
 }
 
 /// A layer of the network to be mapped onto the NoC.
@@ -49,35 +63,140 @@ pub struct TaskProfile {
     pub mem_cycles: u64,
 }
 
+/// Sanity caps keeping the integer cost laws overflow-free for any input
+/// a `.wl` file can express (`2 · k² · c`, `2 · n + 1`, `words · 16` all
+/// stay far below `u64::MAX` under these).
+const MAX_KERNEL: u64 = 1 << 16;
+const MAX_FIELD: u64 = 1 << 32;
+
 impl LayerSpec {
-    /// Construct a convolution layer; `tasks = out_channels · out_h · out_w`.
+    /// Construct a convolution layer, validating every field;
+    /// `tasks = out_channels · out_h · out_w`.
+    ///
+    /// `in_channels_eff` must be finite and `> 0` (the fractional-channel
+    /// average of partially connected layers is fine — see
+    /// [`LayerKind::Conv`] for the rounding law) and must not be so small
+    /// that the per-task MAC count rounds to zero.
+    pub fn try_conv(name: &str, kernel: u64, in_channels_eff: f64, tasks: u64) -> Result<Self> {
+        ensure!(
+            (1..=MAX_KERNEL).contains(&kernel),
+            "conv layer '{name}': kernel must be in 1..={MAX_KERNEL}, got {kernel}"
+        );
+        ensure!(
+            in_channels_eff.is_finite() && in_channels_eff > 0.0,
+            "conv layer '{name}': in_channels_eff must be finite and > 0, got {in_channels_eff}"
+        );
+        ensure!(
+            in_channels_eff <= MAX_FIELD as f64,
+            "conv layer '{name}': in_channels_eff {in_channels_eff} is absurdly large (max {MAX_FIELD})"
+        );
+        ensure!(
+            ((kernel * kernel) as f64 * in_channels_eff).round() >= 1.0,
+            "conv layer '{name}': {kernel}x{kernel} kernel over {in_channels_eff} effective \
+             channels rounds to zero MACs per task"
+        );
+        // Joint cap: kernel and channels are individually bounded above,
+        // but their product sizes the response packet, whose word count
+        // must stay multiplication-safe against the flit/byte laws.
+        ensure!(
+            (2.0 * (kernel * kernel) as f64 * in_channels_eff).round() <= (1u64 << 40) as f64,
+            "conv layer '{name}': {kernel}x{kernel} over {in_channels_eff} channels implies an \
+             absurd per-task response packet"
+        );
+        ensure!(tasks >= 1, "conv layer '{name}': tasks must be >= 1");
+        Ok(Self { name: name.into(), kind: LayerKind::Conv { kernel, in_channels_eff }, tasks })
+    }
+
+    /// Construct a depthwise-convolution layer, validating every field;
+    /// `tasks = channels · out_h · out_w`.
+    pub fn try_depthwise(name: &str, kernel: u64, tasks: u64) -> Result<Self> {
+        ensure!(
+            (1..=MAX_KERNEL).contains(&kernel),
+            "depthwise layer '{name}': kernel must be in 1..={MAX_KERNEL}, got {kernel}"
+        );
+        ensure!(tasks >= 1, "depthwise layer '{name}': tasks must be >= 1");
+        Ok(Self { name: name.into(), kind: LayerKind::DepthwiseConv { kernel }, tasks })
+    }
+
+    /// Construct a pooling layer, validating every field.
+    pub fn try_pool(name: &str, kernel: u64, tasks: u64) -> Result<Self> {
+        ensure!(
+            (1..=MAX_KERNEL).contains(&kernel),
+            "pool layer '{name}': kernel must be in 1..={MAX_KERNEL}, got {kernel}"
+        );
+        ensure!(tasks >= 1, "pool layer '{name}': tasks must be >= 1");
+        Ok(Self { name: name.into(), kind: LayerKind::Pool { kernel }, tasks })
+    }
+
+    /// Construct a fully-connected layer, validating every field;
+    /// `tasks = out_features`.
+    pub fn try_fc(name: &str, in_features: u64, tasks: u64) -> Result<Self> {
+        ensure!(
+            (1..=MAX_FIELD).contains(&in_features),
+            "fc layer '{name}': in_features must be in 1..={MAX_FIELD}"
+        );
+        ensure!(tasks >= 1, "fc layer '{name}': tasks must be >= 1");
+        Ok(Self { name: name.into(), kind: LayerKind::Fc { in_features }, tasks })
+    }
+
+    /// Construct a custom-traffic layer (see [`LayerKind::Custom`]),
+    /// validating every field.
+    pub fn try_custom(name: &str, macs: u64, resp_data_words: u64, tasks: u64) -> Result<Self> {
+        ensure!((1..=MAX_FIELD).contains(&macs), "custom layer '{name}': macs must be in 1..={MAX_FIELD}");
+        ensure!(
+            (1..=MAX_FIELD).contains(&resp_data_words),
+            "custom layer '{name}': resp_data_words must be in 1..={MAX_FIELD}"
+        );
+        ensure!(tasks >= 1, "custom layer '{name}': tasks must be >= 1");
+        Ok(Self { name: name.into(), kind: LayerKind::Custom { macs, resp_data_words }, tasks })
+    }
+
+    /// Construct a convolution layer; panics on invalid fields (thin
+    /// wrapper over [`try_conv`](Self::try_conv) for static workloads).
     pub fn conv(name: &str, kernel: u64, in_channels_eff: f64, tasks: u64) -> Self {
-        assert!(kernel >= 1 && in_channels_eff > 0.0 && tasks >= 1);
-        Self { name: name.into(), kind: LayerKind::Conv { kernel, in_channels_eff }, tasks }
+        Self::try_conv(name, kernel, in_channels_eff, tasks).expect("invalid conv layer")
     }
 
-    /// Construct a pooling layer.
+    /// Construct a depthwise-convolution layer; panics on invalid fields
+    /// (thin wrapper over [`try_depthwise`](Self::try_depthwise)).
+    pub fn depthwise(name: &str, kernel: u64, tasks: u64) -> Self {
+        Self::try_depthwise(name, kernel, tasks).expect("invalid depthwise layer")
+    }
+
+    /// Construct a pooling layer; panics on invalid fields (thin wrapper
+    /// over [`try_pool`](Self::try_pool)).
     pub fn pool(name: &str, kernel: u64, tasks: u64) -> Self {
-        assert!(kernel >= 1 && tasks >= 1);
-        Self { name: name.into(), kind: LayerKind::Pool { kernel }, tasks }
+        Self::try_pool(name, kernel, tasks).expect("invalid pool layer")
     }
 
-    /// Construct a fully-connected layer; `tasks = out_features`.
+    /// Construct a fully-connected layer; panics on invalid fields (thin
+    /// wrapper over [`try_fc`](Self::try_fc)).
     pub fn fc(name: &str, in_features: u64, tasks: u64) -> Self {
-        assert!(in_features >= 1 && tasks >= 1);
-        Self { name: name.into(), kind: LayerKind::Fc { in_features }, tasks }
+        Self::try_fc(name, in_features, tasks).expect("invalid fc layer")
+    }
+
+    /// Construct a custom-traffic layer; panics on invalid fields (thin
+    /// wrapper over [`try_custom`](Self::try_custom)).
+    pub fn custom(name: &str, macs: u64, resp_data_words: u64, tasks: u64) -> Self {
+        Self::try_custom(name, macs, resp_data_words, tasks).expect("invalid custom layer")
     }
 
     /// MACs per task (before integerisation to PE cycles).
     pub fn macs_per_task(&self) -> u64 {
         match &self.kind {
+            // Fractional effective channels integerise half-away-from-zero
+            // (C3: 25 · 3.75 = 93.75 → 94); `try_conv` guarantees the
+            // result is >= 1 and the cast cannot see a non-finite value.
             LayerKind::Conv { kernel, in_channels_eff } => {
                 ((kernel * kernel) as f64 * in_channels_eff).round() as u64
             }
+            // One k²-MAC window over exactly one input map.
+            LayerKind::DepthwiseConv { kernel } => kernel * kernel,
             // k² adds for the window sum + 1 multiply by the trained
             // coefficient (LeNet-5 subsampling).
             LayerKind::Pool { kernel } => kernel * kernel + 1,
             LayerKind::Fc { in_features } => *in_features,
+            LayerKind::Custom { macs, .. } => *macs,
         }
     }
 
@@ -86,14 +205,18 @@ impl LayerSpec {
     pub fn words_per_task(&self) -> u64 {
         match &self.kind {
             // k²·c inputs + k²·c weights — for c = 1 this is the paper's
-            // Table 1 packet law.
+            // Table 1 packet law. Same rounding as `macs_per_task`
+            // (C3: 187.5 → 188).
             LayerKind::Conv { kernel, in_channels_eff } => {
                 (2.0 * (kernel * kernel) as f64 * in_channels_eff).round() as u64
             }
+            // k² inputs + k² weights from the single input map.
+            LayerKind::DepthwiseConv { kernel } => 2 * kernel * kernel,
             // k² inputs + coefficient + bias.
             LayerKind::Pool { kernel } => kernel * kernel + 2,
             // n inputs + n weights + bias.
             LayerKind::Fc { in_features } => 2 * in_features + 1,
+            LayerKind::Custom { resp_data_words, .. } => *resp_data_words,
         }
     }
 
@@ -188,5 +311,71 @@ mod tests {
         assert_eq!(l.mapping_iterations(14), 2); // 14 + 1 tail
         let l = LayerSpec::fc("y", 8, 14);
         assert_eq!(l.mapping_iterations(14), 1);
+    }
+
+    #[test]
+    fn depthwise_profile_laws() {
+        // 3x3 depthwise: 9 MACs (1 PE cycle), 18 words = 288 bits → 2
+        // flits — exactly the k=3 single-channel conv numbers.
+        let dw = LayerSpec::depthwise("DW", 3, 1568);
+        let p = dw.profile(&cfg());
+        assert_eq!(p.macs, 9);
+        assert_eq!(p.resp_data_words, 18);
+        assert_eq!(p.resp_flits, 2); // 288 bits → 2 flits
+        assert_eq!(p.compute_cycles, 10);
+        let conv = LayerSpec::conv("ref", 3, 1.0, 1568);
+        assert_eq!(p, conv.profile(&cfg()), "depthwise == conv with one input map");
+    }
+
+    #[test]
+    fn custom_profile_passes_macs_and_words_through() {
+        let c = LayerSpec::custom("X", 130, 50, 100);
+        let p = c.profile(&cfg());
+        assert_eq!(p.macs, 130);
+        assert_eq!(p.resp_data_words, 50);
+        assert_eq!(p.compute_cycles, 30); // ceil(130/64) = 3 PE cycles
+        assert_eq!(p.resp_flits, 4); // same words → same flits as C1
+        assert_eq!(p.mem_cycles, 4);
+    }
+
+    #[test]
+    fn fractional_channels_round_half_away_from_zero() {
+        // The documented integerisation law at the exact .5 boundary:
+        // C3's 93.75 MACs → 94 and 187.5 words → 188; a k=1 conv over
+        // 0.5 effective channels rounds *up* to 1 MAC / 1 word.
+        let c3 = LayerSpec::conv("C3", 5, 3.75, 1600);
+        assert_eq!(c3.macs_per_task(), 94);
+        assert_eq!(c3.words_per_task(), 188);
+        let tiny = LayerSpec::conv("tiny", 1, 0.5, 1);
+        assert_eq!(tiny.macs_per_task(), 1);
+        assert_eq!(tiny.words_per_task(), 1);
+    }
+
+    #[test]
+    fn try_conv_rejects_degenerate_channels() {
+        // Non-finite and non-positive effective channel counts are
+        // construction errors, not NaN propagated into the flit laws.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.0] {
+            let err = LayerSpec::try_conv("C", 5, bad, 100).unwrap_err();
+            assert!(err.to_string().contains("in_channels_eff"), "{bad}: {err}");
+        }
+        // So small the MAC count would round to zero.
+        let err = LayerSpec::try_conv("C", 1, 0.25, 100).unwrap_err();
+        assert!(err.to_string().contains("zero MACs"), "{err}");
+        // The fractional C3 average stays constructible.
+        assert!(LayerSpec::try_conv("C3", 5, 3.75, 1600).is_ok());
+    }
+
+    #[test]
+    fn try_constructors_name_the_layer_and_field() {
+        assert!(LayerSpec::try_conv("a", 0, 1.0, 1).unwrap_err().to_string().contains("kernel"));
+        assert!(LayerSpec::try_depthwise("b", 0, 1).unwrap_err().to_string().contains("'b'"));
+        assert!(LayerSpec::try_pool("c", 2, 0).unwrap_err().to_string().contains("tasks"));
+        assert!(LayerSpec::try_fc("d", 0, 10).unwrap_err().to_string().contains("in_features"));
+        assert!(LayerSpec::try_custom("e", 0, 5, 1).unwrap_err().to_string().contains("macs"));
+        assert!(LayerSpec::try_custom("e", 5, 0, 1)
+            .unwrap_err()
+            .to_string()
+            .contains("resp_data_words"));
     }
 }

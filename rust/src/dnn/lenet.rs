@@ -20,25 +20,20 @@ use super::layer::LayerSpec;
 /// Names of the seven mapped LeNet-5 layers, in order.
 pub const LENET_LAYER_NAMES: [&str; 7] = ["C1", "S2", "C3", "S4", "C5", "F6", "OUT"];
 
-/// The full 7-layer LeNet-5 workload.
+/// The full 7-layer LeNet-5 workload as a plain layer list.
 ///
 /// `out_channels_c1` scales the first layer's output channel count — the
 /// Fig. 8 knob ("we extend the task count with ratios from 0.5x to 8x by
 /// adjusting the output channel from 3 to 48, while the default
 /// configuration is 6"). Only C1 scales; pass 6 for the paper's default.
+///
+/// Thin back-compat shim: the canonical definition is the
+/// [`WorkloadSpec`](super::workload::WorkloadSpec) built by
+/// [`zoo::lenet5`](super::zoo::lenet5) (same layers, byte for byte — the
+/// regression suite in `rust/tests/workloads.rs` pins both against the
+/// paper's numbers).
 pub fn lenet5(out_channels_c1: u64) -> Vec<LayerSpec> {
-    assert!(out_channels_c1 >= 1);
-    vec![
-        LayerSpec::conv("C1", 5, 1.0, out_channels_c1 * 28 * 28),
-        LayerSpec::pool("S2", 2, 6 * 14 * 14),
-        // Classic C3 connection table: 6 maps see 3 inputs, 9 see 4, 1 sees
-        // all 6 → 60 connections / 16 maps = 3.75 effective channels.
-        LayerSpec::conv("C3", 5, 60.0 / 16.0, 16 * 10 * 10),
-        LayerSpec::pool("S4", 2, 16 * 5 * 5),
-        LayerSpec::conv("C5", 5, 16.0, 120),
-        LayerSpec::fc("F6", 120, 84),
-        LayerSpec::fc("OUT", 84, 10),
-    ]
+    super::zoo::lenet5(out_channels_c1).layers
 }
 
 #[cfg(test)]

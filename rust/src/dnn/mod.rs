@@ -9,9 +9,18 @@
 //! Per the paper's model, tasks are homogeneous within a layer:
 //! "Computation time … varies across different layers due to different
 //! kernel sizes but is constant in the same layer."
+//!
+//! Whole networks are [`workload::WorkloadSpec`]s — named, ordered layer
+//! lists with a line-oriented `.wl` text format — and the built-in
+//! networks (LeNet-5 plus AlexNet-lite, MobileNet-lite and an MLP) live in
+//! the [`zoo`] behind a name → constructor registry mirroring
+//! [`mapping::registry()`](crate::mapping::registry()).
 
 pub mod layer;
 pub mod lenet;
+pub mod workload;
+pub mod zoo;
 
 pub use layer::{LayerKind, LayerSpec, TaskProfile};
 pub use lenet::{lenet5, LENET_LAYER_NAMES};
+pub use workload::WorkloadSpec;

@@ -1,0 +1,365 @@
+//! Network descriptors: named, ordered layer lists with a text format.
+//!
+//! A [`WorkloadSpec`] is what every full-network experiment consumes — the
+//! zoo ([`super::zoo`]) builds them programmatically, and the `.wl` text
+//! format lets users describe arbitrary networks in a file and run them
+//! through `noctt sim --workload path.wl` or a
+//! [`Scenario`](crate::experiments::engine::Scenario) without recompiling.
+//!
+//! # The `.wl` format
+//!
+//! Line-oriented; `#` starts a comment, blank lines are ignored; fields
+//! are whitespace-separated. One `workload <name>` header, then one
+//! `layer` line per network layer, in execution order:
+//!
+//! ```text
+//! # LeNet-5, §5.6 of the paper.
+//! workload lenet5
+//! layer C1  conv      5 1 4704     # kernel  in_channels_eff  tasks
+//! layer S2  pool      2 1176       # kernel  tasks
+//! layer C3  conv      5 3.75 1600
+//! layer DW  depthwise 3 784        # kernel  tasks
+//! layer F6  fc        120 84       # in_features  tasks
+//! layer X   custom    130 50 100   # macs  resp_data_words  tasks
+//! ```
+//!
+//! [`WorkloadSpec::parse`] is fallible with **line-numbered** errors (a
+//! [`ParseError`]), and every layer goes through the validating
+//! [`LayerSpec::try_conv`]-family constructors, so a malformed file
+//! reports `line N: …` instead of panicking mid-simulation.
+//! [`WorkloadSpec::to_text`] renders the canonical form; `parse ∘ to_text`
+//! is the identity on any valid spec (property-tested in
+//! `rust/tests/workloads.rs`).
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{ensure, Context as _, Result};
+
+use super::layer::{LayerKind, LayerSpec, TaskProfile};
+use crate::config::PlatformConfig;
+
+/// A line-numbered `.wl` parse error: `line N: message`. Lines are
+/// 1-indexed over the input text, comments and blanks included.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// 1-indexed line the error was detected on.
+    pub line: usize,
+    /// What is wrong with it.
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A named, ordered network: the unit every full-NN experiment runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Workload name (one token — no whitespace — so it round-trips
+    /// through the `.wl` header line).
+    pub name: String,
+    /// The layers, in execution order. Non-empty; names are unique within
+    /// the workload (layer selection is by name).
+    pub layers: Vec<LayerSpec>,
+}
+
+impl WorkloadSpec {
+    /// Build a validated spec: non-empty single-token name, at least one
+    /// layer, unique single-token layer names (the same invariants the
+    /// parser enforces, so programmatic specs round-trip through
+    /// [`to_text`](Self::to_text)).
+    pub fn new(name: impl Into<String>, layers: Vec<LayerSpec>) -> Result<Self> {
+        let name = name.into();
+        ensure_ident(&name, "workload name")?;
+        ensure!(!layers.is_empty(), "workload '{name}' has no layers");
+        for (i, l) in layers.iter().enumerate() {
+            ensure_ident(&l.name, "layer name")?;
+            ensure!(
+                !layers[..i].iter().any(|p| p.name == l.name),
+                "workload '{name}': duplicate layer name '{}'",
+                l.name
+            );
+        }
+        Ok(Self { name, layers })
+    }
+
+    /// Parse the `.wl` text format. Errors carry the 1-indexed line.
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let err = |line: usize, message: String| ParseError { line, message };
+        let mut name: Option<(usize, String)> = None;
+        let mut layers: Vec<LayerSpec> = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let content = raw.split('#').next().unwrap_or("").trim();
+            if content.is_empty() {
+                continue;
+            }
+            let mut tok = content.split_whitespace();
+            let directive = tok.next().expect("non-empty line has a first token");
+            let rest: Vec<&str> = tok.collect();
+            match directive {
+                "workload" => {
+                    if let Some((prev, _)) = &name {
+                        return Err(err(
+                            line,
+                            format!("duplicate 'workload' header (first on line {prev})"),
+                        ));
+                    }
+                    match rest.as_slice() {
+                        [n] => name = Some((line, n.to_string())),
+                        [] => return Err(err(line, "missing workload name".into())),
+                        more => {
+                            return Err(err(
+                                line,
+                                format!("'workload' takes one name, got {} fields", more.len()),
+                            ))
+                        }
+                    }
+                }
+                "layer" => {
+                    if name.is_none() {
+                        return Err(err(
+                            line,
+                            "'layer' before the 'workload <name>' header".into(),
+                        ));
+                    }
+                    let [lname, kind, args @ ..] = rest.as_slice() else {
+                        return Err(err(
+                            line,
+                            format!(
+                                "'layer' needs at least a name and a kind, got {} fields",
+                                rest.len()
+                            ),
+                        ));
+                    };
+                    let layer =
+                        parse_layer(lname, kind, args).map_err(|m| err(line, m))?;
+                    if layers.iter().any(|l| l.name == layer.name) {
+                        return Err(err(line, format!("duplicate layer name '{lname}'")));
+                    }
+                    layers.push(layer);
+                }
+                other => {
+                    return Err(err(
+                        line,
+                        format!("unknown directive '{other}' (expected 'workload' or 'layer')"),
+                    ))
+                }
+            }
+        }
+        let (header_line, name) = name.ok_or_else(|| {
+            err(1, "missing 'workload <name>' header".into())
+        })?;
+        if layers.is_empty() {
+            return Err(err(header_line, format!("workload '{name}' declares no layers")));
+        }
+        Ok(Self { name, layers })
+    }
+
+    /// Load and parse a `.wl` file; I/O and parse errors name the path
+    /// (and the parse error keeps its line number in the cause chain).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading workload file {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing workload file {}", path.display()))
+    }
+
+    /// Render the canonical `.wl` text: `parse(to_text(w)) == w` for every
+    /// valid spec. (Comments are not preserved — they live in files, not
+    /// in the spec.)
+    pub fn to_text(&self) -> String {
+        let mut out = format!("workload {}\n", self.name);
+        for l in &self.layers {
+            let fields = match &l.kind {
+                // f64 Display is the shortest round-tripping form, so
+                // fractional channel counts survive the text format.
+                LayerKind::Conv { kernel, in_channels_eff } => {
+                    format!("conv {kernel} {in_channels_eff}")
+                }
+                LayerKind::DepthwiseConv { kernel } => format!("depthwise {kernel}"),
+                LayerKind::Pool { kernel } => format!("pool {kernel}"),
+                LayerKind::Fc { in_features } => format!("fc {in_features}"),
+                LayerKind::Custom { macs, resp_data_words } => {
+                    format!("custom {macs} {resp_data_words}")
+                }
+            };
+            out.push_str(&format!("layer {} {} {}\n", l.name, fields, l.tasks));
+        }
+        out
+    }
+
+    /// Total task count over all layers.
+    pub fn total_tasks(&self) -> u64 {
+        self.layers.iter().map(|l| l.tasks).sum()
+    }
+
+    /// Look a layer up by name.
+    pub fn get(&self, name: &str) -> Option<&LayerSpec> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// The layer names, in execution order.
+    pub fn layer_names(&self) -> Vec<&str> {
+        self.layers.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    /// Resolve every layer's platform-dependent per-task costs (the check
+    /// that a workload is actually *runnable* on a platform — CI does this
+    /// for every committed `workloads/*.wl` file).
+    pub fn profiles(&self, cfg: &PlatformConfig) -> Vec<TaskProfile> {
+        self.layers.iter().map(|l| l.profile(cfg)).collect()
+    }
+}
+
+impl fmt::Display for WorkloadSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_text())
+    }
+}
+
+/// One token, no whitespace (tokenisation is whitespace-splitting, so a
+/// name with spaces could never round-trip).
+fn ensure_ident(s: &str, what: &str) -> Result<()> {
+    ensure!(!s.is_empty(), "{what} must not be empty");
+    ensure!(
+        !s.contains(char::is_whitespace) && !s.contains('#'),
+        "{what} '{s}' must be a single token without '#'"
+    );
+    Ok(())
+}
+
+/// Parse one layer line's kind + argument fields through the validating
+/// constructors. Errors are plain messages; the caller attaches the line.
+fn parse_layer(name: &str, kind: &str, args: &[&str]) -> Result<LayerSpec, String> {
+    let arity = |n: usize, shape: &str| -> Result<(), String> {
+        if args.len() == n {
+            Ok(())
+        } else {
+            Err(format!(
+                "'{kind}' layer takes <{shape}>, got {} argument fields",
+                args.len()
+            ))
+        }
+    };
+    let int = |field: &str, v: &str| -> Result<u64, String> {
+        v.parse::<u64>()
+            .map_err(|_| format!("{field} must be a non-negative integer, got '{v}'"))
+    };
+    let float = |field: &str, v: &str| -> Result<f64, String> {
+        v.parse::<f64>().map_err(|_| format!("{field} must be a number, got '{v}'"))
+    };
+    let spec = match kind {
+        "conv" => {
+            arity(3, "kernel in_channels_eff tasks")?;
+            LayerSpec::try_conv(
+                name,
+                int("kernel", args[0])?,
+                float("in_channels_eff", args[1])?,
+                int("tasks", args[2])?,
+            )
+        }
+        "depthwise" => {
+            arity(2, "kernel tasks")?;
+            LayerSpec::try_depthwise(name, int("kernel", args[0])?, int("tasks", args[1])?)
+        }
+        "pool" => {
+            arity(2, "kernel tasks")?;
+            LayerSpec::try_pool(name, int("kernel", args[0])?, int("tasks", args[1])?)
+        }
+        "fc" => {
+            arity(2, "in_features tasks")?;
+            LayerSpec::try_fc(name, int("in_features", args[0])?, int("tasks", args[1])?)
+        }
+        "custom" => {
+            arity(3, "macs resp_data_words tasks")?;
+            LayerSpec::try_custom(
+                name,
+                int("macs", args[0])?,
+                int("resp_data_words", args[1])?,
+                int("tasks", args[2])?,
+            )
+        }
+        other => {
+            return Err(format!(
+                "unknown layer kind '{other}' (one of conv, depthwise, pool, fc, custom)"
+            ))
+        }
+    };
+    spec.map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lenet_text() -> &'static str {
+        "# a comment\n\
+         workload demo\n\
+         \n\
+         layer C1 conv 5 1 4704   # trailing comment\n\
+         layer S2 pool 2 1176\n\
+         layer F6 fc 120 84\n"
+    }
+
+    #[test]
+    fn parses_the_documented_format() {
+        let w = WorkloadSpec::parse(lenet_text()).unwrap();
+        assert_eq!(w.name, "demo");
+        assert_eq!(w.layer_names(), vec!["C1", "S2", "F6"]);
+        assert_eq!(w.total_tasks(), 4704 + 1176 + 84);
+        assert_eq!(w.get("C1").unwrap().kind, LayerKind::Conv { kernel: 5, in_channels_eff: 1.0 });
+        assert!(w.get("missing").is_none());
+    }
+
+    #[test]
+    fn round_trips_through_text() {
+        let w = WorkloadSpec::parse(lenet_text()).unwrap();
+        let again = WorkloadSpec::parse(&w.to_text()).unwrap();
+        assert_eq!(w, again);
+    }
+
+    #[test]
+    fn fractional_channels_survive_the_text_format() {
+        let w = WorkloadSpec::new(
+            "frac",
+            vec![LayerSpec::conv("C3", 5, 3.75, 1600)],
+        )
+        .unwrap();
+        let again = WorkloadSpec::parse(&w.to_text()).unwrap();
+        assert_eq!(w, again);
+        assert!(w.to_text().contains("3.75"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        // Line 3 (the bad layer line) must be named, not line 1.
+        let text = "workload w\nlayer ok fc 10 10\nlayer bad conv 5 1\n";
+        let e = WorkloadSpec::parse(text).unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.to_string().starts_with("line 3:"), "{e}");
+    }
+
+    #[test]
+    fn new_rejects_structural_problems() {
+        let l = |n: &str| LayerSpec::fc(n, 10, 10);
+        assert!(WorkloadSpec::new("", vec![l("a")]).is_err());
+        assert!(WorkloadSpec::new("two words", vec![l("a")]).is_err());
+        assert!(WorkloadSpec::new("w", vec![]).is_err());
+        assert!(WorkloadSpec::new("w", vec![l("a"), l("a")]).is_err());
+        assert!(WorkloadSpec::new("w", vec![l("a"), l("b")]).is_ok());
+    }
+
+    #[test]
+    fn profiles_resolve_on_the_default_platform() {
+        let w = WorkloadSpec::parse(lenet_text()).unwrap();
+        let profiles = w.profiles(&PlatformConfig::default_2mc());
+        assert_eq!(profiles.len(), 3);
+        assert_eq!(profiles[0].resp_flits, 4); // C1's Table-1 number
+    }
+}

@@ -1,0 +1,290 @@
+//! The built-in model zoo: ready-made [`WorkloadSpec`]s behind a
+//! name → constructor registry (the workload-side mirror of
+//! [`mapping::registry()`](crate::mapping::registry())).
+//!
+//! The paper evaluates on exactly one network (LeNet-5, §5.6), but the
+//! travel-time claim is a property of the *traffic pattern*, so the zoo
+//! ships networks with deliberately different patterns:
+//!
+//! | name | layers | tasks | traffic character |
+//! |---|---|---|---|
+//! | `lenet5` | 7 | 8094 | the paper's network — mixed conv/pool/fc |
+//! | `alexnet-lite` | 7 | 2722 | big kernels (11×11 → 46-flit responses), bandwidth-heavy |
+//! | `mobilenet-lite` | 7 | 8666 | depthwise + pointwise blocks — many tasks, small packets |
+//! | `mlp` | 3 | 394 | few tasks, huge fc packets (99 flits), fallback-prone |
+//!
+//! The "lite" networks keep the originals' layer *structure* but shrink
+//! channel/spatial extents so a full-network sweep stays tractable on the
+//! paper's 14-PE platform — the point is pattern diversity, not ImageNet
+//! fidelity.
+//!
+//! Like a mapper, a new workload registers once and is then reachable from
+//! the CLI (`noctt sim --workload <name>`, `noctt workloads`) and any
+//! sweep:
+//!
+//! ```
+//! use noctt::dnn::zoo;
+//! use noctt::dnn::{LayerSpec, WorkloadSpec};
+//!
+//! let mut z = zoo::zoo();
+//! z.register("tiny", "a one-layer smoke workload", |s| {
+//!     (s == "tiny").then(|| {
+//!         WorkloadSpec::new("tiny", vec![LayerSpec::fc("F", 16, 28)]).unwrap()
+//!     })
+//! });
+//! assert!(z.resolve("tiny").is_some());
+//! assert_eq!(z.resolve("lenet5").unwrap().layers.len(), 7); // builtins still there
+//! ```
+
+use super::layer::LayerSpec;
+use super::workload::WorkloadSpec;
+
+type Ctor = Box<dyn Fn(&str) -> Option<WorkloadSpec> + Send + Sync>;
+
+/// One registered workload constructor.
+pub struct ZooEntry {
+    name: &'static str,
+    help: &'static str,
+    ctor: Ctor,
+}
+
+impl ZooEntry {
+    /// Canonical name shown in listings.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// One-line description.
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+}
+
+impl std::fmt::Debug for ZooEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ZooEntry").field("name", &self.name).finish()
+    }
+}
+
+/// An ordered collection of workload constructors, resolved by name.
+#[derive(Debug, Default)]
+pub struct Zoo {
+    entries: Vec<ZooEntry>,
+}
+
+impl Zoo {
+    /// An empty zoo (no builtins).
+    pub fn empty() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// A zoo pre-populated with the built-in networks.
+    pub fn with_builtins() -> Self {
+        let mut z = Self::empty();
+        z.register("lenet5", "the paper's 7-layer LeNet-5 (§5.6), default channels", |s| {
+            (s == "lenet5").then(|| lenet5(6))
+        });
+        z.register("alexnet-lite", "AlexNet-shaped: big kernels, bandwidth-heavy packets", |s| {
+            (s == "alexnet-lite").then(alexnet_lite)
+        });
+        z.register("mobilenet-lite", "MobileNet-shaped: depthwise + pointwise blocks", |s| {
+            (s == "mobilenet-lite").then(mobilenet_lite)
+        });
+        z.register("mlp", "3-layer perceptron: few tasks, huge fc packets", |s| {
+            (s == "mlp").then(mlp)
+        });
+        z
+    }
+
+    /// Register a workload constructor. `ctor` receives the requested name
+    /// and returns a spec when it recognises it; earlier registrations are
+    /// tried first, so builtins keep their names.
+    pub fn register<F>(&mut self, name: &'static str, help: &'static str, ctor: F) -> &mut Self
+    where
+        F: Fn(&str) -> Option<WorkloadSpec> + Send + Sync + 'static,
+    {
+        self.entries.push(ZooEntry { name, help, ctor: Box::new(ctor) });
+        self
+    }
+
+    /// Resolve a workload name to a fresh spec.
+    pub fn resolve(&self, spec: &str) -> Option<WorkloadSpec> {
+        self.entries.iter().find_map(|e| (e.ctor)(spec))
+    }
+
+    /// Canonical names of all registered workloads, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(ZooEntry::name).collect()
+    }
+
+    /// The registered entries (for listings).
+    pub fn entries(&self) -> &[ZooEntry] {
+        &self.entries
+    }
+}
+
+/// The default zoo: all built-in networks.
+pub fn zoo() -> Zoo {
+    Zoo::with_builtins()
+}
+
+/// The full 7-layer LeNet-5 workload (§5.6) — the canonical definition;
+/// [`crate::dnn::lenet::lenet5`] is a thin layer-list shim over it.
+///
+/// `out_channels_c1` scales the first layer's output channel count — the
+/// Fig. 8 knob ("we extend the task count with ratios from 0.5x to 8x by
+/// adjusting the output channel from 3 to 48, while the default
+/// configuration is 6"). Only C1 scales; pass 6 for the paper's default.
+pub fn lenet5(out_channels_c1: u64) -> WorkloadSpec {
+    assert!(out_channels_c1 >= 1);
+    WorkloadSpec::new(
+        "lenet5",
+        vec![
+            LayerSpec::conv("C1", 5, 1.0, out_channels_c1 * 28 * 28),
+            LayerSpec::pool("S2", 2, 6 * 14 * 14),
+            // Classic C3 connection table: 6 maps see 3 inputs, 9 see 4,
+            // 1 sees all 6 → 60 connections / 16 maps = 3.75 effective
+            // channels.
+            LayerSpec::conv("C3", 5, 60.0 / 16.0, 16 * 10 * 10),
+            LayerSpec::pool("S4", 2, 16 * 5 * 5),
+            LayerSpec::conv("C5", 5, 16.0, 120),
+            LayerSpec::fc("F6", 120, 84),
+            LayerSpec::fc("OUT", 84, 10),
+        ],
+    )
+    .expect("builtin lenet5 workload")
+}
+
+/// An AlexNet-shaped network scaled to the 14-PE platform: the 11×11 and
+/// 5×5 kernels produce 46- and 13-flit response packets, so it stresses
+/// the memory-bandwidth/packet-size axis (the Fig. 9 regime) across a
+/// whole network rather than a synthetic single layer.
+pub fn alexnet_lite() -> WorkloadSpec {
+    WorkloadSpec::new(
+        "alexnet-lite",
+        vec![
+            LayerSpec::conv("C1", 11, 3.0, 8 * 13 * 13),
+            LayerSpec::pool("P1", 3, 8 * 6 * 6),
+            LayerSpec::conv("C2", 5, 8.0, 16 * 6 * 6),
+            LayerSpec::pool("P2", 3, 16 * 3 * 3),
+            LayerSpec::conv("C3", 3, 16.0, 32 * 3 * 3),
+            LayerSpec::fc("F1", 288, 64),
+            LayerSpec::fc("F2", 64, 10),
+        ],
+    )
+    .expect("builtin alexnet-lite workload")
+}
+
+/// A MobileNet-shaped network: alternating depthwise/pointwise blocks.
+/// Depthwise tasks are tiny (9 MACs, 18 words) and pointwise tasks carry
+/// only channel-sized packets, so the traffic is many small packets — the
+/// opposite corner from `alexnet-lite` — which is exactly where
+/// contention-aware mapping has to prove itself.
+pub fn mobilenet_lite() -> WorkloadSpec {
+    WorkloadSpec::new(
+        "mobilenet-lite",
+        vec![
+            LayerSpec::conv("C1", 3, 3.0, 8 * 14 * 14),
+            LayerSpec::depthwise("DW2", 3, 8 * 14 * 14),
+            LayerSpec::conv("PW2", 1, 8.0, 16 * 14 * 14),
+            LayerSpec::depthwise("DW3", 3, 16 * 7 * 7),
+            LayerSpec::conv("PW3", 1, 16.0, 32 * 7 * 7),
+            LayerSpec::pool("AP", 7, 32),
+            LayerSpec::fc("FC", 32, 10),
+        ],
+    )
+    .expect("builtin mobilenet-lite workload")
+}
+
+/// A 784→256→128→10 multi-layer perceptron: very few tasks per layer but
+/// enormous fully-connected response packets (H1: 1569 words → 99 flits).
+/// Small layers exercise the sampling-window fallback path network-wide.
+pub fn mlp() -> WorkloadSpec {
+    WorkloadSpec::new(
+        "mlp",
+        vec![
+            LayerSpec::fc("H1", 784, 256),
+            LayerSpec::fc("H2", 256, 128),
+            LayerSpec::fc("OUT", 128, 10),
+        ],
+    )
+    .expect("builtin mlp workload")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlatformConfig;
+    use crate::dnn::layer::LayerKind;
+
+    #[test]
+    fn builtin_names_resolve_and_unknowns_do_not() {
+        let z = zoo();
+        assert_eq!(z.names(), vec!["lenet5", "alexnet-lite", "mobilenet-lite", "mlp"]);
+        for name in z.names() {
+            let w = z.resolve(name).unwrap_or_else(|| panic!("builtin '{name}' must resolve"));
+            assert_eq!(w.name, name, "spec name must match its registry name");
+        }
+        assert!(z.resolve("resnet-152").is_none());
+    }
+
+    #[test]
+    fn every_builtin_resolves_on_the_default_platform() {
+        let cfg = PlatformConfig::default_2mc();
+        let z = zoo();
+        for name in z.names() {
+            let w = z.resolve(name).unwrap();
+            for (l, p) in w.layers.iter().zip(w.profiles(&cfg)) {
+                assert!(p.macs >= 1, "{name}/{}", l.name);
+                assert!(p.resp_flits >= 1, "{name}/{}", l.name);
+                assert!(p.compute_cycles >= 1, "{name}/{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn every_builtin_round_trips_through_the_text_format() {
+        let z = zoo();
+        for name in z.names() {
+            let w = z.resolve(name).unwrap();
+            let again = WorkloadSpec::parse(&w.to_text())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(w, again, "{name} must round-trip");
+        }
+    }
+
+    #[test]
+    fn mobilenet_interleaves_depthwise_and_pointwise() {
+        let w = mobilenet_lite();
+        let dw = w
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::DepthwiseConv { .. }))
+            .count();
+        assert_eq!(dw, 2);
+        // Pointwise = 1x1 conv; its packet is channel-sized.
+        let pw2 = w.get("PW2").unwrap();
+        assert_eq!(pw2.kind, LayerKind::Conv { kernel: 1, in_channels_eff: 8.0 });
+        assert_eq!(pw2.words_per_task(), 16); // 8 inputs + 8 weights
+    }
+
+    #[test]
+    fn mlp_packets_are_huge_and_layers_small() {
+        let w = mlp();
+        let cfg = PlatformConfig::default_2mc();
+        assert_eq!(w.profiles(&cfg)[0].resp_flits, 99); // 1569 words
+        // H2 and OUT sit below sampling-10's 14·10-sample threshold, so a
+        // whole-network sweep exercises the fallback path repeatedly.
+        assert!(w.get("H2").unwrap().tasks < 140);
+        assert!(w.get("OUT").unwrap().tasks < 140);
+        assert!(w.layers.iter().all(|l| l.tasks <= 256), "every mlp layer is small");
+    }
+
+    #[test]
+    fn zoo_table_task_totals_match_docs() {
+        assert_eq!(lenet5(6).total_tasks(), 8094);
+        assert_eq!(alexnet_lite().total_tasks(), 2722);
+        assert_eq!(mobilenet_lite().total_tasks(), 8666);
+        assert_eq!(mlp().total_tasks(), 394);
+    }
+}

@@ -49,11 +49,7 @@ pub fn data(quick: bool) -> Fig11Data {
     if quick {
         // Shrink only the big early layers; keep the small-layer fallback
         // behaviour intact.
-        for l in &mut layers {
-            if l.tasks > 600 {
-                l.tasks /= 8;
-            }
-        }
+        super::quick_trim(&mut layers);
     }
     let results = Scenario::new("fig11")
         .platform("2mc", PlatformConfig::default_2mc())

@@ -12,6 +12,7 @@
 //! | [`arch`]   | extension — {mesh, torus} × {xy, yx, west-first} sweep |
 //! | [`ablation`] | extension — memory-service discipline vs. saturation |
 //! | [`heatmap`] | extension — per-router congestion heatmap |
+//! | [`zoo`]    | extension — Fig. 11's question across the whole model zoo |
 //!
 //! Every simulating experiment (fig7–fig11, ablation, heatmap) builds a
 //! declarative {platforms × layers × mappers} grid on the
@@ -41,8 +42,21 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod table1;
+pub mod zoo;
 
 pub use engine::{Scenario, SweepResults};
+
+/// The shared `quick`/smoke workload trim: big layers (> 600 tasks)
+/// shrink 8×, small layers keep their exact task counts so
+/// sampling-window fallback behaviour survives the trim. One definition
+/// so [`fig11`], [`zoo`] and the benches cannot drift apart.
+pub fn quick_trim(layers: &mut [crate::dnn::LayerSpec]) {
+    for l in layers {
+        if l.tasks > 600 {
+            l.tasks /= 8;
+        }
+    }
+}
 
 /// A rendered experiment report (markdown).
 #[derive(Debug, Clone)]
@@ -75,6 +89,7 @@ pub fn all_reports(quick: bool) -> Vec<Report> {
         arch::run(quick),
         ablation::run(quick),
         heatmap::run(quick),
+        zoo::run(quick),
     ]
 }
 
@@ -90,13 +105,14 @@ pub fn run_by_id(id: &str, quick: bool) -> Option<Report> {
         "arch" => Some(arch::run(quick)),
         "ablation" => Some(ablation::run(quick)),
         "heatmap" => Some(heatmap::run(quick)),
+        "zoo" => Some(zoo::run(quick)),
         _ => None,
     }
 }
 
 /// Ids of all experiments, in paper order (extensions last).
-pub const ALL_IDS: [&str; 9] =
-    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "arch", "ablation", "heatmap"];
+pub const ALL_IDS: [&str; 10] =
+    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "arch", "ablation", "heatmap", "zoo"];
 
 #[cfg(test)]
 mod tests {

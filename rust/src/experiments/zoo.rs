@@ -1,0 +1,180 @@
+//! Cross-network mapping sweep — the paper's Fig. 11 question ("does
+//! travel-time mapping speed up a *whole network*?") asked of every
+//! network in the [`zoo`](crate::dnn::zoo), not just LeNet-5.
+//!
+//! The paper evaluates exactly one network; related work (Tiwari et al.'s
+//! mesh-NoC DNN streaming study, LOCAL's multi-DNN mapping evaluation)
+//! sweeps many, because a mapping policy's ranking can shift with the
+//! traffic pattern. This experiment runs every built-in network ×
+//! {row-major, distance, travel-time sampling-10} full-NN through the
+//! [`Scenario`](super::engine::Scenario) engine and reports the Fig. 11
+//! overall-improvement metric per network:
+//!
+//! * `lenet5` — the paper's anchor (sampling-10: ≈ +8%);
+//! * `alexnet-lite` — big kernels saturate memory bandwidth, the regime
+//!   where Fig. 9 shows unevenness (and mapping headroom) collapsing;
+//! * `mobilenet-lite` — many tiny depthwise/pointwise packets, the
+//!   congestion-dominated regime the sampling window was built for;
+//! * `mlp` — small layers that mostly take sampling's row-major fallback,
+//!   bounding how much a mapping can matter at all.
+
+use crate::config::PlatformConfig;
+use crate::dnn::zoo;
+use crate::dnn::WorkloadSpec;
+use crate::metrics::improvement;
+use crate::util::{table::fmt_pct, Table};
+
+use super::engine::{Scenario, SweepResults};
+use super::Report;
+
+/// Mappings compared on every network (registry names), row-major first
+/// (the improvement baseline).
+pub const MAPPERS: [&str; 3] = ["row-major", "distance", "sampling-10"];
+
+/// Zoo networks on the sweep, in zoo registration order.
+pub const NETWORKS: [&str; 4] = ["lenet5", "alexnet-lite", "mobilenet-lite", "mlp"];
+
+/// One network's full-NN sweep.
+#[derive(Debug)]
+pub struct NetworkSweep {
+    /// The (possibly `quick`-trimmed) workload that ran.
+    pub workload: WorkloadSpec,
+    /// Its {1 platform × layers × MAPPERS} grid results.
+    pub results: SweepResults,
+}
+
+impl NetworkSweep {
+    /// Whole-network latency (layers run back-to-back; sum) under mapper
+    /// `mi` (index into [`MAPPERS`]).
+    pub fn total_latency(&self, mi: usize) -> u64 {
+        self.results.mapper_series(0, mi).iter().map(|r| r.summary.latency).sum()
+    }
+}
+
+/// Run every zoo network × every mapper on the default 2-MC platform.
+pub fn data(quick: bool) -> Vec<NetworkSweep> {
+    let z = zoo::zoo();
+    NETWORKS
+        .iter()
+        .map(|name| {
+            let mut workload = z.resolve(name).expect("builtin zoo network");
+            if quick {
+                // Shrink only the big layers; keep small-layer fallback
+                // behaviour intact (the shared fig11 policy).
+                super::quick_trim(&mut workload.layers);
+            }
+            let results = Scenario::new(format!("zoo/{name}"))
+                .platform("2mc", PlatformConfig::default_2mc())
+                .layers(workload.layers.clone())
+                .mappers(MAPPERS)
+                .run()
+                .expect("zoo grid");
+            NetworkSweep { workload, results }
+        })
+        .collect()
+}
+
+/// Render the report.
+pub fn run(quick: bool) -> Report {
+    let sweeps = data(quick);
+    let mut lat = Table::new([
+        "network",
+        "layers",
+        "tasks",
+        "row-major",
+        "distance",
+        "sampling-10",
+    ]);
+    let mut imp = Table::new(["network", "distance", "sampling-10"]);
+    for s in &sweeps {
+        let totals: Vec<u64> = (0..MAPPERS.len()).map(|mi| s.total_latency(mi)).collect();
+        lat.row([
+            s.workload.name.clone(),
+            s.workload.layers.len().to_string(),
+            s.workload.total_tasks().to_string(),
+            totals[0].to_string(),
+            totals[1].to_string(),
+            totals[2].to_string(),
+        ]);
+        imp.row([
+            s.workload.name.clone(),
+            fmt_pct(improvement(totals[0], totals[1])),
+            fmt_pct(improvement(totals[0], totals[2])),
+        ]);
+    }
+    let body = format!(
+        "Every zoo network, full-NN, on the default 2-MC platform; overall \
+         latency = sum of back-to-back layer latencies (the Fig. 11 \
+         aggregation), improvement relative to row-major.\n\n\
+         **Whole-network inference time (cycles):**\n\n{lat}\n\
+         **Overall improvement vs row-major (Fig. 11 metric, per network):**\n\n{imp}\n\
+         Reading: the paper's +8.17% (LeNet, sampling-10) is one point on a \
+         traffic-pattern axis. Distance mapping keeps over-correcting wherever \
+         congestion, not hop count, dominates; the sampling window adapts \
+         per network because it measures the pattern instead of assuming \
+         one. Networks whose layers sit below the 14·10-sample threshold \
+         (the MLP's small fc layers) ride the row-major fallback, bounding \
+         both the risk and the win — the mechanism behind Fig. 11's flat \
+         small-layer clusters, visible here across architectures.\n",
+    );
+    Report { id: "zoo", title: "Mapping improvement across the model zoo", body }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::LayerKind;
+
+    #[test]
+    fn sweeps_cover_all_networks_and_mappers() {
+        let sweeps = data(true);
+        assert_eq!(sweeps.len(), NETWORKS.len());
+        for (s, name) in sweeps.iter().zip(NETWORKS) {
+            assert_eq!(s.workload.name, name);
+            assert_eq!(s.results.mapper_labels, MAPPERS.to_vec());
+            assert_eq!(s.results.cells.len(), s.workload.layers.len() * MAPPERS.len());
+            // Every cell conserves its layer's tasks.
+            for c in &s.results.cells {
+                let tasks = s.results.layers[c.layer].tasks;
+                assert_eq!(c.run.counts.iter().sum::<u64>(), tasks, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_layers_actually_simulate() {
+        let sweeps = data(true);
+        let mobilenet = &sweeps[2];
+        let (li, _) = mobilenet
+            .results
+            .layers
+            .iter()
+            .enumerate()
+            .find(|(_, l)| matches!(l.kind, LayerKind::DepthwiseConv { .. }))
+            .expect("mobilenet-lite has a depthwise layer");
+        let run = mobilenet.results.run(0, li, 0);
+        assert!(run.summary.latency > 0);
+    }
+
+    #[test]
+    fn lenet_sampling_beats_row_major_like_fig11() {
+        let sweeps = data(true);
+        let lenet = &sweeps[0];
+        let rm = lenet.total_latency(0);
+        let sw10 = lenet.total_latency(2);
+        assert!(
+            improvement(rm, sw10) > 0.0,
+            "sampling-10 must improve whole-LeNet latency (row-major {rm}, sw10 {sw10})"
+        );
+    }
+
+    #[test]
+    fn report_renders_every_network() {
+        let rep = run(true);
+        for name in NETWORKS {
+            assert!(rep.body.contains(name), "missing {name}");
+        }
+        assert!(rep.body.contains("sampling-10"));
+        assert!(rep.body.contains("improvement"));
+    }
+}

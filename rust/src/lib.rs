@@ -103,8 +103,11 @@
 //! * [`accel`] — the CNN accelerator device models (PE with 64 MACs, memory
 //!   controllers with a DDR5-like bandwidth model) and the co-simulation
 //!   engine that drives them against the NoC.
-//! * [`dnn`] — the DNN workload model: layers, tasks, packet sizing, and the
-//!   LeNet-5 network used throughout the paper's evaluation.
+//! * [`dnn`] — the DNN workload model: layers, tasks, packet sizing, the
+//!   [`dnn::workload::WorkloadSpec`] network descriptor (with its `.wl`
+//!   text format), and the [`dnn::zoo`] model registry — LeNet-5 (the
+//!   paper's network) plus AlexNet-lite, MobileNet-lite and an MLP, all
+//!   selectable by name (`noctt sim --workload <name>`, `noctt exp zoo`).
 //! * [`mapping`] — the [`mapping::Mapper`] trait, registry, and the five
 //!   builtin strategies under study.
 //! * [`metrics`] — unevenness (Eq. 9) and per-PE timing statistics.

@@ -2,16 +2,24 @@
 //! inspection, and PJRT LeNet inference, all from the command line.
 //!
 //! ```text
-//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|all> [--quick] [--jobs N]
-//! noctt sim --layer <C1|S2|C3|S4|C5|F6|OUT|k<N>> --strategy <name>
-//!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...] [--channels N]
+//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|all> [--quick] [--jobs N]
+//! noctt sim --layer <name|k<N>> --strategy <name>
+//!           [--workload <zoo-name|path.wl>] [--channels N]
+//!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //!           [--topology mesh|torus] [--routing xy|yx|west-first]
+//! noctt workloads
 //! noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //!                [--topology mesh|torus] [--routing xy|yx|west-first]
 //! noctt infer [--artifacts DIR] [--batch 1|8]
 //! noctt smoke [--artifacts DIR]
 //! noctt report [--jobs N]
 //! ```
+//!
+//! `--workload` selects the network `--layer` is looked up in: a zoo name
+//! (`noctt workloads` lists them) or a path to a `.wl` network descriptor
+//! (see the committed examples under `workloads/`). Without it, the
+//! legacy LeNet-5 layer names (C1…OUT, `--channels` scaling) and the
+//! synthetic `k<N>` kernel-sweep layers resolve as before.
 //!
 //! `--jobs N` caps the sweep engine's worker threads (default: available
 //! parallelism; `1` forces the serial path). It travels to every
@@ -29,10 +37,10 @@
 //! (clap is unavailable in the offline build environment; argument parsing
 //! is a small hand-rolled layer in [`args`].)
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use noctt::config::PlatformConfig;
-use noctt::dnn::{lenet5, LayerSpec};
+use noctt::dnn::{lenet5, zoo, LayerSpec, WorkloadSpec};
 use noctt::experiments;
 use noctt::mapping::{self, distance::pe_distances, run_layer, MapCtx, Mapper, Strategy};
 use noctt::metrics::improvement;
@@ -232,10 +240,12 @@ fn usage() -> ! {
         "noctt — travel-time based task mapping for NoC-based DNN accelerators\n\
          \n\
          Usage:\n\
-         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|all> [--quick] [--jobs N]\n\
-         \x20 noctt sim --layer <C1..OUT|k<N>> --strategy <s> [--mcs 2|4]\n\
-         \x20           [--mesh WxH] [--mc-at n1,n2,...] [--channels N]\n\
+         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|all> [--quick] [--jobs N]\n\
+         \x20 noctt sim --layer <name|k<N>> --strategy <s> [--mcs 2|4]\n\
+         \x20           [--workload <zoo-name|path.wl>] [--channels N]\n\
+         \x20           [--mesh WxH] [--mc-at n1,n2,...]\n\
          \x20           [--topology mesh|torus] [--routing xy|yx|west-first]\n\
+         \x20 noctt workloads\n\
          \x20 noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]\n\
          \x20                [--topology mesh|torus] [--routing xy|yx|west-first]\n\
          \x20 noctt infer [--artifacts DIR] [--batch 1|8]\n\
@@ -246,6 +256,8 @@ fn usage() -> ! {
          \x20          also settable as the NOCTT_JOBS environment variable)\n\
          --topology/--routing  the NoC architecture axis: wrap-around torus\n\
          \x20          fabrics and Y-X / west-first partial-adaptive routing\n\
+         --workload  the network --layer is looked up in: a zoo name\n\
+         \x20          (see `noctt workloads`) or a .wl descriptor file\n\
          \n\
          Strategies (registry names):\n{}",
         strategies.join("\n")
@@ -291,18 +303,58 @@ fn parse_platform(a: &args::Args) -> Result<PlatformConfig> {
     b.build()
 }
 
+/// Resolve `--workload`: a zoo name, or a path to a `.wl` descriptor file
+/// (anything that looks like a path — contains a separator or ends in
+/// `.wl` — is loaded from disk).
+fn resolve_workload(spec: &str) -> Result<WorkloadSpec> {
+    let looks_like_path =
+        spec.ends_with(".wl") || spec.contains('/') || spec.contains(std::path::MAIN_SEPARATOR);
+    if looks_like_path {
+        WorkloadSpec::load(spec)
+    } else {
+        let z = zoo::zoo();
+        z.resolve(spec).with_context(|| {
+            format!("unknown workload '{spec}' (zoo: {:?}; or pass a .wl file path)", z.names())
+        })
+    }
+}
+
 fn parse_layer(a: &args::Args, cfg: &PlatformConfig) -> Result<LayerSpec> {
+    if let Some(w) = a.get("workload") {
+        // The Fig. 8 channel knob only scales the built-in LeNet path;
+        // silently ignoring it against a fixed workload would misreport.
+        if a.has("channels") {
+            bail!("--channels scales the built-in LeNet layers and cannot be combined with --workload");
+        }
+        let workload = resolve_workload(w)?;
+        // Default to the network's first layer; `k<N>` synthetics belong
+        // to the legacy no-workload path only.
+        let name = a.get_or("layer", &workload.layers[0].name).to_string();
+        return workload.get(&name).cloned().with_context(|| {
+            format!(
+                "workload '{}' has no layer '{name}' (layers: {:?})",
+                workload.name,
+                workload.layer_names()
+            )
+        });
+    }
     let name = a.get_or("layer", "C1");
     let channels: u64 = a.get_or("channels", "6").parse().context("--channels")?;
+    // Validated here so CLI input errors instead of tripping the
+    // workload constructor's assert.
+    ensure!(channels >= 1, "--channels must be >= 1");
     if let Some(k) = name.strip_prefix('k') {
         let k: u64 = k.parse().context("kernel size")?;
-        return Ok(LayerSpec::conv(&format!("k{k}"), k, 1.0, channels * 28 * 28));
+        // Validated, not asserted: `--layer k0` (or an absurd kernel) is
+        // CLI input and must come back as an error, not a panic.
+        return LayerSpec::try_conv(&format!("k{k}"), k, 1.0, channels * 28 * 28)
+            .with_context(|| format!("--layer k{k}"));
     }
     let layers = lenet5(channels);
     layers
         .into_iter()
         .find(|l| l.name == name)
-        .with_context(|| format!("unknown layer '{name}' (need C1,S2,C3,S4,C5,F6,OUT or k<N>); cfg has {} PEs", cfg.num_pes()))
+        .with_context(|| format!("unknown layer '{name}' (need C1,S2,C3,S4,C5,F6,OUT or k<N>, or pass --workload); cfg has {} PEs", cfg.num_pes()))
 }
 
 fn cmd_exp(a: &args::Args) -> Result<()> {
@@ -356,6 +408,30 @@ fn cmd_sim(a: &args::Args) -> Result<()> {
         fmt_pct(run.summary.rho_avg),
         fmt_pct(run.summary.rho_accum),
         fmt_pct(improvement(base.summary.latency, run.summary.latency)),
+    );
+    Ok(())
+}
+
+/// List the built-in model zoo (and how to bring your own network).
+fn cmd_workloads() -> Result<()> {
+    let z = zoo::zoo();
+    let mut t = Table::new(["name", "layers", "tasks", "description"]);
+    for e in z.entries() {
+        let w = z
+            .resolve(e.name())
+            .with_context(|| format!("zoo entry '{}' does not resolve its own name", e.name()))?;
+        t.row([
+            e.name().to_string(),
+            w.layers.len().to_string(),
+            w.total_tasks().to_string(),
+            e.help().to_string(),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "Run one with `noctt sim --workload <name> --layer <layer>` or sweep them\n\
+         all with `noctt exp zoo`. Custom networks load from `.wl` descriptor\n\
+         files (`--workload path.wl`); see workloads/*.wl for the format."
     );
     Ok(())
 }
@@ -430,6 +506,7 @@ fn main() -> Result<()> {
     match a.positional.first().map(String::as_str) {
         Some("exp") => cmd_exp(&a),
         Some("sim") => cmd_sim(&a),
+        Some("workloads") => cmd_workloads(),
         Some("platform") => cmd_platform(&a),
         Some("infer") => cmd_infer(&a),
         Some("smoke") => {

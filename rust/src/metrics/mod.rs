@@ -16,24 +16,46 @@ use crate::accel::SimResult;
 /// Unevenness ρ = (max − min) / max over the given per-PE values
 /// (Eq. 9). Values `<= 0`/empty yield 0. `None` entries (unused PEs) are
 /// skipped.
+///
+/// Single-pass min/max fold, no allocation — this sits inside every
+/// [`RunSummary::from_result`], i.e. on every sweep cell.
 pub fn unevenness(values: &[Option<f64>]) -> f64 {
-    let vals: Vec<f64> = values.iter().filter_map(|v| *v).filter(|v| *v > 0.0).collect();
-    if vals.is_empty() {
-        return 0.0;
+    let mut min = f64::MAX;
+    let mut max = f64::MIN;
+    for v in values.iter().filter_map(|v| *v) {
+        // NaN fails the `> 0.0` test, so it is skipped exactly like the
+        // non-positive values.
+        if v > 0.0 {
+            min = min.min(v);
+            max = max.max(v);
+        }
     }
-    let max = vals.iter().copied().fold(f64::MIN, f64::max);
-    let min = vals.iter().copied().fold(f64::MAX, f64::min);
     if max <= 0.0 {
+        // Nothing survived the filter (max still at its f64::MIN seed).
         0.0
     } else {
         (max - min) / max
     }
 }
 
-/// Unevenness over plain values (no missing entries).
+/// Unevenness over plain values (no missing entries). Zeros (unused PEs)
+/// are skipped, matching [`unevenness`]. Single-pass, no allocation.
 pub fn unevenness_u64(values: &[u64]) -> f64 {
-    let opts: Vec<Option<f64>> = values.iter().map(|&v| Some(v as f64)).collect();
-    unevenness(&opts)
+    let mut min = u64::MAX;
+    let mut max = 0u64;
+    for &v in values {
+        if v > 0 {
+            min = min.min(v);
+            max = max.max(v);
+        }
+    }
+    if max == 0 {
+        0.0
+    } else {
+        // Subtract in f64 like the Option path always did, so the two
+        // functions stay bit-identical on shared inputs.
+        (max as f64 - min as f64) / max as f64
+    }
 }
 
 /// Improvement of `ours` over `baseline`, as a positive fraction when ours
@@ -113,6 +135,31 @@ mod tests {
     fn unevenness_empty_is_zero() {
         assert_eq!(unevenness(&[]), 0.0);
         assert_eq!(unevenness(&[None, None]), 0.0);
+        assert_eq!(unevenness_u64(&[]), 0.0);
+    }
+
+    #[test]
+    fn unevenness_all_zero_is_zero() {
+        // Zeros mean "unused PE" in both entry points and must not drag
+        // min down to 0 (which would read as ρ = 1).
+        assert_eq!(unevenness(&[Some(0.0), Some(0.0)]), 0.0);
+        assert_eq!(unevenness_u64(&[0, 0, 0]), 0.0);
+        assert!((unevenness(&[Some(0.0), Some(10.0), Some(5.0)]) - 0.5).abs() < 1e-12);
+        assert!((unevenness_u64(&[0, 10, 5]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unevenness_single_value_is_zero() {
+        assert_eq!(unevenness(&[Some(42.0)]), 0.0);
+        assert_eq!(unevenness(&[None, Some(42.0), None]), 0.0);
+        assert_eq!(unevenness_u64(&[42]), 0.0);
+    }
+
+    #[test]
+    fn unevenness_entry_points_agree() {
+        let ints = [3u64, 0, 9, 7, 1];
+        let opts: Vec<Option<f64>> = ints.iter().map(|&v| Some(v as f64)).collect();
+        assert_eq!(unevenness_u64(&ints), unevenness(&opts));
     }
 
     #[test]

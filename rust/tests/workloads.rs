@@ -1,0 +1,199 @@
+//! The workload subsystem's integration suite: `.wl` round-trip property,
+//! line-numbered parse errors, the LeNet refactor regression, and
+//! validation of every committed `workloads/*.wl` file.
+
+use noctt::config::PlatformConfig;
+use noctt::dnn::workload::ParseError;
+use noctt::dnn::{lenet5, zoo, LayerKind, LayerSpec, WorkloadSpec, LENET_LAYER_NAMES};
+use noctt::util::proptest::forall;
+use noctt::util::SplitMix64;
+
+/// A random valid spec: 1–6 layers of random kinds with round-trippable
+/// parameters (all generated through the validating constructors).
+fn random_spec(rng: &mut SplitMix64) -> WorkloadSpec {
+    let n = rng.range(1, 6) as usize;
+    let mut layers = Vec::with_capacity(n);
+    for i in 0..n {
+        let name = format!("L{i}");
+        let tasks = rng.range(1, 50_000);
+        let layer = match rng.below(5) {
+            // Fractional channels in sixteenths, >= 0.5 so a 1x1 kernel
+            // still rounds to >= 1 MAC.
+            0 => LayerSpec::try_conv(
+                &name,
+                rng.range(1, 13),
+                rng.range(8, 256) as f64 / 16.0,
+                tasks,
+            ),
+            1 => LayerSpec::try_depthwise(&name, rng.range(1, 13), tasks),
+            2 => LayerSpec::try_pool(&name, rng.range(1, 9), tasks),
+            3 => LayerSpec::try_fc(&name, rng.range(1, 4096), tasks),
+            _ => LayerSpec::try_custom(&name, rng.range(1, 4096), rng.range(1, 4096), tasks),
+        };
+        layers.push(layer.expect("generated parameters are valid"));
+    }
+    WorkloadSpec::new(format!("net-{}", rng.below(1_000_000)), layers)
+        .expect("generated spec is valid")
+}
+
+#[test]
+fn parse_format_parse_is_identity() {
+    forall("wl parse ∘ format = id", 256, |rng| {
+        let spec = random_spec(rng);
+        let text = spec.to_text();
+        let again = WorkloadSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("formatted spec must parse, got {e}\n{text}"));
+        assert_eq!(spec, again, "round-trip changed the spec\n{text}");
+        // And the canonical form is a fixed point.
+        assert_eq!(text, again.to_text());
+    });
+}
+
+/// Each malformed input produces an error on the expected line with a
+/// message that names the problem.
+#[test]
+fn malformed_files_report_line_numbers() {
+    let cases: &[(&str, usize, &str)] = &[
+        // (text, expected line, expected message fragment)
+        ("layer C1 conv 5 1 100\n", 1, "before the 'workload"),
+        ("workload w\nworkload w2\n", 2, "duplicate 'workload'"),
+        ("workload\n", 1, "missing workload name"),
+        ("workload w extra\n", 1, "one name"),
+        ("# c\n\nworkload w\nlayer C1 conv 5 1\n", 4, "'conv' layer takes"),
+        ("workload w\nlayer C1 conv 5 1 100 9\n", 2, "'conv' layer takes"),
+        ("workload w\nlayer C1\n", 2, "at least a name and a kind"),
+        ("workload w\nlayer C1 warp 5 100\n", 2, "unknown layer kind 'warp'"),
+        ("workload w\nbogus C1 conv 5 1 100\n", 2, "unknown directive 'bogus'"),
+        ("workload w\nlayer C1 conv five 1 100\n", 2, "kernel must be a non-negative integer"),
+        ("workload w\nlayer C1 conv 5 huge 100\n", 2, "in_channels_eff must be a number"),
+        ("workload w\nlayer C1 conv 5 nan 100\n", 2, "finite"),
+        ("workload w\nlayer C1 conv 5 -1 100\n", 2, "in_channels_eff must be finite and > 0"),
+        ("workload w\nlayer C1 conv 0 1 100\n", 2, "kernel must be in 1..="),
+        ("workload w\nlayer C1 fc 10 0\n", 2, "tasks must be >= 1"),
+        ("workload w\nlayer A fc 10 10\nlayer A fc 10 10\n", 3, "duplicate layer name 'A'"),
+        ("workload w\n# only comments\n", 1, "declares no layers"),
+        ("# nothing\n", 1, "missing 'workload <name>' header"),
+        ("", 1, "missing 'workload <name>' header"),
+    ];
+    for (text, line, fragment) in cases {
+        let err: ParseError = match WorkloadSpec::parse(text) {
+            Ok(w) => panic!("must not parse: {text:?} gave {w:?}"),
+            Err(e) => e,
+        };
+        assert_eq!(err.line, *line, "wrong line for {text:?}: {err}");
+        assert!(
+            err.message.contains(fragment),
+            "error for {text:?} should mention {fragment:?}, got: {err}"
+        );
+        assert!(err.to_string().starts_with(&format!("line {line}:")), "{err}");
+    }
+}
+
+/// The LeNet refactor onto `WorkloadSpec` is behavior-preserving: the zoo
+/// network equals the legacy layer list, and both pin the paper's
+/// numbers (names, kinds, task counts) literally — not by comparing the
+/// two code paths to each other alone.
+#[test]
+fn zoo_lenet5_equals_legacy_lenet5_and_the_paper() {
+    let legacy = lenet5(6);
+    let workload = zoo::lenet5(6);
+    assert_eq!(workload.name, "lenet5");
+    assert_eq!(workload.layers, legacy, "zoo and legacy must be layer-for-layer identical");
+
+    let expected: [(&str, LayerKind, u64); 7] = [
+        ("C1", LayerKind::Conv { kernel: 5, in_channels_eff: 1.0 }, 4704),
+        ("S2", LayerKind::Pool { kernel: 2 }, 1176),
+        ("C3", LayerKind::Conv { kernel: 5, in_channels_eff: 3.75 }, 1600),
+        ("S4", LayerKind::Pool { kernel: 2 }, 400),
+        ("C5", LayerKind::Conv { kernel: 5, in_channels_eff: 16.0 }, 120),
+        ("F6", LayerKind::Fc { in_features: 120 }, 84),
+        ("OUT", LayerKind::Fc { in_features: 84 }, 10),
+    ];
+    assert_eq!(workload.layers.len(), expected.len());
+    for (l, (name, kind, tasks)) in workload.layers.iter().zip(expected) {
+        assert_eq!(l.name, name);
+        assert_eq!(l.kind, kind, "{name}");
+        assert_eq!(l.tasks, tasks, "{name}");
+    }
+    assert_eq!(workload.layer_names(), LENET_LAYER_NAMES.to_vec());
+
+    // The Fig. 8 channel knob scales C1 only, as before.
+    for ch in [3u64, 12, 48] {
+        let scaled = zoo::lenet5(ch);
+        assert_eq!(scaled.layers[0].tasks, ch * 28 * 28, "channels {ch}");
+        assert_eq!(scaled.layers[1..], lenet5(6)[1..], "channels {ch}: only C1 scales");
+    }
+}
+
+fn workloads_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("workloads")
+}
+
+/// Every committed `workloads/*.wl` file parses and resolves per-task
+/// profiles on the default platform (i.e. is actually runnable).
+#[test]
+fn committed_wl_files_are_valid() {
+    let dir = workloads_dir();
+    let mut seen = Vec::new();
+    for entry in std::fs::read_dir(&dir).expect("workloads/ directory exists") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("wl") {
+            continue;
+        }
+        let w = WorkloadSpec::load(&path).unwrap_or_else(|e| panic!("{}: {e:?}", path.display()));
+        let cfg = PlatformConfig::default_2mc();
+        for (l, p) in w.layers.iter().zip(w.profiles(&cfg)) {
+            assert!(p.macs >= 1, "{}/{}", w.name, l.name);
+            assert!(p.resp_flits >= 1, "{}/{}", w.name, l.name);
+            assert!(p.compute_cycles >= 1 && p.mem_cycles >= 1, "{}/{}", w.name, l.name);
+        }
+        // The file name matches the workload header (zoo lookup relies
+        // on this convention).
+        assert_eq!(
+            path.file_stem().and_then(|s| s.to_str()),
+            Some(w.name.as_str()),
+            "{}: file name and workload header disagree",
+            path.display()
+        );
+        seen.push(w.name.clone());
+    }
+    for expected in ["lenet5", "alexnet-lite", "mobilenet-lite", "mlp", "synthetic-stress"] {
+        assert!(seen.contains(&expected.to_string()), "missing workloads/{expected}.wl");
+    }
+}
+
+/// The committed lenet5.wl is the zoo network, byte-for-byte in content.
+#[test]
+fn committed_lenet5_wl_matches_the_zoo() {
+    let file = WorkloadSpec::load(workloads_dir().join("lenet5.wl")).unwrap();
+    assert_eq!(file, zoo::lenet5(6));
+}
+
+/// Committed files for zoo networks stay in sync with their constructors.
+#[test]
+fn committed_zoo_files_match_their_builtins() {
+    let z = zoo::zoo();
+    for name in z.names() {
+        let file = WorkloadSpec::load(workloads_dir().join(format!("{name}.wl")))
+            .unwrap_or_else(|e| panic!("{name}: {e:?}"));
+        let builtin = z.resolve(name).unwrap();
+        assert_eq!(file, builtin, "workloads/{name}.wl drifted from zoo::{name}");
+    }
+}
+
+/// A custom-kind layer parses from text and produces the documented
+/// pass-through profile.
+#[test]
+fn custom_layers_work_end_to_end() {
+    let w = WorkloadSpec::parse(
+        "workload stress\nlayer BURST custom 400 800 1400\nlayer CHAT custom 1 2 2800\n",
+    )
+    .unwrap();
+    let cfg = PlatformConfig::default_2mc();
+    let p = w.profiles(&cfg);
+    assert_eq!(p[0].macs, 400);
+    assert_eq!(p[0].resp_data_words, 800);
+    assert_eq!(p[0].resp_flits, 50);
+    assert_eq!(p[1].macs, 1);
+    assert_eq!(p[1].resp_flits, 1);
+}

@@ -1,0 +1,12 @@
+# AlexNet-shaped network scaled to the paper's 14-PE platform (the
+# built-in `alexnet-lite` zoo network). Big kernels mean big response
+# packets — C1's 11x11 over 3 channels fetches 726 words = 46 flits per
+# task — so this network lives in the bandwidth-saturated Fig. 9 regime.
+workload alexnet-lite
+layer C1 conv 11 3 1352
+layer P1 pool 3 288
+layer C2 conv 5 8 576
+layer P2 pool 3 144
+layer C3 conv 3 16 288
+layer F1 fc 288 64
+layer F2 fc 64 10

@@ -1,0 +1,17 @@
+# LeNet-5 (LeCun et al., 1998) — the paper's end-to-end workload (§5.6),
+# identical layer-for-layer to the built-in `lenet5` zoo network (a test
+# holds the two equal).
+#
+# layer <name> conv <kernel> <in_channels_eff> <tasks>
+# layer <name> pool <kernel> <tasks>
+# layer <name> fc   <in_features> <tasks>
+workload lenet5
+layer C1  conv 5 1 4704
+layer S2  pool 2 1176
+# C3's classic partial connection table: 60 connections over 16 maps
+# gives 3.75 effective input channels per task.
+layer C3  conv 5 3.75 1600
+layer S4  pool 2 400
+layer C5  conv 5 16 120
+layer F6  fc 120 84
+layer OUT fc 84 10

@@ -1,0 +1,8 @@
+# 784 -> 256 -> 128 -> 10 multi-layer perceptron (the built-in `mlp` zoo
+# network): very few tasks, enormous fully-connected packets (H1 fetches
+# 1569 words = 99 flits per task). H2 and OUT sit below sampling-10's
+# 140-sample threshold and take the row-major fallback.
+workload mlp
+layer H1  fc 784 256
+layer H2  fc 256 128
+layer OUT fc 128 10

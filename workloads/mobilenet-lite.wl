@@ -1,0 +1,14 @@
+# MobileNet-shaped network (the built-in `mobilenet-lite` zoo network):
+# alternating depthwise / pointwise (1x1 conv) blocks. Tasks are many and
+# tiny — depthwise fetches 18 words, pointwise only channel-sized packets
+# — the congestion-dominated regime sampling-window mapping targets.
+#
+# layer <name> depthwise <kernel> <tasks>
+workload mobilenet-lite
+layer C1  conv 3 3 1568
+layer DW2 depthwise 3 1568
+layer PW2 conv 1 8 3136
+layer DW3 depthwise 3 784
+layer PW3 conv 1 16 1568
+layer AP  pool 7 32
+layer FC  fc 32 10

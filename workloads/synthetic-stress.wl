@@ -1,0 +1,12 @@
+# Synthetic stress pattern showing the `custom` escape hatch: a task
+# costs exactly <macs> multiply-accumulates and fetches exactly
+# <resp_data_words> words — no layer-shape law in between.
+#
+# layer <name> custom <macs> <resp_data_words> <tasks>
+workload synthetic-stress
+# C5-heavy tasks: 400 MACs, 800-word (50-flit) responses.
+layer BURST custom 400 800 1400
+# Minimal tasks: the stream is all request/result packets.
+layer CHAT custom 1 2 2800
+# And a plain shaped layer mixes in fine.
+layer MIX depthwise 5 1400
