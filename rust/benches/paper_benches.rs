@@ -23,7 +23,8 @@ use noctt::config::{PlacementPreset, PlatformConfig, RoutingAlgorithm, TopologyK
 use noctt::dnn::{lenet5, zoo, LayerSpec};
 use noctt::experiments::engine::Scenario;
 use noctt::experiments::{fig7, quick_trim, table1};
-use noctt::mapping::{run_layer, Strategy};
+use noctt::mapping::{registry, run_layer, Strategy};
+use noctt::serving::{Arrival, ServingConfig, ServingSim};
 use noctt::util::bench::{bench, speedup, BenchArgs, BenchResult};
 use noctt::util::ThreadPool;
 
@@ -246,6 +247,36 @@ fn main() {
                 }
             },
         ));
+    }
+
+    // serving — a sustained Poisson request stream (the serving subsystem's
+    // whole stack: seeded arrivals, admission windowing, per-layer
+    // persistent sims, run_to_cycle fast-forward through inter-arrival
+    // gaps). One iteration = one full multi-request stream.
+    if args.selected("serving/poisson-load-0.7") {
+        let mut wl = zoo::zoo().resolve("lenet5").expect("zoo lenet5");
+        // Always trimmed, like `exp serving`: a stream costs one
+        // full-network simulation per request.
+        quick_trim(&mut wl.layers);
+        let requests = if args.smoke { 4 } else { 12 };
+        let serving = ServingConfig {
+            arrival: Arrival::Poisson,
+            load: 0.7,
+            requests,
+            max_in_flight: 4,
+            seed: 42,
+        };
+        let mapper = registry().resolve("sampling-10").expect("sampling-10 mapper");
+        // Makespan captured from inside the measured closure — the seeded
+        // stream covers the identical span every iteration.
+        let cycles = std::cell::Cell::new(0.0);
+        let b = bench("serving/poisson-load-0.7", t, Some((requests as f64, "requests")), || {
+            let run =
+                ServingSim::new(&cfg, &wl, mapper.as_ref()).run(&serving).expect("serving bench");
+            cycles.set(run.summary.makespan as f64);
+            std::hint::black_box(run);
+        });
+        results.push(b.with_sim_cycles(cycles.get()));
     }
 
     args.finish("paper_benches", &results).expect("writing bench output");

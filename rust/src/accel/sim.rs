@@ -203,10 +203,12 @@ impl Simulation {
     /// Event-driven fast-forward: if the next platform event is more than
     /// one cycle away, jump the clock to just before it (clamped to the
     /// phase cycle cap so deadlock detection still fires at the same
-    /// cycle as dense stepping). Returns `true` if the clock moved — the
-    /// caller re-checks its exit/cap conditions before stepping. No-op in
+    /// cycle as dense stepping, and to `limit` so callers with a target
+    /// cycle — [`run_to_cycle`](Self::run_to_cycle) — never overshoot).
+    /// Returns `true` if the clock moved — the caller re-checks its
+    /// exit/cap conditions before stepping. No-op in
     /// [`SteppingMode::Dense`].
-    fn fast_forward(&mut self, phase_start: u64) -> bool {
+    fn fast_forward(&mut self, phase_start: u64, limit: u64) -> bool {
         if self.cfg.stepping == SteppingMode::Dense {
             return false;
         }
@@ -219,12 +221,15 @@ impl Simulation {
         }
         let cap = phase_start + self.cfg.max_phase_cycles;
         let target = match self.next_event_at() {
-            Some(next) if next > now + 1 => (next - 1).min(cap),
+            Some(next) if next > now + 1 => (next - 1).min(cap).min(limit),
             Some(_) => return false,
-            // No component will ever act again: a genuine deadlock. Jump
-            // to the cap so the caller reports it without spinning through
-            // up to `max_phase_cycles` no-op steps.
-            None => cap,
+            // No component will ever act again. For an unbounded run that
+            // is a genuine deadlock — jump to the cap so the caller
+            // reports it without spinning through up to
+            // `max_phase_cycles` no-op steps. For a bounded run
+            // (`limit < cap`) it is a legitimately idle platform waiting
+            // out a gap — jump straight to the limit.
+            None => cap.min(limit),
         };
         if target > now {
             self.net.skip_to(target);
@@ -234,14 +239,38 @@ impl Simulation {
         }
     }
 
-    /// Run until every PE has completed its budget **and** the network has
-    /// drained (result packets delivered).
+    /// Advance the platform to exactly `target` cycles, processing any
+    /// events on the way. A no-op if `target` is in the past. This is the
+    /// serving driver's admission clock: a stage simulation parked after
+    /// its previous request drains is pushed forward to the next
+    /// request's entry cycle before new budgets are added. Uses the same
+    /// fast-forward/step loop as the unbounded runs (so event-driven and
+    /// dense stepping stay bit-identical).
     ///
-    /// Returns the aggregate result over *all* records accumulated so far
-    /// (across phases, if budgets were added in stages). Fails with a
-    /// descriptive error — not a hung worker — if the phase exceeds the
-    /// platform's `max_phase_cycles` cap (a deadlock).
-    pub fn run_until_done(&mut self) -> Result<SimResult> {
+    /// No `max_phase_cycles` cap here: the clock strictly advances every
+    /// iteration (`step` is one cycle, `fast_forward` only jumps forward),
+    /// so the loop terminates structurally — and a long legitimately-idle
+    /// inter-arrival gap is not a stuck phase. `phase_start` is re-anchored
+    /// at `now` each pass so the in-`fast_forward` cap can never clip a
+    /// bounded jump short of `target`.
+    pub fn run_to_cycle(&mut self, target: u64) -> Result<()> {
+        while self.net.now() < target {
+            if self.fast_forward(self.net.now(), target) {
+                continue;
+            }
+            self.step();
+        }
+        Ok(())
+    }
+
+    /// Run until every PE has completed its budget **and** the network has
+    /// drained (result packets delivered). Advances the clock only; use
+    /// [`run_until_done`](Self::run_until_done) when a [`SimResult`]
+    /// snapshot is wanted too. Long-lived callers (the serving driver
+    /// keeps one simulation per layer alive across hundreds of requests)
+    /// call this to avoid cloning the ever-growing record log after every
+    /// request.
+    pub fn drain(&mut self) -> Result<()> {
         let start = self.net.now();
         loop {
             let pes_done = self.pes.iter().all(Pe::done);
@@ -252,27 +281,50 @@ impl Simulation {
             if self.net.now() - start >= self.cfg.max_phase_cycles {
                 bail!("{}", self.deadlock_report("run", start));
             }
-            if self.fast_forward(start) {
+            if self.fast_forward(start, u64::MAX) {
                 continue; // re-check the cap at the new cycle
             }
             self.step();
         }
+        Ok(())
+    }
+
+    /// Run until every PE has completed its budget **and** the network has
+    /// drained (result packets delivered).
+    ///
+    /// Returns the aggregate result over *all* records accumulated so far
+    /// (across phases, if budgets were added in stages). Fails with a
+    /// descriptive error — not a hung worker — if the phase exceeds the
+    /// platform's `max_phase_cycles` cap (a deadlock).
+    pub fn run_until_done(&mut self) -> Result<SimResult> {
+        self.drain()?;
         Ok(self.result())
     }
 
     /// Run until every PE has completed its budget (network may still be
-    /// draining result packets). Used between sampling and residual phases.
-    pub fn run_until_budgets_met(&mut self) -> Result<SimResult> {
+    /// draining result packets). Advances the clock only — the snapshot
+    /// variant is [`run_until_budgets_met`](Self::run_until_budgets_met).
+    /// After this returns, [`now`](Self::now) is the cycle the last PE
+    /// finished its compute, which is the serving pipeline's "stage
+    /// drained" timestamp.
+    pub fn meet_budgets(&mut self) -> Result<()> {
         let start = self.net.now();
         while !self.pes.iter().all(Pe::done) {
             if self.net.now() - start >= self.cfg.max_phase_cycles {
                 bail!("{}", self.deadlock_report("sampling phase", start));
             }
-            if self.fast_forward(start) {
+            if self.fast_forward(start, u64::MAX) {
                 continue;
             }
             self.step();
         }
+        Ok(())
+    }
+
+    /// Run until every PE has completed its budget (network may still be
+    /// draining result packets). Used between sampling and residual phases.
+    pub fn run_until_budgets_met(&mut self) -> Result<SimResult> {
+        self.meet_budgets()?;
         Ok(self.result())
     }
 
@@ -566,6 +618,57 @@ mod tests {
         assert!(err.contains("4x4 mesh"), "must name the platform: {err}");
         assert!(err.contains("14 tasks outstanding"), "must count the stuck work: {err}");
         assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn run_to_cycle_advances_an_idle_platform_exactly() {
+        let cfg = PlatformConfig::default_2mc();
+        let profile = c1_profile(&cfg);
+        let mut sim = Simulation::new(&cfg, profile);
+        sim.run_to_cycle(1234).unwrap();
+        assert_eq!(sim.now(), 1234, "idle fast-forward must land exactly on target");
+        sim.run_to_cycle(1000).unwrap();
+        assert_eq!(sim.now(), 1234, "a past target is a no-op");
+    }
+
+    #[test]
+    fn work_after_run_to_cycle_is_a_pure_time_shift() {
+        // The serving driver's core assumption: a platform entered at
+        // cycle T behaves exactly as at cycle 0, shifted by T. Every
+        // component transition depends on time only through differences
+        // and `skip_to` touches nothing but the clock.
+        let cfg = PlatformConfig::default_2mc();
+        let mut counts = vec![0u64; 14];
+        counts[0] = 2;
+        counts[7] = 3;
+        let mut base = Simulation::new(&cfg, c1_profile(&cfg));
+        base.add_budgets(&counts);
+        let b = base.run_until_done().unwrap();
+        let mut shifted = Simulation::new(&cfg, c1_profile(&cfg));
+        shifted.run_to_cycle(1234).unwrap();
+        shifted.add_budgets(&counts);
+        let s = shifted.run_until_done().unwrap();
+        assert_eq!(s.records.len(), b.records.len());
+        for (sr, br) in s.records.iter().zip(&b.records) {
+            assert_eq!(sr.pe, br.pe);
+            assert_eq!(sr.t_issue, br.t_issue + 1234, "issue cycle must shift rigidly");
+            assert_eq!(sr.travel_time(), br.travel_time(), "durations are shift-invariant");
+        }
+        assert_eq!(s.latency, b.latency + 1234);
+        assert_eq!(s.drained_at, b.drained_at + 1234);
+        assert_eq!(s.net.flits_switched, b.net.flits_switched);
+    }
+
+    #[test]
+    fn run_to_cycle_while_work_is_in_flight_processes_it() {
+        // Advancing past the whole run's span must complete the work on
+        // the way — run_to_cycle steps events, it does not leap over them.
+        let cfg = PlatformConfig::default_2mc();
+        let mut sim = Simulation::new(&cfg, c1_profile(&cfg));
+        sim.add_budgets(&vec![1; 14]);
+        sim.run_to_cycle(100_000).unwrap();
+        assert_eq!(sim.now(), 100_000);
+        assert_eq!(sim.records().len(), 14, "all tasks complete inside the window");
     }
 
     #[test]

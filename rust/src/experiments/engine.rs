@@ -360,6 +360,61 @@ impl SweepResults {
             self.run(platform, layer, mapper).summary.latency,
         )
     }
+
+    /// Serialize the sweep as a JSON object (hand-rolled — no `serde`
+    /// offline — mirroring [`crate::util::bench::BenchResult::to_json`]):
+    /// scenario name, the grid axes, and one object per cell with its
+    /// labels, headline metrics and planned counts. This is the
+    /// machine-readable twin of the rendered tables, so downstream
+    /// plotting/analysis stops scraping stdout.
+    pub fn to_json(&self) -> String {
+        use crate::util::bench::escape_json;
+        use std::fmt::Write as _;
+
+        let str_list = |xs: &[String]| {
+            let quoted: Vec<String> =
+                xs.iter().map(|x| format!("\"{}\"", escape_json(x))).collect();
+            format!("[{}]", quoted.join(","))
+        };
+        let num_list = |xs: &[u64]| {
+            let nums: Vec<String> = xs.iter().map(u64::to_string).collect();
+            format!("[{}]", nums.join(","))
+        };
+        let layer_names: Vec<String> = self.layers.iter().map(|l| l.name.clone()).collect();
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\n  \"scenario\": \"{}\",\n  \"platforms\": {},\n  \"layers\": {},\n  \"mappers\": {},\n  \"cells\": [\n",
+            escape_json(&self.scenario),
+            str_list(&self.platform_labels),
+            str_list(&layer_names),
+            str_list(&self.mapper_labels),
+        );
+        for (i, c) in self.cells.iter().enumerate() {
+            let comma = if i + 1 < self.cells.len() { "," } else { "" };
+            let _ = write!(
+                out,
+                "    {{\"platform\":\"{}\",\"layer\":\"{}\",\"mapper\":\"{}\",\"latency\":{},\"drained_at\":{},\"rho_avg\":{},\"rho_accum\":{},\"extra_run\":{},\"flits_switched\":{},\"counts\":{}}}{comma}\n",
+                escape_json(&self.platform_labels[c.platform]),
+                escape_json(&self.layers[c.layer].name),
+                escape_json(&self.mapper_labels[c.mapper]),
+                c.run.summary.latency,
+                c.run.result.drained_at,
+                c.run.summary.rho_avg,
+                c.run.summary.rho_accum,
+                c.run.extra_run,
+                c.run.result.net.flits_switched,
+                num_list(&c.run.counts),
+            );
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`to_json`](Self::to_json) to a file.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
 }
 
 #[cfg(test)]
@@ -514,6 +569,28 @@ mod tests {
         assert!(msg.contains("3 cells skipped"), "{msg}");
         assert!(msg.contains("row-major"), "first failing cell must be named: {msg}");
         assert!(msg.contains("'a'"), "{msg}");
+    }
+
+    #[test]
+    fn to_json_emits_every_cell_with_its_labels() {
+        let res = Scenario::new("json-t")
+            .platform("2mc", PlatformConfig::default_2mc())
+            .layer(tiny_layer("a", 28))
+            .mapper("row-major")
+            .mapper("distance")
+            .jobs(1)
+            .run()
+            .unwrap();
+        let json = res.to_json();
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'), "{json}");
+        assert!(json.contains("\"scenario\": \"json-t\""), "{json}");
+        assert!(json.contains("\"mappers\": [\"row-major\",\"distance\"]"), "{json}");
+        assert!(json.contains("\"mapper\":\"distance\""), "{json}");
+        assert_eq!(json.matches("\"latency\":").count(), 2, "one entry per cell");
+        assert_eq!(json.matches('{').count(), json.matches('}').count(), "balanced");
+        assert_eq!(json.matches('[').count(), json.matches(']').count(), "balanced");
+        // No trailing comma before the closing bracket.
+        assert!(!json.contains(",\n  ]"), "{json}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! | [`ablation`] | extension — memory-service discipline vs. saturation |
 //! | [`heatmap`] | extension — per-router congestion heatmap |
 //! | [`zoo`]    | extension — Fig. 11's question across the whole model zoo |
+//! | [`serving`] | extension — saturation curves under sustained request streams |
 //!
 //! Every simulating experiment (fig7–fig11, ablation, heatmap) builds a
 //! declarative {platforms × layers × mappers} grid on the
@@ -41,6 +42,7 @@ pub mod fig11;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod serving;
 pub mod table1;
 pub mod zoo;
 
@@ -90,6 +92,7 @@ pub fn all_reports(quick: bool) -> Vec<Report> {
         ablation::run(quick),
         heatmap::run(quick),
         zoo::run(quick),
+        serving::run(quick),
     ]
 }
 
@@ -106,13 +109,16 @@ pub fn run_by_id(id: &str, quick: bool) -> Option<Report> {
         "ablation" => Some(ablation::run(quick)),
         "heatmap" => Some(heatmap::run(quick)),
         "zoo" => Some(zoo::run(quick)),
+        "serving" => Some(serving::run(quick)),
         _ => None,
     }
 }
 
 /// Ids of all experiments, in paper order (extensions last).
-pub const ALL_IDS: [&str; 10] =
-    ["table1", "fig7", "fig8", "fig9", "fig10", "fig11", "arch", "ablation", "heatmap", "zoo"];
+pub const ALL_IDS: [&str; 11] = [
+    "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "arch", "ablation", "heatmap", "zoo",
+    "serving",
+];
 
 #[cfg(test)]
 mod tests {

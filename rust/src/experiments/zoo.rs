@@ -74,9 +74,22 @@ pub fn data(quick: bool) -> Vec<NetworkSweep> {
         .collect()
 }
 
+/// JSON for the whole zoo sweep: an array with one
+/// [`SweepResults::to_json`] object per network, in [`NETWORKS`] order.
+pub fn to_json(sweeps: &[NetworkSweep]) -> String {
+    let parts: Vec<String> =
+        sweeps.iter().map(|s| s.results.to_json().trim_end().to_string()).collect();
+    format!("[\n{}\n]\n", parts.join(",\n"))
+}
+
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let sweeps = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the sweep once and feeds both emitters from it).
+pub fn report(sweeps: &[NetworkSweep]) -> Report {
     let mut lat = Table::new([
         "network",
         "layers",
@@ -86,7 +99,7 @@ pub fn run(quick: bool) -> Report {
         "sampling-10",
     ]);
     let mut imp = Table::new(["network", "distance", "sampling-10"]);
-    for s in &sweeps {
+    for s in sweeps {
         let totals: Vec<u64> = (0..MAPPERS.len()).map(|mi| s.total_latency(mi)).collect();
         lat.row([
             s.workload.name.clone(),
@@ -166,6 +179,19 @@ mod tests {
             improvement(rm, sw10) > 0.0,
             "sampling-10 must improve whole-LeNet latency (row-major {rm}, sw10 {sw10})"
         );
+    }
+
+    #[test]
+    fn zoo_json_is_an_array_of_sweeps() {
+        let sweeps = data(true);
+        let json = to_json(&sweeps);
+        assert!(json.starts_with("[\n") && json.ends_with("]\n"), "{json}");
+        assert_eq!(json.matches("\"scenario\"").count(), NETWORKS.len());
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        for name in NETWORKS {
+            assert!(json.contains(&format!("zoo/{name}")), "missing {name}");
+        }
     }
 
     #[test]

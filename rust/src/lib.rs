@@ -110,7 +110,14 @@
 //!   selectable by name (`noctt sim --workload <name>`, `noctt exp zoo`).
 //! * [`mapping`] — the [`mapping::Mapper`] trait, registry, and the five
 //!   builtin strategies under study.
-//! * [`metrics`] — unevenness (Eq. 9) and per-PE timing statistics.
+//! * [`serving`] — sustained-traffic serving: deterministic arrival
+//!   processes (uniform/Poisson/bursty, seeded — no wall-clock), a
+//!   flow-shop pipeline driver keeping multiple requests in flight over
+//!   persistent per-layer simulations, and offered-load calibration
+//!   against the bottleneck layer (`noctt serve`, `noctt exp serving`).
+//! * [`metrics`] — unevenness (Eq. 9), per-PE timing statistics, and the
+//!   serving scorecard (throughput, p50/p95/p99 latency, queue growth /
+//!   saturation detection).
 //! * [`experiments`] — the [`experiments::engine`] plus one module per
 //!   figure/table of the paper's evaluation section.
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
@@ -128,6 +135,7 @@ pub mod mapping;
 pub mod metrics;
 pub mod noc;
 pub mod runtime;
+pub mod serving;
 pub mod util;
 
 /// Crate-wide result alias.

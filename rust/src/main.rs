@@ -2,11 +2,16 @@
 //! inspection, and PJRT LeNet inference, all from the command line.
 //!
 //! ```text
-//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|all> [--quick] [--jobs N]
+//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|all>
+//!           [--quick] [--jobs N] [--json PATH]   (--json: zoo/serving only)
 //! noctt sim --layer <name|k<N>> --strategy <name>
 //!           [--workload <zoo-name|path.wl>] [--channels N]
 //!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //!           [--topology mesh|torus] [--routing xy|yx|west-first]
+//! noctt serve [--workload <zoo-name|path.wl>] [--strategy <name>]
+//!             [--arrival uniform|poisson|bursty|bursty-<k>] [--load F]
+//!             [--requests N] [--window N] [--seed N] [--trim]
+//!             [+ platform flags as in `noctt sim`]
 //! noctt workloads
 //! noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //!                [--topology mesh|torus] [--routing xy|yx|west-first]
@@ -45,6 +50,7 @@ use noctt::experiments;
 use noctt::mapping::{self, distance::pe_distances, run_layer, MapCtx, Mapper, Strategy};
 use noctt::metrics::improvement;
 use noctt::runtime::{LenetRuntime, TensorFile};
+use noctt::serving::{Arrival, ServingConfig, ServingSim};
 use noctt::util::threadpool::parse_jobs;
 use noctt::util::{table::fmt_pct, Table};
 
@@ -240,11 +246,16 @@ fn usage() -> ! {
         "noctt — travel-time based task mapping for NoC-based DNN accelerators\n\
          \n\
          Usage:\n\
-         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|all> [--quick] [--jobs N]\n\
+         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|all>\n\
+         \x20           [--quick] [--jobs N] [--json PATH]\n\
          \x20 noctt sim --layer <name|k<N>> --strategy <s> [--mcs 2|4]\n\
          \x20           [--workload <zoo-name|path.wl>] [--channels N]\n\
          \x20           [--mesh WxH] [--mc-at n1,n2,...]\n\
          \x20           [--topology mesh|torus] [--routing xy|yx|west-first]\n\
+         \x20 noctt serve [--workload <zoo-name|path.wl>] [--strategy <s>]\n\
+         \x20             [--arrival uniform|poisson|bursty|bursty-<k>] [--load F]\n\
+         \x20             [--requests N] [--window N] [--seed N] [--trim]\n\
+         \x20             [+ platform flags as in `noctt sim`]\n\
          \x20 noctt workloads\n\
          \x20 noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]\n\
          \x20                [--topology mesh|torus] [--routing xy|yx|west-first]\n\
@@ -254,6 +265,9 @@ fn usage() -> ! {
          \n\
          --jobs N  sweep worker threads (default: all cores; 1 = serial;\n\
          \x20          also settable as the NOCTT_JOBS environment variable)\n\
+         --json PATH  also write the sweep's raw data as JSON (zoo/serving)\n\
+         --load F  serve: offered load relative to the bottleneck layer's\n\
+         \x20          capacity (1.0 = arrivals exactly match its drain rate)\n\
          --topology/--routing  the NoC architecture axis: wrap-around torus\n\
          \x20          fabrics and Y-X / west-first partial-adaptive routing\n\
          --workload  the network --layer is looked up in: a zoo name\n\
@@ -360,6 +374,31 @@ fn parse_layer(a: &args::Args, cfg: &PlatformConfig) -> Result<LayerSpec> {
 fn cmd_exp(a: &args::Args) -> Result<()> {
     let Some(id) = a.positional.get(1) else { usage() };
     let quick = a.has("quick");
+    // `--json PATH`: run the sweep once, feed both the report printer and
+    // the JSON emitter from the same data (no double simulation).
+    if let Some(path) = a.get("json") {
+        let path = std::path::Path::new(path);
+        match id.as_str() {
+            "zoo" => {
+                let sweeps = experiments::zoo::data(quick);
+                std::fs::write(path, experiments::zoo::to_json(&sweeps))
+                    .with_context(|| format!("writing {}", path.display()))?;
+                println!("{}", experiments::zoo::report(&sweeps));
+            }
+            "serving" => {
+                let sweep = experiments::serving::data(quick)?;
+                sweep
+                    .write_json(path)
+                    .with_context(|| format!("writing {}", path.display()))?;
+                println!("{}", experiments::serving::report(&sweep));
+            }
+            other => bail!(
+                "--json is supported for the 'zoo' and 'serving' experiments (got '{other}')"
+            ),
+        }
+        eprintln!("wrote {}", path.display());
+        return Ok(());
+    }
     if id == "all" {
         for r in experiments::all_reports(quick) {
             println!("{r}");
@@ -408,6 +447,68 @@ fn cmd_sim(a: &args::Args) -> Result<()> {
         fmt_pct(run.summary.rho_avg),
         fmt_pct(run.summary.rho_accum),
         fmt_pct(improvement(base.summary.latency, run.summary.latency)),
+    );
+    Ok(())
+}
+
+/// Drive a sustained inference request stream ([`noctt::serving`])
+/// against one workload × strategy and print the serving scorecard.
+fn cmd_serve(a: &args::Args) -> Result<()> {
+    let cfg = parse_platform(a)?;
+    let mut workload = resolve_workload(a.get_or("workload", "lenet5"))?;
+    if a.has("trim") {
+        // The shared quick-trim: shrink the big layers so smoke runs (CI)
+        // finish fast; the serving behaviour under test is load-shaped,
+        // not task-scale-shaped.
+        experiments::quick_trim(&mut workload.layers);
+    }
+    let mapper = resolve_mapper(a.get_or("strategy", "sampling-10"))?;
+    let serving = ServingConfig {
+        arrival: a.get_or("arrival", "poisson").parse::<Arrival>().context("--arrival")?,
+        load: a.get_or("load", "0.7").parse().context("--load")?,
+        requests: a.get_or("requests", "32").parse().context("--requests")?,
+        max_in_flight: a.get_or("window", "4").parse().context("--window")?,
+        seed: a.get_or("seed", "1").parse().context("--seed")?,
+    };
+    let run = ServingSim::new(&cfg, &workload, mapper.as_ref()).run(&serving)?;
+    let s = &run.summary;
+
+    println!(
+        "serving {} — {} requests, {} arrivals at load {:.2} (mean gap {:.0} cycles), \
+         window {}, seed {}, strategy {}",
+        workload.name,
+        serving.requests,
+        serving.arrival,
+        serving.load,
+        run.mean_gap,
+        serving.max_in_flight,
+        serving.seed,
+        a.get_or("strategy", "sampling-10"),
+    );
+    let mut t = Table::new(["layer", "unloaded service (cycles)"]);
+    for (l, cycles) in workload.layers.iter().zip(&run.stage_unloaded) {
+        let mark = if *cycles == run.bottleneck { " (bottleneck)" } else { "" };
+        t.row([l.name.clone(), format!("{cycles}{mark}")]);
+    }
+    println!("{t}");
+    println!(
+        "completed {} | makespan {} cycles | throughput {:.2} inf/Mcycle",
+        s.completed, s.makespan, s.throughput_per_mcycle
+    );
+    println!(
+        "latency p50 {} | p95 {} | p99 {} | max {} | mean {:.0} cycles",
+        s.latency.p50, s.latency.p95, s.latency.p99, s.latency.max, s.latency.mean
+    );
+    println!(
+        "queue wait {:.0} + service {:.0} cycles (mean split) | queue growth {:.3}/req — {}",
+        s.mean_wait,
+        s.mean_service,
+        s.queue_growth,
+        if s.saturated { "SATURATED" } else { "not saturated" }
+    );
+    println!(
+        "fabric totals: {} tasks, {} flits injected, {} flits switched, {} packets delivered",
+        run.tasks_completed, run.flits_injected, run.flits_switched, run.packets_delivered
     );
     Ok(())
 }
@@ -506,6 +607,7 @@ fn main() -> Result<()> {
     match a.positional.first().map(String::as_str) {
         Some("exp") => cmd_exp(&a),
         Some("sim") => cmd_sim(&a),
+        Some("serve") => cmd_serve(&a),
         Some("workloads") => cmd_workloads(),
         Some("platform") => cmd_platform(&a),
         Some("infer") => cmd_infer(&a),

@@ -10,6 +10,14 @@
 //! time (Fig. 7a–d) or the accumulated busy time (Fig. 7e–h). The paper
 //! minimises the *maximum* per-PE time because the slowest PE determines a
 //! layer's inference latency.
+//!
+//! The [`serving`] submodule adds the stream-level counterparts —
+//! throughput, latency percentiles, queue growth — used by the
+//! [`serving`](crate::serving) subsystem's sustained-traffic runs.
+
+pub mod serving;
+
+pub use serving::{percentile, queue_depths, queue_growth, LatencyStats, ServingSummary};
 
 use crate::accel::SimResult;
 

@@ -1,0 +1,288 @@
+//! Serving-side metrics: throughput, tail latency, queue dynamics.
+//!
+//! Single-inference experiments score a mapping by one layer latency;
+//! a serving run needs distribution-level answers. Everything here
+//! operates on the three per-request timestamp vectors a
+//! [`ServingRun`](crate::serving::ServingRun) produces — arrival,
+//! service start (entry into the first layer) and completion — so the
+//! metrics are a pure function of the schedule and trivially
+//! deterministic.
+//!
+//! Percentiles use the **nearest-rank** definition: `p` is the smallest
+//! value such that at least `p` percent of the samples are ≤ it
+//! (`rank = ⌈p/100 · n⌉`). No interpolation — reported percentiles are
+//! always actual observed cycle counts, and the definition is exact over
+//! integers, which keeps fingerprint tests platform-independent.
+
+/// Queue-growth threshold (requests per admitted request) above which a
+/// run is labelled saturated: if the backlog grows by more than one
+/// request per twenty admissions from the head of the run to its tail,
+/// the offered load exceeds sustainable throughput.
+pub const SATURATION_THRESHOLD: f64 = 0.05;
+
+/// Nearest-rank percentile of `values` (unsorted is fine). `pct` is in
+/// percent, e.g. `99.0`. Returns `None` for an empty slice; a
+/// single-element slice answers that element for every percentile.
+pub fn percentile(values: &[u64], pct: f64) -> Option<u64> {
+    if values.is_empty() {
+        return None;
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_unstable();
+    let n = sorted.len();
+    let rank = ((pct / 100.0) * n as f64).ceil() as usize;
+    Some(sorted[rank.clamp(1, n) - 1])
+}
+
+/// Distribution summary of one latency sample (cycles).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    /// Sample size. All other fields are 0 when this is 0.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Median (nearest-rank).
+    pub p50: u64,
+    /// 95th percentile (nearest-rank).
+    pub p95: u64,
+    /// 99th percentile (nearest-rank).
+    pub p99: u64,
+    /// Worst observed value.
+    pub max: u64,
+}
+
+impl LatencyStats {
+    /// Summarise a sample; an empty sample yields the all-zero summary.
+    pub fn from_values(values: &[u64]) -> Self {
+        if values.is_empty() {
+            return Self { n: 0, mean: 0.0, p50: 0, p95: 0, p99: 0, max: 0 };
+        }
+        let sum: u64 = values.iter().sum();
+        Self {
+            n: values.len(),
+            mean: sum as f64 / values.len() as f64,
+            p50: percentile(values, 50.0).unwrap(),
+            p95: percentile(values, 95.0).unwrap(),
+            p99: percentile(values, 99.0).unwrap(),
+            max: *values.iter().max().unwrap(),
+        }
+    }
+}
+
+/// In-system request count observed at each arrival instant:
+/// `depths[r]` = how many requests up to and including `r` had not yet
+/// completed when `r` arrived. A flat series means the system drains as
+/// fast as it is fed; a growing series is the queueing-theory signature
+/// of saturation.
+pub fn queue_depths(arrivals: &[u64], completions: &[u64]) -> Vec<u64> {
+    assert_eq!(arrivals.len(), completions.len(), "timestamp vectors must align");
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(r, &at)| completions[..=r].iter().filter(|&&c| c > at).count() as u64)
+        .collect()
+}
+
+/// Queue growth over the run: mean depth of the last quarter minus mean
+/// depth of the first quarter, normalised per admitted request. ~0 for a
+/// stable system; positive and rising with offered load once the
+/// bottleneck stage saturates. Windows of `max(1, n/4)` keep the
+/// estimate meaningful for short smoke runs.
+pub fn queue_growth(depths: &[u64]) -> f64 {
+    let n = depths.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let w = (n / 4).max(1);
+    let mean = |s: &[u64]| s.iter().sum::<u64>() as f64 / s.len() as f64;
+    (mean(&depths[n - w..]) - mean(&depths[..w])) / (n - w) as f64
+}
+
+/// The top-level scorecard of one serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingSummary {
+    /// Requests completed (== requests admitted; the driver runs the
+    /// stream to completion).
+    pub completed: usize,
+    /// First arrival to last completion, cycles.
+    pub makespan: u64,
+    /// Sustained rate: completed inferences per **million** cycles. The
+    /// scale keeps saturation tables readable (raw inferences/cycle for
+    /// these platforms is ~1e-4).
+    pub throughput_per_mcycle: f64,
+    /// End-to-end latency distribution (arrival → completion).
+    pub latency: LatencyStats,
+    /// Mean cycles spent queued before entering the first layer
+    /// (admission window + stage busy).
+    pub mean_wait: f64,
+    /// Mean cycles from first-layer entry to completion.
+    pub mean_service: f64,
+    /// Queue growth per admitted request (see [`queue_growth`]).
+    pub queue_growth: f64,
+    /// `queue_growth >` [`SATURATION_THRESHOLD`].
+    pub saturated: bool,
+}
+
+impl ServingSummary {
+    /// Score a run from its three timestamp vectors (one entry per
+    /// request, in arrival order).
+    pub fn from_requests(arrivals: &[u64], starts: &[u64], completions: &[u64]) -> Self {
+        assert_eq!(arrivals.len(), starts.len(), "timestamp vectors must align");
+        assert_eq!(arrivals.len(), completions.len(), "timestamp vectors must align");
+        let n = arrivals.len();
+        if n == 0 {
+            return Self {
+                completed: 0,
+                makespan: 0,
+                throughput_per_mcycle: 0.0,
+                latency: LatencyStats::from_values(&[]),
+                mean_wait: 0.0,
+                mean_service: 0.0,
+                queue_growth: 0.0,
+                saturated: false,
+            };
+        }
+        let e2e: Vec<u64> = arrivals.iter().zip(completions).map(|(&a, &c)| c - a).collect();
+        let wait: u64 = arrivals.iter().zip(starts).map(|(&a, &s)| s - a).sum();
+        let service: u64 = starts.iter().zip(completions).map(|(&s, &c)| c - s).sum();
+        let first = *arrivals.iter().min().unwrap();
+        let last = *completions.iter().max().unwrap();
+        let makespan = last - first;
+        let growth = queue_growth(&queue_depths(arrivals, completions));
+        Self {
+            completed: n,
+            makespan,
+            throughput_per_mcycle: if makespan == 0 {
+                0.0
+            } else {
+                n as f64 * 1e6 / makespan as f64
+            },
+            latency: LatencyStats::from_values(&e2e),
+            mean_wait: wait as f64 / n as f64,
+            mean_service: service as f64 / n as f64,
+            queue_growth: growth,
+            saturated: growth > SATURATION_THRESHOLD,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank_on_one_to_ten() {
+        let v: Vec<u64> = (1..=10).collect();
+        assert_eq!(percentile(&v, 50.0), Some(5));
+        assert_eq!(percentile(&v, 95.0), Some(10));
+        assert_eq!(percentile(&v, 99.0), Some(10));
+        assert_eq!(percentile(&v, 100.0), Some(10));
+        assert_eq!(percentile(&v, 10.0), Some(1));
+        assert_eq!(percentile(&v, 0.0), Some(1), "rank clamps to the smallest sample");
+    }
+
+    #[test]
+    fn percentile_hand_computed_four_values_unsorted() {
+        let v = [30u64, 10, 40, 20];
+        assert_eq!(percentile(&v, 25.0), Some(10));
+        assert_eq!(percentile(&v, 50.0), Some(20));
+        assert_eq!(percentile(&v, 75.0), Some(30));
+        assert_eq!(percentile(&v, 99.0), Some(40));
+    }
+
+    #[test]
+    fn percentile_empty_and_single_element() {
+        assert_eq!(percentile(&[], 50.0), None);
+        for pct in [1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7], pct), Some(7), "p{pct} of a singleton");
+        }
+    }
+
+    #[test]
+    fn latency_stats_hand_computed() {
+        let s = LatencyStats::from_values(&[5, 1, 9]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.p50, 5);
+        assert_eq!(s.p95, 9);
+        assert_eq!(s.p99, 9);
+        assert_eq!(s.max, 9);
+    }
+
+    #[test]
+    fn latency_stats_empty_is_all_zero() {
+        let s = LatencyStats::from_values(&[]);
+        assert_eq!(s, LatencyStats { n: 0, mean: 0.0, p50: 0, p95: 0, p99: 0, max: 0 });
+    }
+
+    #[test]
+    fn queue_depths_counts_outstanding_at_arrival() {
+        // Everyone outstanding: depths climb 1, 2, 3, 4.
+        assert_eq!(queue_depths(&[0, 1, 2, 3], &[10, 11, 12, 13]), vec![1, 2, 3, 4]);
+        // Fully drained between arrivals: flat at 1.
+        assert_eq!(queue_depths(&[0, 100, 200], &[10, 110, 210]), vec![1, 1, 1]);
+        assert_eq!(queue_depths(&[], &[]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn queue_growth_flat_and_climbing() {
+        assert_eq!(queue_growth(&[1, 1, 1, 1]), 0.0);
+        // Depths 1..=8, quarter windows of 2: (7.5 − 1.5) / 6 = 1.0 —
+        // every admission adds one to the backlog.
+        let climb: Vec<u64> = (1..=8).collect();
+        assert_eq!(queue_growth(&climb), 1.0);
+        assert_eq!(queue_growth(&[]), 0.0);
+        assert_eq!(queue_growth(&[3]), 0.0);
+    }
+
+    #[test]
+    fn serving_summary_hand_computed() {
+        // Four requests, lockstep: arrive every 10 cycles, start
+        // immediately, 10 cycles of service each.
+        let arrivals = [0u64, 10, 20, 30];
+        let starts = [0u64, 10, 20, 30];
+        let completions = [10u64, 20, 30, 40];
+        let s = ServingSummary::from_requests(&arrivals, &starts, &completions);
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.makespan, 40);
+        assert_eq!(s.throughput_per_mcycle, 100_000.0); // 4e6 / 40, exact in f64
+        assert_eq!(s.latency.p50, 10);
+        assert_eq!(s.latency.max, 10);
+        assert_eq!(s.mean_wait, 0.0);
+        assert_eq!(s.mean_service, 10.0);
+        assert_eq!(s.queue_growth, 0.0);
+        assert!(!s.saturated);
+    }
+
+    #[test]
+    fn serving_summary_splits_wait_from_service() {
+        // One request queued 5 cycles: wait 5, service 10, e2e 15.
+        let s = ServingSummary::from_requests(&[0], &[5], &[15]);
+        assert_eq!(s.mean_wait, 5.0);
+        assert_eq!(s.mean_service, 10.0);
+        assert_eq!(s.latency.p99, 15);
+        assert_eq!(s.makespan, 15);
+        assert!(!s.saturated, "a single request cannot saturate anything");
+    }
+
+    #[test]
+    fn serving_summary_empty_stream() {
+        let s = ServingSummary::from_requests(&[], &[], &[]);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.throughput_per_mcycle, 0.0);
+        assert!(!s.saturated);
+    }
+
+    #[test]
+    fn overloaded_stream_reads_as_saturated() {
+        // Arrivals every cycle, service takes 100: the backlog grows by
+        // ~1 per admission — far beyond the 0.05 threshold.
+        let n = 32u64;
+        let arrivals: Vec<u64> = (0..n).collect();
+        let starts: Vec<u64> = (0..n).map(|r| r * 100).collect();
+        let completions: Vec<u64> = (0..n).map(|r| (r + 1) * 100).collect();
+        let s = ServingSummary::from_requests(&arrivals, &starts, &completions);
+        assert!(s.saturated, "growth {} must exceed threshold", s.queue_growth);
+        assert!(s.queue_growth > 0.5);
+    }
+}

@@ -1,0 +1,138 @@
+//! The serving subsystem: sustained inference traffic against the
+//! cycle-accurate platform.
+//!
+//! Every other experiment in the crate simulates **one** inference in
+//! isolation. This module models the regime the ROADMAP's north star
+//! actually cares about — a *stream* of inference requests arriving over
+//! time — so mapping strategies can be scored on throughput and tail
+//! latency under load, not just single-shot latency.
+//!
+//! # The model
+//!
+//! A network's layers form a **flow-shop pipeline**: every request visits
+//! layer 0, then layer 1, … in order, and each layer processes one
+//! request at a time (its PEs hold one request's tasks). Three rules
+//! schedule the stream (see [`sim::schedule`]):
+//!
+//! 1. **Admission window.** At most `max_in_flight` requests are in the
+//!    pipeline at once; request `r` is admitted at
+//!    `max(arrive[r], complete[r − max_in_flight])`.
+//! 2. **Stage exclusivity.** Layer `l` accepts request `r + 1` only once
+//!    its PEs drained request `r`'s budget — the inter-layer pipelining
+//!    rule: layer `l` of request `r + 1` may start as soon as layer `l`
+//!    finished computing for request `r`, while request `r` is still
+//!    being served by deeper layers.
+//! 3. **In-order stages.** Request `r` enters layer `l` when both the
+//!    request's previous layer and the stage itself are done:
+//!    `enter = max(done[r][l−1], done[r−1][l])`.
+//!
+//! Each layer is one persistent [`Simulation`](crate::accel::Simulation)
+//! driven for the whole stream, so consecutive requests at a stage share
+//! real NoC state: request `r`'s result packets are still draining toward
+//! the MCs when request `r + 1`'s request packets enter the same fabric,
+//! and that measured congestion — not a model of it — is what delays the
+//! next drain. (Cross-*layer* traffic runs on per-layer fabrics and is
+//! approximated as non-interfering; see `docs/ARCHITECTURE.md` for the
+//! honest statement of this boundary.)
+//!
+//! The driver leans entirely on the existing core —
+//! [`run_to_cycle`](crate::accel::Simulation::run_to_cycle) to park a
+//! stage at its next entry cycle,
+//! [`meet_budgets`](crate::accel::Simulation::meet_budgets) to serve a
+//! request, [`drain`](crate::accel::Simulation::drain) to settle the
+//! fabric at end of stream. No router/NI invariant is touched: a serving
+//! run is just a longer schedule of the same budget-growing calls the
+//! sampling mapper has always made.
+//!
+//! # Offered load
+//!
+//! Load is expressed relative to the platform's own capacity. A
+//! calibration pass measures each layer's unloaded service time
+//! (`stage_unloaded`); the slowest stage is the pipeline **bottleneck**,
+//! and `--load ρ` sets the mean inter-arrival gap to `bottleneck / ρ`.
+//! `ρ < 1` is sustainable, `ρ > 1` provably is not — so saturation
+//! curves from different networks and platforms line up on one axis.
+//!
+//! # Determinism
+//!
+//! Arrival schedules come from seeded [`arrival::ArrivalGen`]s (no
+//! wall-clock anywhere, libm-free Poisson sampling — see [`arrival`]),
+//! and the platform core is deterministic, so a serving run is a pure
+//! function of `(platform, workload, mapper, ServingConfig)`: bit-equal
+//! across repeats, `--jobs` widths and stepping modes. `tests/serving.rs`
+//! pins all three.
+
+pub mod arrival;
+pub mod sim;
+
+pub use arrival::{Arrival, ArrivalGen, DEFAULT_MEAN_BURST};
+pub use sim::{schedule, RequestRecord, ServingRun, ServingSim, SimStages, StageService};
+
+use anyhow::Result;
+
+/// Parameters of one serving run (everything except the platform,
+/// workload and mapper).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingConfig {
+    /// Arrival process shape.
+    pub arrival: Arrival,
+    /// Offered load relative to the bottleneck stage's capacity
+    /// (1.0 = requests arrive exactly as fast as the slowest layer can
+    /// serve them).
+    pub load: f64,
+    /// Number of requests in the stream.
+    pub requests: usize,
+    /// Admission window: maximum requests in the pipeline at once.
+    pub max_in_flight: usize,
+    /// PRNG seed for the arrival schedule.
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            arrival: Arrival::Poisson,
+            load: 0.7,
+            requests: 32,
+            max_in_flight: 4,
+            seed: 1,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Check the knobs before a run; errors name the offending value.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.load.is_finite() && self.load > 0.0,
+            "offered load must be positive and finite, got {}",
+            self.load
+        );
+        anyhow::ensure!(self.requests >= 1, "a serving run needs at least one request");
+        anyhow::ensure!(
+            self.max_in_flight >= 1,
+            "max-in-flight window must be at least 1 (0 admits nothing)"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let ok = ServingConfig::default();
+        assert!(ServingConfig { load: 0.0, ..ok }.validate().is_err());
+        assert!(ServingConfig { load: f64::NAN, ..ok }.validate().is_err());
+        assert!(ServingConfig { load: f64::INFINITY, ..ok }.validate().is_err());
+        assert!(ServingConfig { requests: 0, ..ok }.validate().is_err());
+        assert!(ServingConfig { max_in_flight: 0, ..ok }.validate().is_err());
+    }
+}

@@ -1,0 +1,399 @@
+//! The serving driver: flow-shop scheduling of a request stream over
+//! per-layer simulations.
+//!
+//! The scheduling core ([`schedule`]) is deliberately separated from the
+//! platform ([`SimStages`]): it talks to an abstract [`StageService`]
+//! whose only verb is "serve one request at this stage, entering at this
+//! cycle, and tell me when the stage drained". That keeps the pipeline
+//! algebra — admission window, stage exclusivity, in-order stages —
+//! independently testable against hand-computed fixed-duration services,
+//! while the production implementation forwards to persistent
+//! [`Simulation`]s whose service times *emerge* from the cycle-accurate
+//! NoC (including congestion carried over from the previous request).
+
+use anyhow::{Context, Result};
+
+use crate::accel::Simulation;
+use crate::config::PlatformConfig;
+use crate::dnn::WorkloadSpec;
+use crate::mapping::{MapCtx, Mapper};
+use crate::metrics::ServingSummary;
+use crate::serving::arrival::ArrivalGen;
+use crate::serving::ServingConfig;
+
+/// Per-request timestamps of a completed serving run, in arrival order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestRecord {
+    /// Cycle the request arrived (offered, not yet admitted).
+    pub arrive: u64,
+    /// Cycle the request entered the first layer (admission + queueing
+    /// are over; `start − arrive` is the wait).
+    pub start: u64,
+    /// Cycle the last layer's PEs drained the request.
+    pub complete: u64,
+}
+
+/// One pipeline stage's serving interface: the scheduler's only view of
+/// the platform.
+pub trait StageService {
+    /// Number of pipeline stages (the workload's layer count).
+    fn stages(&self) -> usize;
+
+    /// Serve `request` at `stage`, entering at cycle `enter` (never
+    /// earlier than any previous `serve` return for this stage). Returns
+    /// the cycle the stage drained the request — which must be strictly
+    /// after `enter`.
+    fn serve(&mut self, stage: usize, enter: u64, request: usize) -> Result<u64>;
+}
+
+/// Run the flow-shop schedule: each arrival is admitted through the
+/// `max_in_flight` window, then walks every stage in order, entering a
+/// stage as soon as both its own previous stage and the stage's previous
+/// request are done.
+///
+/// Requires non-decreasing `arrivals`. The per-stage calls are issued in
+/// a deterministic order (request-major), so a deterministic
+/// [`StageService`] yields a deterministic schedule.
+pub fn schedule(
+    arrivals: &[u64],
+    max_in_flight: usize,
+    svc: &mut dyn StageService,
+) -> Result<Vec<RequestRecord>> {
+    anyhow::ensure!(max_in_flight >= 1, "max-in-flight window must be at least 1");
+    let stages = svc.stages();
+    anyhow::ensure!(stages >= 1, "a pipeline needs at least one stage");
+    anyhow::ensure!(
+        arrivals.windows(2).all(|w| w[1] >= w[0]),
+        "arrival times must be non-decreasing"
+    );
+    // Cycle each stage last drained; a request may enter stage l at
+    // max(its own progress, stage_free[l]) — stage exclusivity.
+    let mut stage_free = vec![0u64; stages];
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(arrivals.len());
+    for (r, &arrive) in arrivals.iter().enumerate() {
+        // Admission: wait for the request max_in_flight slots ago to
+        // leave the pipeline.
+        let gate =
+            if r >= max_in_flight { records[r - max_in_flight].complete } else { 0 };
+        let mut t = arrive.max(gate);
+        let mut start = t;
+        for l in 0..stages {
+            let enter = t.max(stage_free[l]);
+            let done = svc
+                .serve(l, enter, r)
+                .with_context(|| format!("serving request {r} at stage {l}"))?;
+            anyhow::ensure!(
+                done > enter,
+                "stage {l} served request {r} in zero cycles (enter {enter}, done {done})"
+            );
+            if l == 0 {
+                start = enter;
+            }
+            stage_free[l] = done;
+            t = done;
+        }
+        records.push(RequestRecord { arrive, start, complete: t });
+    }
+    Ok(records)
+}
+
+/// The production [`StageService`]: one persistent [`Simulation`] per
+/// layer, each carrying its NoC state across the whole stream.
+///
+/// Serving a request at a stage is three core calls:
+/// [`run_to_cycle`](Simulation::run_to_cycle) to advance the stage's
+/// clock to the entry cycle (processing any still-draining result packets
+/// of earlier requests on the way — this is where congestion carries
+/// over), [`add_budgets`](Simulation::add_budgets) with the stage's
+/// planned per-PE counts, and [`meet_budgets`](Simulation::meet_budgets);
+/// the simulation's clock after the budgets are met *is* the drain cycle.
+pub struct SimStages {
+    sims: Vec<Simulation>,
+    counts: Vec<Vec<u64>>,
+}
+
+impl SimStages {
+    /// Build one fresh platform per layer with the given per-stage
+    /// per-PE budgets (`counts[stage][pe]`).
+    pub fn new(cfg: &PlatformConfig, workload: &WorkloadSpec, counts: Vec<Vec<u64>>) -> Self {
+        assert_eq!(counts.len(), workload.layers.len(), "one budget vector per layer");
+        let sims = workload
+            .layers
+            .iter()
+            .map(|l| Simulation::new(cfg, l.profile(cfg)))
+            .collect();
+        Self { sims, counts }
+    }
+
+    /// Settle every stage's fabric (deliver in-flight result packets) and
+    /// report aggregate traffic: total completed task records and the
+    /// summed network counters across stages.
+    pub fn drain_all(&mut self) -> Result<(u64, u64, u64, u64)> {
+        let (mut tasks, mut injected, mut switched, mut delivered) = (0, 0, 0, 0);
+        for (l, sim) in self.sims.iter_mut().enumerate() {
+            sim.drain().with_context(|| format!("draining stage {l} after the stream"))?;
+            tasks += sim.records().len() as u64;
+            let net = sim.network_stats();
+            injected += net.flits_injected;
+            switched += net.flits_switched;
+            delivered += net.packets_delivered;
+        }
+        Ok((tasks, injected, switched, delivered))
+    }
+}
+
+impl StageService for SimStages {
+    fn stages(&self) -> usize {
+        self.sims.len()
+    }
+
+    fn serve(&mut self, stage: usize, enter: u64, request: usize) -> Result<u64> {
+        let sim = &mut self.sims[stage];
+        sim.run_to_cycle(enter)
+            .with_context(|| format!("advancing stage {stage} to request {request}'s entry"))?;
+        sim.add_budgets(&self.counts[stage]);
+        sim.meet_budgets()?;
+        Ok(sim.now())
+    }
+}
+
+/// Everything a finished serving run produced.
+#[derive(Debug, Clone)]
+pub struct ServingRun {
+    /// Per-request timestamps, in arrival order.
+    pub records: Vec<RequestRecord>,
+    /// Calibrated unloaded service time of each layer (cycles).
+    pub stage_unloaded: Vec<u64>,
+    /// The slowest layer's unloaded service time — the pipeline's
+    /// capacity, and the denominator of the offered-load knob.
+    pub bottleneck: u64,
+    /// Mean inter-arrival gap the load resolved to (cycles).
+    pub mean_gap: f64,
+    /// Stream-level scorecard (throughput, percentiles, saturation).
+    pub summary: ServingSummary,
+    /// Tasks completed across all stages
+    /// (`requests × workload.total_tasks()` when nothing was lost).
+    pub tasks_completed: u64,
+    /// Flits injected, summed over the per-layer fabrics.
+    pub flits_injected: u64,
+    /// Flits switched, summed over the per-layer fabrics.
+    pub flits_switched: u64,
+    /// Packets delivered, summed over the per-layer fabrics.
+    pub packets_delivered: u64,
+}
+
+impl ServingRun {
+    /// Arrival cycles in request order.
+    pub fn arrivals(&self) -> Vec<u64> {
+        self.records.iter().map(|r| r.arrive).collect()
+    }
+
+    /// First-layer entry cycles in request order.
+    pub fn starts(&self) -> Vec<u64> {
+        self.records.iter().map(|r| r.start).collect()
+    }
+
+    /// Completion cycles in request order.
+    pub fn completions(&self) -> Vec<u64> {
+        self.records.iter().map(|r| r.complete).collect()
+    }
+
+    /// The run's identity for regression pinning: every request's three
+    /// timestamps followed by the aggregate task/traffic counters. Two
+    /// runs with equal fingerprints made the same decisions cycle for
+    /// cycle.
+    pub fn fingerprint(&self) -> Vec<u64> {
+        let mut fp = Vec::with_capacity(self.records.len() * 3 + 5);
+        for r in &self.records {
+            fp.extend([r.arrive, r.start, r.complete]);
+        }
+        fp.extend([
+            self.bottleneck,
+            self.tasks_completed,
+            self.flits_injected,
+            self.flits_switched,
+            self.packets_delivered,
+        ]);
+        fp
+    }
+}
+
+/// The serving driver: binds a platform, a workload and a mapping
+/// strategy, and runs request streams against them.
+pub struct ServingSim<'a> {
+    cfg: &'a PlatformConfig,
+    workload: &'a WorkloadSpec,
+    mapper: &'a dyn Mapper,
+}
+
+impl<'a> ServingSim<'a> {
+    /// A driver for this platform/workload/mapper triple.
+    pub fn new(cfg: &'a PlatformConfig, workload: &'a WorkloadSpec, mapper: &'a dyn Mapper) -> Self {
+        Self { cfg, workload, mapper }
+    }
+
+    /// Run one request stream.
+    ///
+    /// Phases: (1) **plan** — ask the mapper for per-PE budgets per layer
+    /// (for online mappers like sampling-window this runs their
+    /// measurement pass once, i.e. the plan is made offline and reused
+    /// for every request, the serving analogue of compiling a model
+    /// once); (2) **calibrate** — measure each layer's unloaded service
+    /// time on a fresh platform to resolve `load` into a concrete mean
+    /// inter-arrival gap; (3) **stream** — generate the seeded arrival
+    /// schedule and run it through [`schedule`] over persistent
+    /// [`SimStages`]; (4) **settle** — drain every stage's fabric and
+    /// collect traffic totals.
+    pub fn run(&self, serving: &ServingConfig) -> Result<ServingRun> {
+        serving.validate()?;
+        anyhow::ensure!(
+            !self.workload.layers.is_empty(),
+            "workload '{}' has no layers to serve",
+            self.workload.name
+        );
+
+        // (1) Plan: per-layer per-PE budgets, fixed for the whole stream.
+        let counts: Vec<Vec<u64>> = self
+            .workload
+            .layers
+            .iter()
+            .map(|l| self.mapper.counts(&MapCtx::new(self.cfg, l)))
+            .collect();
+
+        // (2) Calibrate each layer's unloaded service time.
+        let mut stage_unloaded = Vec::with_capacity(counts.len());
+        for (l, layer) in self.workload.layers.iter().enumerate() {
+            let mut sim = Simulation::new(self.cfg, layer.profile(self.cfg));
+            sim.add_budgets(&counts[l]);
+            sim.meet_budgets()
+                .with_context(|| format!("calibrating layer '{}'", layer.name))?;
+            stage_unloaded.push(sim.now());
+        }
+        let bottleneck = *stage_unloaded.iter().max().expect("at least one layer");
+        // A request every bottleneck/load cycles offers exactly `load`
+        // times the bottleneck stage's capacity; the 1-cycle floor keeps
+        // degenerate loads legal.
+        let mean_gap = (bottleneck as f64 / serving.load).max(1.0);
+
+        // (3) Stream.
+        let arrivals =
+            ArrivalGen::new(serving.arrival, mean_gap, serving.seed).times(serving.requests);
+        let mut stages = SimStages::new(self.cfg, self.workload, counts);
+        let records = schedule(&arrivals, serving.max_in_flight, &mut stages)?;
+
+        // (4) Settle and account.
+        let (tasks_completed, flits_injected, flits_switched, packets_delivered) =
+            stages.drain_all()?;
+
+        let starts: Vec<u64> = records.iter().map(|r| r.start).collect();
+        let completions: Vec<u64> = records.iter().map(|r| r.complete).collect();
+        let summary = ServingSummary::from_requests(&arrivals, &starts, &completions);
+        Ok(ServingRun {
+            records,
+            stage_unloaded,
+            bottleneck,
+            mean_gap,
+            summary,
+            tasks_completed,
+            flits_injected,
+            flits_switched,
+            packets_delivered,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A stage service with fixed per-stage durations — the hand-checkable
+    /// model of the pipeline algebra.
+    struct FixedService {
+        times: Vec<u64>,
+    }
+
+    impl StageService for FixedService {
+        fn stages(&self) -> usize {
+            self.times.len()
+        }
+
+        fn serve(&mut self, stage: usize, enter: u64, _request: usize) -> Result<u64> {
+            Ok(enter + self.times[stage])
+        }
+    }
+
+    #[test]
+    fn schedule_hand_computed_two_stage_pipeline() {
+        // Stages of 10 and 20 cycles, window 2, arrivals 0/5/8/40.
+        //   r0: admitted 0,  stage0 0→10,  stage1 10→30.
+        //   r1: admitted 5,  stage0 10→20 (stage busy), stage1 30→50.
+        //   r2: gated on r0's completion (30), stage0 30→40, stage1 50→70.
+        //   r3: gated on r1's completion (50), stage0 50→60, stage1 70→90.
+        let mut svc = FixedService { times: vec![10, 20] };
+        let recs = schedule(&[0, 5, 8, 40], 2, &mut svc).unwrap();
+        let got: Vec<(u64, u64, u64)> =
+            recs.iter().map(|r| (r.arrive, r.start, r.complete)).collect();
+        assert_eq!(got, vec![(0, 0, 30), (5, 10, 50), (8, 30, 70), (40, 50, 90)]);
+    }
+
+    #[test]
+    fn window_of_one_serializes_the_stream() {
+        let mut svc = FixedService { times: vec![10] };
+        let recs = schedule(&[0, 0, 0, 0], 1, &mut svc).unwrap();
+        for w in recs.windows(2) {
+            assert!(
+                w[1].start >= w[0].complete,
+                "window 1 must fully serialize: {w:?}"
+            );
+        }
+        assert_eq!(recs.last().unwrap().complete, 40);
+    }
+
+    #[test]
+    fn wide_window_lets_the_pipeline_fill() {
+        // With window ≥ stages, back-to-back arrivals overlap: stage 0 of
+        // r1 runs while stage 1 serves r0. Steady state completes one
+        // request per bottleneck period (20), after the 30-cycle fill.
+        let mut svc = FixedService { times: vec![10, 20] };
+        let recs = schedule(&[0, 0, 0, 0], 8, &mut svc).unwrap();
+        let completions: Vec<u64> = recs.iter().map(|r| r.complete).collect();
+        assert_eq!(completions, vec![30, 50, 70, 90]);
+        assert!(recs[1].start < recs[0].complete, "pipelining must overlap stages");
+    }
+
+    #[test]
+    fn schedule_rejects_bad_inputs() {
+        let mut svc = FixedService { times: vec![10] };
+        assert!(schedule(&[0, 5], 0, &mut svc).is_err(), "window 0");
+        assert!(schedule(&[5, 0], 2, &mut svc).is_err(), "unsorted arrivals");
+        let mut none = FixedService { times: vec![] };
+        assert!(schedule(&[0], 1, &mut none).is_err(), "no stages");
+        let mut instant = FixedService { times: vec![0] };
+        let err = schedule(&[0], 1, &mut instant).unwrap_err().to_string();
+        assert!(err.contains("zero cycles"), "{err}");
+    }
+
+    #[test]
+    fn schedule_errors_name_the_request_and_stage() {
+        struct FailsOn { request: usize }
+        impl StageService for FailsOn {
+            fn stages(&self) -> usize {
+                2
+            }
+            fn serve(&mut self, _stage: usize, enter: u64, request: usize) -> Result<u64> {
+                anyhow::ensure!(request != self.request, "stage exploded");
+                Ok(enter + 5)
+            }
+        }
+        let err = schedule(&[0, 1, 2], 4, &mut FailsOn { request: 1 });
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("request 1"), "{msg}");
+        assert!(msg.contains("stage 0"), "{msg}");
+    }
+
+    #[test]
+    fn empty_stream_is_legal_and_empty() {
+        let mut svc = FixedService { times: vec![10] };
+        assert!(schedule(&[], 4, &mut svc).unwrap().is_empty());
+    }
+}

@@ -105,7 +105,10 @@ impl BenchResult {
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn escape_json(s: &str) -> String {
+/// Public because every hand-rolled JSON emitter in the crate (bench
+/// results, sweep results, serving curves — no `serde` offline) must
+/// share one escaping definition.
+pub fn escape_json(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

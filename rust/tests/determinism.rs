@@ -138,6 +138,28 @@ fn torus_west_first_fig7_sweep_is_bit_identical_across_jobs() {
 }
 
 #[test]
+fn serving_sweep_is_bit_identical_across_jobs() {
+    // The serving subsystem's acceptance line: the quick saturation sweep
+    // (networks × loads × mappers, each point a multi-request pipelined
+    // stream with seeded Poisson arrivals) must be bit-identical between
+    // jobs(1) and jobs(8). Each point owns its platform sims and its own
+    // arrival generator, so worker interleaving has nothing to leak
+    // through — this pins that.
+    let serving_fp = |jobs: usize| -> Vec<(usize, usize, u64, Vec<u64>)> {
+        let sweep = noctt::experiments::serving::data_with_jobs(true, Some(jobs))
+            .expect("serving sweep");
+        sweep
+            .points
+            .iter()
+            .map(|p| (p.network, p.mapper, p.load.to_bits(), p.run.fingerprint()))
+            .collect()
+    };
+    let serial = serving_fp(1);
+    assert!(!serial.is_empty());
+    assert_eq!(serial, serving_fp(8), "serving sweep diverged between jobs(1) and jobs(8)");
+}
+
+#[test]
 fn pool_width_beyond_the_machine_is_safe() {
     // Sanity: ThreadPool clamps nothing upward — 8 workers on any core
     // count is legal, it just means idle stealers.
