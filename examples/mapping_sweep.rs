@@ -119,7 +119,8 @@ fn main() {
     println!(
         "\nReading: travel-time sampling keeps winning as the mesh grows; the static\n\
          strategies drift (distance over-corrects, corner-heavy shows the cost of a\n\
-         deliberately bad plan). All five strategies — including the one registered\n\
-         by this example — went through the same Scenario entry point."
+         deliberately bad plan). All five mappers on this grid — including the one\n\
+         registered by this example — went through the same Scenario entry point;\n\
+         `noctt exp tournament` races the full registry the same way."
     );
 }

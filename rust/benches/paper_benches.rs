@@ -23,7 +23,7 @@ use noctt::config::{PlacementPreset, PlatformConfig, RoutingAlgorithm, TopologyK
 use noctt::dnn::{lenet5, zoo, LayerSpec};
 use noctt::experiments::engine::Scenario;
 use noctt::experiments::{fig7, quick_trim, table1};
-use noctt::mapping::{registry, run_layer, Strategy};
+use noctt::mapping::{registry, run_layer, MapCtx, Mapper, Strategy};
 use noctt::serving::{Arrival, ServingConfig, ServingSim};
 use noctt::util::bench::{bench, speedup, BenchArgs, BenchResult};
 use noctt::util::ThreadPool;
@@ -247,6 +247,24 @@ fn main() {
                 }
             },
         ));
+    }
+
+    // tournament — the annealing mapper's full search-then-refine path on
+    // the (smoke-trimmed) LeNet C1 layer: the threshold-accepting walk,
+    // the inner refinement Scenario, and the winner selection all sit on
+    // the measured path, so bench-smoke covers the search-based mapper
+    // the tournament introduces, not just the single-run strategies.
+    if args.selected("tournament/annealing-lenet5") {
+        let mapper = registry().resolve("annealing-4").expect("annealing-4 mapper");
+        // Winner's simulated span captured from inside the measured
+        // closure — the seeded search replays identically every iteration.
+        let cycles = std::cell::Cell::new(0.0);
+        let b = bench("tournament/annealing-lenet5", t, Some((c1.tasks as f64, "tasks")), || {
+            let r = mapper.execute(&MapCtx::new(&cfg, &c1)).expect("annealing bench run");
+            cycles.set(r.result.drained_at as f64);
+            std::hint::black_box(r);
+        });
+        results.push(b.with_sim_cycles(cycles.get()));
     }
 
     // serving — a sustained Poisson request stream (the serving subsystem's

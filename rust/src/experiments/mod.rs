@@ -14,6 +14,7 @@
 //! | [`heatmap`] | extension — per-router congestion heatmap |
 //! | [`zoo`]    | extension — Fig. 11's question across the whole model zoo |
 //! | [`serving`] | extension — saturation curves under sustained request streams |
+//! | [`tournament`] | extension — every registered mapper × zoo × {mesh, torus} leaderboards |
 //!
 //! Every simulating experiment (fig7–fig11, ablation, heatmap) builds a
 //! declarative {platforms × layers × mappers} grid on the
@@ -44,6 +45,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod serving;
 pub mod table1;
+pub mod tournament;
 pub mod zoo;
 
 pub use engine::{Scenario, SweepResults};
@@ -93,6 +95,7 @@ pub fn all_reports(quick: bool) -> Vec<Report> {
         heatmap::run(quick),
         zoo::run(quick),
         serving::run(quick),
+        tournament::run(quick),
     ]
 }
 
@@ -110,14 +113,15 @@ pub fn run_by_id(id: &str, quick: bool) -> Option<Report> {
         "heatmap" => Some(heatmap::run(quick)),
         "zoo" => Some(zoo::run(quick)),
         "serving" => Some(serving::run(quick)),
+        "tournament" => Some(tournament::run(quick)),
         _ => None,
     }
 }
 
 /// Ids of all experiments, in paper order (extensions last).
-pub const ALL_IDS: [&str; 11] = [
+pub const ALL_IDS: [&str; 12] = [
     "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "arch", "ablation", "heatmap", "zoo",
-    "serving",
+    "serving", "tournament",
 ];
 
 #[cfg(test)]

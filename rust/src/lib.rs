@@ -7,10 +7,12 @@
 //! ## The three public pillars
 //!
 //! 1. **[`mapping::Mapper`]** — the object-safe strategy trait, with a
-//!    name → constructor **[`mapping::registry()`]**. The five paper
+//!    name → constructor **[`mapping::registry()`]**. The paper's five
 //!    strategies (row-major, distance, static-latency, post-run,
-//!    sampling-window) are builtin registrations, all selectable by name
-//!    from the CLI (`noctt sim --strategy <name>`); new strategies
+//!    sampling-window) and the related-work zoo (greedy, LOCAL-style,
+//!    simulated annealing) are builtin registrations, all selectable by
+//!    name from the CLI (`noctt sim --strategy <name>`, listed by
+//!    `noctt mappers`, raced by `noctt exp tournament`); new strategies
 //!    register on a [`mapping::Registry`] and join any
 //!    [`experiments::engine::Scenario`] sweep — no dispatch code changes.
 //! 2. **[`config::PlatformConfig::builder`]** — arbitrary W×H fabrics
@@ -108,8 +110,9 @@
 //!   text format), and the [`dnn::zoo`] model registry — LeNet-5 (the
 //!   paper's network) plus AlexNet-lite, MobileNet-lite and an MLP, all
 //!   selectable by name (`noctt sim --workload <name>`, `noctt exp zoo`).
-//! * [`mapping`] — the [`mapping::Mapper`] trait, registry, and the five
-//!   builtin strategies under study.
+//! * [`mapping`] — the [`mapping::Mapper`] trait, registry, and the
+//!   builtin strategies: the paper's five plus the greedy / LOCAL-style /
+//!   annealing mapper zoo.
 //! * [`serving`] — sustained-traffic serving: deterministic arrival
 //!   processes (uniform/Poisson/bursty, seeded — no wall-clock), a
 //!   flow-shop pipeline driver keeping multiple requests in flight over

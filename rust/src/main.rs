@@ -2,8 +2,8 @@
 //! inspection, and PJRT LeNet inference, all from the command line.
 //!
 //! ```text
-//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|all>
-//!           [--quick] [--jobs N] [--json PATH]   (--json: zoo/serving only)
+//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|all>
+//!           [--quick] [--jobs N] [--json PATH]   (--json: zoo/serving/tournament only)
 //! noctt sim --layer <name|k<N>> --strategy <name>
 //!           [--workload <zoo-name|path.wl>] [--channels N]
 //!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
@@ -13,6 +13,7 @@
 //!             [--requests N] [--window N] [--seed N] [--trim]
 //!             [+ platform flags as in `noctt sim`]
 //! noctt workloads
+//! noctt mappers
 //! noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //!                [--topology mesh|torus] [--routing xy|yx|west-first]
 //! noctt infer [--artifacts DIR] [--batch 1|8]
@@ -246,7 +247,7 @@ fn usage() -> ! {
         "noctt — travel-time based task mapping for NoC-based DNN accelerators\n\
          \n\
          Usage:\n\
-         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|all>\n\
+         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|all>\n\
          \x20           [--quick] [--jobs N] [--json PATH]\n\
          \x20 noctt sim --layer <name|k<N>> --strategy <s> [--mcs 2|4]\n\
          \x20           [--workload <zoo-name|path.wl>] [--channels N]\n\
@@ -257,6 +258,7 @@ fn usage() -> ! {
          \x20             [--requests N] [--window N] [--seed N] [--trim]\n\
          \x20             [+ platform flags as in `noctt sim`]\n\
          \x20 noctt workloads\n\
+         \x20 noctt mappers\n\
          \x20 noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]\n\
          \x20                [--topology mesh|torus] [--routing xy|yx|west-first]\n\
          \x20 noctt infer [--artifacts DIR] [--batch 1|8]\n\
@@ -265,7 +267,8 @@ fn usage() -> ! {
          \n\
          --jobs N  sweep worker threads (default: all cores; 1 = serial;\n\
          \x20          also settable as the NOCTT_JOBS environment variable)\n\
-         --json PATH  also write the sweep's raw data as JSON (zoo/serving)\n\
+         --json PATH  also write the sweep's raw data as JSON\n\
+         \x20          (zoo/serving/tournament)\n\
          --load F  serve: offered load relative to the bottleneck layer's\n\
          \x20          capacity (1.0 = arrivals exactly match its drain rate)\n\
          --topology/--routing  the NoC architecture axis: wrap-around torus\n\
@@ -392,8 +395,15 @@ fn cmd_exp(a: &args::Args) -> Result<()> {
                     .with_context(|| format!("writing {}", path.display()))?;
                 println!("{}", experiments::serving::report(&sweep));
             }
+            "tournament" => {
+                let sweeps = experiments::tournament::data(quick);
+                std::fs::write(path, experiments::tournament::to_json(&sweeps))
+                    .with_context(|| format!("writing {}", path.display()))?;
+                println!("{}", experiments::tournament::report(&sweeps));
+            }
             other => bail!(
-                "--json is supported for the 'zoo' and 'serving' experiments (got '{other}')"
+                "--json is supported for the 'zoo', 'serving' and 'tournament' experiments \
+                 (got '{other}')"
             ),
         }
         eprintln!("wrote {}", path.display());
@@ -537,6 +547,31 @@ fn cmd_workloads() -> Result<()> {
     Ok(())
 }
 
+/// List every registered mapping strategy: name, kind (online mappers
+/// measure the running platform or pay extra simulation runs; static
+/// ones plan from topology/model alone), and the registry's one-line
+/// description — sourced from [`mapping::registry()`] so the listing can
+/// never drift from the builtins.
+fn cmd_mappers() -> Result<()> {
+    let reg = mapping::registry();
+    let mut t = Table::new(["name", "kind", "description"]);
+    for e in reg.entries() {
+        t.row([
+            e.name().to_string(),
+            if e.online() { "online".to_string() } else { "static".to_string() },
+            e.help().to_string(),
+        ]);
+    }
+    println!("{t}");
+    println!(
+        "Pass any name to `noctt sim --strategy <name>` (families take a\n\
+         parameter: `sampling-10`, `annealing-4`) or race them all with\n\
+         `noctt exp tournament`. Custom mappers register programmatically;\n\
+         see the \"How to add a mapper\" walkthrough in docs/ARCHITECTURE.md."
+    );
+    Ok(())
+}
+
 fn cmd_platform(a: &args::Args) -> Result<()> {
     let cfg = parse_platform(a)?;
     println!(
@@ -609,6 +644,7 @@ fn main() -> Result<()> {
         Some("sim") => cmd_sim(&a),
         Some("serve") => cmd_serve(&a),
         Some("workloads") => cmd_workloads(),
+        Some("mappers") => cmd_mappers(),
         Some("platform") => cmd_platform(&a),
         Some("infer") => cmd_infer(&a),
         Some("smoke") => {

@@ -1,0 +1,176 @@
+//! Greedy load-balancing task mapping — the bottleneck-migration idiom of
+//! Minakova & Stefanov's high-throughput CNN mapper (`greedy_mapping.py`;
+//! SNIPPETS §2), transplanted from per-layer processor assignment to
+//! per-PE task counts.
+//!
+//! The algorithm is a local search over count vectors with a *predicted*
+//! latency model in the loop (no simulation):
+//!
+//! 1. start from the even (row-major) mapping;
+//! 2. find the predicted bottleneck PE — the one with the largest
+//!    `counts[i] · T_SL[i]`, where `T_SL` is the Eq. 6 static per-task
+//!    latency estimate (the same model the [`static-latency`] mapper
+//!    apportions against);
+//! 3. migrate one task from the bottleneck to the PE whose predicted
+//!    completion time grows the least;
+//! 4. keep migrating while the predicted *makespan* (the max over PEs)
+//!    strictly improves; stop at the first non-improving move.
+//!
+//! Strict improvement makes the search monotone, so it terminates, and
+//! every step is deterministic (ties break toward lower PE indices). On a
+//! platform whose PEs all predict the same per-task latency the very
+//! first move is non-improving and the result *is* the even mapping —
+//! greedy degrades gracefully to the baseline instead of churning.
+//!
+//! The fixed point approximates the [`static_latency`] apportionment
+//! (both balance `counts · T_SL`), but greedy reaches it through integer
+//! single-task moves, so its roundings differ and its trajectory — start
+//! even, drain the bottleneck — is the one the related work actually
+//! ships.
+//!
+//! [`static-latency`]: crate::mapping::static_latency::StaticLatency
+//! [`static_latency`]: crate::mapping::static_latency
+
+use std::borrow::Cow;
+
+use crate::config::PlatformConfig;
+use crate::dnn::LayerSpec;
+use crate::mapping::static_latency::static_latencies;
+use crate::mapping::{row_major, MapCtx, Mapper};
+
+/// Greedy bottleneck-migration mapping — the registered [`Mapper`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Greedy;
+
+impl Mapper for Greedy {
+    fn label(&self) -> Cow<'static, str> {
+        Cow::Borrowed("greedy")
+    }
+
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        counts(ctx.cfg, ctx.layer)
+    }
+}
+
+/// Per-PE counts from the greedy bottleneck-migration search: start even,
+/// move single tasks off the predicted-slowest PE while the predicted
+/// makespan strictly improves.
+pub fn counts(cfg: &PlatformConfig, layer: &LayerSpec) -> Vec<u64> {
+    let n = cfg.num_pes();
+    let mut c = row_major::counts(layer.tasks, n);
+    if n < 2 || layer.tasks == 0 {
+        return c;
+    }
+    let lat = static_latencies(cfg, layer);
+    let time = |count: u64, i: usize| count as f64 * lat[i];
+    let makespan =
+        |c: &[u64]| (0..n).map(|i| time(c[i], i)).fold(0.0f64, f64::max);
+    let mut cur = makespan(&c);
+    // Strictly-improving single-task moves terminate on their own; the cap
+    // is a belt-and-braces bound against float-comparison pathologies.
+    for _ in 0..4 * layer.tasks + 16 {
+        // The predicted bottleneck (ties -> lower index)...
+        let b = (0..n)
+            .filter(|&i| c[i] > 0)
+            .max_by(|&i, &j| time(c[i], i).partial_cmp(&time(c[j], j)).unwrap().then(j.cmp(&i)))
+            .expect("a layer with tasks has a non-empty PE");
+        // ...and the destination whose completion time grows the least.
+        let d = (0..n)
+            .filter(|&j| j != b)
+            .min_by(|&i, &j| {
+                time(c[i] + 1, i).partial_cmp(&time(c[j] + 1, j)).unwrap().then(i.cmp(&j))
+            })
+            .expect("n >= 2 leaves a destination");
+        c[b] -= 1;
+        c[d] += 1;
+        let next = makespan(&c);
+        if next < cur {
+            cur = next;
+        } else {
+            // First non-improving move: undo it and stop.
+            c[d] -= 1;
+            c[b] += 1;
+            break;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::static_latency;
+
+    #[test]
+    fn conserves_total() {
+        let cfg = PlatformConfig::default_2mc();
+        for tasks in [1u64, 13, 14, 140, 4704] {
+            let layer = LayerSpec::conv("g", 5, 1.0, tasks);
+            let c = counts(&cfg, &layer);
+            assert_eq!(c.iter().sum::<u64>(), tasks);
+            assert_eq!(c.len(), cfg.num_pes());
+        }
+    }
+
+    #[test]
+    fn migrates_off_far_pes() {
+        // Far PEs predict slower tasks, so greedy must drain them below
+        // the even share and load the near PEs above it.
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("C1", 5, 1.0, 4704);
+        let c = counts(&cfg, &layer);
+        let nodes = cfg.pe_nodes();
+        let near = c[nodes.iter().position(|&n| n == 5).unwrap()];
+        let far = c[nodes.iter().position(|&n| n == 0).unwrap()];
+        assert!(near > 336, "near PE should rise above the even 336, got {near}");
+        assert!(far < 336, "far PE should fall below the even 336, got {far}");
+    }
+
+    #[test]
+    fn approximates_the_static_latency_apportionment() {
+        // Greedy balances the same predicted-latency products that
+        // static-latency apportions, so the fixed points agree to within
+        // integer-rounding slack on every PE.
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("C1", 5, 1.0, 4704);
+        let g = counts(&cfg, &layer);
+        let s = static_latency::counts(&cfg, &layer);
+        for (i, (a, b)) in g.iter().zip(&s).enumerate() {
+            let delta = a.abs_diff(*b);
+            assert!(delta <= 3, "PE {i}: greedy {a} vs static-latency {b}");
+        }
+    }
+
+    #[test]
+    fn improves_the_predicted_makespan_over_even() {
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("C1", 5, 1.0, 4704);
+        let lat = static_latencies(&cfg, &layer);
+        let pred = |c: &[u64]| {
+            c.iter().zip(&lat).map(|(&c, &l)| c as f64 * l).fold(0.0f64, f64::max)
+        };
+        let even = row_major::counts(layer.tasks, cfg.num_pes());
+        let g = counts(&cfg, &layer);
+        assert!(
+            pred(&g) < pred(&even),
+            "greedy {} must beat even {} on its own objective",
+            pred(&g),
+            pred(&even)
+        );
+    }
+
+    #[test]
+    fn fewer_tasks_than_pes_stays_valid() {
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("tiny", 5, 1.0, 5);
+        let c = counts(&cfg, &layer);
+        assert_eq!(c.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let cfg = PlatformConfig::default_2mc();
+        let layer = LayerSpec::conv("C1", 5, 1.0, 1200);
+        assert_eq!(counts(&cfg, &layer), counts(&cfg, &layer));
+    }
+}

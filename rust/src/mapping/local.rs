@@ -1,0 +1,154 @@
+//! LOCAL-style low-complexity spatial mapping (after Reshadi & Gregg's
+//! LOCAL allocator): rank PEs by a *static locality score* and hand out
+//! tasks proportionally — no simulation, no latency model, just topology.
+//!
+//! The score of a PE is its total hop distance to **all** memory
+//! controllers under the active [`Topology`]/[`RoutingAlgorithm`] (torus
+//! wrap links lower scores; extra MCs flatten them). Scores are inverted
+//! *linearly* — `weight = (s_max + s_min) − s` — so the best-placed PE
+//! gets the largest share and the worst still gets a positive one.
+//!
+//! That linear inversion is the point of difference from the paper's
+//! [`distance`] mapper: distance divides by the *nearest-MC* hop count
+//! (Eq. 1's hyperbolic rule, a 3:1 skew on the default platform), while
+//! LOCAL's aggregate-and-invert is deliberately gentle — a
+//! low-complexity heuristic meant to be computed in O(P·M) with no
+//! model of the traffic at all. On platforms where distance-style
+//! over-correction hurts (Fig. 7's ρ = 58% cell), gentler is better; where
+//! real congestion is distance-dominated, LOCAL under-corrects. The
+//! tournament (`noctt exp tournament`) makes that trade visible per
+//! network.
+//!
+//! [`Topology`]: crate::noc::topology::Topology
+//! [`RoutingAlgorithm`]: crate::noc::topology::RoutingAlgorithm
+//! [`distance`]: crate::mapping::distance
+
+use std::borrow::Cow;
+
+use crate::config::PlatformConfig;
+use crate::mapping::{MapCtx, Mapper};
+use crate::util::apportion::largest_remainder;
+
+/// LOCAL-style spatial mapping — the registered [`Mapper`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Local;
+
+impl Mapper for Local {
+    fn label(&self) -> Cow<'static, str> {
+        Cow::Borrowed("local")
+    }
+
+    fn counts(&self, ctx: &MapCtx<'_>) -> Vec<u64> {
+        counts(ctx.cfg, ctx.layer.tasks)
+    }
+}
+
+/// Aggregate locality score per PE (dense order): total hop distance to
+/// every MC on the platform's actual topology. Lower is better-placed.
+pub fn locality_scores(cfg: &PlatformConfig) -> Vec<u64> {
+    let topo = cfg.topo();
+    cfg.pe_nodes()
+        .into_iter()
+        .map(|pe| cfg.mc_nodes.iter().map(|&mc| topo.hop_distance(pe, mc) as u64).sum())
+        .collect()
+}
+
+/// Per-PE counts for LOCAL-style mapping of `total` tasks: linear
+/// inversion of the locality scores, integerised by largest remainder.
+pub fn counts(cfg: &PlatformConfig, total: u64) -> Vec<u64> {
+    let s = locality_scores(cfg);
+    let max = *s.iter().max().expect("at least one PE");
+    let min = *s.iter().min().expect("at least one PE");
+    // weight ∈ [min, max], and min ≥ #MCs ≥ 1 (a PE is never an MC node),
+    // so every PE keeps a strictly positive share.
+    let weights: Vec<f64> = s.iter().map(|&x| (max + min - x) as f64).collect();
+    largest_remainder(total, &weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::mapping::distance;
+
+    #[test]
+    fn conserves_total() {
+        let cfg = PlatformConfig::default_2mc();
+        for total in [1u64, 13, 14, 100, 4704, 37632] {
+            assert_eq!(counts(&cfg, total).iter().sum::<u64>(), total);
+        }
+    }
+
+    #[test]
+    fn scores_are_aggregate_not_nearest() {
+        // Node 8 touches MC 9 (distance 1) but sits 2 hops from MC 10;
+        // node 5 is 1 hop from MC 9 and 2 from MC 10 as well — aggregate
+        // scores rank whole neighbourhoods, not just the closest link.
+        let cfg = PlatformConfig::default_2mc();
+        let s = locality_scores(&cfg);
+        let nodes = cfg.pe_nodes();
+        let at = |n: usize| s[nodes.iter().position(|&x| x == n).unwrap()];
+        assert_eq!(at(5), 3); // 1 to MC 9 + 2 to MC 10
+        assert_eq!(at(6), 3); // 2 to MC 9 + 1 to MC 10
+        assert_eq!(at(0), 7); // 3 + 4: the far corner
+        assert!(at(5) < at(0));
+    }
+
+    #[test]
+    fn better_placed_pes_get_more_tasks() {
+        let cfg = PlatformConfig::default_2mc();
+        let s = locality_scores(&cfg);
+        let c = counts(&cfg, 4704);
+        for i in 0..c.len() {
+            for j in 0..c.len() {
+                if s[i] < s[j] {
+                    assert!(c[i] >= c[j], "PE {i} (score {}) vs {j} ({})", s[i], s[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skew_is_gentler_than_distance() {
+        // Distance's hyperbolic rule gives the far corner a third of a
+        // distance-1 PE's share; LOCAL's linear inversion must sit closer
+        // to even.
+        let cfg = PlatformConfig::default_2mc();
+        let l = counts(&cfg, 4704);
+        let d = distance::counts(&cfg, 4704);
+        let ratio = |c: &[u64]| {
+            *c.iter().min().unwrap() as f64 / *c.iter().max().unwrap() as f64
+        };
+        assert!(
+            ratio(&l) > ratio(&d),
+            "LOCAL min/max {} should exceed distance's {}",
+            ratio(&l),
+            ratio(&d)
+        );
+    }
+
+    #[test]
+    fn torus_wraps_flatten_the_scores() {
+        let mesh = PlatformConfig::builder().mesh(4, 8).mc_nodes([1, 2]).build().unwrap();
+        let torus = PlatformConfig::builder()
+            .mesh(4, 8)
+            .mc_nodes([1, 2])
+            .topology(TopologyKind::Torus)
+            .build()
+            .unwrap();
+        let sm = locality_scores(&mesh);
+        let st = locality_scores(&torus);
+        for (i, (&t, &m)) in st.iter().zip(&sm).enumerate() {
+            assert!(t <= m, "PE {i}: torus score {t} exceeds mesh score {m}");
+        }
+        assert!(st.iter().max() < sm.iter().max(), "wraps must shrink the worst score");
+        assert_eq!(counts(&torus, 4704).iter().sum::<u64>(), 4704);
+    }
+
+    #[test]
+    fn every_pe_gets_a_positive_share_when_tasks_abound() {
+        let cfg = PlatformConfig::default_2mc();
+        let c = counts(&cfg, 4704);
+        assert!(c.iter().all(|&x| x > 0), "{c:?}");
+    }
+}

@@ -17,8 +17,7 @@
 //!   [`Scenario`](crate::experiments::engine::Scenario) sweep engine. New
 //!   strategies register themselves; **no dispatch code here changes**.
 //!
-//! The five strategies under study in the paper (§3–§4) are the builtin
-//! registrations:
+//! The builtin registrations are the paper's five strategies (§3–§4):
 //!
 //! * [`row_major::RowMajor`] — even mapping in row order (§3.2, baseline).
 //! * [`distance::Distance`] — counts inversely proportional to the hop
@@ -31,11 +30,25 @@
 //!   sampled in a short window at the start of the layer (Eq. 7–8,
 //!   Fig. 6 — with a row-major fallback for layers too small to sample).
 //!
+//! …plus the related-work zoo the tournament (`noctt exp tournament`)
+//! compares them against:
+//!
+//! * [`greedy::Greedy`] — bottleneck migration from an even start under
+//!   the Eq. 6 model (Minakova & Stefanov's greedy mapping idiom).
+//! * [`local::Local`] — LOCAL-style static locality scores with a gentle
+//!   linear inversion, no simulation (after Reshadi & Gregg).
+//! * [`annealing::Annealing`] — threshold-accepting search over count
+//!   vectors, re-simulating the best candidates cycle-accurately (the
+//!   Turbo-Charged Mapper pattern, Gilbert et al.).
+//!
 //! The [`Strategy`] enum survives as a thin back-compat shim over the
-//! builtins (it implements [`Mapper`] by delegation); new code should use
-//! the registry or the mapper types directly.
+//! paper five (it implements [`Mapper`] by delegation); new code should
+//! use the registry or the mapper types directly.
 
+pub mod annealing;
 pub mod distance;
+pub mod greedy;
+pub mod local;
 pub mod mapper;
 pub mod registry;
 pub mod row_major;

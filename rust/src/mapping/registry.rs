@@ -32,9 +32,15 @@
 //! });
 //! assert!(reg.resolve("first-pe-only").is_some());
 //! assert!(reg.resolve("sampling-10").is_some()); // builtins still there
+//! assert!(reg.resolve("annealing-4").is_some()); // the zoo too
+//! // Static planners and online (extra-simulation) strategies are
+//! // flagged, which is how `noctt mappers` renders its table.
+//! assert!(reg.entries().iter().any(|e| e.online()));
 //! ```
 
-use crate::mapping::{distance, row_major, static_latency, travel_time, Mapper};
+use crate::mapping::{
+    annealing, distance, greedy, local, row_major, static_latency, travel_time, Mapper,
+};
 
 type Ctor = Box<dyn Fn(&str) -> Option<Box<dyn Mapper>> + Send + Sync>;
 
@@ -42,6 +48,7 @@ type Ctor = Box<dyn Fn(&str) -> Option<Box<dyn Mapper>> + Send + Sync>;
 pub struct RegistryEntry {
     name: &'static str,
     help: &'static str,
+    online: bool,
     ctor: Ctor,
 }
 
@@ -54,6 +61,13 @@ impl RegistryEntry {
     /// One-line description.
     pub fn help(&self) -> &'static str {
         self.help
+    }
+
+    /// True for *online* strategies — ones whose `execute` measures the
+    /// running platform or pays extra simulation runs (sampling,
+    /// post-run, annealing); false for purely static planners.
+    pub fn online(&self) -> bool {
+        self.online
     }
 }
 
@@ -75,7 +89,9 @@ impl Registry {
         Self { entries: Vec::new() }
     }
 
-    /// A registry pre-populated with the five paper strategies.
+    /// A registry pre-populated with the paper's five strategies (§3–§4)
+    /// plus the related-work zoo: greedy load balancing, LOCAL-style
+    /// spatial allocation, and simulated annealing.
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
         r.register("row-major", "even mapping in row order (baseline, §3.2)", |s| {
@@ -88,26 +104,62 @@ impl Registry {
         r.register("static-latency", "counts from the Eq. 6 no-load latency estimate (§4.2)", |s| {
             (s == "static-latency").then(|| Box::new(static_latency::StaticLatency) as Box<dyn Mapper>)
         });
-        r.register("post-run", "oracle travel-time mapping with an extra profiling run (§4.2)", |s| {
+        r.register_online("post-run", "oracle travel-time mapping with an extra profiling run (§4.2)", |s| {
             (s == "post-run").then(|| Box::new(travel_time::PostRun) as Box<dyn Mapper>)
         });
-        r.register("sampling-<W>", "sampling-window travel-time mapping, window W >= 1 (§4.2)", |s| {
+        r.register_online("sampling-<W>", "sampling-window travel-time mapping, window W >= 1 (§4.2)", |s| {
             s.strip_prefix("sampling-")
                 .and_then(|w| w.parse::<u64>().ok())
                 .filter(|&w| w >= 1)
                 .map(|w| Box::new(travel_time::Sampling(w)) as Box<dyn Mapper>)
         });
+        r.register("greedy", "bottleneck migration from even start under the Eq. 6 model (Minakova)", |s| {
+            (s == "greedy").then(|| Box::new(greedy::Greedy) as Box<dyn Mapper>)
+        });
+        r.register("local", "static locality scores, linear inversion, no simulation (LOCAL)", |s| {
+            (s == "local").then(|| Box::new(local::Local) as Box<dyn Mapper>)
+        });
+        r.register_online(
+            "annealing-<B>",
+            "threshold-accepting search + re-simulate the B best candidates (B >= 1)",
+            |s| {
+                if s == "annealing" {
+                    return Some(Box::new(annealing::Annealing::default()) as Box<dyn Mapper>);
+                }
+                s.strip_prefix("annealing-")
+                    .and_then(|b| b.parse::<u64>().ok())
+                    .filter(|&b| b >= 1)
+                    .map(|b| Box::new(annealing::Annealing(b)) as Box<dyn Mapper>)
+            },
+        );
         r
     }
 
-    /// Register a strategy (family). `ctor` receives the requested name and
-    /// returns a mapper when it recognises it. Later registrations are
-    /// tried after earlier ones, so builtins keep their names.
+    /// Register a *static* strategy (family). `ctor` receives the requested
+    /// name and returns a mapper when it recognises it. Later registrations
+    /// are tried after earlier ones, so builtins keep their names.
     pub fn register<F>(&mut self, name: &'static str, help: &'static str, ctor: F) -> &mut Self
     where
         F: Fn(&str) -> Option<Box<dyn Mapper>> + Send + Sync + 'static,
     {
-        self.entries.push(RegistryEntry { name, help, ctor: Box::new(ctor) });
+        self.entries.push(RegistryEntry { name, help, online: false, ctor: Box::new(ctor) });
+        self
+    }
+
+    /// Register an *online* strategy (family) — one whose `execute`
+    /// measures the running platform or pays extra simulation runs. The
+    /// flag only drives listings (`noctt mappers`); resolution and
+    /// execution are identical to [`register`](Self::register).
+    pub fn register_online<F>(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        ctor: F,
+    ) -> &mut Self
+    where
+        F: Fn(&str) -> Option<Box<dyn Mapper>> + Send + Sync + 'static,
+    {
+        self.entries.push(RegistryEntry { name, help, online: true, ctor: Box::new(ctor) });
         self
     }
 
@@ -127,7 +179,8 @@ impl Registry {
     }
 }
 
-/// The default registry: all builtin strategies of the paper.
+/// The default registry: the paper's five strategies plus the
+/// related-work mapper zoo (see [`Registry::with_builtins`]).
 pub fn registry() -> Registry {
     Registry::with_builtins()
 }
@@ -142,21 +195,56 @@ mod tests {
     #[test]
     fn builtin_names_resolve() {
         let reg = registry();
-        for name in ["row-major", "even", "distance", "static-latency", "post-run", "sampling-1", "sampling-10"] {
+        for name in [
+            "row-major",
+            "even",
+            "distance",
+            "static-latency",
+            "post-run",
+            "sampling-1",
+            "sampling-10",
+            "greedy",
+            "local",
+            "annealing",
+            "annealing-4",
+        ] {
             assert!(reg.resolve(name).is_some(), "builtin '{name}' must resolve");
         }
         assert!(reg.resolve("sampling-0").is_none(), "window 0 is invalid");
         assert!(reg.resolve("sampling-x").is_none());
+        assert!(reg.resolve("annealing-0").is_none(), "budget 0 is invalid");
+        assert!(reg.resolve("annealing-x").is_none());
         assert!(reg.resolve("no-such-mapper").is_none());
-        assert_eq!(reg.names().len(), 5);
+        assert_eq!(reg.names().len(), 8);
     }
 
     #[test]
     fn resolved_labels_round_trip() {
         let reg = registry();
-        for name in ["row-major", "distance", "static-latency", "post-run", "sampling-7"] {
+        for name in [
+            "row-major",
+            "distance",
+            "static-latency",
+            "post-run",
+            "sampling-7",
+            "greedy",
+            "local",
+            "annealing-3",
+        ] {
             let m = reg.resolve(name).unwrap();
             assert_eq!(m.label(), name, "label must round-trip through the registry");
+        }
+        // The bare family spec resolves to the default budget.
+        assert_eq!(reg.resolve("annealing").unwrap().label(), "annealing-8");
+    }
+
+    #[test]
+    fn online_flag_matches_the_builtin_split() {
+        let reg = registry();
+        for e in reg.entries() {
+            let expect_online =
+                matches!(e.name(), "post-run" | "sampling-<W>" | "annealing-<B>");
+            assert_eq!(e.online(), expect_online, "{}", e.name());
         }
     }
 

@@ -16,10 +16,12 @@ use noctt::mapping::{registry, MapCtx, Mapper};
 use noctt::util::proptest::forall;
 use noctt::util::SplitMix64;
 
-/// Registry names exercised by the property tests. `post-run` costs two
-/// full platform runs per case, so the cheap mappers carry more cases.
-const CHEAP_MAPPERS: [&str; 3] = ["row-major", "distance", "static-latency"];
-const ONLINE_MAPPERS: [&str; 3] = ["sampling-1", "sampling-4", "post-run"];
+/// Registry names exercised by the property tests. `post-run` and
+/// `annealing-<B>` cost extra full platform runs per case, so the cheap
+/// mappers carry more cases.
+const CHEAP_MAPPERS: [&str; 5] =
+    ["row-major", "distance", "static-latency", "greedy", "local"];
+const ONLINE_MAPPERS: [&str; 4] = ["sampling-1", "sampling-4", "post-run", "annealing-2"];
 
 /// A random valid platform: W×H in [2, 8] each (non-square shapes
 /// included), 1–4 MCs at random distinct nodes, always ≥ 1 PE — and, when
@@ -108,7 +110,7 @@ fn prop_non_square_meshes_explicitly() {
     for (w, h, mcs) in [(4usize, 8usize, vec![13, 18]), (8, 8, vec![27, 28, 35, 36])] {
         let cfg = PlatformConfig::builder().mesh(w, h).mc_nodes(mcs).build().unwrap();
         let layer = LayerSpec::conv("ns", 3, 1.0, 500);
-        for spec in CHEAP_MAPPERS.iter().chain(&["sampling-2", "post-run"]) {
+        for spec in CHEAP_MAPPERS.iter().chain(&["sampling-2", "post-run", "annealing-2"]) {
             let mapper = reg.resolve(spec).unwrap();
             let run = mapper.execute(&MapCtx::new(&cfg, &layer)).unwrap();
             assert_eq!(

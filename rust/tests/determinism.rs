@@ -138,6 +138,45 @@ fn torus_west_first_fig7_sweep_is_bit_identical_across_jobs() {
 }
 
 #[test]
+fn tournament_style_grid_with_annealing_is_bit_identical_across_jobs() {
+    // The mapper-zoo acceptance line: a tournament-shaped grid — mesh +
+    // torus, the three new mappers next to the baseline — must fingerprint
+    // identically at jobs(1) and jobs(8). The annealing cell is the
+    // interesting one: its seeded search replays exactly, and its inner
+    // refinement Scenario resolves its own worker count independently of
+    // the outer grid's, so this also pins nested-engine determinism.
+    let sweep = |jobs: usize| {
+        Scenario::new("tournament-det")
+            .platform("mesh", PlatformConfig::default_2mc())
+            .platform(
+                "torus",
+                PlatformConfig::builder().topology(TopologyKind::Torus).build().unwrap(),
+            )
+            .layer(LayerSpec::conv("C1q", 5, 1.0, 420))
+            .mapper("row-major")
+            .mapper("greedy")
+            .mapper("local")
+            .mapper("annealing-4")
+            .jobs(jobs)
+            .run()
+            .expect("tournament-style grid")
+    };
+    let serial = sweep(1);
+    assert_eq!(serial.cells.len(), 2 * 1 * 4);
+    // The monotone-accept invariant holds on every platform of the grid.
+    for pi in 0..2 {
+        let seed = serial.run(pi, 0, 0).summary.latency;
+        let ours = serial.run(pi, 0, 3).summary.latency;
+        assert!(ours <= seed, "platform {pi}: annealing {ours} lost to its seed {seed}");
+    }
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&sweep(8)),
+        "tournament-style grid diverged between jobs(1) and jobs(8)"
+    );
+}
+
+#[test]
 fn serving_sweep_is_bit_identical_across_jobs() {
     // The serving subsystem's acceptance line: the quick saturation sweep
     // (networks × loads × mappers, each point a multi-request pipelined
