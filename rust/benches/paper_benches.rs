@@ -12,17 +12,19 @@
 //!   the job catches panics/deadlocks quickly instead of tracking perf;
 //! * `--json <path>` — write one JSON object per bench (plus the
 //!   `fig7-sweep/speedup-vs-serial` entry) for the perf trajectory;
-//! * `--only <substr>` — run only matching benches. The CI perf gate uses
-//!   `--only fig7-sweep` to time the sweep at full windows and diff its
-//!   `mean_ns` against the committed `BENCH_baseline.json` (recorded with
+//! * `--only <substr>` — run only matching benches. The CI perf gate runs
+//!   one full-window pass per gated series (`--only fig7-sweep`,
+//!   `--only scale/analytical-32x32`, `--only sim/full-run-140-tasks`),
+//!   merges the JSONs, and diffs every `mean_ns` against the committed
+//!   `BENCH_baseline.json` (recorded with
 //!   `cargo bench --bench paper_benches -- --json BENCH_baseline.json`).
 
 use std::time::Duration;
 
-use noctt::config::{PlacementPreset, PlatformConfig, RoutingAlgorithm, TopologyKind};
+use noctt::config::{Fidelity, PlacementPreset, PlatformConfig, RoutingAlgorithm, TopologyKind};
 use noctt::dnn::{lenet5, zoo, LayerSpec};
 use noctt::experiments::engine::Scenario;
-use noctt::experiments::{fig7, quick_trim, table1};
+use noctt::experiments::{fig7, quick_trim, scale, table1};
 use noctt::mapping::{registry, run_layer, MapCtx, Mapper, Strategy};
 use noctt::serving::{Arrival, ServingConfig, ServingSim};
 use noctt::util::bench::{bench, speedup, BenchArgs, BenchResult};
@@ -295,6 +297,95 @@ fn main() {
             std::hint::black_box(run);
         });
         results.push(b.with_sim_cycles(cycles.get()));
+    }
+
+    // sim/full-run-140-tasks — a fixed-size cycle-accurate reference run
+    // (10 tasks per PE on the default 4×4 2-MC platform). Unlike the
+    // figure benches this one never trims with --smoke, so its mean is a
+    // stable perf-gate series for the raw event core across PRs.
+    if args.selected("sim/full-run-140-tasks") {
+        let layer140 = LayerSpec::conv("c140", 5, 1.0, 140);
+        let cycles = simulated_cycles(&cfg, &layer140, Strategy::RowMajor);
+        results.push(
+            bench("sim/full-run-140-tasks", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(
+                    run_layer(&cfg, &layer140, Strategy::RowMajor).expect("bench run"),
+                );
+            })
+            .with_sim_cycles(cycles),
+        );
+    }
+
+    // scale — the analytical fast path pricing the whole scale-experiment
+    // mapper set on a 32×32 mesh (1020 PEs). This is the cost of one
+    // design-space row that the cycle-accurate core cannot touch at
+    // interactive speed; like the sim/ series it never trims, so it is a
+    // stable perf-gate series for the analytical backend.
+    if args.selected("scale/analytical-32x32") {
+        let cfg32 = scale::platform(32, TopologyKind::Mesh);
+        let layer32 = LayerSpec::conv("c32", 5, 1.0, 16 * cfg32.num_pes() as u64);
+        let mappers: Vec<_> = scale::MAPPERS
+            .iter()
+            .map(|m| registry().resolve(m).expect("scale mapper"))
+            .collect();
+        let cycles = std::cell::Cell::new(0.0);
+        let b = bench(
+            "scale/analytical-32x32",
+            t,
+            Some((scale::MAPPERS.len() as f64, "mappers")),
+            || {
+                let mut modeled = 0.0;
+                for m in &mappers {
+                    let r = m.execute(&MapCtx::new(&cfg32, &layer32)).expect("analytical run");
+                    modeled += r.summary.latency as f64;
+                    std::hint::black_box(&r);
+                }
+                cycles.set(modeled);
+            },
+        );
+        results.push(b.with_sim_cycles(cycles.get()));
+    }
+
+    // fidelity — the same 16×16 cell priced by both backends; the ratio
+    // entry is the multi-fidelity PR's headline number (the analytical
+    // estimate must be orders of magnitude cheaper than the event core it
+    // approximates).
+    if args.selected("fidelity/speedup-16x16") {
+        let model_cfg = scale::platform(16, TopologyKind::Mesh);
+        let mut event_cfg = model_cfg.clone();
+        event_cfg.fidelity = Fidelity::CycleAccurate;
+        let mut layer16 = LayerSpec::conv("c16", 5, 1.0, 16 * model_cfg.num_pes() as u64);
+        if args.smoke {
+            layer16.tasks /= 8;
+        }
+        let cycles = simulated_cycles(&event_cfg, &layer16, Strategy::RowMajor);
+        let event = bench("fidelity/event-16x16", t, Some((cycles, "sim-cycles")), || {
+            std::hint::black_box(
+                run_layer(&event_cfg, &layer16, Strategy::RowMajor).expect("bench run"),
+            );
+        })
+        .with_sim_cycles(cycles);
+        let analytical =
+            bench("fidelity/analytical-16x16", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(
+                    run_layer(&model_cfg, &layer16, Strategy::RowMajor).expect("bench run"),
+                );
+            })
+            .with_sim_cycles(cycles);
+        let ratio = speedup(&event, &analytical);
+        println!(
+            "fidelity 16x16 speedup: {ratio:.0}x analytical vs cycle-accurate \
+             (event {:?} → analytical {:?})",
+            event.mean, analytical.mean
+        );
+        // Ratio entry, fig7-sweep style: mean is the analytical bench's;
+        // the rate field carries the ratio.
+        let mut entry = analytical.clone();
+        entry.name = "fidelity/speedup-16x16-analytical-vs-event".to_string();
+        entry.throughput = Some((ratio * entry.mean.as_secs_f64(), "x-event"));
+        results.push(event);
+        results.push(analytical);
+        results.push(entry);
     }
 
     args.finish("paper_benches", &results).expect("writing bench output");

@@ -1,0 +1,565 @@
+//! The contention-aware analytical latency backend
+//! ([`Fidelity::Analytical`](crate::config::Fidelity)).
+//!
+//! A closed-form estimate of what the cycle-accurate co-simulation would
+//! report for a task→PE assignment, produced **without constructing a
+//! [`Network`](crate::noc::Network)**. It is fed by exactly the same
+//! inputs as the event core — the layer's [`TaskProfile`] flit laws and
+//! the platform's [`Topology`]/[`RoutingAlgorithm`] distance oracles —
+//! so a mapping evaluated analytically is the *same* mapping the
+//! simulator would execute, just costed in microseconds instead of
+//! seconds.
+//!
+//! # The model
+//!
+//! Per PE `i` (assigned to its nearest MC exactly as the simulator
+//! assigns it, tie round-robin included), the no-load per-task time is
+//! the Eq. 6 static estimate:
+//!
+//! ```text
+//! base_i = T_compu + T_memaccess + (D·T_hop + (FlitNum−1)) + T_fixed
+//! ```
+//!
+//! On top of that, two congestion corrections, both functions of the
+//! (unknown) makespan `T`:
+//!
+//! * **MC queueing** (Queued memory model only): with utilisation
+//!   `ρ_m = Σ counts·T_mem / T`, each access waits an M/D/1-style
+//!   `W_m = T_mem · ρ_m / (2(1−ρ_m))`.
+//! * **Link contention**: every request/response/result packet loads each
+//!   directed link on its deterministic primary route
+//!   ([`Topology::path`]) with `counts · flits` flits. With link
+//!   utilisation `ρ_l = load_l / T`, a packet of `F` flits crossing `l`
+//!   waits `F · ρ_l / (2(1−ρ_l))` extra cycles.
+//!
+//! Because the waits depend on `T` and `T` depends on the waits, the
+//! model runs a short damped fixed-point iteration (utilisations clamped
+//! below 1 so the queueing terms stay finite). Everything is
+//! deterministic f64 arithmetic — same inputs, same estimate, on every
+//! thread and platform.
+//!
+//! # What it is good for — and not
+//!
+//! The estimate preserves the *ordering* of mappings (near-PEs-cheaper,
+//! concentration-builds-queues) and lands within a bounded relative error
+//! of the simulator on the validated small meshes (see the `fidelity`
+//! test suite and ARCHITECTURE.md for the pinned envelope). It knows
+//! nothing about wormhole backpressure, VC allocation or the
+//! one-outstanding-request ceiling, so absolute numbers drift under deep
+//! saturation — use it to rank mappings and sweep big fabrics, and
+//! re-simulate anything you intend to quote.
+
+use crate::accel::record::PePhaseTotals;
+use crate::accel::sim::SimResult;
+use crate::config::{MemModel, PlatformConfig};
+use crate::dnn::TaskProfile;
+use crate::noc::topology::{NodeId, Port, Topology, NUM_PORTS, PORT_LOCAL};
+use crate::noc::NetworkStats;
+
+/// Utilisation clamp: queueing terms are evaluated at most at this load,
+/// keeping the M/D/1 waits finite while still growing steeply enough to
+/// dominate a saturated cell's ranking.
+const RHO_MAX: f64 = 0.95;
+
+/// Damped fixed-point sweeps over the makespan (each is O(PEs + links);
+/// convergence is geometric, this is plenty).
+const ITERS: usize = 24;
+
+/// One PE's precomputed routing/geometry facts.
+#[derive(Debug, Clone)]
+struct PeModel {
+    /// Dense PE index's mesh node.
+    node: NodeId,
+    /// Index into `cfg.mc_nodes` of the assigned MC.
+    mc: usize,
+    /// The assigned MC's mesh node.
+    mc_node: NodeId,
+    /// Hop distance to the assigned MC.
+    dist: u64,
+    /// Directed links (src node, out port) on the PE → MC route
+    /// (requests and results travel here).
+    to_mc: Vec<(NodeId, Port)>,
+    /// Directed links on the MC → PE route (responses).
+    from_mc: Vec<(NodeId, Port)>,
+}
+
+/// The reusable analytical model of one {platform × task profile} cell.
+///
+/// Building one resolves MC assignment and walks every PE's routes once;
+/// evaluating a counts vector afterwards is cheap — which is what makes
+/// the [`turbo`](crate::mapping::turbo) mapper's thousands-of-candidates
+/// search affordable.
+#[derive(Debug, Clone)]
+pub struct AnalyticalModel {
+    profile: TaskProfile,
+    pes: Vec<PeModel>,
+    /// Eq. 6 no-load per-task estimate per PE.
+    base: Vec<f64>,
+    mem_model: MemModel,
+    mem_cycles: f64,
+    ni_packetize: f64,
+    static_hop: f64,
+    num_nodes: usize,
+    num_mcs: usize,
+}
+
+/// Per-evaluation scratch: link loads and MC work, indexed like
+/// `switched_per_port`.
+struct Loads {
+    /// Expected flits per directed link `[node][out port]` over the run.
+    link: Vec<[f64; NUM_PORTS]>,
+    /// Total service demand per MC (cycles).
+    mc_work: Vec<f64>,
+}
+
+impl AnalyticalModel {
+    /// Build the model for a platform and per-task profile. Panics on an
+    /// invalid platform (same contract as
+    /// [`Simulation::new`](crate::accel::Simulation::new)).
+    pub fn new(cfg: &PlatformConfig, profile: &TaskProfile) -> Self {
+        cfg.validate().expect("invalid platform");
+        let topo = cfg.topo();
+        // Nearest-MC assignment replicated verbatim from Simulation::new
+        // (tie round-robin in dense PE order) so both fidelities cost the
+        // same physical traffic.
+        let mut tie_rr = 0usize;
+        let pes: Vec<PeModel> = cfg
+            .pe_nodes()
+            .into_iter()
+            .map(|node| {
+                let best = cfg
+                    .mc_nodes
+                    .iter()
+                    .map(|&mc| topo.hop_distance(node, mc))
+                    .min()
+                    .expect("at least one MC");
+                let tied: Vec<usize> = cfg
+                    .mc_nodes
+                    .iter()
+                    .copied()
+                    .filter(|&mc| topo.hop_distance(node, mc) == best)
+                    .collect();
+                let mc_node = tied[tie_rr % tied.len()];
+                if tied.len() > 1 {
+                    tie_rr += 1;
+                }
+                let mc = cfg.mc_nodes.iter().position(|&m| m == mc_node).expect("mc in list");
+                PeModel {
+                    node,
+                    mc,
+                    mc_node,
+                    dist: best as u64,
+                    to_mc: route_links(&topo, cfg, node, mc_node),
+                    from_mc: route_links(&topo, cfg, mc_node, node),
+                }
+            })
+            .collect();
+        let base = pes
+            .iter()
+            .map(|pe| {
+                let response_trip =
+                    pe.dist * cfg.static_hop_cycles + (profile.resp_flits - 1);
+                let request_trip = pe.dist * cfg.static_hop_cycles;
+                let t_fixed = 2 * cfg.ni_packetize_cycles + request_trip;
+                (profile.compute_cycles + profile.mem_cycles + response_trip + t_fixed) as f64
+            })
+            .collect();
+        Self {
+            profile: *profile,
+            pes,
+            base,
+            mem_model: cfg.mem_model,
+            mem_cycles: profile.mem_cycles as f64,
+            ni_packetize: cfg.ni_packetize_cycles as f64,
+            static_hop: cfg.static_hop_cycles as f64,
+            num_nodes: cfg.num_nodes(),
+            num_mcs: cfg.mc_nodes.len(),
+        }
+    }
+
+    /// Number of PEs the model covers.
+    pub fn num_pes(&self) -> usize {
+        self.pes.len()
+    }
+
+    /// Total expected flit loads over the run for `counts`.
+    fn loads(&self, counts: &[u64]) -> Loads {
+        let mut l = Loads {
+            link: vec![[0.0; NUM_PORTS]; self.num_nodes],
+            mc_work: vec![0.0; self.num_mcs],
+        };
+        let p = &self.profile;
+        for (pe, &c) in self.pes.iter().zip(counts) {
+            if c == 0 {
+                continue;
+            }
+            let cf = c as f64;
+            // Requests and results share the PE → MC route.
+            let fwd = cf * (p.req_flits + p.result_flits) as f64;
+            for &(node, port) in &pe.to_mc {
+                l.link[node][port] += fwd;
+            }
+            let back = cf * p.resp_flits as f64;
+            for &(node, port) in &pe.from_mc {
+                l.link[node][port] += back;
+            }
+            l.mc_work[pe.mc] += cf * self.mem_cycles;
+        }
+        l
+    }
+
+    /// M/D/1-style wait for a packet of `flits` crossing one link with
+    /// `load` expected flits over a run of makespan `t`.
+    #[inline]
+    fn link_wait(load: f64, t: f64, flits: f64) -> f64 {
+        let rho = (load / t).min(RHO_MAX);
+        flits * rho / (2.0 * (1.0 - rho))
+    }
+
+    /// Per-PE expected per-task travel-time components
+    /// `(req, mem, resp, comp)` under makespan hypothesis `t`.
+    fn components(&self, loads: &Loads, t: f64) -> Vec<(f64, f64, f64, f64)> {
+        let p = &self.profile;
+        self.pes
+            .iter()
+            .map(|pe| {
+                let mut req =
+                    self.ni_packetize + pe.dist as f64 * self.static_hop;
+                for &(node, port) in &pe.to_mc {
+                    req += Self::link_wait(loads.link[node][port], t, p.req_flits as f64);
+                }
+                let mut mem = self.mem_cycles + self.ni_packetize;
+                if self.mem_model == MemModel::Queued {
+                    let rho = (loads.mc_work[pe.mc] / t).min(RHO_MAX);
+                    mem += self.mem_cycles * rho / (2.0 * (1.0 - rho));
+                }
+                let mut resp =
+                    pe.dist as f64 * self.static_hop + (p.resp_flits - 1) as f64;
+                for &(node, port) in &pe.from_mc {
+                    resp += Self::link_wait(loads.link[node][port], t, p.resp_flits as f64);
+                }
+                (req, mem, resp, p.compute_cycles as f64)
+            })
+            .collect()
+    }
+
+    /// Solve the fixed point and return per-PE per-task components plus
+    /// the converged per-PE finish times.
+    fn solve(&self, counts: &[u64]) -> (Vec<(f64, f64, f64, f64)>, Vec<f64>) {
+        assert_eq!(counts.len(), self.pes.len(), "counts vector length mismatch");
+        let loads = self.loads(counts);
+        // Seed: the no-load makespan, floored by total MC demand (the
+        // saturated-memory regime's structural lower bound).
+        let mut t = counts
+            .iter()
+            .zip(&self.base)
+            .map(|(&c, b)| c as f64 * b)
+            .fold(1.0f64, f64::max);
+        if self.mem_model == MemModel::Queued {
+            t = loads.mc_work.iter().fold(t, |a, &w| a.max(w));
+        }
+        let mut comps = self.components(&loads, t);
+        for _ in 0..ITERS {
+            let t_next = self.makespan(counts, &loads, &comps);
+            // Damped update: utilisations fall as T grows, so plain
+            // iteration can ring; averaging settles it.
+            t = 0.5 * (t + t_next);
+            comps = self.components(&loads, t);
+        }
+        let finish = self.finish_times(counts, &loads, &comps);
+        (comps, finish)
+    }
+
+    /// Per-PE finish estimates: sequential tasks, with the bottleneck
+    /// MC's total service demand flooring its slowest PE (the memory-
+    /// saturated regime where the MC, not any PE, sets the pace).
+    fn finish_times(
+        &self,
+        counts: &[u64],
+        loads: &Loads,
+        comps: &[(f64, f64, f64, f64)],
+    ) -> Vec<f64> {
+        let mut finish: Vec<f64> = counts
+            .iter()
+            .zip(comps)
+            .map(|(&c, &(rq, m, rs, cp))| c as f64 * (rq + m + rs + cp))
+            .collect();
+        if self.mem_model == MemModel::Queued {
+            for (mi, &work) in loads.mc_work.iter().enumerate() {
+                // Raise the slowest PE of this MC to at least the MC's
+                // total service time (first index wins exact ties —
+                // deterministic).
+                let mut slowest: Option<usize> = None;
+                for (i, pe) in self.pes.iter().enumerate() {
+                    if pe.mc == mi && counts[i] > 0 {
+                        match slowest {
+                            Some(s) if finish[i] <= finish[s] => {}
+                            _ => slowest = Some(i),
+                        }
+                    }
+                }
+                if let Some(s) = slowest {
+                    finish[s] = finish[s].max(work);
+                }
+            }
+        }
+        finish
+    }
+
+    fn makespan(
+        &self,
+        counts: &[u64],
+        loads: &Loads,
+        comps: &[(f64, f64, f64, f64)],
+    ) -> f64 {
+        self.finish_times(counts, loads, comps).into_iter().fold(1.0f64, f64::max)
+    }
+
+    /// The estimated layer inference latency (max per-PE finish) for a
+    /// counts vector — the cheap objective the `turbo-<B>` search anneals
+    /// over.
+    pub fn latency(&self, counts: &[u64]) -> f64 {
+        let (_, finish) = self.solve(counts);
+        finish.into_iter().fold(0.0f64, f64::max)
+    }
+
+    /// Full [`SimResult`]-shaped estimate for a counts vector: per-PE
+    /// phase totals, finish times, latency, drain time and synthesized
+    /// [`NetworkStats`] (per-port expected switching counts included, so
+    /// heatmap-style consumers keep working). `records` is empty — there
+    /// are no per-task events to report; every aggregate consumer
+    /// ([`mean_travel_times`](SimResult::mean_travel_times),
+    /// [`RunSummary`](crate::metrics::RunSummary)) reads the totals.
+    pub fn estimate(&self, counts: &[u64]) -> SimResult {
+        let (comps, finish_f) = self.solve(counts);
+        let p = &self.profile;
+        let totals: Vec<PePhaseTotals> = counts
+            .iter()
+            .zip(&comps)
+            .map(|(&c, &(rq, m, rs, cp))| PePhaseTotals {
+                tasks: c,
+                req: (c as f64 * rq).round() as u64,
+                mem: (c as f64 * m).round() as u64,
+                resp: (c as f64 * rs).round() as u64,
+                comp: (c as f64 * cp).round() as u64,
+            })
+            .collect();
+        let finish: Vec<u64> = counts
+            .iter()
+            .zip(&finish_f)
+            .map(|(&c, &f)| if c == 0 { 0 } else { f.round() as u64 })
+            .collect();
+        let latency = finish.iter().copied().max().unwrap_or(0);
+
+        // Synthesized traffic statistics: expected per-port switching
+        // counts (a flit is switched at every node on its path, ejection
+        // included), totals, and mean-trip latency sums per packet kind.
+        let mut switched_per_port = vec![[0u64; NUM_PORTS]; self.num_nodes];
+        let mut flits_injected = 0u64;
+        let mut delivered = [0u64; 3];
+        let mut latency_sum = [0u64; 3];
+        let mut max_result_drain = 0u64;
+        for (i, pe) in self.pes.iter().enumerate() {
+            let c = counts[i];
+            if c == 0 {
+                continue;
+            }
+            let fwd = c * (p.req_flits + p.result_flits);
+            for &(node, port) in &pe.to_mc {
+                switched_per_port[node][port] += fwd;
+            }
+            let back = c * p.resp_flits;
+            for &(node, port) in &pe.from_mc {
+                switched_per_port[node][port] += back;
+            }
+            // Ejections at the route endpoints.
+            switched_per_port[pe.mc_node][PORT_LOCAL] += fwd;
+            switched_per_port[pe.node][PORT_LOCAL] += back;
+            flits_injected += fwd + back;
+            delivered[0] += c;
+            delivered[1] += c;
+            delivered[2] += c;
+            let trip = pe.dist * (self.static_hop as u64);
+            latency_sum[0] += c * trip.max(1);
+            latency_sum[1] += c * (trip + p.resp_flits.saturating_sub(1)).max(1);
+            latency_sum[2] += c * trip.max(1);
+            max_result_drain = max_result_drain.max(trip);
+        }
+        let flits_switched: u64 =
+            switched_per_port.iter().flat_map(|ports| ports.iter()).sum();
+        // The last result packet still drains after the last compute.
+        let drained_at =
+            latency + (self.ni_packetize as u64) + max_result_drain;
+        let net = NetworkStats {
+            cycles: drained_at,
+            flits_injected,
+            flits_switched,
+            packets_delivered: delivered.iter().sum(),
+            latency_sum,
+            delivered_by_kind: delivered,
+            switched_per_port,
+        };
+        SimResult { records: Vec::new(), totals, finish, latency, drained_at, net }
+    }
+}
+
+/// The directed links (src node, out port) a packet traverses from `src`
+/// to `dst` under the platform's routing algorithm (deterministic primary
+/// route).
+fn route_links(
+    topo: &Topology,
+    cfg: &PlatformConfig,
+    src: NodeId,
+    dst: NodeId,
+) -> Vec<(NodeId, Port)> {
+    let path = topo.path(cfg.routing, src, dst);
+    path.windows(2)
+        .map(|w| {
+            let port = (0..NUM_PORTS)
+                .find(|&p| p != PORT_LOCAL && topo.neighbor(w[0], p) == Some(w[1]))
+                .expect("consecutive path nodes are neighbours");
+            (w[0], port)
+        })
+        .collect()
+}
+
+/// One-shot convenience: model + estimate for a single counts vector.
+/// Sweep-cell dispatch uses this; candidate searches should build one
+/// [`AnalyticalModel`] and reuse it.
+pub fn estimate(cfg: &PlatformConfig, profile: &TaskProfile, counts: &[u64]) -> SimResult {
+    AnalyticalModel::new(cfg, profile).estimate(counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::LayerSpec;
+    use crate::mapping::row_major;
+
+    fn cfg() -> PlatformConfig {
+        PlatformConfig::default_2mc()
+    }
+
+    fn c1() -> LayerSpec {
+        LayerSpec::conv("C1", 5, 1.0, 4704 / 8)
+    }
+
+    #[test]
+    fn estimate_is_deterministic_and_shaped_like_a_sim_result() {
+        let c = cfg();
+        let layer = c1();
+        let counts = row_major::counts(layer.tasks, c.num_pes());
+        let profile = layer.profile(&c);
+        let a = estimate(&c, &profile, &counts);
+        let b = estimate(&c, &profile, &counts);
+        assert_eq!(a.latency, b.latency, "analytical estimate must be deterministic");
+        assert_eq!(a.finish, b.finish);
+        assert_eq!(a.net.flits_switched, b.net.flits_switched);
+
+        assert_eq!(a.totals.len(), 14);
+        assert_eq!(a.task_counts(), counts);
+        assert_eq!(a.latency, *a.finish.iter().max().unwrap());
+        assert!(a.drained_at >= a.latency);
+        assert!(a.records.is_empty(), "no per-task events in the analytical backend");
+        // Flit accounting: every injected flit is switched at least once.
+        assert!(a.net.flits_switched >= a.net.flits_injected);
+        assert_eq!(a.net.packets_delivered, 3 * layer.tasks);
+    }
+
+    #[test]
+    fn near_pes_are_cheaper_than_far_pes() {
+        let c = cfg();
+        let layer = c1();
+        let profile = layer.profile(&c);
+        let model = AnalyticalModel::new(&c, &profile);
+        let counts = row_major::counts(layer.tasks, c.num_pes());
+        let res = model.estimate(&counts);
+        let nodes = c.pe_nodes();
+        let near = nodes.iter().position(|&n| n == 5).unwrap(); // distance 1
+        let far = nodes.iter().position(|&n| n == 0).unwrap(); // distance 3
+        let mean = res.mean_travel_times();
+        assert!(
+            mean[near].unwrap() < mean[far].unwrap(),
+            "near PE must see shorter estimated travel: {:?} vs {:?}",
+            mean[near],
+            mean[far]
+        );
+    }
+
+    #[test]
+    fn concentration_costs_more_than_balance() {
+        // All tasks on one far PE must estimate slower than an even
+        // spread — the property every mapper search relies on.
+        let c = cfg();
+        let layer = c1();
+        let profile = layer.profile(&c);
+        let model = AnalyticalModel::new(&c, &profile);
+        let even = row_major::counts(layer.tasks, c.num_pes());
+        let mut lumped = vec![0u64; c.num_pes()];
+        lumped[0] = layer.tasks;
+        assert!(model.latency(&even) < model.latency(&lumped));
+    }
+
+    #[test]
+    fn more_load_raises_the_estimate_superlinearly_never_lowers_it() {
+        let c = cfg();
+        let layer = c1();
+        let profile = layer.profile(&c);
+        let model = AnalyticalModel::new(&c, &profile);
+        let half = row_major::counts(layer.tasks / 2, c.num_pes());
+        let full = row_major::counts(layer.tasks, c.num_pes());
+        assert!(model.latency(&full) > model.latency(&half));
+    }
+
+    #[test]
+    fn mc_assignment_matches_the_simulator() {
+        // The tie round-robin replication: both backends must send each
+        // PE to the same MC, or their traffic differs structurally.
+        let c = cfg();
+        let layer = c1();
+        let profile = layer.profile(&c);
+        let model = AnalyticalModel::new(&c, &profile);
+        let sim = crate::accel::Simulation::new(&c, profile);
+        let sim_mcs: Vec<usize> = sim.pe_nodes(); // dense order nodes
+        assert_eq!(
+            model.pes.iter().map(|p| p.node).collect::<Vec<_>>(),
+            sim_mcs,
+            "PE node order must match"
+        );
+        let to9 = model.pes.iter().filter(|p| c.mc_nodes[p.mc] == 9).count();
+        let to10 = model.pes.iter().filter(|p| c.mc_nodes[p.mc] == 10).count();
+        assert_eq!(to9 + to10, 14);
+        assert!((to9 as i64 - to10 as i64).abs() <= 2, "tie RR unbalanced: {to9} vs {to10}");
+    }
+
+    #[test]
+    fn torus_wrap_links_shorten_far_pe_estimates() {
+        use crate::config::TopologyKind;
+        // A corner MC: node 15 is 6 mesh hops away but 2 torus hops.
+        let mesh = PlatformConfig::builder().mc_nodes([0]).build().unwrap();
+        let torus = PlatformConfig::builder()
+            .mc_nodes([0])
+            .topology(TopologyKind::Torus)
+            .build()
+            .unwrap();
+        let layer = c1();
+        let one_far = |c: &PlatformConfig| {
+            let profile = layer.profile(c);
+            let model = AnalyticalModel::new(c, &profile);
+            let far = c.pe_nodes().iter().position(|&n| n == 15).unwrap();
+            let mut counts = vec![0u64; c.num_pes()];
+            counts[far] = 32;
+            model.latency(&counts)
+        };
+        assert!(one_far(&torus) < one_far(&mesh), "wrap links must shorten the estimate");
+    }
+
+    #[test]
+    fn route_links_cover_the_path() {
+        let c = cfg();
+        let topo = c.topo();
+        let links = route_links(&topo, &c, 0, 10);
+        assert_eq!(links.len(), topo.hop_distance(0, 10), "one link per hop");
+        assert_eq!(links[0].0, 0, "first link leaves the source");
+    }
+}

@@ -10,11 +10,17 @@
 //!   (one 16-bit datum per 0.0625 router cycles).
 //! * [`sim`] — the engine that drives PEs and MCs against the NoC, with
 //!   support for adding task budgets mid-run (the sampling-window flow).
+//! * [`analytical`] — the contention-aware closed-form latency backend
+//!   ([`Fidelity::Analytical`](crate::config::Fidelity)): a
+//!   `SimResult`-shaped estimate from the same flit laws and distance
+//!   oracles, without constructing a network.
 
+pub mod analytical;
 pub mod mc;
 pub mod pe;
 pub mod record;
 pub mod sim;
 
+pub use analytical::AnalyticalModel;
 pub use record::{PePhaseTotals, TaskRecord};
 pub use sim::{SimResult, Simulation};

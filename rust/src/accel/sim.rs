@@ -84,6 +84,9 @@ pub struct Simulation {
     records: Vec<TaskRecord>,
     /// Pending response metadata per PE: (t_req_arrive, response packet id).
     resp_meta: Vec<Option<(u64, PacketId)>>,
+    /// Reusable delivery buffer, swapped with the network's list each step
+    /// (keeps the hot loop allocation-free).
+    delivered_scratch: Vec<(PacketId, u64)>,
 }
 
 impl Simulation {
@@ -123,7 +126,16 @@ impl Simulation {
             })
             .collect();
         let n = pes.len();
-        Self { cfg: cfg.clone(), profile, net, pes, mcs, records: Vec::new(), resp_meta: vec![None; n] }
+        Self {
+            cfg: cfg.clone(),
+            profile,
+            net,
+            pes,
+            mcs,
+            records: Vec::new(),
+            resp_meta: vec![None; n],
+            delivered_scratch: Vec::new(),
+        }
     }
 
     /// The platform configuration in use.
@@ -378,8 +390,11 @@ impl Simulation {
         }
         let now = self.net.now();
 
-        // 2. Packet deliveries.
-        for (pkt, _t) in self.net.drain_delivered() {
+        // 2. Packet deliveries. The scratch buffer swaps with the network's
+        // list so neither side reallocates in steady state.
+        let mut delivered = std::mem::take(&mut self.delivered_scratch);
+        self.net.drain_delivered_into(&mut delivered);
+        for &(pkt, _t) in &delivered {
             let info = self.net.packet(pkt);
             match info.kind {
                 PacketKind::Request => {
@@ -414,6 +429,7 @@ impl Simulation {
                 }
             }
         }
+        self.delivered_scratch = delivered;
 
         // 3. MC service.
         for i in 0..self.mcs.len() {

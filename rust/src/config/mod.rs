@@ -12,6 +12,6 @@
 pub mod platform;
 
 pub use platform::{
-    MemModel, PlacementPreset, PlatformBuilder, PlatformConfig, RoutingAlgorithm, SteppingMode,
-    TopologyKind,
+    Fidelity, MemModel, PlacementPreset, PlatformBuilder, PlatformConfig, RoutingAlgorithm,
+    SteppingMode, TopologyKind,
 };

@@ -65,6 +65,56 @@ pub enum SteppingMode {
     Dense,
 }
 
+/// Which latency backend mapped runs execute on.
+///
+/// Unlike [`SteppingMode`] (two ways to advance the same cycle-accurate
+/// engine, bit-identical results), the fidelity knob swaps the engine
+/// itself:
+///
+/// * [`Fidelity::CycleAccurate`] — **default**: the full flit-level
+///   co-simulation (`Network` + PEs + MCs). Exact, and the only backend
+///   whose numbers the paper tables quote.
+/// * [`Fidelity::Analytical`] — the contention-aware closed-form model in
+///   [`analytical`](crate::accel::analytical): Eq.-6-style per-PE service
+///   times plus M/D/1-style queueing corrections at MCs and on individual
+///   links, solved by fixed-point iteration. Orders of magnitude faster
+///   and the only way to sweep 16×16+ fabrics, but an *estimate* — use it
+///   for ranking mappings and scaling studies, not for quoting absolute
+///   cycle counts (see ARCHITECTURE.md for the validated error envelope).
+///
+/// The knob rides on [`PlatformConfig`] so the Scenario engine, the CLI
+/// (`--fidelity analytical`) and every experiment switch backends without
+/// touching dispatch code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Fidelity {
+    /// Full flit-level co-simulation (default).
+    #[default]
+    CycleAccurate,
+    /// Contention-aware closed-form estimate; no `Network` is built.
+    Analytical,
+}
+
+impl std::str::FromStr for Fidelity {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "cycle-accurate" | "cycle" | "exact" => Ok(Self::CycleAccurate),
+            "analytical" | "model" => Ok(Self::Analytical),
+            other => anyhow::bail!("unknown fidelity '{other}' (cycle-accurate|analytical)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Fidelity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::CycleAccurate => "cycle-accurate",
+            Self::Analytical => "analytical",
+        })
+    }
+}
+
 /// Full platform configuration. Time unit throughout the simulator is one
 /// **router cycle** (NoC clock, 2 GHz by default → 0.5 ns).
 #[derive(Debug, Clone, PartialEq)]
@@ -114,6 +164,9 @@ pub struct PlatformConfig {
     /// Clock-advance strategy (see [`SteppingMode`]). Results are
     /// bit-identical across modes; only wall-clock time differs.
     pub stepping: SteppingMode,
+    /// Latency backend (see [`Fidelity`]): the exact flit-level simulator
+    /// (default) or the fast contention-aware analytical model.
+    pub fidelity: Fidelity,
 }
 
 /// Builder for [`PlatformConfig`]: arbitrary W×H fabrics (mesh or torus,
@@ -258,6 +311,13 @@ impl PlatformBuilder {
         self
     }
 
+    /// Latency backend: cycle-accurate (default) or the fast analytical
+    /// model (see [`Fidelity`]).
+    pub fn fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.cfg.fidelity = fidelity;
+        self
+    }
+
     /// Validate and return the configuration. Every structural error —
     /// mesh too small, MC ids out of range or duplicated, no PE left, a
     /// flit smaller than one datum — is reported here rather than deep
@@ -311,6 +371,7 @@ impl PlatformConfig {
             mem_model: MemModel::Queued,
             max_phase_cycles: 2_000_000_000,
             stepping: SteppingMode::EventDriven,
+            fidelity: Fidelity::CycleAccurate,
         }
     }
 
@@ -509,6 +570,19 @@ mod tests {
         assert_eq!(PlatformConfig::default_2mc().stepping, SteppingMode::EventDriven);
         let dense = PlatformConfig::builder().stepping(SteppingMode::Dense).build().unwrap();
         assert_eq!(dense.stepping, SteppingMode::Dense);
+    }
+
+    #[test]
+    fn fidelity_defaults_to_cycle_accurate_and_parses() {
+        assert_eq!(PlatformConfig::default_2mc().fidelity, Fidelity::CycleAccurate);
+        let fast = PlatformConfig::builder().fidelity(Fidelity::Analytical).build().unwrap();
+        assert_eq!(fast.fidelity, Fidelity::Analytical);
+
+        assert_eq!("analytical".parse::<Fidelity>().unwrap(), Fidelity::Analytical);
+        assert_eq!("cycle-accurate".parse::<Fidelity>().unwrap(), Fidelity::CycleAccurate);
+        assert!("fast".parse::<Fidelity>().is_err());
+        assert_eq!(Fidelity::Analytical.to_string(), "analytical");
+        assert_eq!(Fidelity::CycleAccurate.to_string(), "cycle-accurate");
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::config::{MemModel, PlatformConfig};
 use crate::dnn::LayerSpec;
 use crate::util::{table::fmt_pct, Table};
 
-use super::engine::Scenario;
+use super::engine::{Scenario, SweepResults};
 use super::Report;
 
 /// Memory disciplines ablated.
@@ -52,9 +52,18 @@ pub struct Obs {
     pub sw10_improvement: f64,
 }
 
+/// The full ablation data: the observations plus the raw sweep grid.
+#[derive(Debug)]
+pub struct AblationData {
+    /// Kernel-major observations over {memory model × flit width}.
+    pub obs: Vec<Obs>,
+    /// The raw sweep grid (the `--json` payload).
+    pub results: SweepResults,
+}
+
 /// Run the full ablation grid — memory discipline × flit width — over an
 /// unsaturated (k=5) and the saturated (k=13) Fig. 9 point.
-pub fn data(quick: bool) -> Vec<Obs> {
+pub fn data(quick: bool) -> AblationData {
     let kernels: &[u64] = if quick { &[5, 9] } else { &[1, 5, 9, 13] };
     let tasks = if quick { 4704 / 8 } else { 4704 };
     let mut scenario = Scenario::new("ablation")
@@ -91,12 +100,18 @@ pub fn data(quick: bool) -> Vec<Obs> {
             }
         }
     }
-    out
+    AblationData { obs: out, results }
 }
 
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let obs = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(d: &AblationData) -> Report {
+    let obs = &d.obs;
     let mut t = Table::new([
         "kernel",
         "mem model",
@@ -105,7 +120,7 @@ pub fn run(quick: bool) -> Report {
         "row-major ρ",
         "sampling-10 improvement",
     ]);
-    for o in &obs {
+    for o in obs {
         t.row([
             format!("{0}x{0}", o.kernel),
             format!("{:?}", o.model),
@@ -138,7 +153,7 @@ mod tests {
     fn memory_discipline_is_not_the_knee() {
         // Queued vs Parallel at the paper's 256-bit flit: identical ρ —
         // the response path, not memory, is the binding resource.
-        let obs = data(true);
+        let obs = data(true).obs;
         for k in [5u64, 9] {
             let q = obs
                 .iter()
@@ -161,7 +176,7 @@ mod tests {
     fn single_resource_relief_does_not_move_the_knee() {
         // Wider flits alone (queued memory) leave k=9 saturated: the
         // memory channel binds at the same point.
-        let obs = data(true);
+        let obs = data(true).obs;
         let base = obs
             .iter()
             .find(|o| o.kernel == 9 && o.flit_bits == 256 && o.model == MemModel::Queued)
@@ -182,7 +197,7 @@ mod tests {
     fn relieving_both_resources_moves_the_knee_out() {
         // Parallel memory + 1024-bit flits de-saturates k=9: ρ returns
         // and the travel-time mapper wins again.
-        let obs = data(true);
+        let obs = data(true).obs;
         let base = obs
             .iter()
             .find(|o| o.kernel == 9 && o.flit_bits == 256 && o.model == MemModel::Queued)
@@ -208,7 +223,7 @@ mod tests {
 
     #[test]
     fn below_the_knee_everything_wins() {
-        let obs = data(true);
+        let obs = data(true).obs;
         for o in obs.iter().filter(|o| o.kernel == 5) {
             assert!(o.rho > 0.10, "{:?}/{}: ρ {:.3}", o.model, o.flit_bits, o.rho);
             assert!(

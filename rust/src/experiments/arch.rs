@@ -58,7 +58,12 @@ pub fn data(quick: bool) -> SweepResults {
 
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let results = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(results: &SweepResults) -> Report {
     let mut t = Table::new([
         "architecture",
         "mapping",

@@ -12,7 +12,7 @@ use crate::mapping::MappedRun;
 use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
-use super::engine::Scenario;
+use super::engine::{Scenario, SweepResults};
 use super::Report;
 
 /// Mappings compared in Fig. 10 (registry names).
@@ -34,8 +34,17 @@ pub struct ArchPoint {
     pub runs: Vec<MappedRun>,
 }
 
+/// The full Fig. 10 data: the per-architecture points plus the raw grid.
+#[derive(Debug)]
+pub struct Fig10Data {
+    /// One point per [`PRESETS`] architecture.
+    pub points: Vec<ArchPoint>,
+    /// The raw sweep grid (the `--json` payload).
+    pub results: SweepResults,
+}
+
 /// Run both architectures on C1.
-pub fn data(quick: bool) -> Vec<ArchPoint> {
+pub fn data(quick: bool) -> Fig10Data {
     let mut layer = lenet5(6).remove(0);
     if quick {
         layer.tasks /= 4;
@@ -46,7 +55,7 @@ pub fn data(quick: bool) -> Vec<ArchPoint> {
         scenario = scenario.platform(format!("{} MCs", cfg.mc_nodes.len()), cfg);
     }
     let results = scenario.run().expect("fig10 grid");
-    PRESETS
+    let points = PRESETS
         .into_iter()
         .enumerate()
         .map(|(pi, preset)| ArchPoint {
@@ -55,7 +64,8 @@ pub fn data(quick: bool) -> Vec<ArchPoint> {
             pes: results.platforms[pi].num_pes(),
             runs: results.runs_for(pi, 0).into_iter().cloned().collect(),
         })
-        .collect()
+        .collect();
+    Fig10Data { points, results }
 }
 
 /// Row-major fast/slow gap for an architecture (ρ over accumulated time).
@@ -70,7 +80,13 @@ pub fn sw10_improvement(p: &ArchPoint) -> f64 {
 
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let points = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(d: &Fig10Data) -> Report {
+    let points = &d.points;
     let mut t = Table::new([
         "architecture",
         "PEs",
@@ -79,7 +95,7 @@ pub fn run(quick: bool) -> Report {
         "ρ accum",
         "improv vs row-major",
     ]);
-    for p in &points {
+    for p in points {
         let base = p.runs[0].summary.latency;
         for r in &p.runs {
             t.row([
@@ -112,7 +128,7 @@ mod tests {
 
     #[test]
     fn four_mcs_narrow_the_row_major_gap() {
-        let points = data(true);
+        let points = data(true).points;
         let gap2 = row_major_gap(&points[0]);
         let gap4 = row_major_gap(&points[1]);
         assert!(gap4 < gap2, "4-MC gap {gap4:.3} should be below 2-MC gap {gap2:.3}");
@@ -120,7 +136,7 @@ mod tests {
 
     #[test]
     fn improvement_shrinks_with_more_mcs() {
-        let points = data(true);
+        let points = data(true).points;
         let i2 = sw10_improvement(&points[0]);
         let i4 = sw10_improvement(&points[1]);
         assert!(
@@ -132,7 +148,7 @@ mod tests {
 
     #[test]
     fn both_architectures_still_benefit() {
-        for p in data(true) {
+        for p in data(true).points {
             let base = p.runs[0].summary.latency;
             let post = p.runs[2].summary.latency;
             assert!(post <= base, "{} MCs: oracle must not lose", p.mcs);

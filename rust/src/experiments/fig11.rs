@@ -16,7 +16,7 @@ use crate::dnn::{lenet5, LayerSpec};
 use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
-use super::engine::Scenario;
+use super::engine::{Scenario, SweepResults};
 use super::Report;
 
 /// The six Fig. 11 mappings (registry names), in paper order.
@@ -41,6 +41,8 @@ pub struct Fig11Data {
     pub layers: Vec<LayerSpec>,
     /// One series per Fig. 11 strategy, in paper order.
     pub series: Vec<StrategySeries>,
+    /// The raw sweep grid (the `--json` payload).
+    pub results: SweepResults,
 }
 
 /// Run the whole model under every Fig. 11 strategy.
@@ -65,12 +67,17 @@ pub fn data(quick: bool) -> Fig11Data {
             StrategySeries { mapper: results.mapper_labels[mi].clone(), layer_latency, total }
         })
         .collect();
-    Fig11Data { layers, series }
+    Fig11Data { layers, series, results }
 }
 
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let d = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(d: &Fig11Data) -> Report {
     let base = &d.series[0];
     let mut t = Table::new(
         std::iter::once("mapping".to_string())

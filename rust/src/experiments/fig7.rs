@@ -15,7 +15,7 @@ use crate::dnn::{lenet5, LayerSpec};
 use crate::mapping::{distance::pe_distances, MappedRun};
 use crate::util::{table::fmt_pct, Table};
 
-use super::engine::Scenario;
+use super::engine::{Scenario, SweepResults};
 use super::Report;
 
 /// The four mappings shown in Fig. 7 (registry names), in subfigure order.
@@ -32,6 +32,8 @@ pub struct Fig7Data {
     pub pe_order: Vec<usize>,
     /// PE mesh node ids in dense order.
     pub pe_nodes: Vec<usize>,
+    /// The raw sweep grid (the `--json` payload).
+    pub results: SweepResults,
 }
 
 /// Run the experiment.
@@ -52,12 +54,17 @@ pub fn data(quick: bool) -> Fig7Data {
     let pe_nodes = cfg.pe_nodes();
     let mut pe_order: Vec<usize> = (0..cfg.num_pes()).collect();
     pe_order.sort_by_key(|&i| (d[i], pe_nodes[i]));
-    Fig7Data { layer, runs, pe_order, pe_nodes }
+    Fig7Data { layer, runs, pe_order, pe_nodes, results }
 }
 
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let d = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(d: &Fig7Data) -> Report {
     let cfg = PlatformConfig::default_2mc();
     let dists = pe_distances(&cfg);
     let mut body = format!(

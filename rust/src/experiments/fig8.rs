@@ -16,7 +16,7 @@ use crate::mapping::MappedRun;
 use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
-use super::engine::Scenario;
+use super::engine::{Scenario, SweepResults};
 use super::Report;
 
 /// Output-channel sweep of Fig. 8 (§5.1: "from 3 to 48 … default is 6").
@@ -38,8 +38,17 @@ pub struct SweepPoint {
     pub runs: Vec<MappedRun>,
 }
 
+/// The full Fig. 8 data: the per-scale points plus the raw sweep grid.
+#[derive(Debug)]
+pub struct Fig8Data {
+    /// One point per swept channel count.
+    pub points: Vec<SweepPoint>,
+    /// The raw sweep grid (the `--json` payload).
+    pub results: SweepResults,
+}
+
 /// Run the sweep.
-pub fn data(quick: bool) -> Vec<SweepPoint> {
+pub fn data(quick: bool) -> Fig8Data {
     let cfg = PlatformConfig::default_2mc();
     let channels: Vec<u64> = if quick { vec![3, 6] } else { CHANNELS.to_vec() };
     let layers: Vec<_> = channels.iter().map(|&ch| lenet5(ch).remove(0)).collect();
@@ -49,7 +58,7 @@ pub fn data(quick: bool) -> Vec<SweepPoint> {
         .mappers(MAPPERS)
         .run()
         .expect("fig8 grid");
-    channels
+    let points = channels
         .into_iter()
         .enumerate()
         .map(|(li, ch)| {
@@ -61,12 +70,19 @@ pub fn data(quick: bool) -> Vec<SweepPoint> {
                 runs: results.runs_for(0, li).into_iter().cloned().collect(),
             }
         })
-        .collect()
+        .collect();
+    Fig8Data { points, results }
 }
 
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let points = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(d: &Fig8Data) -> Report {
+    let points = &d.points;
     let mut t = Table::new([
         "channels",
         "tasks",
@@ -77,7 +93,7 @@ pub fn run(quick: bool) -> Report {
         "latency",
         "improv vs row-major",
     ]);
-    for p in &points {
+    for p in points {
         let base_max = p.runs[0]
             .summary
             .accum_travel
@@ -126,7 +142,7 @@ mod tests {
     #[test]
     fn row_major_gap_is_scale_invariant() {
         // The ≈20% gap appears at both swept scales.
-        let points = data(true);
+        let points = data(true).points;
         for p in &points {
             let even = &p.runs[0];
             assert!(
@@ -140,7 +156,7 @@ mod tests {
 
     #[test]
     fn travel_time_improves_at_every_scale() {
-        let points = data(true);
+        let points = data(true).points;
         for p in &points {
             let base = p.runs[0].summary.latency;
             let sw10 = p.runs[2].summary.latency;
@@ -152,7 +168,7 @@ mod tests {
 
     #[test]
     fn iterations_match_paper_axis() {
-        let points = data(true);
+        let points = data(true).points;
         assert_eq!(points[0].iterations, 168); // 0.5x
         assert_eq!(points[1].iterations, 336); // 1x
     }

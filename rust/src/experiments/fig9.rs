@@ -15,7 +15,7 @@ use crate::mapping::MappedRun;
 use crate::metrics::improvement;
 use crate::util::{table::fmt_pct, Table};
 
-use super::engine::Scenario;
+use super::engine::{Scenario, SweepResults};
 use super::table1::KERNELS;
 use super::Report;
 
@@ -37,8 +37,17 @@ pub struct KernelPoint {
     pub runs: Vec<MappedRun>,
 }
 
+/// The full Fig. 9 data: the per-kernel points plus the raw sweep grid.
+#[derive(Debug)]
+pub struct Fig9Data {
+    /// One point per swept kernel size.
+    pub points: Vec<KernelPoint>,
+    /// The raw sweep grid (the `--json` payload).
+    pub results: SweepResults,
+}
+
 /// Run the sweep. `quick` trims to three kernel sizes and 1/8 tasks.
-pub fn data(quick: bool) -> Vec<KernelPoint> {
+pub fn data(quick: bool) -> Fig9Data {
     let cfg = PlatformConfig::default_2mc();
     let kernels: Vec<u64> = if quick { vec![1, 5, 13] } else { KERNELS.to_vec() };
     let tasks = if quick { 4704 / 8 } else { 4704 };
@@ -50,7 +59,7 @@ pub fn data(quick: bool) -> Vec<KernelPoint> {
         .mappers(MAPPERS)
         .run()
         .expect("fig9 grid");
-    kernels
+    let points = kernels
         .into_iter()
         .enumerate()
         .map(|(li, k)| KernelPoint {
@@ -58,15 +67,21 @@ pub fn data(quick: bool) -> Vec<KernelPoint> {
             flits: results.layers[li].profile(&cfg).resp_flits,
             runs: results.runs_for(0, li).into_iter().cloned().collect(),
         })
-        .collect()
+        .collect();
+    Fig9Data { points, results }
 }
 
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let points = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(d: &Fig9Data) -> Report {
     let mut t = Table::new(["kernel", "flits", "mapping", "latency", "improv vs row-major", "ρ accum"]);
     let mut best = 0.0f64;
-    for p in &points {
+    for p in &d.points {
         let base = p.runs[0].summary.latency;
         for (mi, r) in p.runs.iter().enumerate() {
             let imp = improvement(base, r.summary.latency);
@@ -102,7 +117,7 @@ mod tests {
         // ρ is large while the MCs are unsaturated (k ≤ 5 here); past the
         // knee the 64 GB/s bandwidth model serialises everyone equally and
         // ρ collapses (see EXPERIMENTS.md §fig9 for the analysis).
-        for p in data(true) {
+        for p in data(true).points {
             if p.kernel <= 5 {
                 assert!(
                     p.runs[0].summary.rho_accum > 0.05,
@@ -118,7 +133,7 @@ mod tests {
     fn distance_mapping_never_wins_meaningfully() {
         // Paper: "All distance-based mapping worsens the situation". Allow
         // sub-2% noise wins at the smallest packets.
-        for p in data(true) {
+        for p in data(true).points {
             let base = p.runs[0].summary.latency;
             let dist = p.runs[1].summary.latency;
             assert!(
@@ -131,7 +146,7 @@ mod tests {
 
     #[test]
     fn distance_mapping_clearly_loses_under_congestion() {
-        for p in data(true) {
+        for p in data(true).points {
             if p.kernel >= 5 {
                 let base = p.runs[0].summary.latency;
                 let dist = p.runs[1].summary.latency;
@@ -148,7 +163,7 @@ mod tests {
     fn travel_time_never_loses_meaningfully() {
         // Post-run wins below the knee and must stay within rounding noise
         // of row-major even in the saturated regime.
-        for p in data(true) {
+        for p in data(true).points {
             let base = p.runs[0].summary.latency;
             let post = p.runs[4].summary.latency;
             assert!(
@@ -166,7 +181,7 @@ mod tests {
     fn static_latency_degrades_with_flits() {
         // Static-latency's improvement at 1 flit should exceed its
         // improvement at 22 flits (congestion excluded from Eq. 6).
-        let points = data(true);
+        let points = data(true).points;
         let imp = |p: &KernelPoint| {
             improvement(p.runs[0].summary.latency, p.runs[2].summary.latency)
         };

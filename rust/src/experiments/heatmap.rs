@@ -17,11 +17,20 @@ use crate::dnn::lenet5;
 use crate::noc::topology::{NUM_PORTS, PORT_NAMES};
 use crate::util::Table;
 
-use super::engine::Scenario;
+use super::engine::{Scenario, SweepResults};
 use super::Report;
 
+/// The heatmap data: the per-node port counters plus the raw sweep grid.
+#[derive(Debug)]
+pub struct HeatmapData {
+    /// Switched-flit counts per node × output port.
+    pub per_port: Vec<[u64; NUM_PORTS]>,
+    /// The raw sweep grid (the `--json` payload).
+    pub results: SweepResults,
+}
+
 /// Per-node switched-flit counts for C1 under row-major mapping.
-pub fn data(quick: bool) -> Vec<[u64; NUM_PORTS]> {
+pub fn data(quick: bool) -> HeatmapData {
     let cfg = PlatformConfig::default_2mc();
     let mut layer = lenet5(6).remove(0);
     if quick {
@@ -33,12 +42,19 @@ pub fn data(quick: bool) -> Vec<[u64; NUM_PORTS]> {
         .mapper("row-major")
         .run()
         .expect("heatmap grid");
-    results.run(0, 0, 0).result.net.switched_per_port.clone()
+    let per_port = results.run(0, 0, 0).result.net.switched_per_port.clone();
+    HeatmapData { per_port, results }
 }
 
 /// Render the report.
 pub fn run(quick: bool) -> Report {
-    let per_port = data(quick);
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed sweep (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(d: &HeatmapData) -> Report {
+    let per_port = &d.per_port;
     let cfg = PlatformConfig::default_2mc();
     let mut t = Table::new(
         std::iter::once("node".to_string())
@@ -73,7 +89,7 @@ mod tests {
 
     #[test]
     fn mc_routers_are_the_hotspot() {
-        let per_port = data(true);
+        let per_port = data(true).per_port;
         let cfg = PlatformConfig::default_2mc();
         let totals: Vec<u64> = per_port.iter().map(|p| p.iter().sum()).collect();
         let mc_mean: f64 = cfg.mc_nodes.iter().map(|&n| totals[n] as f64).sum::<f64>()

@@ -15,6 +15,7 @@
 //! | [`zoo`]    | extension — Fig. 11's question across the whole model zoo |
 //! | [`serving`] | extension — saturation curves under sustained request streams |
 //! | [`tournament`] | extension — every registered mapper × zoo × {mesh, torus} leaderboards |
+//! | [`scale`] | extension — big-mesh scaling (16–64²) on the analytical fast path |
 //!
 //! Every simulating experiment (fig7–fig11, ablation, heatmap) builds a
 //! declarative {platforms × layers × mappers} grid on the
@@ -43,6 +44,7 @@ pub mod fig11;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod scale;
 pub mod serving;
 pub mod table1;
 pub mod tournament;
@@ -96,6 +98,7 @@ pub fn all_reports(quick: bool) -> Vec<Report> {
         zoo::run(quick),
         serving::run(quick),
         tournament::run(quick),
+        scale::run(quick),
     ]
 }
 
@@ -114,14 +117,15 @@ pub fn run_by_id(id: &str, quick: bool) -> Option<Report> {
         "zoo" => Some(zoo::run(quick)),
         "serving" => Some(serving::run(quick)),
         "tournament" => Some(tournament::run(quick)),
+        "scale" => Some(scale::run(quick)),
         _ => None,
     }
 }
 
 /// Ids of all experiments, in paper order (extensions last).
-pub const ALL_IDS: [&str; 12] = [
+pub const ALL_IDS: [&str; 13] = [
     "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "arch", "ablation", "heatmap", "zoo",
-    "serving", "tournament",
+    "serving", "tournament", "scale",
 ];
 
 #[cfg(test)]

@@ -11,14 +11,14 @@
 //!
 //! The mapper roster is *derived from the registry* — non-family entries
 //! enter by name, families by representative members (`sampling-1`,
-//! `sampling-10`, `annealing-4`) — so a newly registered strategy joins
-//! the tournament automatically.
+//! `sampling-10`, `annealing-4`, `turbo-2`) — so a newly registered
+//! strategy joins the tournament automatically.
 //!
 //! Two invariants the test suite pins on this grid:
 //!
-//! * the annealing mapper never loses to its own seed — its refinement
-//!   set always contains the even mapping, so its measured latency is
-//!   ≤ row-major's in every single cell;
+//! * the search mappers (annealing, turbo) never lose to their own seed —
+//!   their refinement sets always contain the even mapping, so their
+//!   measured latency is ≤ row-major's in every single cell;
 //! * the whole tournament fingerprints identically for any `--jobs`
 //!   width, annealing's seeded search included
 //!   (`rust/tests/determinism.rs`).
@@ -46,6 +46,7 @@ pub fn mappers() -> Vec<String> {
         .flat_map(|e| match e.name() {
             "sampling-<W>" => vec!["sampling-1".to_string(), "sampling-10".to_string()],
             "annealing-<B>" => vec!["annealing-4".to_string()],
+            "turbo-<B>" => vec!["turbo-2".to_string()],
             name => vec![name.to_string()],
         })
         .collect()
@@ -181,9 +182,13 @@ pub fn report(sweeps: &[TournamentSweep]) -> Report {
          top; the static heuristics split by regime — distance over-corrects \
          under congestion, LOCAL under-corrects by design, greedy lands \
          near static-latency because they optimise the same Eq. 6 model. \
-         Annealing can never fall below row-major (its seed is always in \
-         the re-simulated short-list), so its Δ column is non-negative by \
-         construction — the monotone-accept invariant the test suite pins.\n",
+         The search mappers (annealing, turbo) can never fall below \
+         row-major (their seed is always in the re-simulated short-list), \
+         so their Δ columns are non-negative by construction — the \
+         monotone-accept invariant the test suite pins. Turbo searches \
+         16× longer per budget over the contention-aware analytical \
+         model, so it typically matches or beats annealing at equal \
+         re-simulation cost.\n",
     ));
     Report { id: "tournament", title: "Cross-mapper tournament over the model zoo", body }
 }
@@ -227,6 +232,10 @@ mod tests {
             .iter()
             .position(|s| s.starts_with("annealing"))
             .expect("annealing is on the roster");
+        let turbo_mi = roster
+            .iter()
+            .position(|s| s.starts_with("turbo"))
+            .expect("turbo is on the roster");
         for (s, name) in sweeps.iter().zip(&nets) {
             assert_eq!(s.workload.name, *name);
             assert_eq!(s.results.platform_labels, PLATFORMS.to_vec());
@@ -237,18 +246,20 @@ mod tests {
                 let tasks = s.results.layers[c.layer].tasks;
                 assert_eq!(c.run.counts.iter().sum::<u64>(), tasks, "{name}");
             }
-            // The monotone-accept invariant, per cell: annealing's
-            // refinement set contains its row-major seed, so it can never
-            // report a worse latency than the row-major cell.
+            // The monotone-accept invariant, per cell: the search mappers'
+            // refinement sets contain their row-major seed, so neither can
+            // ever report a worse latency than the row-major cell.
             for pi in 0..PLATFORMS.len() {
                 for li in 0..layers {
                     let seed = s.results.run(pi, li, 0).summary.latency;
-                    let ours = s.results.run(pi, li, annealing_mi).summary.latency;
-                    assert!(
-                        ours <= seed,
-                        "{name}/{}/layer {li}: annealing {ours} lost to its seed {seed}",
-                        PLATFORMS[pi]
-                    );
+                    for (mi, who) in [(annealing_mi, "annealing"), (turbo_mi, "turbo")] {
+                        let ours = s.results.run(pi, li, mi).summary.latency;
+                        assert!(
+                            ours <= seed,
+                            "{name}/{}/layer {li}: {who} {ours} lost to its seed {seed}",
+                            PLATFORMS[pi]
+                        );
+                    }
                 }
             }
         }

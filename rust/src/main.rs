@@ -2,12 +2,13 @@
 //! inspection, and PJRT LeNet inference, all from the command line.
 //!
 //! ```text
-//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|all>
-//!           [--quick] [--jobs N] [--json PATH]   (--json: zoo/serving/tournament only)
+//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|scale|all>
+//!           [--quick] [--jobs N] [--json PATH]   (--json: every experiment but table1)
 //! noctt sim --layer <name|k<N>> --strategy <name>
 //!           [--workload <zoo-name|path.wl>] [--channels N]
 //!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //!           [--topology mesh|torus] [--routing xy|yx|west-first]
+//!           [--fidelity cycle-accurate|analytical]
 //! noctt serve [--workload <zoo-name|path.wl>] [--strategy <name>]
 //!             [--arrival uniform|poisson|bursty|bursty-<k>] [--load F]
 //!             [--requests N] [--window N] [--seed N] [--trim]
@@ -247,12 +248,13 @@ fn usage() -> ! {
         "noctt — travel-time based task mapping for NoC-based DNN accelerators\n\
          \n\
          Usage:\n\
-         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|all>\n\
+         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|scale|all>\n\
          \x20           [--quick] [--jobs N] [--json PATH]\n\
          \x20 noctt sim --layer <name|k<N>> --strategy <s> [--mcs 2|4]\n\
          \x20           [--workload <zoo-name|path.wl>] [--channels N]\n\
          \x20           [--mesh WxH] [--mc-at n1,n2,...]\n\
          \x20           [--topology mesh|torus] [--routing xy|yx|west-first]\n\
+         \x20           [--fidelity cycle-accurate|analytical]\n\
          \x20 noctt serve [--workload <zoo-name|path.wl>] [--strategy <s>]\n\
          \x20             [--arrival uniform|poisson|bursty|bursty-<k>] [--load F]\n\
          \x20             [--requests N] [--window N] [--seed N] [--trim]\n\
@@ -268,7 +270,9 @@ fn usage() -> ! {
          --jobs N  sweep worker threads (default: all cores; 1 = serial;\n\
          \x20          also settable as the NOCTT_JOBS environment variable)\n\
          --json PATH  also write the sweep's raw data as JSON\n\
-         \x20          (zoo/serving/tournament)\n\
+         \x20          (every experiment but table1)\n\
+         --fidelity  latency backend: cycle-accurate co-simulation (default)\n\
+         \x20          or the contention-aware analytical model (fast, approximate)\n\
          --load F  serve: offered load relative to the bottleneck layer's\n\
          \x20          capacity (1.0 = arrivals exactly match its drain rate)\n\
          --topology/--routing  the NoC architecture axis: wrap-around torus\n\
@@ -316,6 +320,9 @@ fn parse_platform(a: &args::Args) -> Result<PlatformConfig> {
     }
     if let Some(r) = a.get("routing") {
         b = b.routing(r.parse().context("--routing takes xy|yx|west-first")?);
+    }
+    if let Some(f) = a.get("fidelity") {
+        b = b.fidelity(f.parse().context("--fidelity takes cycle-accurate|analytical")?);
     }
     b.build()
 }
@@ -381,31 +388,80 @@ fn cmd_exp(a: &args::Args) -> Result<()> {
     // the JSON emitter from the same data (no double simulation).
     if let Some(path) = a.get("json") {
         let path = std::path::Path::new(path);
-        match id.as_str() {
+        let write = |json: String| {
+            std::fs::write(path, json).with_context(|| format!("writing {}", path.display()))
+        };
+        use experiments as exp;
+        let report = match id.as_str() {
+            "fig7" => {
+                let d = exp::fig7::data(quick);
+                write(d.results.to_json())?;
+                exp::fig7::report(&d)
+            }
+            "fig8" => {
+                let d = exp::fig8::data(quick);
+                write(d.results.to_json())?;
+                exp::fig8::report(&d)
+            }
+            "fig9" => {
+                let d = exp::fig9::data(quick);
+                write(d.results.to_json())?;
+                exp::fig9::report(&d)
+            }
+            "fig10" => {
+                let d = exp::fig10::data(quick);
+                write(d.results.to_json())?;
+                exp::fig10::report(&d)
+            }
+            "fig11" => {
+                let d = exp::fig11::data(quick);
+                write(d.results.to_json())?;
+                exp::fig11::report(&d)
+            }
+            "arch" => {
+                let results = exp::arch::data(quick);
+                write(results.to_json())?;
+                exp::arch::report(&results)
+            }
+            "ablation" => {
+                let d = exp::ablation::data(quick);
+                write(d.results.to_json())?;
+                exp::ablation::report(&d)
+            }
+            "heatmap" => {
+                let d = exp::heatmap::data(quick);
+                write(d.results.to_json())?;
+                exp::heatmap::report(&d)
+            }
             "zoo" => {
-                let sweeps = experiments::zoo::data(quick);
-                std::fs::write(path, experiments::zoo::to_json(&sweeps))
-                    .with_context(|| format!("writing {}", path.display()))?;
-                println!("{}", experiments::zoo::report(&sweeps));
+                let sweeps = exp::zoo::data(quick);
+                write(exp::zoo::to_json(&sweeps))?;
+                exp::zoo::report(&sweeps)
             }
             "serving" => {
-                let sweep = experiments::serving::data(quick)?;
+                let sweep = exp::serving::data(quick)?;
                 sweep
                     .write_json(path)
                     .with_context(|| format!("writing {}", path.display()))?;
-                println!("{}", experiments::serving::report(&sweep));
+                exp::serving::report(&sweep)
             }
             "tournament" => {
-                let sweeps = experiments::tournament::data(quick);
-                std::fs::write(path, experiments::tournament::to_json(&sweeps))
-                    .with_context(|| format!("writing {}", path.display()))?;
-                println!("{}", experiments::tournament::report(&sweeps));
+                let sweeps = exp::tournament::data(quick);
+                write(exp::tournament::to_json(&sweeps))?;
+                exp::tournament::report(&sweeps)
+            }
+            "scale" => {
+                let d = exp::scale::data(quick);
+                write(exp::scale::to_json(&d))?;
+                exp::scale::report(&d)
             }
             other => bail!(
-                "--json is supported for the 'zoo', 'serving' and 'tournament' experiments \
-                 (got '{other}')"
+                "--json is not supported for '{other}' — every simulating experiment \
+                 ({:?} minus 'table1') emits its sweep grid as JSON",
+                experiments::ALL_IDS
             ),
-        }
+        };
+        println!("{report}");
         eprintln!("wrote {}", path.display());
         return Ok(());
     }

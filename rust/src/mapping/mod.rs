@@ -40,6 +40,10 @@
 //! * [`annealing::Annealing`] — threshold-accepting search over count
 //!   vectors, re-simulating the best candidates cycle-accurately (the
 //!   Turbo-Charged Mapper pattern, Gilbert et al.).
+//! * [`turbo::Turbo`] — the same search recipe with the contention-aware
+//!   [analytical backend](crate::accel::analytical) as its objective and
+//!   a 16× longer walk per budget; only the top-B candidates are
+//!   verified cycle-accurately.
 //!
 //! The [`Strategy`] enum survives as a thin back-compat shim over the
 //! paper five (it implements [`Mapper`] by delegation); new code should
@@ -54,6 +58,7 @@ pub mod registry;
 pub mod row_major;
 pub mod static_latency;
 pub mod travel_time;
+pub mod turbo;
 
 pub use mapper::{MapCtx, Mapper};
 pub use registry::{registry, Registry, RegistryEntry};
@@ -158,7 +163,10 @@ pub fn run_layer(cfg: &PlatformConfig, layer: &LayerSpec, strategy: Strategy) ->
     strategy.to_mapper().execute(&MapCtx::new(cfg, layer))
 }
 
-/// Execute a layer with fully precomputed counts.
+/// Execute a layer with fully precomputed counts on the platform's
+/// configured [`Fidelity`](crate::config::Fidelity) backend: the
+/// cycle-accurate co-simulation, or the closed-form
+/// [`analytical`](crate::accel::analytical) estimate (no `Network` built).
 pub(crate) fn run_precomputed(
     cfg: &PlatformConfig,
     layer: &LayerSpec,
@@ -167,6 +175,10 @@ pub(crate) fn run_precomputed(
     extra_run: bool,
 ) -> Result<MappedRun> {
     debug_assert_eq!(counts.iter().sum::<u64>(), layer.tasks, "counts must conserve tasks");
+    if cfg.fidelity == crate::config::Fidelity::Analytical {
+        let result = crate::accel::analytical::estimate(cfg, &layer.profile(cfg), &counts);
+        return Ok(finish(label, counts, result, extra_run));
+    }
     let mut sim = Simulation::new(cfg, layer.profile(cfg));
     sim.add_budgets(&counts);
     let result = sim.run_until_done()?;

@@ -33,13 +33,14 @@
 //! assert!(reg.resolve("first-pe-only").is_some());
 //! assert!(reg.resolve("sampling-10").is_some()); // builtins still there
 //! assert!(reg.resolve("annealing-4").is_some()); // the zoo too
+//! assert!(reg.resolve("turbo-2").is_some()); // model-guided top-K search
 //! // Static planners and online (extra-simulation) strategies are
 //! // flagged, which is how `noctt mappers` renders its table.
 //! assert!(reg.entries().iter().any(|e| e.online()));
 //! ```
 
 use crate::mapping::{
-    annealing, distance, greedy, local, row_major, static_latency, travel_time, Mapper,
+    annealing, distance, greedy, local, row_major, static_latency, travel_time, turbo, Mapper,
 };
 
 type Ctor = Box<dyn Fn(&str) -> Option<Box<dyn Mapper>> + Send + Sync>;
@@ -91,7 +92,8 @@ impl Registry {
 
     /// A registry pre-populated with the paper's five strategies (§3–§4)
     /// plus the related-work zoo: greedy load balancing, LOCAL-style
-    /// spatial allocation, and simulated annealing.
+    /// spatial allocation, simulated annealing, and the model-guided
+    /// turbo search.
     pub fn with_builtins() -> Self {
         let mut r = Self::empty();
         r.register("row-major", "even mapping in row order (baseline, §3.2)", |s| {
@@ -130,6 +132,19 @@ impl Registry {
                     .and_then(|b| b.parse::<u64>().ok())
                     .filter(|&b| b >= 1)
                     .map(|b| Box::new(annealing::Annealing(b)) as Box<dyn Mapper>)
+            },
+        );
+        r.register_online(
+            "turbo-<B>",
+            "analytical-model-guided search + verify the B best cycle-accurately (B >= 1)",
+            |s| {
+                if s == "turbo" {
+                    return Some(Box::new(turbo::Turbo::default()) as Box<dyn Mapper>);
+                }
+                s.strip_prefix("turbo-")
+                    .and_then(|b| b.parse::<u64>().ok())
+                    .filter(|&b| b >= 1)
+                    .map(|b| Box::new(turbo::Turbo(b)) as Box<dyn Mapper>)
             },
         );
         r
@@ -207,6 +222,8 @@ mod tests {
             "local",
             "annealing",
             "annealing-4",
+            "turbo",
+            "turbo-2",
         ] {
             assert!(reg.resolve(name).is_some(), "builtin '{name}' must resolve");
         }
@@ -214,8 +231,10 @@ mod tests {
         assert!(reg.resolve("sampling-x").is_none());
         assert!(reg.resolve("annealing-0").is_none(), "budget 0 is invalid");
         assert!(reg.resolve("annealing-x").is_none());
+        assert!(reg.resolve("turbo-0").is_none(), "budget 0 is invalid");
+        assert!(reg.resolve("turbo-x").is_none());
         assert!(reg.resolve("no-such-mapper").is_none());
-        assert_eq!(reg.names().len(), 8);
+        assert_eq!(reg.names().len(), 9);
     }
 
     #[test]
@@ -230,12 +249,14 @@ mod tests {
             "greedy",
             "local",
             "annealing-3",
+            "turbo-3",
         ] {
             let m = reg.resolve(name).unwrap();
             assert_eq!(m.label(), name, "label must round-trip through the registry");
         }
-        // The bare family spec resolves to the default budget.
+        // The bare family specs resolve to the default budgets.
         assert_eq!(reg.resolve("annealing").unwrap().label(), "annealing-8");
+        assert_eq!(reg.resolve("turbo").unwrap().label(), "turbo-4");
     }
 
     #[test]
@@ -243,7 +264,7 @@ mod tests {
         let reg = registry();
         for e in reg.entries() {
             let expect_online =
-                matches!(e.name(), "post-run" | "sampling-<W>" | "annealing-<B>");
+                matches!(e.name(), "post-run" | "sampling-<W>" | "annealing-<B>" | "turbo-<B>");
             assert_eq!(e.online(), expect_online, "{}", e.name());
         }
     }

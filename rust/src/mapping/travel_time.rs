@@ -21,8 +21,8 @@ use std::borrow::Cow;
 
 use anyhow::Result;
 
-use crate::accel::Simulation;
-use crate::config::PlatformConfig;
+use crate::accel::{SimResult, Simulation};
+use crate::config::{Fidelity, PlatformConfig};
 use crate::dnn::LayerSpec;
 use crate::mapping::{finish, row_major, run_precomputed, MapCtx, MappedRun, Mapper};
 use crate::util::apportion::inverse_proportional;
@@ -103,15 +103,38 @@ fn mean_travel_per_pe(records: &[crate::accel::TaskRecord], num_pes: usize) -> V
         .collect()
 }
 
+/// Per-PE mean travel times from an aggregate [`SimResult`] (the
+/// analytical backend has no per-task records, only totals); the global
+/// mean substitutes for PEs with no tasks, matching
+/// [`mean_travel_per_pe`].
+fn mean_travel_from_totals(res: &SimResult) -> Vec<f64> {
+    let means = res.mean_travel_times();
+    let covered: Vec<f64> = means.iter().filter_map(|m| *m).collect();
+    let global_mean = if covered.is_empty() {
+        1.0
+    } else {
+        covered.iter().sum::<f64>() / covered.len() as f64
+    };
+    means.into_iter().map(|m| m.unwrap_or(global_mean)).collect()
+}
+
 /// The Eq. 4–5 post-run allocation: profile with an even-mapped run, then
-/// apportion inversely to the recorded mean travel times.
+/// apportion inversely to the recorded mean travel times. Under
+/// [`Fidelity::Analytical`] the profiling run is a closed-form estimate of
+/// the same even mapping — the oracle's *measurement* inherits the
+/// platform's fidelity, exactly like its final execution.
 pub fn post_run_counts(cfg: &PlatformConfig, layer: &LayerSpec) -> Result<Vec<u64>> {
     // Extra run (the cost the paper attributes to this oracle).
     let probe_counts = row_major::counts(layer.tasks, cfg.num_pes());
-    let mut probe = Simulation::new(cfg, layer.profile(cfg));
-    probe.add_budgets(&probe_counts);
-    let probe_res = probe.run_until_done()?;
-    let times = mean_travel_per_pe(&probe_res.records, cfg.num_pes());
+    let times = if cfg.fidelity == Fidelity::Analytical {
+        let est = crate::accel::analytical::estimate(cfg, &layer.profile(cfg), &probe_counts);
+        mean_travel_from_totals(&est)
+    } else {
+        let mut probe = Simulation::new(cfg, layer.profile(cfg));
+        probe.add_budgets(&probe_counts);
+        let probe_res = probe.run_until_done()?;
+        mean_travel_per_pe(&probe_res.records, cfg.num_pes())
+    };
     Ok(inverse_proportional(layer.tasks, &times))
 }
 
@@ -137,6 +160,19 @@ pub fn run_sampling(cfg: &PlatformConfig, layer: &LayerSpec, window: u64) -> Res
     if layer.tasks < sampled_total {
         // Fig. 6 left route: small layer, sample-free row-major mapping.
         let counts = row_major::counts(layer.tasks, n);
+        return run_precomputed(cfg, layer, label, counts, false);
+    }
+    if cfg.fidelity == Fidelity::Analytical {
+        // The analytical analogue of the window: estimate the even
+        // `window`-per-PE phase closed-form, apportion the residual by the
+        // estimated means (Eq. 7–8), and cost the combined allocation in
+        // one estimate. No platform is ever built.
+        let window_counts = vec![window; n];
+        let est = crate::accel::analytical::estimate(cfg, &layer.profile(cfg), &window_counts);
+        let t_s = mean_travel_from_totals(&est);
+        let residual = layer.tasks - sampled_total;
+        let residual_counts = inverse_proportional(residual, &t_s);
+        let counts: Vec<u64> = residual_counts.iter().map(|c| c + window).collect();
         return run_precomputed(cfg, layer, label, counts, false);
     }
     let mut sim = Simulation::new(cfg, layer.profile(cfg));

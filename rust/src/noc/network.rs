@@ -271,6 +271,16 @@ impl Network {
         std::mem::take(&mut self.delivered)
     }
 
+    /// [`drain_delivered`](Self::drain_delivered) into a caller-owned
+    /// buffer: `out` is cleared, then swapped with the internal list, so
+    /// both capacities are reused cycle after cycle — the device layer's
+    /// zero-allocation path (`mem::take` would leave a capacity-0 `Vec`
+    /// behind and re-grow it every delivery cycle).
+    pub fn drain_delivered_into(&mut self, out: &mut Vec<(PacketId, u64)>) {
+        out.clear();
+        std::mem::swap(out, &mut self.delivered);
+    }
+
     /// True when no flit is anywhere in the fabric and all NIs are idle.
     ///
     /// O(1): every flit in a queue, wire or buffer belongs to a packet

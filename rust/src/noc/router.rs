@@ -28,7 +28,12 @@
 //! Hot-path layout: all per-`[port][vc]` state (input VCs, output credits,
 //! output-VC ownership) is stored in flat `[port * num_vcs + vc]` arrays —
 //! one indexed load instead of a nested-`Vec` double pointer chase per
-//! flit event.
+//! flit event. Flit storage itself is **arena-style**: one flat
+//! `Vec<Flit>` per router holds every input VC's ring buffer (VC `slot`
+//! owns `arena[slot * vc_depth .. (slot + 1) * vc_depth]`, addressed by a
+//! compact `(head, len)` pair in [`InputVc`]). One allocation per router
+//! at construction, zero allocations per simulated cycle — the
+//! allocation-audit integration test pins this.
 //!
 //! Invariants enforced (and asserted in debug builds):
 //! * an input VC buffer never exceeds `vc_depth` flits (credits guarantee);
@@ -38,9 +43,7 @@
 //! * at most one flit per input port and per output port crosses the
 //!   crossbar per cycle.
 
-use std::collections::VecDeque;
-
-use crate::noc::flit::Flit;
+use crate::noc::flit::{Flit, FlitKind};
 use crate::noc::topology::{NodeId, Port, RoutingAlgorithm, Topology, NUM_PORTS, PORT_LOCAL};
 
 /// Per-input-VC pipeline state.
@@ -56,12 +59,24 @@ enum VcState {
     Active { out_port: Port, out_vc: usize },
 }
 
-/// One input virtual channel: FIFO flit buffer + pipeline state.
-#[derive(Debug, Clone)]
+/// One input virtual channel: ring indices into the router's flit arena
+/// plus pipeline state.
+///
+/// The flits themselves live in [`Router::arena`]; this header only says
+/// *where* in the VC's fixed `vc_depth` window the FIFO currently sits.
+#[derive(Debug, Clone, Copy)]
 struct InputVc {
-    buf: VecDeque<Flit>,
+    /// Ring offset of the front flit within the VC's arena window.
+    head: usize,
+    /// Buffered flit count (≤ `vc_depth`).
+    len: usize,
     state: VcState,
 }
+
+/// Arena fill value for slots no flit has been written to yet. Ring
+/// indices guarantee no slot is read before it is written, so any value
+/// works; a fixed one keeps construction branch-free.
+const NO_FLIT: Flit = Flit { packet: 0, seq: 0, dst: 0, kind: FlitKind::HeadTail };
 
 /// A flit granted switch traversal this cycle, to be dispatched by the
 /// network (to a neighbour's input or to local ejection).
@@ -130,8 +145,13 @@ pub struct Router {
     node: NodeId,
     num_vcs: usize,
     vc_depth: usize,
-    /// Input VCs, flat `[port * num_vcs + vc]`.
+    /// Input VC headers (ring indices + pipeline state), flat
+    /// `[port * num_vcs + vc]`.
     inputs: Vec<InputVc>,
+    /// Arena backing every input VC's flit ring: VC `slot` owns the fixed
+    /// window `arena[slot * vc_depth .. (slot + 1) * vc_depth]`. One
+    /// allocation at construction; never grows.
+    arena: Vec<Flit>,
     /// Credits available toward the downstream buffer, flat
     /// `[port * num_vcs + vc]`. The local output port needs no credits
     /// (the NI ejects immediately).
@@ -174,9 +194,8 @@ impl Router {
             node,
             num_vcs,
             vc_depth,
-            inputs: (0..slots)
-                .map(|_| InputVc { buf: VecDeque::with_capacity(vc_depth), state: VcState::Idle })
-                .collect(),
+            inputs: vec![InputVc { head: 0, len: 0, state: VcState::Idle }; slots],
+            arena: vec![NO_FLIT; slots * vc_depth],
             out_credits: vec![vc_depth as u8; slots],
             out_vc_owner: vec![None; slots],
             va_rr: 0,
@@ -193,6 +212,38 @@ impl Router {
     #[inline]
     fn slot(&self, port: Port, vc: usize) -> usize {
         port * self.num_vcs + vc
+    }
+
+    /// Append a flit to input VC `slot`'s ring (caller checks capacity).
+    #[inline]
+    fn vc_push_back(&mut self, slot: usize, flit: Flit) {
+        let ivc = self.inputs[slot];
+        debug_assert!(ivc.len < self.vc_depth);
+        let at = slot * self.vc_depth + (ivc.head + ivc.len) % self.vc_depth;
+        self.arena[at] = flit;
+        self.inputs[slot].len += 1;
+    }
+
+    /// The front flit of input VC `slot`'s ring, if any (flits are `Copy`).
+    #[inline]
+    fn vc_front(&self, slot: usize) -> Option<Flit> {
+        let ivc = self.inputs[slot];
+        if ivc.len == 0 {
+            return None;
+        }
+        Some(self.arena[slot * self.vc_depth + ivc.head])
+    }
+
+    /// Pop the front flit of input VC `slot`'s ring (caller checks
+    /// non-empty).
+    #[inline]
+    fn vc_pop_front(&mut self, slot: usize) -> Flit {
+        let ivc = self.inputs[slot];
+        debug_assert!(ivc.len > 0, "pop from empty VC ring");
+        let flit = self.arena[slot * self.vc_depth + ivc.head];
+        self.inputs[slot].head = (ivc.head + 1) % self.vc_depth;
+        self.inputs[slot].len -= 1;
+        flit
     }
 
     /// Does this router have any flit buffered? (Stage work is skipped
@@ -231,17 +282,16 @@ impl Router {
     /// Credit-based flow control must make overflow impossible; violation
     /// is a simulator bug, so it panics.
     pub fn accept_flit(&mut self, port: Port, vc: usize, flit: Flit) {
-        let depth = self.vc_depth;
-        let node = self.node;
-        let ivc = &mut self.inputs[port * self.num_vcs + vc];
+        let slot = port * self.num_vcs + vc;
         assert!(
-            ivc.buf.len() < depth,
-            "router {node} input [{port}][{vc}] overflow: credit protocol violated"
+            self.inputs[slot].len < self.vc_depth,
+            "router {} input [{port}][{vc}] overflow: credit protocol violated",
+            self.node
         );
-        let was_empty = ivc.buf.is_empty();
-        ivc.buf.push_back(flit);
+        let was_empty = self.inputs[slot].len == 0;
+        self.vc_push_back(slot, flit);
         self.buffered += 1;
-        if was_empty && ivc.state == VcState::Idle {
+        if was_empty && self.inputs[slot].state == VcState::Idle {
             debug_assert!(flit.kind.is_head(), "idle VC must receive a head first");
             self.rc_pending.push((port, vc));
         }
@@ -275,7 +325,7 @@ impl Router {
             if self.inputs[slot].state != VcState::Idle {
                 continue;
             }
-            if let Some(&front) = self.inputs[slot].buf.front() {
+            if let Some(front) = self.vc_front(slot) {
                 debug_assert!(
                     front.kind.is_head(),
                     "router {}: non-head flit at front of idle VC [{port}][{vc}]",
@@ -420,7 +470,7 @@ impl Router {
                         self.inputs[port * self.num_vcs + vc].state,
                         VcState::Active { out_port: op, out_vc: ov } if op == out_port && ov == out_vc
                     ));
-                    if self.inputs[port * self.num_vcs + vc].buf.is_empty() {
+                    if self.inputs[port * self.num_vcs + vc].len == 0 {
                         continue;
                     }
                     let credit_ok = out_port == PORT_LOCAL
@@ -434,7 +484,7 @@ impl Router {
             }
             let Some((idx, port, vc, out_vc)) = grant else { continue };
             let in_slot = port * self.num_vcs + vc;
-            let flit = self.inputs[in_slot].buf.pop_front().expect("checked non-empty");
+            let flit = self.vc_pop_front(in_slot);
             self.buffered -= 1;
             input_port_busy[port] = true;
             if out_port != PORT_LOCAL {
@@ -450,7 +500,7 @@ impl Router {
                 self.active_by_out[out_port].kill(idx);
                 // A queued next packet's head is now at the front: schedule
                 // its route computation.
-                if !self.inputs[in_slot].buf.is_empty() {
+                if self.inputs[in_slot].len > 0 {
                     self.rc_pending.push((port, vc));
                 }
             }
@@ -461,14 +511,14 @@ impl Router {
 
     /// Free buffer slots in input VC `[port][vc]` (for NI credit tracking).
     pub fn free_slots(&self, port: Port, vc: usize) -> usize {
-        self.vc_depth - self.inputs[self.slot(port, vc)].buf.len()
+        self.vc_depth - self.inputs[self.slot(port, vc)].len
     }
 
     /// Total buffered flits across all input VCs (diagnostics).
     pub fn buffered_flits(&self) -> usize {
         debug_assert_eq!(
             self.buffered,
-            self.inputs.iter().map(|v| v.buf.len()).sum::<usize>(),
+            self.inputs.iter().map(|v| v.len).sum::<usize>(),
             "router {}: buffered counter out of sync",
             self.node
         );
@@ -747,6 +797,31 @@ mod tests {
         let moves = r.switch_allocate();
         assert_eq!(moves[0].out_port, PORT_EAST);
         assert!(moves[0].out_vc < 2, "plain hop must use the low VC class");
+    }
+
+    /// The arena ring wraps inside its fixed per-VC window, preserves FIFO
+    /// order, and the backing storage never grows.
+    #[test]
+    fn arena_ring_wraps_without_growing() {
+        let mut r = Router::new(0, 2, 3);
+        let cap = r.arena.len();
+        assert_eq!(cap, NUM_PORTS * 2 * 3);
+        let slot = 3; // arbitrary VC window
+        let (mut next_in, mut next_out) = (0u32, 0u32);
+        // Keep the ring full and drain one flit at a time: head sweeps the
+        // whole window several times.
+        for _ in 0..12 {
+            while r.inputs[slot].len < 3 {
+                let mut f = head_tail(1);
+                f.packet = next_in;
+                next_in += 1;
+                r.vc_push_back(slot, f);
+            }
+            assert_eq!(r.vc_front(slot).unwrap().packet, next_out);
+            assert_eq!(r.vc_pop_front(slot).packet, next_out, "FIFO order broken");
+            next_out += 1;
+        }
+        assert_eq!(r.arena.len(), cap, "arena must never grow");
     }
 
     /// Tombstones never linger past the compaction threshold: the physical

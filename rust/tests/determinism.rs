@@ -199,6 +199,25 @@ fn serving_sweep_is_bit_identical_across_jobs() {
 }
 
 #[test]
+fn scale_experiment_is_bit_identical_across_jobs() {
+    // The multi-fidelity acceptance line: the big-mesh scaling grid — four
+    // analytical sweeps (16/32/64 widths × mesh/torus) plus the 16×16
+    // cycle-accurate anchor — must fingerprint identically at jobs(1) and
+    // jobs(8). The analytical cells are pure arithmetic and the exact
+    // cells ride the standard engine, so any divergence would mean the
+    // fidelity dispatch leaked worker-order state.
+    let scale_fp = |jobs: usize| {
+        let d = noctt::experiments::scale::data_with_jobs(true, Some(jobs));
+        let mut fps: Vec<_> = d.sweeps.iter().map(|s| fingerprint(&s.results)).collect();
+        fps.push(fingerprint(&d.exact));
+        fps
+    };
+    let serial = scale_fp(1);
+    assert!(!serial.is_empty());
+    assert_eq!(serial, scale_fp(8), "scale experiment diverged between jobs(1) and jobs(8)");
+}
+
+#[test]
 fn pool_width_beyond_the_machine_is_safe() {
     // Sanity: ThreadPool clamps nothing upward — 8 workers on any core
     // count is legal, it just means idle stealers.

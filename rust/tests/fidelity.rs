@@ -1,0 +1,132 @@
+//! Cross-validation of the analytical latency backend against the
+//! cycle-accurate core ([`Fidelity::Analytical`] vs
+//! [`Fidelity::CycleAccurate`]).
+//!
+//! The analytical model is a *design-space filter*, not a replacement for
+//! the event core, so the contract is deliberately loose in magnitude and
+//! strict in ordering:
+//!
+//! * **bounded error** — the mean relative latency error over a
+//!   {3 mesh sizes × 2 layers × 4 mappers} grid stays under a pinned
+//!   constant, and no single cell is off by more than 1×;
+//! * **rank agreement** — wherever the cycle-accurate core separates two
+//!   cells of the same platform by more than 25 %, the model must order
+//!   them the same way (that is exactly the property the `turbo` mapper
+//!   and the `scale` experiment lean on).
+
+use noctt::config::{Fidelity, PlatformConfig};
+use noctt::dnn::LayerSpec;
+use noctt::experiments::engine::{Scenario, SweepResults};
+
+/// Offline mappers compared (registry names) — precomputed placements, so
+/// both fidelities price the identical task distribution.
+const MAPPERS: [&str; 4] = ["row-major", "distance", "local", "greedy"];
+
+/// Mesh sizes cross-validated: the paper's 4×4 plus a rectangular and a
+/// larger square fabric.
+fn platform_pairs() -> Vec<(String, PlatformConfig, PlatformConfig)> {
+    let mut out = Vec::new();
+    let mut push = |name: &str, exact: PlatformConfig| {
+        let mut model = exact.clone();
+        model.fidelity = Fidelity::Analytical;
+        out.push((name.to_string(), exact, model));
+    };
+    push("4x4", PlatformConfig::default_2mc());
+    push(
+        "4x8",
+        PlatformConfig::builder().mesh(4, 8).mc_nodes(vec![13, 14]).build().unwrap(),
+    );
+    push(
+        "8x8",
+        PlatformConfig::builder()
+            .mesh(8, 8)
+            .mc_nodes(vec![27, 28, 35, 36])
+            .build()
+            .unwrap(),
+    );
+    out
+}
+
+/// Run the full cross-validation grid: platform `2·i` is the
+/// cycle-accurate half of pair `i`, platform `2·i + 1` the analytical.
+fn grid() -> SweepResults {
+    let mut scenario = Scenario::new("fidelity-xval")
+        .layers([
+            LayerSpec::conv("xval-small", 5, 1.0, 300),
+            LayerSpec::conv("xval-large", 5, 1.0, 900),
+        ])
+        .mappers(MAPPERS);
+    for (name, exact, model) in platform_pairs() {
+        scenario = scenario
+            .platform(format!("{name}/exact"), exact)
+            .platform(format!("{name}/model"), model);
+    }
+    scenario.run().expect("fidelity cross-validation grid")
+}
+
+#[test]
+fn analytical_error_is_bounded_and_ranks_agree() {
+    let results = grid();
+    let pairs = platform_pairs().len();
+    let layers = results.layers.len();
+
+    let mut errs = Vec::new();
+    for pi in 0..pairs {
+        // (exact, model) latencies per (layer, mapper) cell of this mesh.
+        let mut cells = Vec::new();
+        for li in 0..layers {
+            for mi in 0..MAPPERS.len() {
+                let exact = results.run(2 * pi, li, mi).summary.latency as f64;
+                let model = results.run(2 * pi + 1, li, mi).summary.latency as f64;
+                assert!(exact > 0.0 && model > 0.0, "degenerate latency in pair {pi}");
+                let err = (model - exact).abs() / exact;
+                assert!(
+                    err <= 1.0,
+                    "platform pair {pi} layer {li} mapper {}: model {model} vs exact {exact} \
+                     ({:.0}% off — beyond the per-cell cap)",
+                    MAPPERS[mi],
+                    100.0 * err
+                );
+                errs.push(err);
+                cells.push((exact, model));
+            }
+        }
+        // Rank agreement on well-separated cells of the same mesh.
+        for i in 0..cells.len() {
+            for j in 0..cells.len() {
+                let ((ei, mi_), (ej, mj)) = (cells[i], cells[j]);
+                if ei * 1.25 < ej {
+                    assert!(
+                        mi_ <= mj,
+                        "platform pair {pi}: exact orders cells {i} < {j} \
+                         ({ei} vs {ej}, >25% apart) but the model inverts them ({mi_} vs {mj})"
+                    );
+                }
+            }
+        }
+    }
+
+    let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+    assert!(
+        mean <= 0.5,
+        "mean relative error {:.1}% exceeds the pinned 50% cross-validation bound",
+        100.0 * mean
+    );
+}
+
+#[test]
+fn analytical_estimate_is_deterministic_and_instant() {
+    // Two independent runs of the analytical half must agree bit-for-bit
+    // (pure arithmetic: no RNG, no thread-order sensitivity).
+    let a = grid();
+    let b = grid();
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.run.summary.latency, cb.run.summary.latency);
+    }
+    // The analytical halves carry no per-task records (nothing simulated).
+    for pi in (1..a.platform_labels.len()).step_by(2) {
+        for li in 0..a.layers.len() {
+            assert!(a.run(pi, li, 0).result.records.is_empty());
+        }
+    }
+}

@@ -1,22 +1,26 @@
 #!/usr/bin/env python3
-"""Perf-regression gate: diff one bench's mean_ns against the committed
-baseline.
+"""Perf-regression gate: diff bench mean_ns against the committed baseline.
 
 Usage:
+    # Gate EVERY series present in the baseline (the CI default):
+    check_bench_regression.py --baseline BENCH_baseline.json \
+        --current bench-gate.json --max-regress-pct 25
+
+    # Gate one named series only:
     check_bench_regression.py --baseline BENCH_baseline.json \
         --current bench-fig7-gate.json --bench fig7-sweep/jobs-1 \
         --max-regress-pct 25
 
-Exit codes: 0 = within budget, 1 = regression above the threshold, the
-current run is missing the bench, or the committed baseline is missing
-the bench (an unarmed gate is a silent gate — that is a failure, not a
-pass).
+Exit codes: 0 = every gated series within budget, 1 = any regression above
+the threshold, the current run missing a gated series, or the committed
+baseline missing the requested series (an unarmed gate is a silent gate —
+that is a failure, not a pass).
 
 Absolute mean_ns is machine-dependent: record / refresh the baseline on
-the SAME machine class that runs the gate. For the CI gate, download
-bench-fig7-gate.json from the bench-json artifact of a trusted main run
-and commit it as BENCH_baseline.json; for local use, record with:
-    cargo bench --bench paper_benches -- --only fig7-sweep --json BENCH_baseline.json
+the SAME machine class that runs the gate. For the CI gate, download the
+gate JSONs from the bench-json artifact of a trusted main run and commit
+them as BENCH_baseline.json; for local use, record with:
+    cargo bench --bench paper_benches -- --json BENCH_baseline.json
 
 Bootstrap escape hatch: a branch that intentionally has no recorded
 baseline yet (a fresh fork, a new bench series) may set
@@ -32,23 +36,79 @@ import os
 import sys
 
 
-def load_entry(path: str, name: str):
+def load_entries(path: str):
     try:
         with open(path, encoding="utf-8") as fh:
-            entries = json.load(fh)
+            return json.load(fh)
     except FileNotFoundError:
-        return None
+        return []
+
+
+def find(entries, name: str):
     for entry in entries:
         if entry.get("name") == name:
             return entry
     return None
 
 
+def bootstrap_pass(baseline: str, name: str) -> bool:
+    if os.environ.get("NOCTT_BENCH_BOOTSTRAP") == "1":
+        print(
+            f"bootstrap (NOCTT_BENCH_BOOTSTRAP=1): {baseline} has no entry "
+            f"named {name!r}; gate passes vacuously. Record one with:\n"
+            f"    cargo bench --bench paper_benches -- --json {baseline}"
+        )
+        return True
+    return False
+
+
+def check_series(name: str, baseline_entries, current_entries, args) -> bool:
+    """Gate one series; returns True when it passes."""
+    current = find(current_entries, name)
+    if current is None:
+        print(f"FAIL: {args.current} has no entry named {name!r} — did the bench run?")
+        return False
+
+    baseline = find(baseline_entries, name)
+    if baseline is None:
+        if bootstrap_pass(args.baseline, name):
+            return True
+        print(
+            f"FAIL: {args.baseline} has no entry named {name!r} — the perf "
+            f"gate is unarmed. Record a baseline (see the module docstring) or, "
+            f"on a branch that legitimately has none yet, set "
+            f"NOCTT_BENCH_BOOTSTRAP=1 to pass vacuously."
+        )
+        return False
+
+    base_ns = float(baseline["mean_ns"])
+    cur_ns = float(current["mean_ns"])
+    delta_pct = (cur_ns - base_ns) / base_ns * 100.0
+    speed = base_ns / cur_ns if cur_ns else float("inf")
+    print(
+        f"{name}: baseline {base_ns / 1e6:.3f} ms, current {cur_ns / 1e6:.3f} ms "
+        f"({delta_pct:+.1f}%, {speed:.2f}x vs baseline)"
+    )
+    if delta_pct > args.max_regress_pct:
+        print(f"FAIL: regression exceeds the {args.max_regress_pct:.0f}% budget")
+        return False
+    if delta_pct < -args.max_regress_pct:
+        print(
+            "note: substantially faster than the committed baseline — "
+            "consider re-recording BENCH_baseline.json to tighten the gate"
+        )
+    return True
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="committed baseline JSON")
     ap.add_argument("--current", required=True, help="fresh bench JSON to check")
-    ap.add_argument("--bench", required=True, help="bench name to compare")
+    ap.add_argument(
+        "--bench",
+        default=None,
+        help="bench name to compare; omitted = every series in the baseline",
+    )
     ap.add_argument(
         "--max-regress-pct",
         type=float,
@@ -57,45 +117,28 @@ def main() -> int:
     )
     args = ap.parse_args()
 
-    current = load_entry(args.current, args.bench)
-    if current is None:
-        print(f"FAIL: {args.current} has no entry named {args.bench!r} — did the bench run?")
-        return 1
+    baseline_entries = load_entries(args.baseline)
+    current_entries = load_entries(args.current)
 
-    baseline = load_entry(args.baseline, args.bench)
-    if baseline is None:
-        if os.environ.get("NOCTT_BENCH_BOOTSTRAP") == "1":
+    if args.bench:
+        names = [args.bench]
+    else:
+        names = [e["name"] for e in baseline_entries if "name" in e]
+        if not names:
+            if bootstrap_pass(args.baseline, "<any>"):
+                return 0
             print(
-                f"bootstrap (NOCTT_BENCH_BOOTSTRAP=1): {args.baseline} has no entry "
-                f"named {args.bench!r}; gate passes vacuously. Record one with:\n"
-                f"    cargo bench --bench paper_benches -- --json {args.baseline}"
+                f"FAIL: {args.baseline} has no series at all — the perf gate is "
+                f"unarmed (set NOCTT_BENCH_BOOTSTRAP=1 only on a branch that "
+                f"legitimately has no baseline yet)."
             )
-            return 0
-        print(
-            f"FAIL: {args.baseline} has no entry named {args.bench!r} — the perf "
-            f"gate is unarmed. Record a baseline (see the module docstring) or, "
-            f"on a branch that legitimately has none yet, set "
-            f"NOCTT_BENCH_BOOTSTRAP=1 to pass vacuously."
-        )
-        return 1
+            return 1
 
-    base_ns = float(baseline["mean_ns"])
-    cur_ns = float(current["mean_ns"])
-    delta_pct = (cur_ns - base_ns) / base_ns * 100.0
-    speed = base_ns / cur_ns if cur_ns else float("inf")
-    print(
-        f"{args.bench}: baseline {base_ns / 1e6:.3f} ms, current {cur_ns / 1e6:.3f} ms "
-        f"({delta_pct:+.1f}%, {speed:.2f}x vs baseline)"
-    )
-    if delta_pct > args.max_regress_pct:
-        print(f"FAIL: regression exceeds the {args.max_regress_pct:.0f}% budget")
+    failed = [n for n in names if not check_series(n, baseline_entries, current_entries, args)]
+    if failed:
+        print(f"FAIL: {len(failed)}/{len(names)} gated series failed: {', '.join(failed)}")
         return 1
-    if delta_pct < -args.max_regress_pct:
-        print(
-            "note: substantially faster than the committed baseline — "
-            "consider re-recording BENCH_baseline.json to tighten the gate"
-        )
-    print("OK")
+    print(f"OK ({len(names)} series gated)")
     return 0
 
 
