@@ -14,7 +14,8 @@
 //!   `fig7-sweep/speedup-vs-serial` entry) for the perf trajectory;
 //! * `--only <substr>` — run only matching benches. The CI perf gate runs
 //!   one full-window pass per gated series (`--only fig7-sweep`,
-//!   `--only scale/analytical-32x32`, `--only sim/full-run-140-tasks`),
+//!   `--only scale/analytical-32x32`, `--only sim/full-run-140-tasks`,
+//!   `--only resilience/1-dead-link-lenet5`),
 //!   merges the JSONs, and diffs every `mean_ns` against the committed
 //!   `BENCH_baseline.json` (recorded with
 //!   `cargo bench --bench paper_benches -- --json BENCH_baseline.json`).
@@ -386,6 +387,31 @@ fn main() {
         results.push(event);
         results.push(analytical);
         results.push(entry);
+    }
+
+    // resilience — a full LeNet C1 run on a degraded mesh: one dead wire
+    // on the busiest row, west-first steering around it. The fault filter
+    // (live-candidate + reachability DFS checks) sits on every
+    // route-compute of the measured path, so this series gates the cost
+    // of fault-adaptive routing; like the sim/ series it never trims.
+    if args.selected("resilience/1-dead-link-lenet5") {
+        let mut degraded = PlatformConfig::builder()
+            .routing(RoutingAlgorithm::WestFirst)
+            .build()
+            .expect("degraded platform");
+        let mut faults = noctt::config::FaultMap::new();
+        faults.kill_link(&degraded.topo(), 0, noctt::noc::topology::PORT_EAST).expect("wire");
+        degraded.faults = faults;
+        let layer = lenet5(6).remove(0);
+        let cycles = simulated_cycles(&degraded, &layer, Strategy::RowMajor);
+        results.push(
+            bench("resilience/1-dead-link-lenet5", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(
+                    run_layer(&degraded, &layer, Strategy::RowMajor).expect("bench run"),
+                );
+            })
+            .with_sim_cycles(cycles),
+        );
     }
 
     args.finish("paper_benches", &results).expect("writing bench output");

@@ -101,6 +101,11 @@ pub struct AnalyticalModel {
     static_hop: f64,
     num_nodes: usize,
     num_mcs: usize,
+    /// Per-bit energy constants + flit width, for pricing the synthesized
+    /// traffic exactly as the simulator prices its measured traffic.
+    es_bit: f64,
+    el_bit: f64,
+    flit_bits: u64,
 }
 
 /// Per-evaluation scratch: link loads and MC work, indexed like
@@ -119,36 +124,19 @@ impl AnalyticalModel {
     pub fn new(cfg: &PlatformConfig, profile: &TaskProfile) -> Self {
         cfg.validate().expect("invalid platform");
         let topo = cfg.topo();
-        // Nearest-MC assignment replicated verbatim from Simulation::new
-        // (tie round-robin in dense PE order) so both fidelities cost the
-        // same physical traffic.
-        let mut tie_rr = 0usize;
+        // Nearest-MC assignment shared with Simulation::new through
+        // PlatformConfig::mc_assignments (tie round-robin in dense PE
+        // order) so both fidelities cost the same physical traffic.
         let pes: Vec<PeModel> = cfg
-            .pe_nodes()
+            .mc_assignments()
             .into_iter()
-            .map(|node| {
-                let best = cfg
-                    .mc_nodes
-                    .iter()
-                    .map(|&mc| topo.hop_distance(node, mc))
-                    .min()
-                    .expect("at least one MC");
-                let tied: Vec<usize> = cfg
-                    .mc_nodes
-                    .iter()
-                    .copied()
-                    .filter(|&mc| topo.hop_distance(node, mc) == best)
-                    .collect();
-                let mc_node = tied[tie_rr % tied.len()];
-                if tied.len() > 1 {
-                    tie_rr += 1;
-                }
+            .map(|(node, mc_node)| {
                 let mc = cfg.mc_nodes.iter().position(|&m| m == mc_node).expect("mc in list");
                 PeModel {
                     node,
                     mc,
                     mc_node,
-                    dist: best as u64,
+                    dist: topo.hop_distance(node, mc_node) as u64,
                     to_mc: route_links(&topo, cfg, node, mc_node),
                     from_mc: route_links(&topo, cfg, mc_node, node),
                 }
@@ -174,6 +162,9 @@ impl AnalyticalModel {
             static_hop: cfg.static_hop_cycles as f64,
             num_nodes: cfg.num_nodes(),
             num_mcs: cfg.mc_nodes.len(),
+            es_bit: cfg.es_bit,
+            el_bit: cfg.el_bit,
+            flit_bits: cfg.flit_bits,
         }
     }
 
@@ -387,18 +378,31 @@ impl AnalyticalModel {
         }
         let flits_switched: u64 =
             switched_per_port.iter().flat_map(|ports| ports.iter()).sum();
+        // Every switched flit that leaves through a non-local port crosses
+        // one inter-router wire — the same identity the simulator counts.
+        let link_traversals: u64 = switched_per_port
+            .iter()
+            .flat_map(|ports| {
+                ports.iter().enumerate().filter(|&(p, _)| p != PORT_LOCAL).map(|(_, &c)| c)
+            })
+            .sum();
         // The last result packet still drains after the last compute.
         let drained_at =
             latency + (self.ni_packetize as u64) + max_result_drain;
-        let net = NetworkStats {
+        let mut net = NetworkStats {
             cycles: drained_at,
             flits_injected,
             flits_switched,
+            link_traversals,
             packets_delivered: delivered.iter().sum(),
             latency_sum,
             delivered_by_kind: delivered,
             switched_per_port,
+            router_energy: 0.0,
+            link_energy: 0.0,
+            avg_load_degree: 0.0,
         };
+        net.price_energy(self.es_bit, self.el_bit, self.flit_bits);
         SimResult { records: Vec::new(), totals, finish, latency, drained_at, net }
     }
 }
@@ -552,6 +556,27 @@ mod tests {
             model.latency(&counts)
         };
         assert!(one_far(&torus) < one_far(&mesh), "wrap links must shorten the estimate");
+    }
+
+    #[test]
+    fn analytical_energy_prices_the_synthesized_traffic() {
+        // The model reports energy under the exact same identities the
+        // simulator pins: switched × es_bit × bits and traversals ×
+        // el_bit × bits — no separate accumulation path to drift.
+        let c = cfg();
+        let layer = c1();
+        let profile = layer.profile(&c);
+        let counts = row_major::counts(layer.tasks, c.num_pes());
+        let r = estimate(&c, &profile, &counts);
+        let bits = c.flit_bits as f64;
+        assert_eq!(r.net.router_energy, r.net.flits_switched as f64 * c.es_bit * bits);
+        assert_eq!(r.net.link_energy, r.net.link_traversals as f64 * c.el_bit * bits);
+        assert!(
+            r.net.link_traversals < r.net.flits_switched,
+            "ejection switches never cross a wire"
+        );
+        assert!(r.net.avg_load_degree > 0.0);
+        assert!(r.net.total_energy() > 0.0);
     }
 
     #[test]

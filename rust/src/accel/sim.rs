@@ -97,33 +97,15 @@ impl Simulation {
         let net = Network::new(cfg);
         let mcs: Vec<Mc> = cfg.mc_nodes.iter().map(|&n| Mc::with_model(n, cfg.mem_model)).collect();
         // Nearest-MC assignment on the platform's actual topology (torus
-        // wrap links count); ties balanced by round-robin over the tied
-        // set in PE order (deterministic).
-        let topo = net.topology().clone();
-        let mut tie_rr = 0usize;
+        // wrap links count) with deterministic tie round-robin — shared
+        // with the analytical backend and the mapping layer's fault
+        // pre-check via PlatformConfig::mc_assignments so the traffic
+        // pattern can never diverge between them.
         let pes: Vec<Pe> = cfg
-            .pe_nodes()
+            .mc_assignments()
             .into_iter()
             .enumerate()
-            .map(|(i, node)| {
-                let best = cfg
-                    .mc_nodes
-                    .iter()
-                    .map(|&mc| topo.hop_distance(node, mc))
-                    .min()
-                    .expect("at least one MC");
-                let tied: Vec<usize> = cfg
-                    .mc_nodes
-                    .iter()
-                    .copied()
-                    .filter(|&mc| topo.hop_distance(node, mc) == best)
-                    .collect();
-                let mc = tied[tie_rr % tied.len()];
-                if tied.len() > 1 {
-                    tie_rr += 1;
-                }
-                Pe::new(i, node, mc)
-            })
+            .map(|(i, (node, mc))| Pe::new(i, node, mc))
             .collect();
         let n = pes.len();
         Self {
@@ -378,7 +360,7 @@ impl Simulation {
             finish,
             latency,
             drained_at: self.net.now(),
-            net: self.net.stats().clone(),
+            net: self.net.priced_stats(),
         }
     }
 

@@ -12,6 +12,6 @@
 pub mod platform;
 
 pub use platform::{
-    Fidelity, MemModel, PlacementPreset, PlatformBuilder, PlatformConfig, RoutingAlgorithm,
-    SteppingMode, TopologyKind,
+    FaultMap, Fidelity, MemModel, PlacementPreset, PlatformBuilder, PlatformConfig,
+    RoutingAlgorithm, SteppingMode, TopologyKind,
 };

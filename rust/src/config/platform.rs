@@ -1,7 +1,7 @@
 //! The accelerator platform description (§5.1 of the paper).
 
-use crate::noc::topology::Topology;
-pub use crate::noc::topology::{RoutingAlgorithm, TopologyKind};
+use crate::noc::topology::{Port, Topology};
+pub use crate::noc::topology::{FaultMap, RoutingAlgorithm, TopologyKind};
 
 /// Memory-controller placement presets used in the evaluation.
 ///
@@ -167,6 +167,18 @@ pub struct PlatformConfig {
     /// Latency backend (see [`Fidelity`]): the exact flit-level simulator
     /// (default) or the fast contention-aware analytical model.
     pub fidelity: Fidelity,
+    /// Dead links and routers (see [`FaultMap`]); empty — a healthy
+    /// fabric — by default. A dead router also detaches its PE (it
+    /// disappears from [`pe_nodes`](Self::pe_nodes)); MCs cannot die
+    /// (validated).
+    pub faults: FaultMap,
+    /// Router switching energy per bit, in pJ (Hu & Marculescu's bit
+    /// energy model: every flit pays this at every router it is switched
+    /// through, ejection included).
+    pub es_bit: f64,
+    /// Link traversal energy per bit, in pJ (paid once per inter-router
+    /// wire a flit crosses).
+    pub el_bit: f64,
 }
 
 /// Builder for [`PlatformConfig`]: arbitrary W×H fabrics (mesh or torus,
@@ -205,6 +217,15 @@ pub struct PlatformConfig {
 #[derive(Debug, Clone)]
 pub struct PlatformBuilder {
     cfg: PlatformConfig,
+    /// `--kill-link` requests as `(x, y, out port)`, resolved against the
+    /// final dimensions at [`build`](Self::build).
+    kill_links: Vec<(usize, usize, Port)>,
+    /// `--kill-router` requests as `(x, y)`.
+    kill_routers: Vec<(usize, usize)>,
+    /// `--fault-seed` (only meaningful together with a fault rate).
+    fault_seed: Option<u64>,
+    /// `--fault-rate`: per-link death probability for a random fault map.
+    fault_rate: Option<f64>,
 }
 
 impl PlatformBuilder {
@@ -318,11 +339,115 @@ impl PlatformBuilder {
         self
     }
 
+    /// Attach an already-built [`FaultMap`] wholesale. Composable with
+    /// [`kill_link`](Self::kill_link)/[`kill_router`](Self::kill_router),
+    /// which add on top at build time.
+    pub fn faults(mut self, faults: FaultMap) -> Self {
+        self.cfg.faults = faults;
+        self
+    }
+
+    /// Kill the link leaving the router at `(x, y)` through `port` (a
+    /// cardinal `PORT_*` constant; both directions of the wire die). The
+    /// coordinates are resolved — and errors reported — against the final
+    /// dimensions at [`build`](Self::build), so the call order relative
+    /// to [`mesh`](Self::mesh) does not matter.
+    pub fn kill_link(mut self, x: usize, y: usize, port: Port) -> Self {
+        self.kill_links.push((x, y, port));
+        self
+    }
+
+    /// Kill the router at `(x, y)`: all its links die and its PE
+    /// detaches. Killing an MC router is a build error.
+    pub fn kill_router(mut self, x: usize, y: usize) -> Self {
+        self.kill_routers.push((x, y));
+        self
+    }
+
+    /// Seed for the random link-fault map (`--fault-seed`); only
+    /// meaningful together with [`fault_rate`](Self::fault_rate).
+    pub fn fault_seed(mut self, seed: u64) -> Self {
+        self.fault_seed = Some(seed);
+        self
+    }
+
+    /// Per-link death probability in `[0, 1]` (`--fault-rate`): every
+    /// undirected link dies independently with this probability, driven
+    /// deterministically by the fault seed (default 1).
+    pub fn fault_rate(mut self, rate: f64) -> Self {
+        self.fault_rate = Some(rate);
+        self
+    }
+
+    /// Router switching energy per bit, in pJ.
+    pub fn es_bit(mut self, pj: f64) -> Self {
+        self.cfg.es_bit = pj;
+        self
+    }
+
+    /// Link traversal energy per bit, in pJ.
+    pub fn el_bit(mut self, pj: f64) -> Self {
+        self.cfg.el_bit = pj;
+        self
+    }
+
     /// Validate and return the configuration. Every structural error —
     /// mesh too small, MC ids out of range or duplicated, no PE left, a
-    /// flit smaller than one datum — is reported here rather than deep
-    /// inside the simulator.
-    pub fn build(self) -> anyhow::Result<PlatformConfig> {
+    /// flit smaller than one datum, a fault request off the fabric or
+    /// killing an MC — is reported here rather than deep inside the
+    /// simulator.
+    pub fn build(mut self) -> anyhow::Result<PlatformConfig> {
+        let has_requests = !self.kill_links.is_empty()
+            || !self.kill_routers.is_empty()
+            || self.fault_rate.is_some()
+            || self.fault_seed.is_some();
+        if has_requests {
+            // Check the healthy fabric first so the geometry the kill
+            // requests resolve against is known-good.
+            let pristine =
+                PlatformConfig { faults: FaultMap::default(), ..self.cfg.clone() };
+            pristine.validate()?;
+            let healthy = Topology::with_kind(
+                self.cfg.mesh_width,
+                self.cfg.mesh_height,
+                self.cfg.topology,
+            );
+            let mut faults = self.cfg.faults.clone();
+            if let Some(rate) = self.fault_rate {
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&rate),
+                    "--fault-rate must be in [0, 1], got {rate}"
+                );
+                let random =
+                    FaultMap::random(&healthy, self.fault_seed.unwrap_or(1), rate);
+                for &(n, port) in random.dead_links() {
+                    faults.kill_link(&healthy, n, port)?;
+                }
+            } else {
+                anyhow::ensure!(
+                    self.fault_seed.is_none(),
+                    "--fault-seed without --fault-rate does nothing; give a rate"
+                );
+            }
+            let in_range = |x: usize, y: usize| {
+                anyhow::ensure!(
+                    x < self.cfg.mesh_width && y < self.cfg.mesh_height,
+                    "fault coordinate ({x},{y}) outside the {}x{} fabric",
+                    self.cfg.mesh_width,
+                    self.cfg.mesh_height
+                );
+                Ok(())
+            };
+            for &(x, y, port) in &self.kill_links {
+                in_range(x, y)?;
+                faults.kill_link(&healthy, healthy.node_at(x, y), port)?;
+            }
+            for &(x, y) in &self.kill_routers {
+                in_range(x, y)?;
+                faults.kill_router(&healthy, healthy.node_at(x, y))?;
+            }
+            self.cfg.faults = faults;
+        }
         self.cfg.validate()?;
         Ok(self.cfg)
     }
@@ -333,7 +458,13 @@ impl PlatformConfig {
     /// (4x4 mesh, MCs at nodes 9/10, 256-bit flits, 4 VCs × 4-flit
     /// buffers, queued 64 GB/s memory).
     pub fn builder() -> PlatformBuilder {
-        PlatformBuilder { cfg: Self::default_2mc() }
+        PlatformBuilder {
+            cfg: Self::default_2mc(),
+            kill_links: Vec::new(),
+            kill_routers: Vec::new(),
+            fault_seed: None,
+            fault_rate: None,
+        }
     }
 
     /// The paper's default platform (§5.1): 4x4 mesh, 2 MCs, 14 PEs.
@@ -372,6 +503,12 @@ impl PlatformConfig {
             max_phase_cycles: 2_000_000_000,
             stepping: SteppingMode::EventDriven,
             fidelity: Fidelity::CycleAccurate,
+            faults: FaultMap::default(),
+            // Hu & Marculescu bit-energy constants (pJ/bit) for a
+            // 0.18 µm-class router/link pair — the exemplar values the
+            // NoC mapping literature prices Ebit with.
+            es_bit: 0.284,
+            el_bit: 0.449,
         }
     }
 
@@ -381,23 +518,62 @@ impl PlatformConfig {
     }
 
     /// The fabric [`Topology`] this configuration describes (dimensions +
-    /// kind). All hop distances and routes — the simulator's, the static
-    /// mappers', the experiments' — must come from here, never from
-    /// hand-rolled Manhattan math, so that a torus platform bends every
-    /// layer consistently.
+    /// kind + faults). All hop distances and routes — the simulator's, the
+    /// static mappers', the experiments' — must come from here, never from
+    /// hand-rolled Manhattan math, so that a torus platform or a degraded
+    /// fabric bends every layer consistently.
     pub fn topo(&self) -> Topology {
         Topology::with_kind(self.mesh_width, self.mesh_height, self.topology)
+            .with_faults(self.faults.clone())
     }
 
     /// Node ids hosting PEs, ascending (row-major order — the paper's
-    /// row-major mapping walks this list).
+    /// row-major mapping walks this list). This is *the* PE enumeration
+    /// seam: a dead router's PE is absent here, so every mapper, both
+    /// latency backends and all experiments agree on the surviving
+    /// compute without further checks.
     pub fn pe_nodes(&self) -> Vec<usize> {
-        (0..self.num_nodes()).filter(|n| !self.mc_nodes.contains(n)).collect()
+        (0..self.num_nodes())
+            .filter(|&n| !self.mc_nodes.contains(&n) && !self.faults.router_dead(n))
+            .collect()
     }
 
-    /// Number of PE nodes.
+    /// Number of PE nodes (surviving — dead routers' PEs excluded).
     pub fn num_pes(&self) -> usize {
-        self.num_nodes() - self.mc_nodes.len()
+        self.pe_nodes().len()
+    }
+
+    /// Each surviving PE's `(pe node, assigned MC node)` pair, in dense
+    /// PE order: nearest MC by [`Topology::hop_distance`], exact ties
+    /// broken round-robin in enumeration order so tied PEs spread across
+    /// their equidistant MCs. Both latency backends and the mapping
+    /// layer's fault pre-check share this — the assignment *is* the
+    /// traffic pattern, so it must never diverge between them.
+    pub fn mc_assignments(&self) -> Vec<(usize, usize)> {
+        let topo = self.topo();
+        let mut tie_rr = 0usize;
+        self.pe_nodes()
+            .into_iter()
+            .map(|node| {
+                let best = self
+                    .mc_nodes
+                    .iter()
+                    .map(|&mc| topo.hop_distance(node, mc))
+                    .min()
+                    .expect("at least one MC");
+                let tied: Vec<usize> = self
+                    .mc_nodes
+                    .iter()
+                    .copied()
+                    .filter(|&mc| topo.hop_distance(node, mc) == best)
+                    .collect();
+                let mc = tied[tie_rr % tied.len()];
+                if tied.len() > 1 {
+                    tie_rr += 1;
+                }
+                (node, mc)
+            })
+            .collect()
     }
 
     /// Flits needed to carry `words` data items of `data_bits` each
@@ -446,11 +622,40 @@ impl PlatformConfig {
         sorted.sort_unstable();
         sorted.dedup();
         anyhow::ensure!(sorted.len() == self.mc_nodes.len(), "duplicate MC nodes");
-        anyhow::ensure!(self.num_pes() >= 1, "need at least one PE node");
         anyhow::ensure!(self.num_vcs >= 1 && self.vc_depth >= 1, "need VCs and buffers");
         anyhow::ensure!(self.flit_bits >= self.data_bits, "flit smaller than one datum");
         anyhow::ensure!(self.pe_clock_ratio >= 1, "PE clock ratio must be >= 1");
         anyhow::ensure!(self.max_phase_cycles >= 1, "max_phase_cycles must be >= 1");
+        anyhow::ensure!(
+            self.es_bit.is_finite() && self.es_bit >= 0.0,
+            "router energy per bit must be finite and >= 0, got {}",
+            self.es_bit
+        );
+        anyhow::ensure!(
+            self.el_bit.is_finite() && self.el_bit >= 0.0,
+            "link energy per bit must be finite and >= 0, got {}",
+            self.el_bit
+        );
+        if !self.faults.is_healthy() {
+            // Dimensions were checked above, so the healthy geometry is
+            // constructible here.
+            let healthy =
+                Topology::with_kind(self.mesh_width, self.mesh_height, self.topology);
+            self.faults.validate(&healthy)?;
+            for &mc in &self.mc_nodes {
+                anyhow::ensure!(
+                    !self.faults.router_dead(mc),
+                    "MC node {mc} is marked as a dead router — a platform cannot lose a \
+                     memory controller (fault map: {})",
+                    self.faults
+                );
+            }
+        }
+        anyhow::ensure!(
+            self.num_pes() >= 1,
+            "need at least one surviving PE node (fault map: {})",
+            self.faults
+        );
         Ok(())
     }
 }
@@ -630,5 +835,74 @@ mod tests {
         let mut p = PlatformConfig::default_2mc();
         p.mc_nodes = (0..16).collect();
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn kill_knobs_resolve_against_final_dimensions() {
+        use crate::noc::topology::{PORT_EAST, PORT_SOUTH};
+        // kill_link before mesh(): still resolved against the 4x8 fabric.
+        let p = PlatformConfig::builder()
+            .kill_link(2, 5, PORT_EAST)
+            .mesh(4, 8)
+            .mc_nodes([13, 18])
+            .build()
+            .unwrap();
+        let n = p.topo().node_at(2, 5);
+        assert!(p.faults.link_dead(n, PORT_EAST));
+        assert!(p.faults.link_dead(n + 1, crate::noc::topology::PORT_WEST));
+        assert_eq!(p.num_pes(), 30, "dead links never detach PEs");
+
+        // kill_router detaches its PE.
+        let p = PlatformConfig::builder().kill_router(3, 3).build().unwrap();
+        assert_eq!(p.num_pes(), 13);
+        assert!(!p.pe_nodes().contains(&15));
+
+        // Out-of-range coordinates and edge links fail at build.
+        assert!(PlatformConfig::builder().kill_link(7, 0, PORT_EAST).build().is_err());
+        assert!(PlatformConfig::builder().kill_link(3, 3, PORT_SOUTH).build().is_err());
+        // Killing an MC router is refused, named as such.
+        let err =
+            PlatformConfig::builder().kill_router(1, 2).build().unwrap_err().to_string();
+        assert!(err.contains("memory controller"), "got: {err}");
+    }
+
+    #[test]
+    fn random_fault_knobs_are_deterministic_and_validated() {
+        let build = |seed| {
+            PlatformConfig::builder().fault_seed(seed).fault_rate(0.2).build().unwrap()
+        };
+        assert_eq!(build(7).faults, build(7).faults);
+        // Seed without a rate is an explicit error, not a silent no-op.
+        assert!(PlatformConfig::builder().fault_seed(7).build().is_err());
+        assert!(PlatformConfig::builder().fault_rate(1.5).build().is_err());
+        // Rate 0 is a legal (healthy) fault map.
+        assert!(PlatformConfig::builder().fault_rate(0.0).build().unwrap().faults.is_healthy());
+    }
+
+    #[test]
+    fn mc_assignments_balance_ties_and_skip_dead_routers() {
+        let p = PlatformConfig::default_2mc();
+        let asg = p.mc_assignments();
+        assert_eq!(asg.len(), 14);
+        let to9 = asg.iter().filter(|&&(_, mc)| mc == 9).count();
+        let to10 = asg.iter().filter(|&&(_, mc)| mc == 10).count();
+        assert_eq!(to9 + to10, 14);
+        assert!((to9 as i64 - to10 as i64).abs() <= 2, "tie RR unbalanced: {to9} vs {to10}");
+
+        let degraded = PlatformConfig::builder().kill_router(0, 0).build().unwrap();
+        let asg = degraded.mc_assignments();
+        assert_eq!(asg.len(), 13);
+        assert!(asg.iter().all(|&(pe, _)| pe != 0), "dead router's PE is gone");
+    }
+
+    #[test]
+    fn energy_constants_default_and_validate() {
+        let p = PlatformConfig::default_2mc();
+        assert_eq!(p.es_bit, 0.284);
+        assert_eq!(p.el_bit, 0.449);
+        let p = PlatformConfig::builder().es_bit(0.5).el_bit(1.25).build().unwrap();
+        assert_eq!((p.es_bit, p.el_bit), (0.5, 1.25));
+        assert!(PlatformConfig::builder().es_bit(-1.0).build().is_err());
+        assert!(PlatformConfig::builder().el_bit(f64::NAN).build().is_err());
     }
 }

@@ -394,7 +394,7 @@ impl SweepResults {
             let comma = if i + 1 < self.cells.len() { "," } else { "" };
             let _ = write!(
                 out,
-                "    {{\"platform\":\"{}\",\"layer\":\"{}\",\"mapper\":\"{}\",\"latency\":{},\"drained_at\":{},\"rho_avg\":{},\"rho_accum\":{},\"extra_run\":{},\"flits_switched\":{},\"counts\":{}}}{comma}\n",
+                "    {{\"platform\":\"{}\",\"layer\":\"{}\",\"mapper\":\"{}\",\"latency\":{},\"drained_at\":{},\"rho_avg\":{},\"rho_accum\":{},\"extra_run\":{},\"flits_switched\":{},\"energy\":{},\"counts\":{}}}{comma}\n",
                 escape_json(&self.platform_labels[c.platform]),
                 escape_json(&self.layers[c.layer].name),
                 escape_json(&self.mapper_labels[c.mapper]),
@@ -404,6 +404,7 @@ impl SweepResults {
                 c.run.summary.rho_accum,
                 c.run.extra_run,
                 c.run.result.net.flits_switched,
+                c.run.summary.energy,
                 num_list(&c.run.counts),
             );
         }
@@ -587,6 +588,7 @@ mod tests {
         assert!(json.contains("\"mappers\": [\"row-major\",\"distance\"]"), "{json}");
         assert!(json.contains("\"mapper\":\"distance\""), "{json}");
         assert_eq!(json.matches("\"latency\":").count(), 2, "one entry per cell");
+        assert_eq!(json.matches("\"energy\":").count(), 2, "energy priced on every cell");
         assert_eq!(json.matches('{').count(), json.matches('}').count(), "balanced");
         assert_eq!(json.matches('[').count(), json.matches(']').count(), "balanced");
         // No trailing comma before the closing bracket.

@@ -16,6 +16,7 @@
 //! | [`serving`] | extension — saturation curves under sustained request streams |
 //! | [`tournament`] | extension — every registered mapper × zoo × {mesh, torus} leaderboards |
 //! | [`scale`] | extension — big-mesh scaling (16–64²) on the analytical fast path |
+//! | [`resilience`] | extension — fault injection: mapping quality on degraded fabrics |
 //!
 //! Every simulating experiment (fig7–fig11, ablation, heatmap) builds a
 //! declarative {platforms × layers × mappers} grid on the
@@ -44,6 +45,7 @@ pub mod fig11;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod resilience;
 pub mod scale;
 pub mod serving;
 pub mod table1;
@@ -99,6 +101,7 @@ pub fn all_reports(quick: bool) -> Vec<Report> {
         serving::run(quick),
         tournament::run(quick),
         scale::run(quick),
+        resilience::run(quick),
     ]
 }
 
@@ -118,14 +121,15 @@ pub fn run_by_id(id: &str, quick: bool) -> Option<Report> {
         "serving" => Some(serving::run(quick)),
         "tournament" => Some(tournament::run(quick)),
         "scale" => Some(scale::run(quick)),
+        "resilience" => Some(resilience::run(quick)),
         _ => None,
     }
 }
 
 /// Ids of all experiments, in paper order (extensions last).
-pub const ALL_IDS: [&str; 13] = [
+pub const ALL_IDS: [&str; 14] = [
     "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "arch", "ablation", "heatmap", "zoo",
-    "serving", "tournament", "scale",
+    "serving", "tournament", "scale", "resilience",
 ];
 
 #[cfg(test)]

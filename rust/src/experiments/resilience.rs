@@ -1,0 +1,407 @@
+//! Fault-injection sweep — mapping quality on degraded fabrics
+//! (`noctt exp resilience`).
+//!
+//! The paper evaluates mapping on a pristine 4×4 fabric; real silicon
+//! loses wires and routers. This experiment asks the Fig.-11 question
+//! under damage: *how much of the latency a fault costs can a better
+//! task mapping buy back?* The grid is
+//!
+//! > {row-major, distance, local, sampling-10} ×
+//! > {healthy, 1 dead link, 2 dead links, 1 dead router} ×
+//! > {mesh, torus}
+//!
+//! on the paper's 4×4 platform with **west-first routing** — the only
+//! algorithm in the crate whose adaptive candidate set can steer around a
+//! dead wire (on the torus it degrades to its dimension-order core, so
+//! the picker there can only remove off-path wires; the table states
+//! that honestly). Every cell runs twice: cycle-accurately and on the
+//! [analytical backend](crate::accel::analytical), so the report also
+//! pins how well the closed-form model prices damage it has never seen.
+//!
+//! Faults are not random here: a deterministic picker walks the
+//! canonical wire list and kills, preferentially, a wire that healthy
+//! PE↔MC traffic actually crosses — while proving (via
+//! [`Topology::route_reachable`](crate::noc::topology::Topology::route_reachable))
+//! that every surviving PE can still exchange packets with its MC both
+//! ways. A dead router additionally detaches its PE, so those columns
+//! run one PE short: the fabric is stated honestly, not papered over.
+//!
+//! Alongside latency every cell reports **network energy** (router +
+//! link, per-bit constants on the platform; see
+//! [`NetworkStats::price_energy`](crate::noc::NetworkStats::price_energy))
+//! — detours and congestion cost picojoules as well as cycles, and a
+//! mapper that buys back latency by spreading traffic pays some of it
+//! back in wire energy.
+
+use crate::config::{FaultMap, Fidelity, PlatformConfig, RoutingAlgorithm, TopologyKind};
+use crate::dnn::LayerSpec;
+use crate::noc::topology::{NodeId, Port, Topology, NUM_PORTS, PORT_EAST, PORT_LOCAL, PORT_SOUTH};
+use crate::util::{table::fmt_pct, Table};
+
+use super::engine::{Scenario, SweepResults};
+use super::Report;
+
+/// Fabric kinds, grid order.
+pub const TOPOLOGIES: [&str; 2] = ["mesh", "torus"];
+
+/// Damage states, grid order (healthy first — the baseline column).
+pub const FAULT_STATES: [&str; 4] =
+    ["healthy", "1-dead-link", "2-dead-links", "1-dead-router"];
+
+/// The mapper roster: the paper's baseline and sampling mapper plus two
+/// static planners with different damage blind spots.
+pub const MAPPERS: [&str; 4] = ["row-major", "distance", "local", "sampling-10"];
+
+/// Tasks for the swept layer (sampling-10 needs `tasks ≥ 10·PEs` even on
+/// the 13-PE dead-router column).
+fn tasks(quick: bool) -> u64 {
+    if quick {
+        224
+    } else {
+        588
+    }
+}
+
+fn layer(quick: bool) -> LayerSpec {
+    LayerSpec::conv("C1", 5, 1.0, tasks(quick))
+}
+
+/// The healthy baseline platform: the paper's 4×4 / 2-MC setup with
+/// west-first routing (the resilient algorithm under test).
+pub fn platform(kind: TopologyKind) -> PlatformConfig {
+    PlatformConfig::builder()
+        .topology(kind)
+        .routing(RoutingAlgorithm::WestFirst)
+        .build()
+        .expect("resilience platform")
+}
+
+/// Would this fault map leave a legal platform — every MC alive, at
+/// least one PE, and every surviving PE↔MC pair deliverable both ways
+/// under the platform's routing?
+fn survivable(base: &PlatformConfig, faults: &FaultMap) -> bool {
+    let mut cfg = base.clone();
+    cfg.faults = faults.clone();
+    cfg.validate().is_ok() && crate::mapping::check_reachability(&cfg).is_ok()
+}
+
+/// Every physical wire of the healthy fabric in canonical (east/south)
+/// form, node-major — the deterministic candidate order the picker walks.
+fn all_wires(topo: &Topology) -> Vec<(NodeId, Port)> {
+    let mut wires = Vec::new();
+    for n in 0..topo.len() {
+        for port in [PORT_EAST, PORT_SOUTH] {
+            if topo.neighbor(n, port).is_some() {
+                wires.push((n, port));
+            }
+        }
+    }
+    wires
+}
+
+/// The canonical wires healthy PE↔MC traffic actually crosses (primary
+/// routes, both directions) — killing one of these forces real detours
+/// instead of deleting an idle wire.
+fn on_path_wires(cfg: &PlatformConfig) -> Vec<(NodeId, Port)> {
+    let topo = cfg.topo();
+    let mut used = Vec::new();
+    for (pe, mc) in cfg.mc_assignments() {
+        for (src, dst) in [(pe, mc), (mc, pe)] {
+            let path = topo.path(cfg.routing, src, dst);
+            for w in path.windows(2) {
+                let port = (0..NUM_PORTS)
+                    .find(|&p| p != PORT_LOCAL && topo.neighbor(w[0], p) == Some(w[1]))
+                    .expect("consecutive path nodes are neighbours");
+                let canon = if port == PORT_EAST || port == PORT_SOUTH {
+                    (w[0], port)
+                } else {
+                    (w[1], Topology::opposite(port))
+                };
+                if !used.contains(&canon) {
+                    used.push(canon);
+                }
+            }
+        }
+    }
+    used
+}
+
+/// Kill `n` wires, one at a time: each pick prefers a wire that carried
+/// healthy traffic and must keep every surviving PE↔MC pair deliverable
+/// both ways. Fully deterministic — same platform, same fault map.
+fn pick_dead_links(base: &PlatformConfig, n: usize) -> FaultMap {
+    let healthy = base.topo();
+    let mut fm = FaultMap::new();
+    for _ in 0..n {
+        let mut current = base.clone();
+        current.faults = fm.clone();
+        let preferred = on_path_wires(&current);
+        let chosen = preferred
+            .into_iter()
+            .chain(all_wires(&healthy))
+            .filter(|&(node, port)| !fm.link_dead(node, port))
+            .find_map(|(node, port)| {
+                let mut trial = fm.clone();
+                trial.kill_link(&healthy, node, port).ok()?;
+                survivable(base, &trial).then_some(trial)
+            });
+        fm = chosen.expect("some wire kill keeps the 4x4 fabric survivable");
+    }
+    fm
+}
+
+/// Kill the first non-MC router whose loss keeps every *surviving*
+/// PE↔MC pair deliverable (its own PE detaches with it).
+fn pick_dead_router(base: &PlatformConfig) -> FaultMap {
+    let topo = base.topo();
+    (0..base.num_nodes())
+        .filter(|n| !base.mc_nodes.contains(n))
+        .find_map(|n| {
+            let mut fm = FaultMap::new();
+            fm.kill_router(&topo, n).ok()?;
+            survivable(base, &fm).then_some(fm)
+        })
+        .expect("some router kill keeps the 4x4 fabric survivable")
+}
+
+/// The platform for one damage state: the healthy base with the
+/// deterministically picked fault map applied and validated.
+pub fn degrade(base: &PlatformConfig, state: &str) -> PlatformConfig {
+    let faults = match state {
+        "healthy" => FaultMap::new(),
+        "1-dead-link" => pick_dead_links(base, 1),
+        "2-dead-links" => pick_dead_links(base, 2),
+        "1-dead-router" => pick_dead_router(base),
+        other => panic!("unknown fault state '{other}'"),
+    };
+    let mut cfg = base.clone();
+    cfg.faults = faults;
+    cfg.validate().expect("picked fault map validates");
+    cfg
+}
+
+/// Both fidelities' sweeps over the same damage grid.
+#[derive(Debug)]
+pub struct ResilienceData {
+    /// {topology × fault state} × layer × [`MAPPERS`], cycle-accurate.
+    pub exact: SweepResults,
+    /// The identical grid on the analytical backend.
+    pub model: SweepResults,
+}
+
+/// Run the full grid in both fidelities. `jobs` pins the worker count
+/// when given (the determinism suite fingerprints `jobs(1)` against
+/// `jobs(8)`); `None` defers to `NOCTT_JOBS`/available parallelism.
+pub fn data_with_jobs(quick: bool, jobs: Option<usize>) -> ResilienceData {
+    let with_jobs = |s: Scenario| match jobs {
+        Some(n) => s.jobs(n),
+        None => s,
+    };
+    let build = |fidelity: Fidelity, name: &str| {
+        let mut s = with_jobs(Scenario::new(format!("resilience/{name}")));
+        for (kind, tlabel) in [(TopologyKind::Mesh, "mesh"), (TopologyKind::Torus, "torus")] {
+            let base = platform(kind);
+            for state in FAULT_STATES {
+                let mut cfg = degrade(&base, state);
+                cfg.fidelity = fidelity;
+                s = s.platform(format!("{tlabel}/{state}"), cfg);
+            }
+        }
+        s.layer(layer(quick)).mappers(MAPPERS).run().expect("resilience sweep")
+    };
+    ResilienceData {
+        exact: build(Fidelity::CycleAccurate, "exact"),
+        model: build(Fidelity::Analytical, "model"),
+    }
+}
+
+/// Run the full grid with the default worker policy.
+pub fn data(quick: bool) -> ResilienceData {
+    data_with_jobs(quick, None)
+}
+
+/// JSON for the whole experiment: the cycle-accurate grid, then the
+/// analytical grid (both [`SweepResults::to_json`] objects).
+pub fn to_json(d: &ResilienceData) -> String {
+    format!(
+        "[\n{},\n{}\n]\n",
+        d.exact.to_json().trim_end(),
+        d.model.to_json().trim_end()
+    )
+}
+
+/// Render the report.
+pub fn run(quick: bool) -> Report {
+    report(&data(quick))
+}
+
+/// Render a report from an already-executed grid (the `--json` CLI path
+/// runs the grid once and feeds both emitters from it).
+pub fn report(d: &ResilienceData) -> Report {
+    let mut body = String::from(
+        "Fault injection on the paper's 4×4 platform under west-first \
+         routing: deterministic picks kill wires healthy traffic used \
+         (and one non-MC router, detaching its PE), and every mapper \
+         re-runs on the surviving fabric. Cells are `latency / energy-nJ` \
+         (network energy = router + link, per-bit constants). Δ = latency \
+         improvement over row-major *in the same damage column* — the \
+         share of the fault's cost that mapping quality buys back.\n",
+    );
+    for tname in TOPOLOGIES.iter() {
+        let pi = |state: &str| {
+            let label = format!("{tname}/{state}");
+            d.exact
+                .platform_labels
+                .iter()
+                .position(|l| *l == label)
+                .expect("grid platform present")
+        };
+        let mut t = Table::new([
+            "mapper",
+            "healthy",
+            "1-dead-link",
+            "Δ",
+            "2-dead-links",
+            "Δ",
+            "1-dead-router",
+            "Δ",
+        ]);
+        for (mi, mapper) in MAPPERS.iter().enumerate() {
+            let cell = |state: &str| {
+                let run = d.exact.run(pi(state), 0, mi);
+                format!("{} / {:.1}", run.summary.latency, run.summary.energy / 1000.0)
+            };
+            let delta = |state: &str| fmt_pct(d.exact.improvement(pi(state), 0, 0, mi));
+            t.row([
+                mapper.to_string(),
+                cell("healthy"),
+                cell("1-dead-link"),
+                delta("1-dead-link"),
+                cell("2-dead-links"),
+                delta("2-dead-links"),
+                cell("1-dead-router"),
+                delta("1-dead-router"),
+            ]);
+        }
+        let fault_desc: Vec<String> = FAULT_STATES[1..]
+            .iter()
+            .map(|state| {
+                let cfg = &d.exact.platforms[pi(state)];
+                format!("{state}: {}", cfg.faults)
+            })
+            .collect();
+        body.push_str(&format!(
+            "\n**{tname}** (cycle-accurate; {}):\n\n{t}",
+            fault_desc.join("; "),
+        ));
+    }
+
+    // Model parity: the analytical backend prices the same damaged grids
+    // without ever simulating a flit — report its worst per-cell latency
+    // deviation so readers know how far to trust the cheap fidelity.
+    let mut worst = 0.0f64;
+    for (i, c) in d.exact.cells.iter().enumerate() {
+        let m = &d.model.cells[i];
+        let exact = c.run.summary.latency;
+        let model = m.run.summary.latency;
+        worst = worst.max((model as f64 - exact as f64).abs() / exact.max(1) as f64);
+    }
+    body.push_str(&format!(
+        "\nModel parity: the analytical backend re-priced all {} cells \
+         (faults, detours and energy included) with a worst per-cell \
+         latency deviation of {} from the cycle-accurate runs.\n\
+         Reading: on the mesh, west-first's adaptive turns absorb single \
+         faults with near-zero healthy-path cost, and the uneven mappers \
+         keep most of their advantage on the damaged columns — mapping \
+         quality buys back a real share of the degraded-fabric latency. \
+         The torus columns lose adaptivity (west-first falls back to its \
+         dimension-order core there), so only off-path wires could be \
+         killed and the damage columns move less.\n",
+        d.exact.cells.len(),
+        fmt_pct(worst),
+    ));
+    Report {
+        id: "resilience",
+        title: "Fault injection: mapping quality on degraded fabrics",
+        body,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_picks_are_deterministic_and_survivable() {
+        for kind in [TopologyKind::Mesh, TopologyKind::Torus] {
+            let base = platform(kind);
+            for state in FAULT_STATES {
+                let a = degrade(&base, state);
+                let b = degrade(&base, state);
+                assert_eq!(a.faults, b.faults, "{kind:?}/{state} must pick identically");
+                assert!(survivable(&base, &a.faults), "{kind:?}/{state} must stay deliverable");
+                match state {
+                    "healthy" => assert!(a.faults.is_healthy()),
+                    "1-dead-link" => assert_eq!(a.faults.dead_links().len(), 2),
+                    "2-dead-links" => assert_eq!(a.faults.dead_links().len(), 4),
+                    "1-dead-router" => {
+                        assert_eq!(a.faults.dead_routers().len(), 1);
+                        assert_eq!(a.num_pes(), base.num_pes() - 1, "dead router detaches its PE");
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_single_link_pick_hits_used_traffic() {
+        // The picker must prefer a wire healthy traffic crossed — on the
+        // mesh, west-first can detour around it, so such a wire survives
+        // the reachability gate.
+        let base = platform(TopologyKind::Mesh);
+        let degraded = degrade(&base, "1-dead-link");
+        let (node, port) = degraded.faults.dead_links()[0];
+        assert!(
+            on_path_wires(&base).contains(&(node, port)),
+            "dead wire ({node}, {port}) should carry healthy traffic"
+        );
+    }
+
+    #[test]
+    fn quick_grid_completes_and_reports_in_both_fidelities() {
+        let d = data_with_jobs(true, Some(2));
+        let cells = TOPOLOGIES.len() * FAULT_STATES.len() * MAPPERS.len();
+        assert_eq!(d.exact.cells.len(), cells);
+        assert_eq!(d.model.cells.len(), cells);
+        for c in &d.exact.cells {
+            assert!(c.run.summary.latency > 0);
+            assert!(c.run.summary.energy > 0.0, "every cell must price its energy");
+        }
+        // The dead-router columns run one PE short.
+        let dead = d.exact.get("mesh/1-dead-router", "C1", "row-major").unwrap();
+        let healthy = d.exact.get("mesh/healthy", "C1", "row-major").unwrap();
+        assert_eq!(dead.run.counts.len(), healthy.run.counts.len() - 1);
+        // Damage costs cycles for the baseline mapper on the mesh.
+        assert!(dead.run.summary.latency >= healthy.run.summary.latency);
+
+        let rep = report(&d);
+        assert_eq!(rep.id, "resilience");
+        for m in MAPPERS {
+            assert!(rep.body.contains(m), "missing {m}");
+        }
+        for s in FAULT_STATES {
+            assert!(rep.body.contains(s), "missing {s}");
+        }
+        assert!(rep.body.contains("Model parity"), "needs the parity paragraph");
+        assert!(rep.body.contains("dead link"), "fault maps must be named in the body");
+
+        let json = to_json(&d);
+        assert!(json.starts_with("[\n") && json.ends_with("]\n"));
+        assert_eq!(json.matches("\"scenario\"").count(), 2);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(json.contains("resilience/exact"), "{json}");
+        assert!(json.contains("resilience/model"), "{json}");
+        assert_eq!(json.matches("\"energy\":").count(), 2 * cells);
+    }
+}

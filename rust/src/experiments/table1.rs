@@ -59,6 +59,24 @@ pub fn rows() -> Vec<Row> {
         .collect()
 }
 
+/// JSON for the table: one object per row (the machine-readable twin of
+/// the rendered table, hand-rolled like
+/// [`SweepResults::to_json`](super::SweepResults::to_json)).
+pub fn to_json(rows: &[Row]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\n  \"table\": \"table1\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = write!(
+            out,
+            "    {{\"kernel\":{},\"padding\":{},\"iterations\":{},\"flits\":{},\"paper_flits\":{}}}{comma}\n",
+            r.kernel, r.padding, r.iterations, r.flits, r.paper_flits,
+        );
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 /// Render the report.
 pub fn run() -> Report {
     let mut t = Table::new(["kernel", "padding", "mapping iterations", "flits (ours)", "flits (paper)"]);
@@ -97,6 +115,23 @@ mod tests {
             // 28 + 2·padding − (k − 1) = 28.
             assert_eq!(28 + 2 * r.padding - (r.kernel - 1), 28);
         }
+    }
+
+    #[test]
+    fn json_parses_shallowly_and_matches_the_rendered_rows() {
+        let rows = rows();
+        let json = to_json(&rows);
+        assert!(json.starts_with("{\n") && json.ends_with("}\n"), "{json}");
+        assert_eq!(json.matches("\"kernel\":").count(), rows.len(), "one object per row");
+        assert_eq!(json.matches('{').count(), json.matches('}').count(), "balanced");
+        assert_eq!(json.matches('[').count(), json.matches(']').count(), "balanced");
+        assert!(!json.contains(",\n  ]"), "no trailing comma: {json}");
+        // Row count matches what the rendered table prints (header + rows).
+        let rendered = run();
+        for r in &rows {
+            assert!(rendered.body.contains(&format!("{0}x{0}", r.kernel)));
+        }
+        assert!(json.contains("\"flits\":22"), "the 13x13 row: {json}");
     }
 
     #[test]

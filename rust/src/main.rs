@@ -2,13 +2,15 @@
 //! inspection, and PJRT LeNet inference, all from the command line.
 //!
 //! ```text
-//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|scale|all>
-//!           [--quick] [--jobs N] [--json PATH]   (--json: every experiment but table1)
+//! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|scale|resilience|all>
+//!           [--quick] [--jobs N] [--json PATH]
 //! noctt sim --layer <name|k<N>> --strategy <name>
 //!           [--workload <zoo-name|path.wl>] [--channels N]
 //!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //!           [--topology mesh|torus] [--routing xy|yx|west-first]
 //!           [--fidelity cycle-accurate|analytical]
+//!           [--kill-link "x,y,dir[;...]"] [--kill-router "x,y[;...]"]
+//!           [--fault-seed N --fault-rate F]
 //! noctt serve [--workload <zoo-name|path.wl>] [--strategy <name>]
 //!             [--arrival uniform|poisson|bursty|bursty-<k>] [--load F]
 //!             [--requests N] [--window N] [--seed N] [--trim]
@@ -51,6 +53,7 @@ use noctt::dnn::{lenet5, zoo, LayerSpec, WorkloadSpec};
 use noctt::experiments;
 use noctt::mapping::{self, distance::pe_distances, run_layer, MapCtx, Mapper, Strategy};
 use noctt::metrics::improvement;
+use noctt::noc::topology::port_from_str;
 use noctt::runtime::{LenetRuntime, TensorFile};
 use noctt::serving::{Arrival, ServingConfig, ServingSim};
 use noctt::util::threadpool::parse_jobs;
@@ -248,13 +251,15 @@ fn usage() -> ! {
         "noctt — travel-time based task mapping for NoC-based DNN accelerators\n\
          \n\
          Usage:\n\
-         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|scale|all>\n\
+         \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|scale|resilience|all>\n\
          \x20           [--quick] [--jobs N] [--json PATH]\n\
          \x20 noctt sim --layer <name|k<N>> --strategy <s> [--mcs 2|4]\n\
          \x20           [--workload <zoo-name|path.wl>] [--channels N]\n\
          \x20           [--mesh WxH] [--mc-at n1,n2,...]\n\
          \x20           [--topology mesh|torus] [--routing xy|yx|west-first]\n\
          \x20           [--fidelity cycle-accurate|analytical]\n\
+         \x20           [--kill-link \"x,y,dir[;...]\"] [--kill-router \"x,y[;...]\"]\n\
+         \x20           [--fault-seed N --fault-rate F]\n\
          \x20 noctt serve [--workload <zoo-name|path.wl>] [--strategy <s>]\n\
          \x20             [--arrival uniform|poisson|bursty|bursty-<k>] [--load F]\n\
          \x20             [--requests N] [--window N] [--seed N] [--trim]\n\
@@ -270,7 +275,11 @@ fn usage() -> ! {
          --jobs N  sweep worker threads (default: all cores; 1 = serial;\n\
          \x20          also settable as the NOCTT_JOBS environment variable)\n\
          --json PATH  also write the sweep's raw data as JSON\n\
-         \x20          (every experiment but table1)\n\
+         --kill-link/--kill-router  fault injection: dead wires (both\n\
+         \x20          directions; dir is n|e|s|w) and dead routers (their PE\n\
+         \x20          detaches); west-first steers around, xy/yx error out\n\
+         --fault-seed/--fault-rate  random fault map instead (per-wire\n\
+         \x20          Bernoulli at rate F, deterministic under the seed)\n\
          --fidelity  latency backend: cycle-accurate co-simulation (default)\n\
          \x20          or the contention-aware analytical model (fast, approximate)\n\
          --load F  serve: offered load relative to the bottleneck layer's\n\
@@ -323,6 +332,40 @@ fn parse_platform(a: &args::Args) -> Result<PlatformConfig> {
     }
     if let Some(f) = a.get("fidelity") {
         b = b.fidelity(f.parse().context("--fidelity takes cycle-accurate|analytical")?);
+    }
+    // Fault-injection knobs. Coordinates resolve against the *final*
+    // dimensions at build() time, so flag order does not matter; the flag
+    // parser rejects duplicate flags, so several kills travel as one
+    // semicolon-separated list.
+    if let Some(spec) = a.get("kill-link") {
+        for one in spec.split(';').filter(|s| !s.trim().is_empty()) {
+            let parts: Vec<&str> = one.split(',').map(str::trim).collect();
+            ensure!(
+                parts.len() == 3,
+                "--kill-link takes x,y,dir entries (e.g. 0,0,e — semicolon-separate several), got '{one}'"
+            );
+            let x = parts[0].parse().context("--kill-link x")?;
+            let y = parts[1].parse().context("--kill-link y")?;
+            let port = port_from_str(parts[2]).context("--kill-link dir")?;
+            b = b.kill_link(x, y, port);
+        }
+    }
+    if let Some(spec) = a.get("kill-router") {
+        for one in spec.split(';').filter(|s| !s.trim().is_empty()) {
+            let (x, y) = one.split_once(',').with_context(|| {
+                format!("--kill-router takes x,y entries (semicolon-separate several), got '{one}'")
+            })?;
+            b = b.kill_router(
+                x.trim().parse().context("--kill-router x")?,
+                y.trim().parse().context("--kill-router y")?,
+            );
+        }
+    }
+    if let Some(seed) = a.get("fault-seed") {
+        b = b.fault_seed(seed.parse().context("--fault-seed")?);
+    }
+    if let Some(rate) = a.get("fault-rate") {
+        b = b.fault_rate(rate.parse().context("--fault-rate")?);
     }
     b.build()
 }
@@ -455,9 +498,19 @@ fn cmd_exp(a: &args::Args) -> Result<()> {
                 write(exp::scale::to_json(&d))?;
                 exp::scale::report(&d)
             }
+            "resilience" => {
+                let d = exp::resilience::data(quick);
+                write(exp::resilience::to_json(&d))?;
+                exp::resilience::report(&d)
+            }
+            "table1" => {
+                let rows = exp::table1::rows();
+                write(exp::table1::to_json(&rows))?;
+                exp::table1::run()
+            }
             other => bail!(
-                "--json is not supported for '{other}' — every simulating experiment \
-                 ({:?} minus 'table1') emits its sweep grid as JSON",
+                "--json is not supported for '{other}' — every experiment id \
+                 ({:?}) emits its grid/table as JSON",
                 experiments::ALL_IDS
             ),
         };

@@ -167,6 +167,12 @@ pub fn run_layer(cfg: &PlatformConfig, layer: &LayerSpec, strategy: Strategy) ->
 /// configured [`Fidelity`](crate::config::Fidelity) backend: the
 /// cycle-accurate co-simulation, or the closed-form
 /// [`analytical`](crate::accel::analytical) estimate (no `Network` built).
+///
+/// On a faulted fabric this first proves every PE can still exchange
+/// packets with its memory controller under the configured routing —
+/// deterministic X-Y/Y-X fail here with a descriptive error naming the
+/// severed pair instead of deadlocking in the simulator, and west-first
+/// fails the same way when the fabric is truly disconnected.
 pub(crate) fn run_precomputed(
     cfg: &PlatformConfig,
     layer: &LayerSpec,
@@ -175,6 +181,7 @@ pub(crate) fn run_precomputed(
     extra_run: bool,
 ) -> Result<MappedRun> {
     debug_assert_eq!(counts.iter().sum::<u64>(), layer.tasks, "counts must conserve tasks");
+    check_reachability(cfg)?;
     if cfg.fidelity == crate::config::Fidelity::Analytical {
         let result = crate::accel::analytical::estimate(cfg, &layer.profile(cfg), &counts);
         return Ok(finish(label, counts, result, extra_run));
@@ -183,6 +190,28 @@ pub(crate) fn run_precomputed(
     sim.add_budgets(&counts);
     let result = sim.run_until_done()?;
     Ok(finish(label, counts, result, extra_run))
+}
+
+/// Prove every surviving PE can reach its assigned MC and vice versa on
+/// the (possibly faulted) fabric under the configured routing algorithm.
+/// Healthy fabrics short-circuit to `Ok` without building a topology walk.
+pub(crate) fn check_reachability(cfg: &PlatformConfig) -> Result<()> {
+    if cfg.faults.is_healthy() {
+        return Ok(());
+    }
+    let topo = cfg.topo();
+    for (pe, mc) in cfg.mc_assignments() {
+        for (src, dst, way) in [(pe, mc, "PE→MC"), (mc, pe, "MC→PE")] {
+            anyhow::ensure!(
+                topo.route_reachable(cfg.routing, src, dst),
+                "node {dst} is unreachable from node {src} ({way}) under {:?} routing on the \
+                 degraded {topo} fabric ({}); pick west-first routing or a different fault map",
+                cfg.routing,
+                cfg.faults,
+            );
+        }
+    }
+    Ok(())
 }
 
 pub(crate) fn finish(

@@ -91,6 +91,9 @@ pub struct RunSummary {
     pub mean_travel: Vec<Option<f64>>,
     /// Per-PE accumulated travel time.
     pub accum_travel: Vec<u64>,
+    /// Total network energy (router + link, pJ) — priced from the run's
+    /// switching/traversal counters at the platform's per-bit constants.
+    pub energy: f64,
 }
 
 impl RunSummary {
@@ -110,6 +113,7 @@ impl RunSummary {
             counts: res.task_counts(),
             mean_travel,
             accum_travel,
+            energy: res.net.total_energy(),
         }
     }
 }

@@ -28,4 +28,6 @@ pub mod topology;
 
 pub use flit::{Flit, FlitKind, PacketId, PacketInfo, PacketKind};
 pub use network::{Network, NetworkStats};
-pub use topology::{Mesh, NodeId, Port, RoutingAlgorithm, Topology, TopologyKind, NUM_PORTS};
+pub use topology::{
+    FaultMap, Mesh, NodeId, Port, RoutingAlgorithm, Topology, TopologyKind, NUM_PORTS,
+};

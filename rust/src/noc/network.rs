@@ -80,6 +80,23 @@ pub struct NetworkStats {
     /// `switched_per_port[node][port]`, ports as in
     /// [`topology`](crate::noc::topology)).
     pub switched_per_port: Vec<[u64; crate::noc::topology::NUM_PORTS]>,
+    /// Flits that crossed an inter-router wire (a switched move whose
+    /// output was not the local port — ejections switch but do not
+    /// traverse a link).
+    pub link_traversals: u64,
+    /// Total router switching energy in pJ:
+    /// `flits_switched × es_bit × flit_bits`. Zero until
+    /// [`price_energy`](Self::price_energy) runs (the backends price at
+    /// finalize so the counters stay pure integers in flight).
+    pub router_energy: f64,
+    /// Total link traversal energy in pJ:
+    /// `link_traversals × el_bit × flit_bits`.
+    pub link_energy: f64,
+    /// Mean over routers of the number of output ports that switched at
+    /// least one flit — how widely the traffic spreads the fabric (a
+    /// degraded fabric concentrates it; a good mapping keeps it low
+    /// without starving).
+    pub avg_load_degree: f64,
 }
 
 impl NetworkStats {
@@ -88,6 +105,35 @@ impl NetworkStats {
         let i = kind_index(kind);
         (self.delivered_by_kind[i] > 0)
             .then(|| self.latency_sum[i] as f64 / self.delivered_by_kind[i] as f64)
+    }
+
+    /// Total network energy in pJ (router switching + link traversal),
+    /// meaningful after [`price_energy`](Self::price_energy).
+    pub fn total_energy(&self) -> f64 {
+        self.router_energy + self.link_energy
+    }
+
+    /// Price the accumulated counters into energy (Hu & Marculescu bit
+    /// energy): `router_energy = flits_switched × es_bit × flit_bits`,
+    /// `link_energy = link_traversals × el_bit × flit_bits`, and derive
+    /// [`avg_load_degree`](Self::avg_load_degree) from the per-port
+    /// switching histogram. A single multiplication per term — exact,
+    /// deterministic, and free of accumulation-order effects — called by
+    /// both latency backends when they finalize a result.
+    pub fn price_energy(&mut self, es_bit: f64, el_bit: f64, flit_bits: u64) {
+        let bits = flit_bits as f64;
+        self.router_energy = self.flits_switched as f64 * es_bit * bits;
+        self.link_energy = self.link_traversals as f64 * el_bit * bits;
+        self.avg_load_degree = if self.switched_per_port.is_empty() {
+            0.0
+        } else {
+            let active: u64 = self
+                .switched_per_port
+                .iter()
+                .map(|ports| ports.iter().filter(|&&c| c > 0).count() as u64)
+                .sum();
+            active as f64 / self.switched_per_port.len() as f64
+        };
     }
 }
 
@@ -135,6 +181,10 @@ pub struct Network {
     ni_credits_scratch: Vec<NiCreditWire>,
     moves_scratch: Vec<crate::noc::router::SwitchedFlit>,
     stats: NetworkStats,
+    /// Energy pricing constants captured from the platform
+    /// (`es_bit`, `el_bit`, `flit_bits`) for
+    /// [`priced_stats`](Self::priced_stats).
+    energy_cfg: (f64, f64, u64),
 }
 
 impl Network {
@@ -170,6 +220,7 @@ impl Network {
                 switched_per_port: vec![[0; crate::noc::topology::NUM_PORTS]; num_nodes],
                 ..NetworkStats::default()
             },
+            energy_cfg: (cfg.es_bit, cfg.el_bit, cfg.flit_bits),
         }
     }
 
@@ -205,9 +256,21 @@ impl Network {
         self.packets.len()
     }
 
-    /// Traffic statistics so far.
+    /// Traffic statistics so far. Energy fields are unpriced (zero) here;
+    /// use [`priced_stats`](Self::priced_stats) for a finalized snapshot.
     pub fn stats(&self) -> &NetworkStats {
         &self.stats
+    }
+
+    /// A snapshot of the statistics with the energy model applied
+    /// ([`NetworkStats::price_energy`] under the platform's
+    /// `es_bit`/`el_bit`/`flit_bits`) — what the simulation backend puts
+    /// in its [`SimResult`](crate::accel::SimResult).
+    pub fn priced_stats(&self) -> NetworkStats {
+        let mut s = self.stats.clone();
+        let (es, el, bits) = self.energy_cfg;
+        s.price_energy(es, el, bits);
+        s
     }
 
     /// Put `node`'s router on the active worklist (flit arrival).
@@ -460,6 +523,7 @@ impl Network {
                         .topo
                         .neighbor(node, m.out_port)
                         .expect("routing never exits the fabric");
+                    self.stats.link_traversals += 1;
                     let in_port = Topology::opposite(m.out_port);
                     self.flit_wires.push((next, in_port, m.out_vc, m.flit));
                 }
@@ -746,6 +810,50 @@ mod tests {
             obs
         };
         assert_eq!(drive(false), drive(true), "event-driven diverged from dense stepping");
+    }
+
+    #[test]
+    fn energy_identities_hold_on_a_hand_computed_packet() {
+        // 0 → 10 under X-Y: 4 hops, 5 routers on the path. A 3-flit
+        // packet is switched once per flit at every router (ejection
+        // included) and crosses each of the 4 wires once per flit.
+        let cfg = PlatformConfig::default_2mc();
+        let mut n = net();
+        let id = n.send(0, 10, PacketKind::Request, 3, 0, 0);
+        n.run_to_quiescence(10_000);
+        assert!(n.packet(id).delivered());
+        let s = n.priced_stats();
+        assert_eq!(s.flits_switched, 3 * 5);
+        assert_eq!(s.link_traversals, 3 * 4);
+        assert_eq!(s.router_energy, (3 * 5) as f64 * cfg.es_bit * cfg.flit_bits as f64);
+        assert_eq!(s.link_energy, (3 * 4) as f64 * cfg.el_bit * cfg.flit_bits as f64);
+        assert_eq!(s.total_energy(), s.router_energy + s.link_energy);
+        // Path 0→1→2→6→10 drives 5 output ports across 16 routers.
+        assert_eq!(s.avg_load_degree, 5.0 / 16.0);
+        // The in-flight view stays unpriced: counters only.
+        assert_eq!(n.stats().router_energy, 0.0);
+        assert_eq!(n.stats().link_traversals, 12);
+    }
+
+    #[test]
+    fn west_first_steers_around_a_dead_link_at_flit_level() {
+        use crate::noc::topology::PORT_EAST;
+        // Kill the 0–1 wire: west-first opens south instead and still
+        // delivers 0 → 10 on a minimal path.
+        let cfg = PlatformConfig::builder()
+            .routing(RoutingAlgorithm::WestFirst)
+            .kill_link(0, 0, PORT_EAST)
+            .build()
+            .unwrap();
+        let mut n = Network::new(&cfg);
+        let id = n.send(0, 10, PacketKind::Request, 2, 0, 0);
+        n.run_to_quiescence(10_000);
+        let p = n.packet(id);
+        assert!(p.delivered(), "west-first must deliver around the dead wire");
+        let s = n.priced_stats();
+        assert_eq!(s.switched_per_port[0][PORT_EAST], 0, "dead wire must never switch");
+        // Minimal detour: 4 hops' worth of link traversals, no more.
+        assert_eq!(s.link_traversals, 2 * 4);
     }
 
     #[test]

@@ -17,6 +17,24 @@
 //!   [`route_candidates`](Topology::route_candidates) /
 //!   [`path`](Topology::path) for a [`RoutingAlgorithm`].
 //!
+//! # Faults
+//!
+//! A [`FaultMap`] attached via [`Topology::with_faults`] removes links
+//! (both directions at once — a dead wire is dead both ways) and whole
+//! routers from the fabric. [`neighbor`](Topology::neighbor) answers
+//! `None` across a dead link or into/out of a dead router, so every
+//! consumer — route walking, credit return, reachability — sees the same
+//! degraded fabric. West-first keeps its adaptivity on a faulty mesh:
+//! [`route_candidates`](Topology::route_candidates) filters the adaptive
+//! candidate set down to live links whose far side can still reach the
+//! destination, so any pair [`route_reachable`](Topology::route_reachable)
+//! says is connected is delivered on a *minimal* path (productive moves
+//! only — faults never add detour hops, they only restrict which minimal
+//! path is taken). Deterministic X-Y / Y-X have no alternative turns to
+//! offer, so a dead link on their one path makes the pair unreachable —
+//! callers are expected to pre-check with `route_reachable` and fail fast
+//! with a descriptive error instead of routing into the hole.
+//!
 //! # Deadlock freedom
 //!
 //! * **Mesh + X-Y / Y-X**: dimension-order routing is minimal,
@@ -79,6 +97,196 @@ pub const NUM_PORTS: usize = 5;
 
 /// Human-readable port names, indexed by [`Port`].
 pub const PORT_NAMES: [&str; NUM_PORTS] = ["local", "north", "east", "south", "west"];
+
+/// Parse a cardinal direction (`n|north|e|east|s|south|w|west`) into a
+/// [`Port`] — the `--kill-link x,y,dir` CLI syntax.
+pub fn port_from_str(s: &str) -> anyhow::Result<Port> {
+    match s {
+        "n" | "north" => Ok(PORT_NORTH),
+        "e" | "east" => Ok(PORT_EAST),
+        "s" | "south" => Ok(PORT_SOUTH),
+        "w" | "west" => Ok(PORT_WEST),
+        other => Err(anyhow::anyhow!(
+            "unknown direction '{other}' (expected n|north|e|east|s|south|w|west)"
+        )),
+    }
+}
+
+/// The set of dead links and dead routers a [`Topology`] carries.
+///
+/// Links die *undirected*: killing `(n, port)` records both the outbound
+/// entry and its mirror at the neighbour, so the surviving fabric is
+/// stated honestly — no half-dead wires that pass flits one way. Entries
+/// are kept sorted, which makes lookups binary searches and the map
+/// `Eq`/hash-free deterministic (two maps built from the same kills in
+/// any order compare equal).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultMap {
+    /// Directed dead-link entries `(node, out port)`, sorted, both
+    /// directions of every killed wire present.
+    dead_links: Vec<(NodeId, Port)>,
+    /// Dead routers, sorted. A dead router loses all its links and
+    /// detaches its PE (see `PlatformConfig::pe_nodes`).
+    dead_routers: Vec<NodeId>,
+}
+
+impl FaultMap {
+    /// An empty (fully healthy) fault map.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when nothing is dead — the fast path every healthy run takes.
+    pub fn is_healthy(&self) -> bool {
+        self.dead_links.is_empty() && self.dead_routers.is_empty()
+    }
+
+    /// Kill the link leaving `n` through `port` (and its mirror at the
+    /// neighbour). `topo` supplies the geometry — pass the *healthy*
+    /// fabric the map will be attached to. Errors if the node is out of
+    /// range or no link exists there (a mesh edge).
+    pub fn kill_link(&mut self, topo: &Topology, n: NodeId, port: Port) -> anyhow::Result<()> {
+        anyhow::ensure!(n < topo.len(), "--kill-link node {n} outside the {topo} fabric");
+        anyhow::ensure!(
+            port != PORT_LOCAL && port < NUM_PORTS,
+            "--kill-link needs a cardinal direction, got port {port}"
+        );
+        let peer = topo.geom_neighbor(n, port).ok_or_else(|| {
+            let (x, y) = topo.coords(n);
+            anyhow::anyhow!(
+                "no {} link at node {n} ({x},{y}) on the {topo} fabric — that side is the edge",
+                PORT_NAMES[port]
+            )
+        })?;
+        self.insert_link(n, port);
+        self.insert_link(peer, Topology::opposite(port));
+        Ok(())
+    }
+
+    /// Kill router `n`: all its links die and (at the platform layer) its
+    /// PE detaches. Errors if `n` is out of range.
+    pub fn kill_router(&mut self, topo: &Topology, n: NodeId) -> anyhow::Result<()> {
+        anyhow::ensure!(n < topo.len(), "--kill-router node {n} outside the {topo} fabric");
+        if let Err(i) = self.dead_routers.binary_search(&n) {
+            self.dead_routers.insert(i, n);
+        }
+        Ok(())
+    }
+
+    fn insert_link(&mut self, n: NodeId, port: Port) {
+        let entry = (n, port);
+        if let Err(i) = self.dead_links.binary_search(&entry) {
+            self.dead_links.insert(i, entry);
+        }
+    }
+
+    /// Is the directed link leaving `n` through `port` dead?
+    pub fn link_dead(&self, n: NodeId, port: Port) -> bool {
+        self.dead_links.binary_search(&(n, port)).is_ok()
+    }
+
+    /// Is router `n` dead?
+    pub fn router_dead(&self, n: NodeId) -> bool {
+        self.dead_routers.binary_search(&n).is_ok()
+    }
+
+    /// The directed dead-link entries (sorted; both directions of every
+    /// killed wire).
+    pub fn dead_links(&self) -> &[(NodeId, Port)] {
+        &self.dead_links
+    }
+
+    /// The dead routers (sorted).
+    pub fn dead_routers(&self) -> &[NodeId] {
+        &self.dead_routers
+    }
+
+    /// A random link-fault map: every undirected link of `topo` dies
+    /// independently with probability `rate`, driven by a [`SplitMix64`]
+    /// stream seeded with `seed` — the `--fault-seed`/`--fault-rate` CLI
+    /// pair. Deterministic: same topology, seed and rate give the same
+    /// map on every platform and thread.
+    ///
+    /// [`SplitMix64`]: crate::util::prng::SplitMix64
+    pub fn random(topo: &Topology, seed: u64, rate: f64) -> Self {
+        let mut rng = crate::util::prng::SplitMix64::new(seed);
+        let mut map = Self::new();
+        // Canonical undirected enumeration: east and south out-links of
+        // every node (wrap links included on a torus) cover each wire
+        // exactly once, in a fixed order.
+        for n in 0..topo.len() {
+            for port in [PORT_EAST, PORT_SOUTH] {
+                if topo.geom_neighbor(n, port).is_none() {
+                    continue;
+                }
+                if rng.chance(rate) {
+                    map.kill_link(topo, n, port).expect("enumerated link exists");
+                }
+            }
+        }
+        map
+    }
+
+    /// Check the map against the fabric it will be attached to: every
+    /// entry in range, every dead link geometrically real and recorded in
+    /// both directions. Called from `PlatformConfig::validate`.
+    pub fn validate(&self, topo: &Topology) -> anyhow::Result<()> {
+        for &(n, port) in &self.dead_links {
+            anyhow::ensure!(n < topo.len(), "dead link at node {n} outside the {topo} fabric");
+            anyhow::ensure!(
+                port != PORT_LOCAL && port < NUM_PORTS,
+                "dead link at node {n} names port {port}, not a cardinal direction"
+            );
+            let peer = topo.geom_neighbor(n, port).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "dead link {} of node {n} does not exist on the {topo} fabric",
+                    PORT_NAMES[port]
+                )
+            })?;
+            anyhow::ensure!(
+                self.link_dead(peer, Topology::opposite(port)),
+                "dead link {n}--{peer} is only recorded one way; links die undirected \
+                 (use FaultMap::kill_link)"
+            );
+        }
+        for &n in &self.dead_routers {
+            anyhow::ensure!(n < topo.len(), "dead router {n} outside the {topo} fabric");
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for FaultMap {
+    /// Honest one-line statement of the surviving fabric, e.g.
+    /// `2 dead links (0-e, 5-s), 1 dead router (7)`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_healthy() {
+            return f.write_str("healthy");
+        }
+        // Each undirected wire appears twice; print its canonical
+        // (east/south) direction only.
+        let wires: Vec<String> = self
+            .dead_links
+            .iter()
+            .filter(|&&(_, p)| p == PORT_EAST || p == PORT_SOUTH)
+            .map(|&(n, p)| format!("{n}-{}", &PORT_NAMES[p][..1]))
+            .collect();
+        let mut parts = Vec::new();
+        if !wires.is_empty() {
+            parts.push(format!("{} dead link(s) ({})", wires.len(), wires.join(", ")));
+        }
+        if !self.dead_routers.is_empty() {
+            let routers: Vec<String> =
+                self.dead_routers.iter().map(|n| n.to_string()).collect();
+            parts.push(format!(
+                "{} dead router(s) ({})",
+                self.dead_routers.len(),
+                routers.join(", ")
+            ));
+        }
+        f.write_str(&parts.join(", "))
+    }
+}
 
 /// The fabric shape: how (and whether) the W×H grid's edges connect.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -195,12 +403,20 @@ impl RouteCandidates {
     }
 }
 
-/// A W×H fabric of a given [`TopologyKind`].
+/// A W×H fabric of a given [`TopologyKind`], optionally degraded by a
+/// [`FaultMap`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Topology {
     width: usize,
     height: usize,
     kind: TopologyKind,
+    faults: FaultMap,
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{} {}", self.width, self.height, self.kind)
+    }
 }
 
 /// Backwards-compatible alias from the mesh-only era; [`Topology::new`]
@@ -229,7 +445,20 @@ impl Topology {
                  duplicates the internal link and a 1-ring wraps onto itself"
             );
         }
-        Self { width, height, kind }
+        Self { width, height, kind, faults: FaultMap::default() }
+    }
+
+    /// Attach a fault map (consuming builder style):
+    /// `Topology::new(4, 4).with_faults(map)`. The map should already be
+    /// [validated](FaultMap::validate) against this fabric's geometry.
+    pub fn with_faults(mut self, faults: FaultMap) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// The fabric's fault map (empty when healthy).
+    pub fn faults(&self) -> &FaultMap {
+        &self.faults
     }
 
     /// Fabric width (columns).
@@ -290,8 +519,25 @@ impl Topology {
     }
 
     /// The neighbour of `n` through `port`: `None` when the port faces off
-    /// a mesh edge (torus ports always connect — wrap links).
+    /// a mesh edge (torus ports always connect — wrap links), and `None`
+    /// across dead links or into/out of dead routers when a [`FaultMap`]
+    /// is attached.
     pub fn neighbor(&self, n: NodeId, port: Port) -> Option<NodeId> {
+        let next = self.geom_neighbor(n, port)?;
+        if !self.faults.is_healthy()
+            && (self.faults.link_dead(n, port)
+                || self.faults.router_dead(n)
+                || self.faults.router_dead(next))
+        {
+            return None;
+        }
+        Some(next)
+    }
+
+    /// The purely geometric neighbour — what [`neighbor`](Self::neighbor)
+    /// answers on a healthy fabric. Fault construction and validation use
+    /// this to reason about wires that exist even when dead.
+    fn geom_neighbor(&self, n: NodeId, port: Port) -> Option<NodeId> {
         let (x, y) = self.coords(n);
         let torus = self.kind == TopologyKind::Torus;
         match port {
@@ -402,9 +648,98 @@ impl Topology {
                 if c.len == 0 {
                     c.push(PORT_LOCAL);
                 }
+                if !self.faults.is_healthy() && c.ports[0] != PORT_LOCAL {
+                    // Degraded mesh: keep only candidates whose link is
+                    // alive *and* whose far side can still reach the
+                    // destination — a live hop into a cul-de-sac would
+                    // strand the packet (productive moves never revisit
+                    // it). If the pair is reachable at all, at least one
+                    // candidate survives this filter, so the adaptive
+                    // router always has a legal (still minimal) way out.
+                    let mut live = RouteCandidates { ports: [PORT_LOCAL; 3], len: 0 };
+                    for &p in c.as_slice() {
+                        if let Some(next) = self.neighbor(cur, p) {
+                            if self.west_first_reachable(next, dst) {
+                                live.push(p);
+                            }
+                        }
+                    }
+                    if live.len > 0 {
+                        return live;
+                    }
+                    // Unreachable pair — only hit when a caller skipped
+                    // the route_reachable pre-check; hand back the
+                    // unfiltered productive set so path-walkers fail on
+                    // the dead link instead of mis-ejecting here.
+                }
                 c
             }
         }
+    }
+
+    /// Can a packet travel `src` → `dst` under `algo` on this (possibly
+    /// degraded) fabric?
+    ///
+    /// Deterministic algorithms (X-Y, Y-X, and west-first's X-Y core on a
+    /// torus) have exactly one path — walk it and report whether every
+    /// link is alive. Adaptive west-first on a mesh searches its whole
+    /// productive-move tree: reachable means *some* sequence of legal
+    /// west-first turns delivers, which is exactly the set
+    /// [`route_candidates`](Self::route_candidates) lets the router pick
+    /// from. Always true for `src == dst` on live routers.
+    ///
+    /// Callers that must not deadlock on a severed pair (the mapping
+    /// layer) pre-check with this and surface a descriptive error naming
+    /// the pair.
+    pub fn route_reachable(&self, algo: RoutingAlgorithm, src: NodeId, dst: NodeId) -> bool {
+        if self.faults.router_dead(src) || self.faults.router_dead(dst) {
+            return false;
+        }
+        if self.faults.is_healthy() || src == dst {
+            return true;
+        }
+        if algo == RoutingAlgorithm::WestFirst && self.kind == TopologyKind::Mesh {
+            return self.west_first_reachable(src, dst);
+        }
+        // Deterministic single path: follow the primary candidate, fail
+        // on the first dead link. Every step is productive, so this
+        // terminates within hop_distance steps.
+        let mut cur = src;
+        while cur != dst {
+            let port = self.route_candidates(algo, cur, dst).primary();
+            match self.neighbor(cur, port) {
+                Some(next) => cur = next,
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// DFS over the *unfiltered* productive west-first moves: true when
+    /// some sequence of legal turns reaches `dst` over live links.
+    /// Terminates without a visited set because every move strictly
+    /// decreases [`hop_distance`](Self::hop_distance) to `dst` (branching
+    /// is ≤ 2 after the mandatory west phase).
+    fn west_first_reachable(&self, cur: NodeId, dst: NodeId) -> bool {
+        if cur == dst {
+            return true;
+        }
+        let (cx, cy) = self.coords(cur);
+        let (dx, dy) = self.coords(dst);
+        if dx < cx {
+            // Mandatory phase: west is the only legal move.
+            return match self.neighbor(cur, PORT_WEST) {
+                Some(next) => self.west_first_reachable(next, dst),
+                None => false,
+            };
+        }
+        let probe = |port: Port| match self.neighbor(cur, port) {
+            Some(next) => self.west_first_reachable(next, dst),
+            None => false,
+        };
+        (dx > cx && probe(PORT_EAST))
+            || (dy < cy && probe(PORT_NORTH))
+            || (dy > cy && probe(PORT_SOUTH))
     }
 
     /// The output port a flit at `cur` takes toward `dst` under `algo`,
@@ -708,5 +1043,133 @@ mod tests {
         assert_eq!(m.len(), 16);
         assert_eq!(m.coords(9), (1, 1));
         assert_eq!(m.hop_distance(0, 15), 8);
+    }
+
+    #[test]
+    fn killed_links_die_in_both_directions() {
+        let healthy = mesh4();
+        let mut fm = FaultMap::new();
+        fm.kill_link(&healthy, 0, PORT_EAST).unwrap();
+        assert!(fm.link_dead(0, PORT_EAST));
+        assert!(fm.link_dead(1, PORT_WEST), "the mirror entry must die too");
+        let m = healthy.clone().with_faults(fm.clone());
+        assert_eq!(m.neighbor(0, PORT_EAST), None);
+        assert_eq!(m.neighbor(1, PORT_WEST), None);
+        // Untouched wires still answer.
+        assert_eq!(m.neighbor(0, PORT_SOUTH), Some(4));
+        // Geometry is unchanged: distances stay geometric.
+        assert_eq!(m.hop_distance(0, 1), 1);
+        fm.validate(&healthy).expect("kill_link output validates");
+    }
+
+    #[test]
+    fn killing_an_edge_link_is_a_descriptive_error() {
+        let m = mesh4();
+        let mut fm = FaultMap::new();
+        let err = fm.kill_link(&m, 0, PORT_WEST).unwrap_err().to_string();
+        assert!(err.contains("edge"), "got: {err}");
+        // On a torus the same port is a wrap link and dies fine.
+        let t = torus4();
+        fm.kill_link(&t, 0, PORT_WEST).unwrap();
+        assert!(fm.link_dead(3, PORT_EAST), "wrap mirror lives at the far column");
+    }
+
+    #[test]
+    fn dead_router_loses_all_its_links() {
+        let healthy = mesh4();
+        let mut fm = FaultMap::new();
+        fm.kill_router(&healthy, 5).unwrap();
+        let m = healthy.with_faults(fm);
+        assert_eq!(m.neighbor(5, PORT_EAST), None);
+        assert_eq!(m.neighbor(1, PORT_SOUTH), None, "links *into* the router die too");
+        assert_eq!(m.neighbor(4, PORT_EAST), None);
+        assert!(!m.route_reachable(RoutingAlgorithm::XY, 5, 6), "dead source");
+        assert!(!m.route_reachable(RoutingAlgorithm::WestFirst, 6, 5), "dead destination");
+    }
+
+    #[test]
+    fn xy_is_severed_where_west_first_steers_around() {
+        // Kill 0-e: XY's one path 0→1→2 dies at the first hop, but
+        // west-first may open with south and recover the column later.
+        let healthy = mesh4();
+        let mut fm = FaultMap::new();
+        fm.kill_link(&healthy, 0, PORT_EAST).unwrap();
+        let m = healthy.with_faults(fm);
+        assert!(!m.route_reachable(RoutingAlgorithm::XY, 0, 9));
+        assert!(m.route_reachable(RoutingAlgorithm::YX, 0, 9), "Y-X goes south first, then east");
+        assert!(m.route_reachable(RoutingAlgorithm::WestFirst, 0, 10));
+        // The adaptive candidate set drops the dead east hop.
+        let c = m.route_candidates(RoutingAlgorithm::WestFirst, 0, 10);
+        assert_eq!(c.as_slice(), &[PORT_SOUTH]);
+        // And the primary-candidate path is still minimal.
+        let p = m.path(RoutingAlgorithm::WestFirst, 0, 10);
+        assert_eq!(p.len() - 1, m.hop_distance(0, 10));
+        assert_eq!(p[1], 4, "detour starts south around the dead wire");
+    }
+
+    #[test]
+    fn west_first_reports_truly_severed_pairs() {
+        // Kill both outgoing wires of corner 0: nothing reaches it and it
+        // reaches nothing.
+        let healthy = mesh4();
+        let mut fm = FaultMap::new();
+        fm.kill_link(&healthy, 0, PORT_EAST).unwrap();
+        fm.kill_link(&healthy, 0, PORT_SOUTH).unwrap();
+        let m = healthy.with_faults(fm);
+        for algo in [RoutingAlgorithm::XY, RoutingAlgorithm::YX, RoutingAlgorithm::WestFirst] {
+            assert!(!m.route_reachable(algo, 0, 10), "{algo} must report the severed pair");
+            assert!(!m.route_reachable(algo, 10, 0));
+            assert!(m.route_reachable(algo, 0, 0), "self-delivery needs no links");
+        }
+    }
+
+    #[test]
+    fn west_first_mandatory_phase_does_not_dodge_dead_west_wires() {
+        // dst west of src: west is mandatory; a dead west wire on the row
+        // means unreachable (the turn model forbids the detour), stated
+        // honestly rather than silently re-routed.
+        let healthy = mesh4();
+        let mut fm = FaultMap::new();
+        fm.kill_link(&healthy, 2, PORT_WEST).unwrap();
+        let m = healthy.with_faults(fm);
+        assert!(!m.route_reachable(RoutingAlgorithm::WestFirst, 2, 1));
+        assert!(!m.route_reachable(RoutingAlgorithm::WestFirst, 3, 0));
+        // Eastbound traffic on other rows is untouched.
+        assert!(m.route_reachable(RoutingAlgorithm::WestFirst, 4, 7));
+    }
+
+    #[test]
+    fn random_fault_maps_are_deterministic_and_valid() {
+        let t = torus4();
+        let a = FaultMap::random(&t, 42, 0.3);
+        let b = FaultMap::random(&t, 42, 0.3);
+        assert_eq!(a, b, "same seed, same map");
+        a.validate(&t).expect("random maps validate");
+        assert!(a.dead_routers().is_empty(), "--fault-rate kills links only");
+        // Across a handful of seeds the maps are not all identical.
+        let distinct: std::collections::BTreeSet<Vec<(NodeId, Port)>> =
+            (0..10).map(|s| FaultMap::random(&t, s, 0.3).dead_links().to_vec()).collect();
+        assert!(distinct.len() > 1, "seeds must actually vary the map");
+    }
+
+    #[test]
+    fn one_way_dead_links_fail_validation() {
+        let m = mesh4();
+        let fm = FaultMap { dead_links: vec![(0, PORT_EAST)], dead_routers: vec![] };
+        let err = fm.validate(&m).unwrap_err().to_string();
+        assert!(err.contains("one way"), "got: {err}");
+    }
+
+    #[test]
+    fn fault_map_displays_the_surviving_fabric_honestly() {
+        let healthy = mesh4();
+        assert_eq!(FaultMap::new().to_string(), "healthy");
+        let mut fm = FaultMap::new();
+        fm.kill_link(&healthy, 0, PORT_EAST).unwrap();
+        fm.kill_link(&healthy, 5, PORT_SOUTH).unwrap();
+        fm.kill_router(&healthy, 7).unwrap();
+        let s = fm.to_string();
+        assert_eq!(s, "2 dead link(s) (0-e, 5-s), 1 dead router(s) (7)");
+        assert_eq!(healthy.to_string(), "4x4 mesh");
     }
 }

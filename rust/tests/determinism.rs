@@ -49,6 +49,10 @@ fn fingerprint(results: &SweepResults) -> Vec<(usize, usize, usize, Vec<u64>)> {
                 c.run.result.drained_at,
                 c.run.result.records.len() as u64,
                 c.run.result.net.flits_switched,
+                c.run.result.net.link_traversals,
+                // Priced energy is a pure function of the integer
+                // counters; compare it bit-for-bit anyway.
+                c.run.summary.energy.to_bits(),
                 c.run.extra_run as u64,
             ];
             obs.extend(&c.run.counts);
@@ -215,6 +219,27 @@ fn scale_experiment_is_bit_identical_across_jobs() {
     let serial = scale_fp(1);
     assert!(!serial.is_empty());
     assert_eq!(serial, scale_fp(8), "scale experiment diverged between jobs(1) and jobs(8)");
+}
+
+#[test]
+fn resilience_experiment_is_bit_identical_across_jobs() {
+    // The fault-injection acceptance line: the resilience grid — mesh +
+    // torus across {healthy, dead links, dead router} in both fidelities —
+    // must fingerprint identically at jobs(1) and jobs(8). The degraded
+    // cells are the interesting ones: west-first's fault-filtered
+    // candidate sets and the detached-PE platforms must not make any
+    // result depend on worker interleaving.
+    let resilience_fp = |jobs: usize| {
+        let d = noctt::experiments::resilience::data_with_jobs(true, Some(jobs));
+        vec![fingerprint(&d.exact), fingerprint(&d.model)]
+    };
+    let serial = resilience_fp(1);
+    assert!(!serial.is_empty());
+    assert_eq!(
+        serial,
+        resilience_fp(8),
+        "resilience experiment diverged between jobs(1) and jobs(8)"
+    );
 }
 
 #[test]

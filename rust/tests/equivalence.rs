@@ -83,7 +83,13 @@ fn fingerprint(r: &SimResult) -> Vec<u64> {
         r.net.cycles,
         r.net.flits_injected,
         r.net.flits_switched,
+        r.net.link_traversals,
         r.net.packets_delivered,
+        // The energy/load fields are f64s priced from the integer
+        // counters; compare them bit-for-bit via their raw encodings.
+        r.net.router_energy.to_bits(),
+        r.net.link_energy.to_bits(),
+        r.net.avg_load_degree.to_bits(),
     ]);
     fp.extend(r.net.latency_sum);
     fp.extend(r.net.delivered_by_kind);

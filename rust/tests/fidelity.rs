@@ -115,6 +115,42 @@ fn analytical_error_is_bounded_and_ranks_agree() {
 }
 
 #[test]
+fn analytical_energy_error_is_bounded_like_latency() {
+    // Energy rides the same synthesized traffic counters the latency
+    // model produces, so it inherits the same contract: no cell more than
+    // 1× off, mean relative error under the pinned 50% bound.
+    let results = grid();
+    let pairs = platform_pairs().len();
+    let layers = results.layers.len();
+
+    let mut errs = Vec::new();
+    for pi in 0..pairs {
+        for li in 0..layers {
+            for mi in 0..MAPPERS.len() {
+                let exact = results.run(2 * pi, li, mi).summary.energy;
+                let model = results.run(2 * pi + 1, li, mi).summary.energy;
+                assert!(exact > 0.0 && model > 0.0, "unpriced energy in pair {pi}");
+                let err = (model - exact).abs() / exact;
+                assert!(
+                    err <= 1.0,
+                    "platform pair {pi} layer {li} mapper {}: model energy {model} vs exact \
+                     {exact} ({:.0}% off — beyond the per-cell cap)",
+                    MAPPERS[mi],
+                    100.0 * err
+                );
+                errs.push(err);
+            }
+        }
+    }
+    let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+    assert!(
+        mean <= 0.5,
+        "mean relative energy error {:.1}% exceeds the pinned 50% bound",
+        100.0 * mean
+    );
+}
+
+#[test]
 fn analytical_estimate_is_deterministic_and_instant() {
     // Two independent runs of the analytical half must agree bit-for-bit
     // (pure arithmetic: no RNG, no thread-order sensitivity).

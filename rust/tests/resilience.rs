@@ -1,0 +1,282 @@
+//! The degraded-fabric property suite.
+//!
+//! The resilience PR's contract, held exhaustively: on every
+//! {topology × routing} of three fabric sizes, kill each single wire and
+//! each single non-MC router in turn, and assert the stack reacts
+//! honestly —
+//!
+//! * if every surviving PE↔MC pair is still deliverable under the
+//!   configured routing, the run completes (all packets delivered, no
+//!   deadlock within the cycle cap);
+//! * otherwise the mapping layer returns a descriptive error naming an
+//!   unreachable pair *before* any simulator cycle burns — X-Y/Y-X on a
+//!   severed pair must never silently deadlock or mis-deliver;
+//! * west-first's fault detours never add hops (delivered paths stay
+//!   minimal);
+//! * everything is bit-identical on rerun, and random fault maps are a
+//!   pure function of their seed.
+
+use noctt::accel::SimResult;
+use noctt::config::{FaultMap, PlatformConfig, RoutingAlgorithm, TopologyKind};
+use noctt::dnn::LayerSpec;
+use noctt::mapping::{run_layer, Strategy};
+use noctt::noc::topology::{Topology, PORT_EAST, PORT_SOUTH};
+
+/// The swept fabric sizes: the paper's 4×4, a minimal 3×3 with a single
+/// center MC, and a rectangular 4×8.
+fn sizes() -> Vec<(usize, usize, Vec<usize>)> {
+    vec![(3, 3, vec![4]), (4, 4, vec![9, 10]), (4, 8, vec![13, 18])]
+}
+
+const ROUTINGS: [RoutingAlgorithm; 3] =
+    [RoutingAlgorithm::XY, RoutingAlgorithm::YX, RoutingAlgorithm::WestFirst];
+
+fn base_platform(
+    w: usize,
+    h: usize,
+    mcs: &[usize],
+    kind: TopologyKind,
+    routing: RoutingAlgorithm,
+) -> PlatformConfig {
+    PlatformConfig::builder()
+        .mesh(w, h)
+        .mc_nodes(mcs.to_vec())
+        .topology(kind)
+        .routing(routing)
+        .build()
+        .expect("healthy base platform")
+}
+
+/// Every single-fault map of the fabric: each wire (canonical east/south
+/// enumeration) and each non-MC router killed alone.
+fn single_fault_maps(cfg: &PlatformConfig) -> Vec<FaultMap> {
+    let topo = cfg.topo();
+    let mut maps = Vec::new();
+    for n in 0..topo.len() {
+        for port in [PORT_EAST, PORT_SOUTH] {
+            if topo.neighbor(n, port).is_some() {
+                let mut fm = FaultMap::new();
+                fm.kill_link(&topo, n, port).expect("existing wire");
+                maps.push(fm);
+            }
+        }
+    }
+    for n in (0..topo.len()).filter(|n| !cfg.mc_nodes.contains(n)) {
+        let mut fm = FaultMap::new();
+        fm.kill_router(&topo, n).expect("non-MC router");
+        maps.push(fm);
+    }
+    maps
+}
+
+/// Is every surviving PE↔MC pair deliverable both ways under the
+/// platform's routing? (The same oracle the mapping layer pre-checks.)
+fn all_pairs_deliverable(cfg: &PlatformConfig) -> bool {
+    let topo = cfg.topo();
+    cfg.mc_assignments().into_iter().all(|(pe, mc)| {
+        topo.route_reachable(cfg.routing, pe, mc) && topo.route_reachable(cfg.routing, mc, pe)
+    })
+}
+
+#[test]
+fn every_single_fault_delivers_or_errors_descriptively() {
+    for (w, h, mcs) in sizes() {
+        for kind in [TopologyKind::Mesh, TopologyKind::Torus] {
+            for routing in ROUTINGS {
+                let base = base_platform(w, h, &mcs, kind, routing);
+                for fm in single_fault_maps(&base) {
+                    let mut cfg = base.clone();
+                    cfg.faults = fm;
+                    cfg.validate().unwrap_or_else(|e| {
+                        panic!("{w}x{h} {kind:?}/{routing:?}: single fault invalid: {e}")
+                    });
+                    let layer =
+                        LayerSpec::conv("res", 3, 1.0, cfg.num_pes() as u64);
+                    let ctx = format!(
+                        "{w}x{h} {kind:?}/{routing:?} faults [{}]",
+                        cfg.faults
+                    );
+                    let run = run_layer(&cfg, &layer, Strategy::RowMajor);
+                    if all_pairs_deliverable(&cfg) {
+                        // Deliverable fabric: the run completes inside the
+                        // cycle cap (run_layer errors on deadlock) with
+                        // every task's packets delivered.
+                        let run = run.unwrap_or_else(|e| {
+                            panic!("{ctx}: deliverable fabric failed: {e:?}")
+                        });
+                        assert_eq!(
+                            run.result.records.len() as u64,
+                            layer.tasks,
+                            "{ctx}: not every task completed"
+                        );
+                        assert_eq!(
+                            run.result.net.packets_delivered,
+                            3 * layer.tasks,
+                            "{ctx}: requests/responses/results must all deliver"
+                        );
+                    } else {
+                        // Severed fabric: a descriptive error naming an
+                        // unreachable pair, never a burned cycle cap.
+                        let msg = format!(
+                            "{:?}",
+                            run.err().unwrap_or_else(|| panic!(
+                                "{ctx}: severed fabric did not error"
+                            ))
+                        );
+                        assert!(msg.contains("unreachable"), "{ctx}: {msg}");
+                        assert!(msg.contains("node"), "{ctx}: must name the pair: {msg}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn west_first_detours_never_add_hops() {
+    // On every meshed size, for every single fault and every reachable
+    // pair, the adaptive path is exactly hop_distance long: the fault
+    // filter re-picks among *minimal* candidates, it never detours wide.
+    for (w, h, mcs) in sizes() {
+        let base = base_platform(w, h, &mcs, TopologyKind::Mesh, RoutingAlgorithm::WestFirst);
+        for fm in single_fault_maps(&base) {
+            let topo = base.topo().with_faults(fm);
+            for src in 0..topo.len() {
+                for dst in 0..topo.len() {
+                    if !topo.route_reachable(RoutingAlgorithm::WestFirst, src, dst) {
+                        continue;
+                    }
+                    let path = topo.path(RoutingAlgorithm::WestFirst, src, dst);
+                    assert_eq!(
+                        path.len() - 1,
+                        topo.hop_distance(src, dst),
+                        "{w}x{h} faults [{}]: {src}→{dst} detoured wide: {path:?}",
+                        topo.faults()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn xy_names_the_severed_pair_where_west_first_delivers() {
+    // The headline asymmetry, end to end: kill the 0–1 wire on the 4×4
+    // mesh. PE 0's X-Y route to MC 9 dies at its first hop, so the X-Y
+    // run must error naming the pair; west-first steers south and
+    // delivers everything.
+    let dead = |routing| {
+        let mut cfg = base_platform(4, 4, &[9, 10], TopologyKind::Mesh, routing);
+        let topo = cfg.topo();
+        let mut fm = FaultMap::new();
+        fm.kill_link(&topo, 0, PORT_EAST).unwrap();
+        cfg.faults = fm;
+        cfg
+    };
+    let layer = LayerSpec::conv("res", 3, 1.0, 28);
+
+    let err = run_layer(&dead(RoutingAlgorithm::XY), &layer, Strategy::RowMajor)
+        .expect_err("X-Y across a dead wire must fail");
+    let msg = format!("{err:?}");
+    assert!(msg.contains("unreachable"), "{msg}");
+    assert!(msg.contains("node 0") || msg.contains("node 9"), "must name the pair: {msg}");
+    assert!(msg.contains("XY"), "must name the routing: {msg}");
+    assert!(msg.contains("dead link"), "must state the fault map: {msg}");
+
+    let run = run_layer(&dead(RoutingAlgorithm::WestFirst), &layer, Strategy::RowMajor)
+        .expect("west-first must deliver around the dead wire");
+    assert_eq!(run.result.records.len(), 28);
+}
+
+/// Every observable of a degraded run, flattened (energy bits included).
+fn fingerprint(r: &SimResult) -> Vec<u64> {
+    let mut fp = vec![
+        r.latency,
+        r.drained_at,
+        r.records.len() as u64,
+        r.net.flits_switched,
+        r.net.link_traversals,
+        r.net.router_energy.to_bits(),
+        r.net.link_energy.to_bits(),
+        r.net.avg_load_degree.to_bits(),
+    ];
+    fp.extend(&r.finish);
+    for ports in &r.net.switched_per_port {
+        fp.extend(ports);
+    }
+    fp
+}
+
+#[test]
+fn degraded_runs_are_bit_identical_on_rerun() {
+    // A dead wire and a dead router, re-run: fault maps are plain data
+    // and the detour logic is deterministic, so the full observable set
+    // (energies included) must match bit for bit.
+    let base = base_platform(4, 4, &[9, 10], TopologyKind::Mesh, RoutingAlgorithm::WestFirst);
+    let topo = base.topo();
+    let mut wire = FaultMap::new();
+    wire.kill_link(&topo, 0, PORT_EAST).unwrap();
+    let mut router = FaultMap::new();
+    router.kill_router(&topo, 0).unwrap();
+    for faults in [wire, router] {
+        let mut cfg = base.clone();
+        cfg.faults = faults;
+        let layer = LayerSpec::conv("res", 5, 1.0, 2 * cfg.num_pes() as u64);
+        let a = run_layer(&cfg, &layer, Strategy::RowMajor).expect("first run");
+        let b = run_layer(&cfg, &layer, Strategy::RowMajor).expect("second run");
+        assert_eq!(
+            fingerprint(&a.result),
+            fingerprint(&b.result),
+            "degraded rerun diverged ({})",
+            cfg.faults
+        );
+    }
+}
+
+#[test]
+fn random_fault_maps_are_a_pure_function_of_their_seed() {
+    let topo = Topology::new(4, 4);
+    let a = FaultMap::random(&topo, 7, 0.2);
+    let b = FaultMap::random(&topo, 7, 0.2);
+    assert_eq!(a, b, "same seed, same map");
+    a.validate(&topo).expect("random maps are geometrically valid");
+
+    // Through the builder knobs: `--fault-seed`/`--fault-rate` twice.
+    let build = || {
+        PlatformConfig::builder()
+            .routing(RoutingAlgorithm::WestFirst)
+            .fault_seed(7)
+            .fault_rate(0.1)
+            .build()
+            .expect("random-fault platform")
+    };
+    assert_eq!(build().faults, build().faults, "builder path must be deterministic too");
+}
+
+#[test]
+fn energy_identities_hold_end_to_end() {
+    // The conservation laws, through the whole stack (mapper → sim →
+    // summary), healthy and degraded: energy is *exactly* the advertised
+    // function of the switching counters — a single multiplication at
+    // finalize, no accumulation drift.
+    let healthy = base_platform(4, 4, &[9, 10], TopologyKind::Mesh, RoutingAlgorithm::WestFirst);
+    let mut degraded = healthy.clone();
+    let topo = healthy.topo();
+    let mut fm = FaultMap::new();
+    fm.kill_link(&topo, 0, PORT_EAST).unwrap();
+    degraded.faults = fm;
+    for cfg in [healthy, degraded] {
+        let layer = LayerSpec::conv("res", 5, 1.0, 56);
+        let run = run_layer(&cfg, &layer, Strategy::RowMajor).expect("energy run");
+        let net = &run.result.net;
+        let bits = cfg.flit_bits as f64;
+        assert_eq!(net.router_energy, net.flits_switched as f64 * cfg.es_bit * bits);
+        assert_eq!(net.link_energy, net.link_traversals as f64 * cfg.el_bit * bits);
+        assert_eq!(run.summary.energy, net.router_energy + net.link_energy);
+        assert!(
+            net.link_traversals < net.flits_switched,
+            "ejection switches never cross a wire"
+        );
+        assert!(net.avg_load_degree > 0.0 && net.avg_load_degree <= 5.0);
+    }
+}
