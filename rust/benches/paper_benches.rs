@@ -15,7 +15,8 @@
 //! * `--only <substr>` — run only matching benches. The CI perf gate runs
 //!   one full-window pass per gated series (`--only fig7-sweep`,
 //!   `--only scale/analytical-32x32`, `--only sim/full-run-140-tasks`,
-//!   `--only resilience/1-dead-link-lenet5`),
+//!   `--only resilience/1-dead-link-lenet5`,
+//!   `--only telemetry/off-overhead-140-tasks`),
 //!   merges the JSONs, and diffs every `mean_ns` against the committed
 //!   `BENCH_baseline.json` (recorded with
 //!   `cargo bench --bench paper_benches -- --json BENCH_baseline.json`).
@@ -309,6 +310,26 @@ fn main() {
         let cycles = simulated_cycles(&cfg, &layer140, Strategy::RowMajor);
         results.push(
             bench("sim/full-run-140-tasks", t, Some((cycles, "sim-cycles")), || {
+                std::hint::black_box(
+                    run_layer(&cfg, &layer140, Strategy::RowMajor).expect("bench run"),
+                );
+            })
+            .with_sim_cycles(cycles),
+        );
+    }
+
+    // telemetry/off-overhead-140-tasks — the identical 140-task run on
+    // the identical default (telemetry-off) platform as sim/, tracked as
+    // its own perf-gate series: the telemetry hooks must stay one cold
+    // `Option` move per step when disabled, and this series alarms if
+    // they ever grow a real cost relative to its recorded baseline.
+    // Never trims with --smoke.
+    if args.selected("telemetry/off-overhead-140-tasks") {
+        assert!(!cfg.telemetry.enabled(), "the gate must measure the telemetry-off path");
+        let layer140 = LayerSpec::conv("c140", 5, 1.0, 140);
+        let cycles = simulated_cycles(&cfg, &layer140, Strategy::RowMajor);
+        results.push(
+            bench("telemetry/off-overhead-140-tasks", t, Some((cycles, "sim-cycles")), || {
                 std::hint::black_box(
                     run_layer(&cfg, &layer140, Strategy::RowMajor).expect("bench run"),
                 );

@@ -403,7 +403,15 @@ impl AnalyticalModel {
             avg_load_degree: 0.0,
         };
         net.price_energy(self.es_bit, self.el_bit, self.flit_bits);
-        SimResult { records: Vec::new(), totals, finish, latency, drained_at, net }
+        SimResult {
+            records: Vec::new(),
+            totals,
+            finish,
+            latency,
+            drained_at,
+            net,
+            telemetry: None,
+        }
     }
 }
 

@@ -30,11 +30,12 @@
 use anyhow::{bail, Result};
 
 use crate::accel::mc::Mc;
-use crate::accel::pe::Pe;
+use crate::accel::pe::{Pe, PeState};
 use crate::accel::record::{PePhaseTotals, TaskRecord};
 use crate::config::{PlatformConfig, SteppingMode};
 use crate::dnn::TaskProfile;
 use crate::noc::{Network, NetworkStats, PacketId, PacketKind};
+use crate::telemetry::{RemapDecision, TelemetryReport};
 
 /// Outcome of a completed simulation phase/run.
 #[derive(Debug, Clone)]
@@ -54,6 +55,11 @@ pub struct SimResult {
     /// counters, latency sums) — lets sweep consumers (e.g. the congestion
     /// heatmap) read NoC-level data without re-driving the simulator.
     pub net: NetworkStats,
+    /// Telemetry report (windowed counters, packet traces, remap
+    /// decisions) when the platform was built with telemetry enabled;
+    /// `None` otherwise. Observation-only: its presence never changes
+    /// any other field of this result.
+    pub telemetry: Option<Box<TelemetryReport>>,
 }
 
 impl SimResult {
@@ -361,7 +367,15 @@ impl Simulation {
             latency,
             drained_at: self.net.now(),
             net: self.net.priced_stats(),
+            telemetry: self.net.telemetry_report(),
         }
+    }
+
+    /// Log a sampling-window remap decision into the telemetry stream (a
+    /// no-op when telemetry is disabled). Called by the sampling mapper
+    /// right after it splits the residual budget.
+    pub fn log_remap(&mut self, decision: RemapDecision) {
+        self.net.record_remap(decision);
     }
 
     /// One router-clock cycle of the whole platform.
@@ -455,6 +469,19 @@ impl Simulation {
                 self.net.send_packetized(&self.cfg, src, dst, PacketKind::Request, self.profile.req_flits, i as u64);
                 self.pes[i].note_issued(now);
             }
+        }
+
+        // 5. Device-side telemetry sampling (windowed collector only; the
+        // branch is cold and the whole block is skipped when telemetry is
+        // off, keeping the steady-state path allocation- and probe-free).
+        if self.cfg.telemetry.window.is_some() {
+            let backlog: u64 = self.mcs.iter().map(|m| m.backlog() as u64).sum();
+            let busy = self
+                .pes
+                .iter()
+                .filter(|p| matches!(p.state(), PeState::Computing { .. }))
+                .count() as u64;
+            self.net.note_devices(backlog, busy);
         }
     }
 }

@@ -13,5 +13,5 @@ pub mod platform;
 
 pub use platform::{
     FaultMap, Fidelity, MemModel, PlacementPreset, PlatformBuilder, PlatformConfig,
-    RoutingAlgorithm, SteppingMode, TopologyKind,
+    RoutingAlgorithm, SteppingMode, TelemetrySpec, TopologyKind,
 };

@@ -2,6 +2,7 @@
 
 use crate::noc::topology::{Port, Topology};
 pub use crate::noc::topology::{FaultMap, RoutingAlgorithm, TopologyKind};
+pub use crate::telemetry::TelemetrySpec;
 
 /// Memory-controller placement presets used in the evaluation.
 ///
@@ -179,6 +180,11 @@ pub struct PlatformConfig {
     /// Link traversal energy per bit, in pJ (paid once per inter-router
     /// wire a flit crosses).
     pub el_bit: f64,
+    /// Telemetry collector selection (see [`TelemetrySpec`]); fully off by
+    /// default — the zero-overhead path. Enabling it never changes
+    /// simulation results (observation only; pinned by
+    /// `rust/tests/telemetry.rs`).
+    pub telemetry: TelemetrySpec,
 }
 
 /// Builder for [`PlatformConfig`]: arbitrary W×H fabrics (mesh or torus,
@@ -391,6 +397,20 @@ impl PlatformBuilder {
         self
     }
 
+    /// Enable the cycle-windowed telemetry collector with `cycles`-long
+    /// buckets (must be ≥ 1; validated at build). Off by default.
+    pub fn telemetry_window(mut self, cycles: u64) -> Self {
+        self.cfg.telemetry.window = Some(cycles);
+        self
+    }
+
+    /// Enable (or disable) packet-lifetime event tracing for Perfetto
+    /// export. Off by default.
+    pub fn telemetry_trace(mut self, on: bool) -> Self {
+        self.cfg.telemetry.trace = on;
+        self
+    }
+
     /// Validate and return the configuration. Every structural error —
     /// mesh too small, MC ids out of range or duplicated, no PE left, a
     /// flit smaller than one datum, a fault request off the fabric or
@@ -509,6 +529,7 @@ impl PlatformConfig {
             // NoC mapping literature prices Ebit with.
             es_bit: 0.284,
             el_bit: 0.449,
+            telemetry: TelemetrySpec::default(),
         }
     }
 
@@ -636,6 +657,9 @@ impl PlatformConfig {
             "link energy per bit must be finite and >= 0, got {}",
             self.el_bit
         );
+        if let Some(w) = self.telemetry.window {
+            anyhow::ensure!(w >= 1, "telemetry window must be >= 1 cycle");
+        }
         if !self.faults.is_healthy() {
             // Dimensions were checked above, so the healthy geometry is
             // constructible here.

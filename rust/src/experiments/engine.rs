@@ -60,6 +60,8 @@
 //! `max_phase_cycles` deadlock cap) fails the sweep with the
 //! {platform × layer × mapper} cell named, instead of hanging a worker.
 
+use std::time::Instant;
+
 use anyhow::{ensure, Context, Result};
 
 use crate::config::PlatformConfig;
@@ -87,6 +89,7 @@ pub struct Scenario {
     layers: Vec<LayerSpec>,
     mappers: Vec<MapperSlot>,
     jobs: Option<usize>,
+    timings: Option<bool>,
 }
 
 impl Scenario {
@@ -99,7 +102,20 @@ impl Scenario {
             layers: Vec::new(),
             mappers: Vec::new(),
             jobs: None,
+            timings: None,
         }
+    }
+
+    /// Collect wall-clock phase timers: per-cell host time plus the
+    /// sweep's setup/run/collect stage breakdown, reported in
+    /// [`SweepResults::timings`]. When unset, the `NOCTT_TIMINGS`
+    /// environment variable (how the CLI's `--timings` flag travels)
+    /// decides. Host time is observational only — it never enters
+    /// [`SweepResults::to_json`], whose bytes stay identical for any
+    /// worker count or machine speed.
+    pub fn timings(mut self, on: bool) -> Self {
+        self.timings = Some(on);
+        self
     }
 
     /// Worker threads for [`run`](Self::run). `1` forces the exact serial
@@ -167,6 +183,8 @@ impl Scenario {
         ensure!(!self.platforms.is_empty(), "scenario '{}' has no platforms", self.name);
         ensure!(!self.layers.is_empty(), "scenario '{}' has no layers", self.name);
         ensure!(!self.mappers.is_empty(), "scenario '{}' has no mappers", self.name);
+        let timed = self.timings_enabled();
+        let t_setup = Instant::now();
         let jobs = self.resolve_jobs()?;
         for (label, cfg) in &self.platforms {
             cfg.validate()
@@ -214,14 +232,17 @@ impl Scenario {
         // fail concurrently the *reported* cell may vary run to run; the
         // successful-sweep results remain fully deterministic.
         let failed = std::sync::atomic::AtomicBool::new(false);
-        let runs: Vec<Result<MappedRun>> = pool.map(specs.len(), |i| {
+        let setup_ns = elapsed_ns(timed, t_setup);
+        let t_run = Instant::now();
+        let runs: Vec<(Result<MappedRun>, u64)> = pool.map(specs.len(), |i| {
             if failed.load(std::sync::atomic::Ordering::Relaxed) {
-                return Err(anyhow::anyhow!(CELL_SKIPPED));
+                return (Err(anyhow::anyhow!(CELL_SKIPPED)), 0);
             }
             let (pi, li, mi) = specs[i];
             let (plabel, cfg) = &platforms_ref[pi];
             let layer = &layers_ref[li];
             let mapper = &mappers_ref[mi];
+            let t_cell = Instant::now();
             let run = mapper.execute(&MapCtx::new(cfg, layer)).with_context(|| {
                 format!(
                     "scenario '{name_ref}': cell {{platform '{plabel}' × layer '{}' × mapper '{}'}} failed",
@@ -232,14 +253,27 @@ impl Scenario {
             if run.is_err() {
                 failed.store(true, std::sync::atomic::Ordering::Relaxed);
             }
-            run
+            (run, elapsed_ns(timed, t_cell))
         });
+        let run_ns = elapsed_ns(timed, t_run);
+        let t_collect = Instant::now();
+        let mut cell_timings = Vec::new();
         let mut cells = Vec::with_capacity(specs.len());
         let mut first_err: Option<anyhow::Error> = None;
         let mut skipped = 0usize;
-        for (&(pi, li, mi), run) in specs.iter().zip(runs) {
+        for (&(pi, li, mi), (run, cell_ns)) in specs.iter().zip(runs) {
             match run {
-                Ok(run) => cells.push(Cell { platform: pi, layer: li, mapper: mi, run }),
+                Ok(run) => {
+                    if timed {
+                        cell_timings.push(CellTiming {
+                            platform: pi,
+                            layer: li,
+                            mapper: mi,
+                            ns: cell_ns,
+                        });
+                    }
+                    cells.push(Cell { platform: pi, layer: li, mapper: mi, run });
+                }
                 Err(e) if e.to_string() == CELL_SKIPPED => skipped += 1,
                 Err(e) => {
                     if first_err.is_none() {
@@ -258,6 +292,13 @@ impl Scenario {
 
         let (platform_labels, platforms): (Vec<String>, Vec<PlatformConfig>) =
             self.platforms.into_iter().unzip();
+        let timings = timed.then(|| SweepTimings {
+            setup_ns,
+            run_ns,
+            collect_ns: elapsed_ns(timed, t_collect),
+            jobs,
+            cells: cell_timings,
+        });
         Ok(SweepResults {
             scenario: self.name,
             platform_labels,
@@ -265,6 +306,7 @@ impl Scenario {
             mapper_labels: mappers.iter().map(|m| m.label().to_string()).collect(),
             layers: self.layers,
             cells,
+            timings,
         })
     }
 
@@ -286,6 +328,60 @@ impl Scenario {
             },
         }
     }
+
+    /// Resolve the timings knob: explicit [`timings`](Self::timings), then
+    /// the `NOCTT_TIMINGS` environment variable (any non-empty value but
+    /// `0` enables), defaulting to off.
+    fn timings_enabled(&self) -> bool {
+        self.timings.unwrap_or_else(|| {
+            std::env::var("NOCTT_TIMINGS").is_ok_and(|v| !v.is_empty() && v != "0")
+        })
+    }
+}
+
+/// Elapsed nanoseconds since `start`, or 0 when timing is off (the
+/// disabled path never reads the clock twice).
+fn elapsed_ns(timed: bool, start: Instant) -> u64 {
+    if timed {
+        start.elapsed().as_nanos() as u64
+    } else {
+        0
+    }
+}
+
+/// Host wall-clock time of one executed cell (successful cells only).
+#[derive(Debug, Clone, Copy)]
+pub struct CellTiming {
+    /// Platform index into [`SweepResults::platforms`].
+    pub platform: usize,
+    /// Layer index into [`SweepResults::layers`].
+    pub layer: usize,
+    /// Mapper index into [`SweepResults::mapper_labels`].
+    pub mapper: usize,
+    /// Wall-clock nanoseconds the cell's `Mapper::execute` took on its
+    /// worker thread.
+    pub ns: u64,
+}
+
+/// Wall-clock phase timers of one sweep (`--timings` / `NOCTT_TIMINGS`).
+///
+/// Host time only — simulated cycles live in the results themselves.
+/// Deliberately excluded from [`SweepResults::to_json`]: the JSON bytes
+/// are pinned deterministic across worker counts and machines, and
+/// wall-clock is neither.
+#[derive(Debug, Clone, Default)]
+pub struct SweepTimings {
+    /// Validation, mapper resolution and grid enumeration.
+    pub setup_ns: u64,
+    /// The parallel cell sweep, end to end (wall-clock, not CPU-seconds —
+    /// with `jobs > 1` the per-cell times below sum to more than this).
+    pub run_ns: u64,
+    /// Result collection and assembly.
+    pub collect_ns: u64,
+    /// Worker count the sweep ran with.
+    pub jobs: usize,
+    /// Per-cell wall-clock, grid order.
+    pub cells: Vec<CellTiming>,
 }
 
 /// One executed grid point.
@@ -317,6 +413,9 @@ pub struct SweepResults {
     pub mapper_labels: Vec<String>,
     /// All executed cells.
     pub cells: Vec<Cell>,
+    /// Wall-clock phase timers, present when the sweep ran with
+    /// [`Scenario::timings`] (or `NOCTT_TIMINGS`) enabled.
+    pub timings: Option<SweepTimings>,
 }
 
 impl SweepResults {
@@ -359,6 +458,34 @@ impl SweepResults {
             self.run(platform, layer, baseline).summary.latency,
             self.run(platform, layer, mapper).summary.latency,
         )
+    }
+
+    /// Render the wall-clock phase timers as a table: the
+    /// setup/run/collect stage breakdown, then each cell's host time,
+    /// slowest first. `None` when the sweep ran without timings.
+    pub fn render_timings(&self) -> Option<String> {
+        let t = self.timings.as_ref()?;
+        let ms = |ns: u64| format!("{:.2}", ns as f64 / 1e6);
+        let mut out = format!(
+            "wall-clock (jobs = {}): setup {} ms, run {} ms, collect {} ms\n",
+            t.jobs,
+            ms(t.setup_ns),
+            ms(t.run_ns),
+            ms(t.collect_ns),
+        );
+        let mut by_cost: Vec<&CellTiming> = t.cells.iter().collect();
+        by_cost.sort_by(|a, b| b.ns.cmp(&a.ns));
+        let mut table = crate::util::Table::new(["platform", "layer", "mapper", "host ms"]);
+        for c in by_cost {
+            table.row([
+                self.platform_labels[c.platform].clone(),
+                self.layers[c.layer].name.clone(),
+                self.mapper_labels[c.mapper].clone(),
+                ms(c.ns),
+            ]);
+        }
+        out.push_str(&table.render());
+        Some(out)
     }
 
     /// Serialize the sweep as a JSON object (hand-rolled — no `serde`
@@ -593,6 +720,35 @@ mod tests {
         assert_eq!(json.matches('[').count(), json.matches(']').count(), "balanced");
         // No trailing comma before the closing bracket.
         assert!(!json.contains(",\n  ]"), "{json}");
+    }
+
+    #[test]
+    fn timings_are_opt_in_and_never_touch_the_json() {
+        let grid = |timed: bool| {
+            Scenario::new("timed-t")
+                .platform("2mc", PlatformConfig::default_2mc())
+                .layer(tiny_layer("a", 28))
+                .mapper("row-major")
+                .mapper("distance")
+                .jobs(1)
+                .timings(timed)
+                .run()
+                .unwrap()
+        };
+        let off = grid(false);
+        assert!(off.timings.is_none(), "timings must be opt-in");
+        assert!(off.render_timings().is_none());
+        let on = grid(true);
+        let t = on.timings.as_ref().expect("timings requested");
+        assert_eq!(t.jobs, 1);
+        assert_eq!(t.cells.len(), 2, "one timing per successful cell");
+        assert!(t.cells.iter().all(|c| c.ns > 0), "cells take nonzero host time");
+        let rendered = on.render_timings().unwrap();
+        assert!(rendered.contains("wall-clock (jobs = 1)"), "{rendered}");
+        assert!(rendered.contains("distance"), "{rendered}");
+        // Host time is observational: the JSON bytes stay identical.
+        assert_eq!(on.to_json(), off.to_json());
+        assert!(!on.to_json().contains("ns"), "no wall-clock leaks into the JSON");
     }
 
     #[test]

@@ -7,6 +7,14 @@
 //! local ejection ports, which is exactly why nearer PEs see shorter
 //! `T_req`/`T_resp` and why distance alone (Eq. 1) under-corrects.
 //!
+//! The experiment runs with the telemetry subsystem's windowed collector
+//! enabled ([`WINDOW_CYCLES`]-cycle buckets), so alongside the classic
+//! node × port totals it now shows congestion *evolution*: how switching,
+//! stall causes and deliveries move through the run (`noctt exp heatmap
+//! --windows N` coalesces the raw windows into N display buckets). The
+//! totals view is the sum of the windows — the conservation the telemetry
+//! test-suite pins exactly.
+//!
 //! Like every other simulating experiment this one runs through the
 //! [`Scenario`] engine (the per-router port counters ride along in
 //! [`SimResult::net`](crate::accel::SimResult)), so it shares the
@@ -15,23 +23,32 @@
 use crate::config::PlatformConfig;
 use crate::dnn::lenet5;
 use crate::noc::topology::{NUM_PORTS, PORT_NAMES};
+use crate::telemetry::{StallCounters, WindowRow};
 use crate::util::Table;
 
 use super::engine::{Scenario, SweepResults};
 use super::Report;
 
-/// The heatmap data: the per-node port counters plus the raw sweep grid.
+/// Telemetry window length the heatmap runs with (cycles).
+pub const WINDOW_CYCLES: u64 = 512;
+
+/// The heatmap data: the per-node port counters, the cycle-windowed
+/// counter rows, and the raw sweep grid.
 #[derive(Debug)]
 pub struct HeatmapData {
-    /// Switched-flit counts per node × output port.
+    /// Switched-flit counts per node × output port (whole run).
     pub per_port: Vec<[u64; NUM_PORTS]>,
+    /// [`WINDOW_CYCLES`]-cycle windowed counter rows for the same run.
+    pub windows: Vec<WindowRow>,
     /// The raw sweep grid (the `--json` payload).
     pub results: SweepResults,
 }
 
-/// Per-node switched-flit counts for C1 under row-major mapping.
+/// Per-node switched-flit counts for C1 under row-major mapping, with
+/// the windowed telemetry collector riding along.
 pub fn data(quick: bool) -> HeatmapData {
-    let cfg = PlatformConfig::default_2mc();
+    let mut cfg = PlatformConfig::default_2mc();
+    cfg.telemetry.window = Some(WINDOW_CYCLES);
     let mut layer = lenet5(6).remove(0);
     if quick {
         layer.tasks /= 8;
@@ -42,18 +59,45 @@ pub fn data(quick: bool) -> HeatmapData {
         .mapper("row-major")
         .run()
         .expect("heatmap grid");
-    let per_port = results.run(0, 0, 0).result.net.switched_per_port.clone();
-    HeatmapData { per_port, results }
+    let cell = &results.run(0, 0, 0).result;
+    let per_port = cell.net.switched_per_port.clone();
+    let windows = cell.telemetry.as_ref().map(|t| t.rows.clone()).unwrap_or_default();
+    HeatmapData { per_port, windows, results }
 }
 
-/// Render the report.
+/// Render the report with the default four display buckets.
 pub fn run(quick: bool) -> Report {
-    report(&data(quick))
+    report(&data(quick), 4)
+}
+
+/// Coalesce raw window rows into at most `buckets` display groups,
+/// returning `(start, end, switched, injected, delivered, stalls)` per
+/// group. Aggregation is pure addition, so the groups conserve the
+/// per-window sums exactly.
+fn coalesce(rows: &[WindowRow], buckets: usize) -> Vec<(u64, u64, u64, u64, u64, StallCounters)> {
+    if rows.is_empty() || buckets == 0 {
+        return Vec::new();
+    }
+    let per = rows.len().div_ceil(buckets);
+    rows.chunks(per)
+        .map(|chunk| {
+            let mut stalls = StallCounters::default();
+            let (mut sw, mut inj, mut del) = (0, 0, 0);
+            for r in chunk {
+                sw += r.flits_switched;
+                inj += r.flits_injected;
+                del += r.packets_delivered;
+                stalls.add(&r.stalls);
+            }
+            (chunk[0].start, chunk[chunk.len() - 1].end, sw, inj, del, stalls)
+        })
+        .collect()
 }
 
 /// Render a report from an already-executed sweep (the `--json` CLI path
-/// runs the grid once and feeds both emitters from it).
-pub fn report(d: &HeatmapData) -> Report {
+/// runs the grid once and feeds both emitters from it). `buckets` is the
+/// `--windows N` knob: how many time buckets the evolution view shows.
+pub fn report(d: &HeatmapData, buckets: usize) -> Report {
     let per_port = &d.per_port;
     let cfg = PlatformConfig::default_2mc();
     let mut t = Table::new(
@@ -71,7 +115,7 @@ pub fn report(d: &HeatmapData) -> Report {
     }
     let mc_total: u64 = cfg.mc_nodes.iter().map(|&n| per_port[n].iter().sum::<u64>()).sum();
     let all_total: u64 = per_port.iter().flat_map(|p| p.iter()).sum();
-    let body = format!(
+    let mut body = format!(
         "Switched flits per router/output port, LeNet C1, row-major mapping, 2-MC platform.\n\n{t}\n\
          The two MC routers carry **{:.1}%** of all switched flits ({} of {}) — the\n\
          congestion hot-spot the travel-time mapper senses implicitly through\n\
@@ -80,6 +124,42 @@ pub fn report(d: &HeatmapData) -> Report {
         mc_total,
         all_total
     );
+    let groups = coalesce(&d.windows, buckets);
+    if !groups.is_empty() {
+        let mut evo = Table::new([
+            "cycles",
+            "switched",
+            "injected",
+            "delivered",
+            "credit-stall",
+            "va-loss",
+            "sa-loss",
+            "route-blocked",
+        ]);
+        let mut windowed_switched = 0u64;
+        for (start, end, sw, inj, del, stalls) in &groups {
+            windowed_switched += sw;
+            evo.row([
+                format!("{start}..{end}"),
+                sw.to_string(),
+                inj.to_string(),
+                del.to_string(),
+                stalls.credit_stalls.to_string(),
+                stalls.va_losses.to_string(),
+                stalls.sa_losses.to_string(),
+                stalls.route_blocked.to_string(),
+            ]);
+        }
+        body.push_str(&format!(
+            "\nCongestion evolution over {} raw {WINDOW_CYCLES}-cycle telemetry windows,\n\
+             coalesced to {} display buckets (`--windows N` changes the bucket count):\n\n{}\n\
+             The totals view above is the final window sum: {windowed_switched} windowed = \
+             {all_total} total switched flits.\n",
+            d.windows.len(),
+            groups.len(),
+            evo.render(),
+        ));
+    }
     Report { id: "heatmap", title: "Congestion heatmap (extension)", body }
 }
 
@@ -118,9 +198,43 @@ mod tests {
     }
 
     #[test]
+    fn windows_sum_to_the_total_view() {
+        // The legacy node × port table is exactly the sum of the windowed
+        // rows — the heatmap's two views describe one run.
+        let d = data(true);
+        assert!(!d.windows.is_empty(), "telemetry windows must ride along");
+        let windowed: u64 = d.windows.iter().map(|w| w.flits_switched).sum();
+        let total: u64 = d.per_port.iter().flat_map(|p| p.iter()).sum();
+        assert_eq!(windowed, total);
+        let mut per_port_sum = vec![[0u64; NUM_PORTS]; d.per_port.len()];
+        for w in &d.windows {
+            for (node, ports) in w.switched_per_port.iter().enumerate() {
+                for (p, v) in ports.iter().enumerate() {
+                    per_port_sum[node][p] += v;
+                }
+            }
+        }
+        assert_eq!(per_port_sum, d.per_port, "per-port deltas must conserve too");
+    }
+
+    #[test]
+    fn coalesce_conserves_and_bounds_buckets() {
+        let d = data(true);
+        for buckets in [1, 3, 4, 100] {
+            let groups = coalesce(&d.windows, buckets);
+            assert!(groups.len() <= buckets, "asked {buckets}, got {}", groups.len());
+            let sw: u64 = groups.iter().map(|g| g.2).sum();
+            assert_eq!(sw, d.windows.iter().map(|w| w.flits_switched).sum::<u64>());
+        }
+        assert!(coalesce(&d.windows, 0).is_empty());
+    }
+
+    #[test]
     fn report_renders() {
         let rep = run(true);
         assert!(rep.body.contains("n9"));
         assert!(rep.body.contains("MC"));
+        assert!(rep.body.contains("Congestion evolution"), "{}", rep.body);
+        assert!(rep.body.contains("credit-stall"), "{}", rep.body);
     }
 }

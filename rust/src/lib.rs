@@ -123,6 +123,10 @@
 //!   saturation detection).
 //! * [`experiments`] — the [`experiments::engine`] plus one module per
 //!   figure/table of the paper's evaluation section.
+//! * [`telemetry`] — zero-overhead-when-off instrumentation: cycle-windowed
+//!   NoC/device counters with stall-cause breakdown, packet-lifetime event
+//!   traces with Chrome/Perfetto export (`noctt trace`), and
+//!   sampling-window remap introspection.
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   LeNet artifacts (HLO text) and executes them for functional inference
 //!   (stubbed without the `pjrt` cargo feature).
@@ -139,6 +143,7 @@ pub mod metrics;
 pub mod noc;
 pub mod runtime;
 pub mod serving;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result alias.

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|scale|resilience|all>
-//!           [--quick] [--jobs N] [--json PATH]
+//!           [--quick] [--jobs N] [--json PATH] [--timings] [--windows N]
 //! noctt sim --layer <name|k<N>> --strategy <name>
 //!           [--workload <zoo-name|path.wl>] [--channels N]
 //!           [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
@@ -11,18 +11,28 @@
 //!           [--fidelity cycle-accurate|analytical]
 //!           [--kill-link "x,y,dir[;...]"] [--kill-router "x,y[;...]"]
 //!           [--fault-seed N --fault-rate F]
+//! noctt trace [--layer <name>] [--strategy <name>] [--window N]
+//!             [--prefix PATH] [+ workload/platform flags as in `noctt sim`]
 //! noctt serve [--workload <zoo-name|path.wl>] [--strategy <name>]
 //!             [--arrival uniform|poisson|bursty|bursty-<k>] [--load F]
 //!             [--requests N] [--window N] [--seed N] [--trim]
-//!             [+ platform flags as in `noctt sim`]
+//!             [--trace PREFIX] [+ platform flags as in `noctt sim`]
 //! noctt workloads
 //! noctt mappers
 //! noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]
 //!                [--topology mesh|torus] [--routing xy|yx|west-first]
 //! noctt infer [--artifacts DIR] [--batch 1|8]
 //! noctt smoke [--artifacts DIR]
-//! noctt report [--jobs N]
+//! noctt report [<a.json> <b.json> [--threshold PCT]] [--jobs N]
 //! ```
+//!
+//! `noctt trace` runs one layer × strategy with the telemetry subsystem
+//! fully enabled and writes `<prefix>.trace.json` (Chrome/Perfetto
+//! `trace_event` JSON — load it at ui.perfetto.dev) plus
+//! `<prefix>.windows.csv` (the cycle-windowed counters), then prints the
+//! window-sum ↔ `NetworkStats` reconciliation and any sampling-window
+//! remap decisions. `noctt report a.json b.json` structurally diffs two
+//! `--json` result files with per-metric Δ/Δ% and regression markers.
 //!
 //! `--workload` selects the network `--layer` is looked up in: a zoo name
 //! (`noctt workloads` lists them) or a path to a `.wl` network descriptor
@@ -46,18 +56,23 @@
 //! (clap is unavailable in the offline build environment; argument parsing
 //! is a small hand-rolled layer in [`args`].)
 
+use std::collections::BTreeMap;
+
 use anyhow::{bail, ensure, Context, Result};
 
+use noctt::accel::TaskRecord;
 use noctt::config::PlatformConfig;
 use noctt::dnn::{lenet5, zoo, LayerSpec, WorkloadSpec};
-use noctt::experiments;
+use noctt::experiments::{self, engine::SweepResults};
 use noctt::mapping::{self, distance::pe_distances, run_layer, MapCtx, Mapper, Strategy};
 use noctt::metrics::improvement;
 use noctt::noc::topology::port_from_str;
 use noctt::runtime::{LenetRuntime, TensorFile};
 use noctt::serving::{Arrival, ServingConfig, ServingSim};
+use noctt::telemetry::trace::{perfetto_json, SpanTrack};
+use noctt::telemetry::TelemetryReport;
 use noctt::util::threadpool::parse_jobs;
-use noctt::util::{table::fmt_pct, Table};
+use noctt::util::{diff, json, table::fmt_pct, Table};
 
 mod args {
     //! Minimal flag parser: `--key value` / `--key=value` pairs +
@@ -252,7 +267,7 @@ fn usage() -> ! {
          \n\
          Usage:\n\
          \x20 noctt exp <table1|fig7|fig8|fig9|fig10|fig11|arch|ablation|heatmap|zoo|serving|tournament|scale|resilience|all>\n\
-         \x20           [--quick] [--jobs N] [--json PATH]\n\
+         \x20           [--quick] [--jobs N] [--json PATH] [--timings] [--windows N]\n\
          \x20 noctt sim --layer <name|k<N>> --strategy <s> [--mcs 2|4]\n\
          \x20           [--workload <zoo-name|path.wl>] [--channels N]\n\
          \x20           [--mesh WxH] [--mc-at n1,n2,...]\n\
@@ -260,21 +275,29 @@ fn usage() -> ! {
          \x20           [--fidelity cycle-accurate|analytical]\n\
          \x20           [--kill-link \"x,y,dir[;...]\"] [--kill-router \"x,y[;...]\"]\n\
          \x20           [--fault-seed N --fault-rate F]\n\
+         \x20 noctt trace [--layer <name>] [--strategy <s>] [--window N]\n\
+         \x20             [--prefix PATH] [+ workload/platform flags as in `noctt sim`]\n\
          \x20 noctt serve [--workload <zoo-name|path.wl>] [--strategy <s>]\n\
          \x20             [--arrival uniform|poisson|bursty|bursty-<k>] [--load F]\n\
          \x20             [--requests N] [--window N] [--seed N] [--trim]\n\
-         \x20             [+ platform flags as in `noctt sim`]\n\
+         \x20             [--trace PREFIX] [+ platform flags as in `noctt sim`]\n\
          \x20 noctt workloads\n\
          \x20 noctt mappers\n\
          \x20 noctt platform [--mcs 2|4] [--mesh WxH] [--mc-at n1,n2,...]\n\
          \x20                [--topology mesh|torus] [--routing xy|yx|west-first]\n\
          \x20 noctt infer [--artifacts DIR] [--batch 1|8]\n\
          \x20 noctt smoke [--artifacts DIR]\n\
-         \x20 noctt report [--jobs N]\n\
+         \x20 noctt report [<a.json> <b.json> [--threshold PCT]] [--jobs N]\n\
          \n\
          --jobs N  sweep worker threads (default: all cores; 1 = serial;\n\
          \x20          also settable as the NOCTT_JOBS environment variable)\n\
          --json PATH  also write the sweep's raw data as JSON\n\
+         --timings  print wall-clock phase timers for the sweep (per stage\n\
+         \x20          and per cell; also the NOCTT_TIMINGS environment variable)\n\
+         --windows N  exp heatmap: coalesce the telemetry windows into N\n\
+         \x20          display buckets for the congestion-evolution view\n\
+         --trace PREFIX  serve: write <PREFIX>.trace.json (Perfetto) and\n\
+         \x20          <PREFIX>.windows.csv from the stage-0 fabric telemetry\n\
          --kill-link/--kill-router  fault injection: dead wires (both\n\
          \x20          directions; dir is n|e|s|w) and dead routers (their PE\n\
          \x20          detaches); west-first steers around, xy/yx error out\n\
@@ -424,98 +447,129 @@ fn parse_layer(a: &args::Args, cfg: &PlatformConfig) -> Result<LayerSpec> {
         .with_context(|| format!("unknown layer '{name}' (need C1,S2,C3,S4,C5,F6,OUT or k<N>, or pass --workload); cfg has {} PEs", cfg.num_pes()))
 }
 
+/// Join per-sweep timing renders for multi-sweep experiments (zoo,
+/// tournament, scale), labelling each section with its sweep name.
+fn multi_timings<'a>(parts: impl Iterator<Item = (String, &'a SweepResults)>) -> Option<String> {
+    let sections: Vec<String> = parts
+        .filter_map(|(name, r)| r.render_timings().map(|t| format!("[{name}]\n{t}")))
+        .collect();
+    (!sections.is_empty()).then(|| sections.join("\n"))
+}
+
 fn cmd_exp(a: &args::Args) -> Result<()> {
     let Some(id) = a.positional.get(1) else { usage() };
     let quick = a.has("quick");
-    // `--json PATH`: run the sweep once, feed both the report printer and
-    // the JSON emitter from the same data (no double simulation).
-    if let Some(path) = a.get("json") {
-        let path = std::path::Path::new(path);
-        let write = |json: String| {
-            std::fs::write(path, json).with_context(|| format!("writing {}", path.display()))
+    let json_path = a.get("json").map(std::path::PathBuf::from);
+    let buckets: usize = a.get_or("windows", "4").parse().context("--windows")?;
+    // `--json`, `--timings` and `--windows` all route through the per-id
+    // data path: run the sweep once, feed the report printer, the JSON
+    // emitter and the timing renderer from the same data (no double
+    // simulation). Timings come back through the engine because
+    // `apply_timings_flag` set NOCTT_TIMINGS before any sweep ran.
+    if json_path.is_some() || a.has("timings") || a.has("windows") {
+        let write = |json: String| -> Result<()> {
+            match &json_path {
+                Some(p) => {
+                    std::fs::write(p, json).with_context(|| format!("writing {}", p.display()))
+                }
+                None => Ok(()),
+            }
         };
         use experiments as exp;
-        let report = match id.as_str() {
+        let (report, timings) = match id.as_str() {
             "fig7" => {
                 let d = exp::fig7::data(quick);
                 write(d.results.to_json())?;
-                exp::fig7::report(&d)
+                (exp::fig7::report(&d), d.results.render_timings())
             }
             "fig8" => {
                 let d = exp::fig8::data(quick);
                 write(d.results.to_json())?;
-                exp::fig8::report(&d)
+                (exp::fig8::report(&d), d.results.render_timings())
             }
             "fig9" => {
                 let d = exp::fig9::data(quick);
                 write(d.results.to_json())?;
-                exp::fig9::report(&d)
+                (exp::fig9::report(&d), d.results.render_timings())
             }
             "fig10" => {
                 let d = exp::fig10::data(quick);
                 write(d.results.to_json())?;
-                exp::fig10::report(&d)
+                (exp::fig10::report(&d), d.results.render_timings())
             }
             "fig11" => {
                 let d = exp::fig11::data(quick);
                 write(d.results.to_json())?;
-                exp::fig11::report(&d)
+                (exp::fig11::report(&d), d.results.render_timings())
             }
             "arch" => {
                 let results = exp::arch::data(quick);
                 write(results.to_json())?;
-                exp::arch::report(&results)
+                (exp::arch::report(&results), results.render_timings())
             }
             "ablation" => {
                 let d = exp::ablation::data(quick);
                 write(d.results.to_json())?;
-                exp::ablation::report(&d)
+                (exp::ablation::report(&d), d.results.render_timings())
             }
             "heatmap" => {
                 let d = exp::heatmap::data(quick);
                 write(d.results.to_json())?;
-                exp::heatmap::report(&d)
+                (exp::heatmap::report(&d, buckets), d.results.render_timings())
             }
             "zoo" => {
                 let sweeps = exp::zoo::data(quick);
                 write(exp::zoo::to_json(&sweeps))?;
-                exp::zoo::report(&sweeps)
+                let t = sweeps.iter().map(|s| (s.workload.name.clone(), &s.results));
+                (exp::zoo::report(&sweeps), multi_timings(t))
             }
             "serving" => {
                 let sweep = exp::serving::data(quick)?;
-                sweep
-                    .write_json(path)
-                    .with_context(|| format!("writing {}", path.display()))?;
-                exp::serving::report(&sweep)
+                if let Some(p) = &json_path {
+                    sweep.write_json(p).with_context(|| format!("writing {}", p.display()))?;
+                }
+                (exp::serving::report(&sweep), None)
             }
             "tournament" => {
                 let sweeps = exp::tournament::data(quick);
                 write(exp::tournament::to_json(&sweeps))?;
-                exp::tournament::report(&sweeps)
+                let t = sweeps.iter().map(|s| (s.workload.name.clone(), &s.results));
+                (exp::tournament::report(&sweeps), multi_timings(t))
             }
             "scale" => {
                 let d = exp::scale::data(quick);
                 write(exp::scale::to_json(&d))?;
-                exp::scale::report(&d)
+                let t = d
+                    .sweeps
+                    .iter()
+                    .map(|s| (format!("{0}x{0}", s.width), &s.results))
+                    .chain(std::iter::once(("16x16 exact".to_string(), &d.exact)));
+                (exp::scale::report(&d), multi_timings(t))
             }
             "resilience" => {
                 let d = exp::resilience::data(quick);
                 write(exp::resilience::to_json(&d))?;
-                exp::resilience::report(&d)
+                let t = [("exact".to_string(), &d.exact), ("model".to_string(), &d.model)];
+                (exp::resilience::report(&d), multi_timings(t.into_iter()))
             }
             "table1" => {
                 let rows = exp::table1::rows();
                 write(exp::table1::to_json(&rows))?;
-                exp::table1::run()
+                (exp::table1::run(), None)
             }
             other => bail!(
-                "--json is not supported for '{other}' — every experiment id \
-                 ({:?}) emits its grid/table as JSON",
+                "--json/--timings/--windows need a single experiment id, and '{other}' \
+                 is not one of {:?}",
                 experiments::ALL_IDS
             ),
         };
         println!("{report}");
-        eprintln!("wrote {}", path.display());
+        if let Some(t) = timings {
+            println!("{t}");
+        }
+        if let Some(p) = &json_path {
+            eprintln!("wrote {}", p.display());
+        }
         return Ok(());
     }
     if id == "all" {
@@ -570,10 +624,150 @@ fn cmd_sim(a: &args::Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the accel-layer span tracks for a Perfetto export from a run's
+/// task records: one thread per PE (outer task span issue→compute-done
+/// with a nested compute span response-arrival→compute-done) and one
+/// "memory service" thread holding every MC service span req-arrive→
+/// resp-depart. The exporter stays device-agnostic; this is the accel
+/// side of the contract.
+fn device_tracks(cfg: &PlatformConfig, records: &[TaskRecord]) -> Vec<SpanTrack> {
+    let pe_nodes = cfg.pe_nodes();
+    let mut per_pe: BTreeMap<usize, SpanTrack> = BTreeMap::new();
+    let mut mc = SpanTrack {
+        process: "MCs".into(),
+        thread: "memory service".into(),
+        spans: Vec::new(),
+    };
+    for (i, r) in records.iter().enumerate() {
+        let t = per_pe.entry(r.pe).or_insert_with(|| SpanTrack {
+            process: "PEs".into(),
+            thread: format!("PE {} @node {}", r.pe, pe_nodes[r.pe]),
+            spans: Vec::new(),
+        });
+        t.spans.push((format!("task {i}"), r.t_issue, r.t_compute_done));
+        t.spans.push((format!("compute {i}"), r.t_resp_arrive, r.t_compute_done));
+        mc.spans.push((format!("serve {i}"), r.t_req_arrive, r.t_resp_depart));
+    }
+    let mut tracks: Vec<SpanTrack> = per_pe.into_values().collect();
+    if !mc.spans.is_empty() {
+        tracks.push(mc);
+    }
+    tracks
+}
+
+/// Write a telemetry report as `<prefix>.trace.json` (Perfetto) +
+/// `<prefix>.windows.csv`, and print the reconciliation the telemetry
+/// invariants promise: window-column sums equal to the run's fabric
+/// totals. Shared by `noctt trace` and `noctt serve --trace`.
+fn write_trace_files(
+    prefix: &str,
+    report: &TelemetryReport,
+    extra: &[SpanTrack],
+    totals: Option<(u64, u64, u64, u64)>,
+) -> Result<()> {
+    let trace_path = format!("{prefix}.trace.json");
+    std::fs::write(&trace_path, perfetto_json(report, extra))
+        .with_context(|| format!("writing {trace_path}"))?;
+    let csv_path = format!("{prefix}.windows.csv");
+    std::fs::write(&csv_path, report.windows_csv())
+        .with_context(|| format!("writing {csv_path}"))?;
+    let (inj, sw, link, del) = report.window_totals();
+    println!(
+        "windowed sums over {} windows: {inj} injected, {sw} switched, {link} link \
+         traversals, {del} delivered",
+        report.rows.len()
+    );
+    if let Some(t) = totals {
+        ensure!(
+            (inj, sw, link, del) == t,
+            "windowed sums do not reconcile with the run's NetworkStats totals {t:?}"
+        );
+        println!("reconciled exactly with the run's NetworkStats totals");
+    }
+    eprintln!("wrote {trace_path}");
+    eprintln!("wrote {csv_path}");
+    Ok(())
+}
+
+/// Run one layer × strategy with full telemetry and export the
+/// packet-lifetime Perfetto trace + windowed counter CSV.
+fn cmd_trace(a: &args::Args) -> Result<()> {
+    let mut cfg = parse_platform(a)?;
+    ensure!(
+        cfg.fidelity == noctt::config::Fidelity::CycleAccurate,
+        "noctt trace needs the cycle-accurate backend (the analytical model has no \
+         per-cycle events to record)"
+    );
+    let window: u64 = a.get_or("window", "256").parse().context("--window")?;
+    ensure!(window >= 1, "--window must be >= 1");
+    cfg.telemetry.window = Some(window);
+    cfg.telemetry.trace = true;
+    let layer = parse_layer(a, &cfg)?;
+    let strategy = a.get_or("strategy", "sampling-10");
+    let mapper = resolve_mapper(strategy)?;
+    let run = mapper.execute(&MapCtx::new(&cfg, &layer))?;
+    let report = run
+        .result
+        .telemetry
+        .as_deref()
+        .context("telemetry report missing from a telemetry-enabled run (internal error)")?;
+
+    println!(
+        "trace: layer {} — {} tasks, strategy {}, {} packet events, {}-cycle windows",
+        layer.name,
+        layer.tasks,
+        run.mapper,
+        report.events.len(),
+        window
+    );
+    for d in &report.decisions {
+        let rho = fmt_pct(d.rho);
+        println!(
+            "remap @cycle {}: mapper {} observed ρ {} over the sampling window; \
+             residual counts {:?}",
+            d.at_cycle, d.mapper, rho, d.counts
+        );
+    }
+    let net = &run.result.net;
+    let totals =
+        (net.flits_injected, net.flits_switched, net.link_traversals, net.packets_delivered);
+    let tracks = device_tracks(&cfg, &run.result.records);
+    write_trace_files(a.get_or("prefix", "trace"), report, &tracks, Some(totals))
+}
+
+/// `noctt report`: with two positional JSON paths, structurally diff
+/// them; with none, print every experiment report (the legacy mode).
+fn cmd_report(a: &args::Args) -> Result<()> {
+    if a.positional.len() >= 3 {
+        let (path_a, path_b) = (&a.positional[1], &a.positional[2]);
+        let threshold: f64 = a.get_or("threshold", "2").parse().context("--threshold")?;
+        let load = |p: &str| -> Result<json::Value> {
+            let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+            json::parse(&text).map_err(|e| anyhow::anyhow!("{p}: {e}"))
+        };
+        let d = diff::diff(&load(path_a)?, &load(path_b)?);
+        print!("{}", diff::render(&d, path_a, path_b, threshold));
+        return Ok(());
+    }
+    for r in experiments::all_reports(false) {
+        println!("{r}");
+    }
+    Ok(())
+}
+
 /// Drive a sustained inference request stream ([`noctt::serving`])
 /// against one workload × strategy and print the serving scorecard.
 fn cmd_serve(a: &args::Args) -> Result<()> {
-    let cfg = parse_platform(a)?;
+    let mut cfg = parse_platform(a)?;
+    let trace_prefix = a.get("trace");
+    if trace_prefix.is_some() {
+        // `--trace PREFIX`: run the whole stream with fabric telemetry on
+        // and export the first pipeline stage's trace plus per-request
+        // span tracks. Telemetry is observation-only, so the scorecard is
+        // identical with or without the flag.
+        cfg.telemetry.window = Some(256);
+        cfg.telemetry.trace = true;
+    }
     let mut workload = resolve_workload(a.get_or("workload", "lenet5"))?;
     if a.has("trim") {
         // The shared quick-trim: shrink the big layers so smoke runs (CI)
@@ -629,6 +823,30 @@ fn cmd_serve(a: &args::Args) -> Result<()> {
         "fabric totals: {} tasks, {} flits injected, {} flits switched, {} packets delivered",
         run.tasks_completed, run.flits_injected, run.flits_switched, run.packets_delivered
     );
+    if let Some(prefix) = trace_prefix {
+        let report = run
+            .stage_telemetry
+            .first()
+            .context("serving telemetry missing from a telemetry-enabled run (internal error)")?;
+        // One span track per request: the outer span is the whole
+        // residence (arrive→complete) and the inner one the in-service
+        // part (start→complete); arrive ≤ start keeps them nested.
+        let tracks: Vec<SpanTrack> = run
+            .records
+            .iter()
+            .enumerate()
+            .map(|(i, r)| SpanTrack {
+                process: "serving".into(),
+                thread: format!("req#{i}"),
+                spans: vec![
+                    (format!("request {i}"), r.arrive, r.complete),
+                    (format!("in service {i}"), r.start, r.complete),
+                ],
+            })
+            .collect();
+        println!("trace: stage-0 fabric telemetry, {} packet events", report.events.len());
+        write_trace_files(prefix, report, &tracks, None)?;
+    }
     Ok(())
 }
 
@@ -745,12 +963,24 @@ fn apply_jobs_flag(a: &args::Args) -> Result<()> {
     Ok(())
 }
 
+/// Hand `--timings` to every [`Scenario`](noctt::experiments::engine::Scenario)
+/// via `NOCTT_TIMINGS` (the engine's env-fallback knob, same pattern as
+/// `--jobs`/`NOCTT_JOBS`). Called once at startup, before any simulation
+/// thread exists.
+fn apply_timings_flag(a: &args::Args) {
+    if a.has("timings") {
+        std::env::set_var("NOCTT_TIMINGS", "1");
+    }
+}
+
 fn main() -> Result<()> {
     let a = args::Args::parse(std::env::args().skip(1))?;
     apply_jobs_flag(&a)?;
+    apply_timings_flag(&a);
     match a.positional.first().map(String::as_str) {
         Some("exp") => cmd_exp(&a),
         Some("sim") => cmd_sim(&a),
+        Some("trace") => cmd_trace(&a),
         Some("serve") => cmd_serve(&a),
         Some("workloads") => cmd_workloads(),
         Some("mappers") => cmd_mappers(),
@@ -761,12 +991,7 @@ fn main() -> Result<()> {
             println!("smoke OK");
             Ok(())
         }
-        Some("report") => {
-            for r in experiments::all_reports(false) {
-                println!("{r}");
-            }
-            Ok(())
-        }
+        Some("report") => cmd_report(&a),
         _ => usage(),
     }
 }

@@ -183,6 +183,20 @@ pub fn run_sampling(cfg: &PlatformConfig, layer: &LayerSpec, window: u64) -> Res
     // Phase 2: residual tasks, Eq. 7–8.
     let residual = layer.tasks - sampled_total;
     let residual_counts = inverse_proportional(residual, &t_s);
+    if cfg.telemetry.enabled() {
+        // Sampling-window introspection: log the remap decision (Eq. 7
+        // means, their unevenness, and the Eq. 8 residual split) into the
+        // telemetry stream. Observation only — the allocation above is
+        // already fixed.
+        let samples: Vec<Option<f64>> = t_s.iter().map(|&t| Some(t)).collect();
+        sim.log_remap(crate::telemetry::RemapDecision {
+            at_cycle: sim.now(),
+            mapper: label.to_string(),
+            mean_travel: t_s.clone(),
+            rho: crate::metrics::unevenness(&samples),
+            counts: residual_counts.clone(),
+        });
+    }
     sim.add_budgets(&residual_counts);
     let result = sim.run_until_done()?;
     let counts: Vec<u64> = residual_counts.iter().map(|c| c + window).collect();

@@ -59,6 +59,9 @@ use crate::noc::flit::{Flit, PacketId, PacketInfo, PacketKind, T_NEVER};
 use crate::noc::ni::Ni;
 use crate::noc::router::Router;
 use crate::noc::topology::{NodeId, Port, RoutingAlgorithm, Topology, PORT_LOCAL};
+use crate::telemetry::{
+    CountersView, PacketMeta, RemapDecision, Telemetry, TelemetryReport, TraceEventKind,
+};
 
 /// Aggregate traffic statistics.
 #[derive(Debug, Clone, Default)]
@@ -145,6 +148,17 @@ fn kind_index(kind: PacketKind) -> usize {
     }
 }
 
+/// The collector's borrowed view of the cumulative traffic counters.
+fn counters_view(stats: &NetworkStats) -> CountersView<'_> {
+    CountersView {
+        flits_injected: stats.flits_injected,
+        flits_switched: stats.flits_switched,
+        link_traversals: stats.link_traversals,
+        packets_delivered: stats.packets_delivered,
+        switched_per_port: &stats.switched_per_port,
+    }
+}
+
 /// A staged flit on a wire: (destination router, input port, vc, flit).
 type FlitWire = (NodeId, Port, usize, Flit);
 /// A staged credit: toward `router`'s output `[port][vc]` counters.
@@ -185,6 +199,9 @@ pub struct Network {
     /// (`es_bit`, `el_bit`, `flit_bits`) for
     /// [`priced_stats`](Self::priced_stats).
     energy_cfg: (f64, f64, u64),
+    /// Telemetry collectors, or `None` when disabled (the zero-overhead
+    /// path: every hook is one branch on a cold `Option`, no allocation).
+    telemetry: Option<Box<Telemetry>>,
 }
 
 impl Network {
@@ -221,6 +238,7 @@ impl Network {
                 ..NetworkStats::default()
             },
             energy_cfg: (cfg.es_bit, cfg.el_bit, cfg.flit_bits),
+            telemetry: Telemetry::from_spec(cfg.telemetry, num_nodes),
         }
     }
 
@@ -271,6 +289,64 @@ impl Network {
         let (es, el, bits) = self.energy_cfg;
         s.price_energy(es, el, bits);
         s
+    }
+
+    /// The live telemetry handle, if any collector is enabled.
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.telemetry.as_deref()
+    }
+
+    /// Record the device layer's latest samples (total MC backlog, busy-PE
+    /// count) into the windowed collector; no-op when disabled. The engine
+    /// calls this once per co-simulation step — latest-value semantics,
+    /// captured into the row at each window close.
+    #[inline]
+    pub fn note_devices(&mut self, mc_backlog: u64, pes_busy: u64) {
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            if let Some(w) = &mut t.windows {
+                w.note_devices(mc_backlog, pes_busy);
+            }
+        }
+    }
+
+    /// Log a sampling-window remap decision; no-op when telemetry is
+    /// disabled.
+    pub fn record_remap(&mut self, d: RemapDecision) {
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            t.decisions.push(d);
+        }
+    }
+
+    /// A self-contained snapshot of everything the collectors have seen,
+    /// or `None` when telemetry is disabled: closed windows plus the
+    /// trailing partial one (per-window sums reconcile exactly with
+    /// [`stats`](Self::stats) — conservation by construction), the
+    /// packet-lifetime event log, remap decisions, and packet metadata.
+    /// Non-mutating, so it can be taken mid-run or at finalize.
+    pub fn telemetry_report(&self) -> Option<Box<TelemetryReport>> {
+        let t = self.telemetry.as_deref()?;
+        let rows = t.windows.as_ref().map_or_else(Vec::new, |w| {
+            w.snapshot_rows(self.cycle, counters_view(&self.stats), &mut |n| {
+                self.routers[n].buffered_flits() as u32
+            })
+        });
+        Some(Box::new(TelemetryReport {
+            window: t.windows.as_ref().map(|w| w.window()),
+            rows,
+            events: t.trace.clone().unwrap_or_default(),
+            decisions: t.decisions.clone(),
+            packets: self
+                .packets
+                .iter()
+                .map(|p| PacketMeta {
+                    src: p.src as u32,
+                    dst: p.dst as u32,
+                    kind: p.kind,
+                    num_flits: p.num_flits as u32,
+                    tag: p.tag,
+                })
+                .collect(),
+        }))
     }
 
     /// Put `node`'s router on the active worklist (flit arrival).
@@ -433,6 +509,22 @@ impl Network {
         self.cycle += 1;
         let now = self.cycle;
 
+        // Telemetry is taken out of `self` for the step so collector
+        // borrows never alias fabric state; the disabled path costs one
+        // pointer move and a handful of cold branches. Window boundaries
+        // roll *before* this cycle's events so every delta lands in the
+        // window that was open when it accrued (exact attribution, even
+        // across `skip_to` gaps).
+        let mut tel = self.telemetry.take();
+        if let Some(t) = tel.as_deref_mut() {
+            if let Some(w) = &mut t.windows {
+                let routers = &self.routers;
+                w.roll(now, counters_view(&self.stats), &mut |n| {
+                    routers[n].buffered_flits() as u32
+                });
+            }
+        }
+
         // 1a. Wire stage: deliver flits staged last cycle (buffer write).
         // Swap with persistent scratch so neither vector reallocates. An
         // arriving flit is the only event that can wake a router.
@@ -473,6 +565,9 @@ impl Network {
             if let Some((vc, flit, first)) = self.nis[node].inject(now) {
                 if first {
                     self.packets[flit.packet as usize].t_first_flit_out = now;
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.record(now, node as u32, flit.packet, TraceEventKind::Inject);
+                    }
                 }
                 self.stats.flits_injected += 1;
                 self.flit_wires.push((node, PORT_LOCAL, vc, flit));
@@ -488,10 +583,24 @@ impl Network {
             }
             let mut moves = std::mem::take(&mut self.moves_scratch);
             moves.clear();
-            self.routers[node].switch_allocate_into(&mut moves);
+            self.routers[node].switch_allocate_into_probed(
+                &mut moves,
+                tel.as_deref_mut().map(|t| t.router_probe(now, node as u32)),
+            );
             for &m in &moves {
                 self.stats.flits_switched += 1;
                 self.stats.switched_per_port[node][m.out_port] += 1;
+                if let Some(t) = tel.as_deref_mut() {
+                    if m.flit.kind.is_head() {
+                        t.record(now, node as u32, m.flit.packet, TraceEventKind::SwitchAllocated);
+                        if m.out_port != PORT_LOCAL {
+                            t.record(now, node as u32, m.flit.packet, TraceEventKind::LinkOut);
+                        }
+                    }
+                    if m.out_port == PORT_LOCAL && m.flit.kind.is_tail() {
+                        t.record(now, node as u32, m.flit.packet, TraceEventKind::Eject);
+                    }
+                }
                 // Credit return for the freed input slot.
                 if m.in_port == PORT_LOCAL {
                     self.ni_credit_wires.push((node, m.in_vc));
@@ -534,13 +643,15 @@ impl Network {
         // 4. VC allocation on every active router.
         for k in 0..router_count {
             let node = if dense { k } else { self.router_worklist[k] };
-            self.routers[node].vc_allocate();
+            let probe = tel.as_deref_mut().map(|t| t.router_probe(now, node as u32));
+            self.routers[node].vc_allocate_probed(probe);
         }
         // 5. Route computation on every active router (under the
         // platform's routing algorithm on its topology).
         for k in 0..router_count {
             let node = if dense { k } else { self.router_worklist[k] };
-            self.routers[node].route_compute(&self.topo, self.routing);
+            let probe = tel.as_deref_mut().map(|t| t.router_probe(now, node as u32));
+            self.routers[node].route_compute_probed(&self.topo, self.routing, probe);
         }
 
         // Worklist compaction: drop components that went quiescent this
@@ -569,6 +680,7 @@ impl Network {
                 }
             });
         }
+        self.telemetry = tel;
         self.stats.cycles = self.cycle;
     }
 

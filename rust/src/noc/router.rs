@@ -45,6 +45,7 @@
 
 use crate::noc::flit::{Flit, FlitKind};
 use crate::noc::topology::{NodeId, Port, RoutingAlgorithm, Topology, NUM_PORTS, PORT_LOCAL};
+use crate::telemetry::{RouterProbe, TraceEventKind};
 
 /// Per-input-VC pipeline state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -314,6 +315,18 @@ impl Router {
     /// algorithm's deterministic candidate order — local state only, so
     /// event-driven and dense stepping see identical choices.
     pub fn route_compute(&mut self, topo: &Topology, routing: RoutingAlgorithm) {
+        self.route_compute_probed(topo, routing, None);
+    }
+
+    /// [`route_compute`](Self::route_compute) with an optional telemetry
+    /// probe recording per-packet RC events. The probe is observation
+    /// only — routing decisions are identical with or without it.
+    pub fn route_compute_probed(
+        &mut self,
+        topo: &Topology,
+        routing: RoutingAlgorithm,
+        mut probe: Option<RouterProbe<'_>>,
+    ) {
         if self.rc_pending.is_empty() {
             return;
         }
@@ -337,6 +350,9 @@ impl Router {
                     topo.out_vc_range(self.num_vcs, self.node, out_port, dst);
                 self.inputs[slot].state = VcState::RouteComputed { out_port, vc_first, vc_count };
                 self.va_pending.push((port, vc));
+                if let Some(p) = probe.as_mut() {
+                    p.packet_event(front.packet, TraceEventKind::RouteComputed);
+                }
             }
         }
         self.rc_pending.clear();
@@ -381,6 +397,13 @@ impl Router {
     /// requester reaches the front of the rotation within `len` granting
     /// cycles regardless of which port it wants.
     pub fn vc_allocate(&mut self) {
+        self.vc_allocate_probed(None);
+    }
+
+    /// [`vc_allocate`](Self::vc_allocate) with an optional telemetry probe
+    /// recording per-packet VA grants and VA losses. Observation only —
+    /// grant decisions are identical with or without it.
+    pub fn vc_allocate_probed(&mut self, mut probe: Option<RouterProbe<'_>>) {
         if self.va_pending.is_empty() {
             return;
         }
@@ -407,13 +430,23 @@ impl Router {
                 (vc_first..vc_first + vc_count).find(|&ov| self.out_vc_owner[base + ov].is_none());
             match free {
                 Some(out_vc) => {
+                    if let Some(p) = probe.as_mut() {
+                        if let Some(front) = self.vc_front(port * self.num_vcs + vc) {
+                            p.packet_event(front.packet, TraceEventKind::VcAllocated);
+                        }
+                    }
                     self.out_vc_owner[base + out_vc] = Some((port, vc));
                     self.inputs[port * self.num_vcs + vc].state =
                         VcState::Active { out_port, out_vc };
                     self.active_by_out[out_port].push((port, vc, out_vc));
                     granted_any = true;
                 }
-                None => self.va_pending.push((port, vc)), // retry next cycle
+                None => {
+                    if let Some(p) = probe.as_mut() {
+                        p.va_loss();
+                    }
+                    self.va_pending.push((port, vc)); // retry next cycle
+                }
             }
         }
         if granted_any {
@@ -436,6 +469,21 @@ impl Router {
     /// [`switch_allocate`](Self::switch_allocate) into a reusable buffer
     /// (the network's hot path; avoids a per-router-per-cycle allocation).
     pub fn switch_allocate_into(&mut self, moves: &mut Vec<SwitchedFlit>) {
+        self.switch_allocate_into_probed(moves, None);
+    }
+
+    /// [`switch_allocate_into`](Self::switch_allocate_into) with an
+    /// optional telemetry probe accounting stall causes: credit starvation
+    /// (a ready candidate with zero downstream credits), SA arbitration
+    /// loss (ready, credited, but not granted this cycle), and
+    /// route-blocked input VCs (flits buffered behind the RC stage).
+    /// Observation only — the grant sequence is identical with or without
+    /// the probe.
+    pub fn switch_allocate_into_probed(
+        &mut self,
+        moves: &mut Vec<SwitchedFlit>,
+        mut probe: Option<RouterProbe<'_>>,
+    ) {
         if self.buffered == 0 {
             return;
         }
@@ -482,6 +530,30 @@ impl Router {
                     break 'scan;
                 }
             }
+            if let Some(p) = probe.as_mut() {
+                // Stall accounting over this port's candidates: every live
+                // entry with a flit ready that is *not* the grant lost a
+                // cycle — to credit starvation if its downstream credits
+                // are exhausted, to switch arbitration otherwise.
+                let granted_idx = grant.map(|(idx, _, _, _)| idx);
+                let cands = &self.active_by_out[out_port];
+                for idx in 0..cands.entries.len() {
+                    let (port, vc, out_vc) = cands.entries[idx];
+                    if port == SA_DEAD || Some(idx) == granted_idx {
+                        continue;
+                    }
+                    if self.inputs[port * self.num_vcs + vc].len == 0 {
+                        continue;
+                    }
+                    let credit_ok = out_port == PORT_LOCAL
+                        || self.out_credits[out_port * self.num_vcs + out_vc] > 0;
+                    if credit_ok {
+                        p.sa_loss();
+                    } else {
+                        p.credit_stall();
+                    }
+                }
+            }
             let Some((idx, port, vc, out_vc)) = grant else { continue };
             let in_slot = port * self.num_vcs + vc;
             let flit = self.vc_pop_front(in_slot);
@@ -506,6 +578,16 @@ impl Router {
             }
             self.sa_rr[out_port] = self.sa_rr[out_port].wrapping_add(1);
             moves.push(SwitchedFlit { flit, out_port, out_vc, in_port: port, in_vc: vc });
+        }
+        if let Some(p) = probe.as_mut() {
+            // Route-blocked: input VCs holding flits that have not yet
+            // acquired a route this cycle (a head awaiting the RC stage,
+            // or a queued next packet whose wormhole has not opened).
+            for ivc in &self.inputs {
+                if ivc.len > 0 && ivc.state == VcState::Idle {
+                    p.route_blocked();
+                }
+            }
         }
     }
 

@@ -20,6 +20,7 @@ use crate::mapping::{MapCtx, Mapper};
 use crate::metrics::ServingSummary;
 use crate::serving::arrival::ArrivalGen;
 use crate::serving::ServingConfig;
+use crate::telemetry::TelemetryReport;
 
 /// Per-request timestamps of a completed serving run, in arrival order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -140,6 +141,17 @@ impl SimStages {
         }
         Ok((tasks, injected, switched, delivered))
     }
+
+    /// Per-stage telemetry reports, in layer order — one entry per stage
+    /// when the platform was built with telemetry enabled, empty
+    /// otherwise. Best taken after [`drain_all`](Self::drain_all) so the
+    /// final (partial) window covers the settled fabric.
+    pub fn telemetry_reports(&self) -> Vec<TelemetryReport> {
+        self.sims
+            .iter()
+            .filter_map(|s| s.network().telemetry_report().map(|b| *b))
+            .collect()
+    }
 }
 
 impl StageService for SimStages {
@@ -180,6 +192,11 @@ pub struct ServingRun {
     pub flits_switched: u64,
     /// Packets delivered, summed over the per-layer fabrics.
     pub packets_delivered: u64,
+    /// Per-stage telemetry reports (one per layer when the platform ran
+    /// with telemetry enabled, empty otherwise). Deliberately **not**
+    /// part of [`fingerprint`](Self::fingerprint): telemetry observes the
+    /// run, it is not the run's identity.
+    pub stage_telemetry: Vec<TelemetryReport>,
 }
 
 impl ServingRun {
@@ -284,6 +301,7 @@ impl<'a> ServingSim<'a> {
         // (4) Settle and account.
         let (tasks_completed, flits_injected, flits_switched, packets_delivered) =
             stages.drain_all()?;
+        let stage_telemetry = stages.telemetry_reports();
 
         let starts: Vec<u64> = records.iter().map(|r| r.start).collect();
         let completions: Vec<u64> = records.iter().map(|r| r.complete).collect();
@@ -298,6 +316,7 @@ impl<'a> ServingSim<'a> {
             flits_injected,
             flits_switched,
             packets_delivered,
+            stage_telemetry,
         })
     }
 }

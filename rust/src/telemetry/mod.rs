@@ -1,0 +1,403 @@
+//! The telemetry subsystem: zero-overhead-when-off instrumentation for the
+//! NoC fabric, the accelerator devices, and the mapping loop.
+//!
+//! Two collectors live behind one [`Telemetry`] handle, selected by the
+//! [`TelemetrySpec`] on the platform config:
+//!
+//! * **Cycle-windowed counters** ([`windows`]): traffic and stall deltas
+//!   bucketed into fixed windows — per-link flit traversals, per-router
+//!   input-VC occupancy, stall cycles split by cause (credit starvation vs
+//!   VA/SA arbitration loss vs route-blocked), MC queue depth and PE
+//!   busy counts. Per-window sums reconcile **exactly** with the run's
+//!   [`NetworkStats`](crate::noc::NetworkStats) totals because every row
+//!   is a delta of the same cumulative counters (conservation by
+//!   construction; `rust/tests/telemetry.rs` pins it).
+//! * **Packet-lifetime event traces** ([`trace`]): inject/RC/VA/SA/link/
+//!   eject timestamps per packet, exportable as Chrome/Perfetto
+//!   `trace_event` JSON via `noctt trace`.
+//!
+//! # The zero-overhead argument
+//!
+//! The network stores `Option<Box<Telemetry>>`; when the spec is disabled
+//! the option is `None` and every hook is a single predictable branch on a
+//! cold `Option` — no allocation, no counter writes, no trace pushes. The
+//! steady-state allocation audit (`rust/tests/alloc_audit.rs`) runs on the
+//! disabled path and still pins **exactly zero** heap acquisitions per
+//! cycle.
+//!
+//! # Why determinism survives
+//!
+//! Every collector is strictly *read-only observation*: hooks copy
+//! timestamps and counter values out of the simulation but never feed a
+//! value back into an arbitration, routing, or scheduling decision. The
+//! simulation's state trajectory is therefore bit-identical with telemetry
+//! on or off — `rust/tests/telemetry.rs` fingerprints both and compares.
+
+pub mod trace;
+pub mod windows;
+
+pub use windows::{CountersView, WindowRow, WindowedCounters};
+
+use crate::noc::flit::{PacketId, PacketKind};
+
+/// Platform-level telemetry selection (a [`PlatformConfig`] field, set by
+/// the builder's `telemetry_window` / `telemetry_trace` knobs or the CLI
+/// `--window` / `trace` plumbing).
+///
+/// The default — both collectors off — is the zero-overhead path.
+///
+/// [`PlatformConfig`]: crate::config::PlatformConfig
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TelemetrySpec {
+    /// Cycle-window length for the windowed counter collector, or `None`
+    /// to disable it. Must be ≥ 1 (the builder validates).
+    pub window: Option<u64>,
+    /// Collect per-packet lifetime events for Perfetto export.
+    pub trace: bool,
+}
+
+impl TelemetrySpec {
+    /// Is any collector enabled?
+    pub fn enabled(&self) -> bool {
+        self.window.is_some() || self.trace
+    }
+}
+
+/// Per-router stall cycles, split by cause. One candidate failing to
+/// advance for one cycle adds one count to exactly one bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StallCounters {
+    /// SA candidates with a flit ready that found zero downstream credits
+    /// (credit starvation — the congestion signal proper).
+    pub credit_stalls: u64,
+    /// Route-computed packets that found no free output VC in their legal
+    /// class this cycle (VC-allocation loss).
+    pub va_losses: u64,
+    /// SA candidates with a flit *and* credit that lost the switch
+    /// arbitration (crossbar contention).
+    pub sa_losses: u64,
+    /// Input VCs holding flits that have not yet route-computed (head
+    /// waiting for the RC stage, or body flits queued behind another
+    /// packet).
+    pub route_blocked: u64,
+}
+
+impl StallCounters {
+    /// Accumulate another counter set into this one.
+    pub fn add(&mut self, other: &StallCounters) {
+        self.credit_stalls += other.credit_stalls;
+        self.va_losses += other.va_losses;
+        self.sa_losses += other.sa_losses;
+        self.route_blocked += other.route_blocked;
+    }
+
+    /// Sum across all causes.
+    pub fn total(&self) -> u64 {
+        self.credit_stalls + self.va_losses + self.sa_losses + self.route_blocked
+    }
+}
+
+/// One packet-lifetime event kind, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// First flit left the source NI into the local router port.
+    Inject,
+    /// Head flit route-computed at a router.
+    RouteComputed,
+    /// Head flit acquired an output VC at a router.
+    VcAllocated,
+    /// Head flit granted switch traversal at a router.
+    SwitchAllocated,
+    /// Head flit left a router onto an inter-router link.
+    LinkOut,
+    /// Tail flit ejected at the destination (packet delivered).
+    Eject,
+}
+
+impl TraceEventKind {
+    /// Stable lowercase name (CSV/JSON emission).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEventKind::Inject => "inject",
+            TraceEventKind::RouteComputed => "rc",
+            TraceEventKind::VcAllocated => "va",
+            TraceEventKind::SwitchAllocated => "sa",
+            TraceEventKind::LinkOut => "link",
+            TraceEventKind::Eject => "eject",
+        }
+    }
+}
+
+/// One timestamped packet-lifetime event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Router cycle the event happened.
+    pub ts: u64,
+    /// Mesh node it happened at.
+    pub node: u32,
+    /// The packet.
+    pub packet: PacketId,
+    /// What happened.
+    pub kind: TraceEventKind,
+}
+
+/// Static packet metadata copied out of the network's packet table at
+/// report time, so a [`TelemetryReport`] is self-contained (the exporters
+/// never need the live [`Network`](crate::noc::Network)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PacketMeta {
+    /// Source node.
+    pub src: u32,
+    /// Destination node.
+    pub dst: u32,
+    /// Traffic class.
+    pub kind: PacketKind,
+    /// Packet length in flits.
+    pub num_flits: u32,
+    /// Opaque device tag (the accel layer stores the PE index here).
+    pub tag: u64,
+}
+
+/// One `travel_time` sampling-window remap decision: the paper's §4
+/// feedback step, logged with the signal it acted on and the counts vector
+/// it chose — the introspection view of "why did sampling pick this
+/// distribution".
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemapDecision {
+    /// Cycle the decision was taken (end of the sampling window).
+    pub at_cycle: u64,
+    /// Mapper label (e.g. `sampling-10`).
+    pub mapper: String,
+    /// Mean observed travel time per PE over the sampling window.
+    pub mean_travel: Vec<f64>,
+    /// Travel-time unevenness ρ over the window (max/mean − 1).
+    pub rho: f64,
+    /// The residual task counts the decision assigned per PE.
+    pub counts: Vec<u64>,
+}
+
+/// The live collector handle owned by the network (boxed so the disabled
+/// `None` path costs one pointer).
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    /// Cycle-windowed counter collector, if enabled.
+    pub windows: Option<WindowedCounters>,
+    /// Packet-lifetime event log, if enabled.
+    pub trace: Option<Vec<TraceEvent>>,
+    /// Sampling-window remap decisions logged by the mapping loop.
+    pub decisions: Vec<RemapDecision>,
+}
+
+impl Telemetry {
+    /// Build the collectors `spec` asks for, or `None` when fully disabled
+    /// (the zero-overhead path — no box, no collector state).
+    pub fn from_spec(spec: TelemetrySpec, num_nodes: usize) -> Option<Box<Self>> {
+        if !spec.enabled() {
+            return None;
+        }
+        Some(Box::new(Self {
+            windows: spec.window.map(|w| WindowedCounters::new(w, num_nodes)),
+            trace: spec.trace.then(Vec::new),
+            decisions: Vec::new(),
+        }))
+    }
+
+    /// Record a packet-lifetime event (no-op unless tracing is on).
+    #[inline]
+    pub fn record(&mut self, ts: u64, node: u32, packet: PacketId, kind: TraceEventKind) {
+        if let Some(t) = &mut self.trace {
+            t.push(TraceEvent { ts, node, packet, kind });
+        }
+    }
+
+    /// A per-router probe for cycle `now` at `node`: the router pipeline
+    /// stages report stalls and packet events through it.
+    pub fn router_probe(&mut self, now: u64, node: u32) -> RouterProbe<'_> {
+        RouterProbe {
+            now,
+            node,
+            stalls: self.windows.as_mut().map(|w| w.stalls_mut(node as usize)),
+            trace: self.trace.as_mut(),
+        }
+    }
+}
+
+/// The router's view of the telemetry layer for one pipeline invocation:
+/// mutable access to its own stall counters and the shared trace log.
+///
+/// Constructed per router per cycle by [`Telemetry::router_probe`]; the
+/// router's `*_probed` stage variants take `Option<RouterProbe>` and the
+/// plain variants pass `None`, so the disabled path through the router is
+/// unchanged.
+pub struct RouterProbe<'a> {
+    now: u64,
+    node: u32,
+    stalls: Option<&'a mut StallCounters>,
+    trace: Option<&'a mut Vec<TraceEvent>>,
+}
+
+impl RouterProbe<'_> {
+    /// An SA candidate with a flit ready found no downstream credit.
+    #[inline]
+    pub fn credit_stall(&mut self) {
+        if let Some(s) = &mut self.stalls {
+            s.credit_stalls += 1;
+        }
+    }
+
+    /// A route-computed packet found no free output VC this cycle.
+    #[inline]
+    pub fn va_loss(&mut self) {
+        if let Some(s) = &mut self.stalls {
+            s.va_losses += 1;
+        }
+    }
+
+    /// An SA candidate with flit and credit lost the switch arbitration.
+    #[inline]
+    pub fn sa_loss(&mut self) {
+        if let Some(s) = &mut self.stalls {
+            s.sa_losses += 1;
+        }
+    }
+
+    /// An input VC holds flits that have not yet route-computed.
+    #[inline]
+    pub fn route_blocked(&mut self) {
+        if let Some(s) = &mut self.stalls {
+            s.route_blocked += 1;
+        }
+    }
+
+    /// Record a packet-lifetime event at this router, this cycle.
+    #[inline]
+    pub fn packet_event(&mut self, packet: PacketId, kind: TraceEventKind) {
+        if let Some(t) = &mut self.trace {
+            t.push(TraceEvent { ts: self.now, node: self.node, packet, kind });
+        }
+    }
+}
+
+/// A self-contained, immutable snapshot of everything the collectors saw —
+/// what a finished [`SimResult`](crate::accel::SimResult) carries and what
+/// the exporters ([`trace::perfetto_json`], [`TelemetryReport::windows_csv`])
+/// consume.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryReport {
+    /// Window length of the windowed collector, if it ran.
+    pub window: Option<u64>,
+    /// Closed windows plus the trailing partial window (deltas; see
+    /// [`WindowRow`]).
+    pub rows: Vec<WindowRow>,
+    /// Packet-lifetime events in emission order (ascending ts; ties in
+    /// pipeline-visit order — deterministic).
+    pub events: Vec<TraceEvent>,
+    /// Sampling-window remap decisions in the order they were taken.
+    pub decisions: Vec<RemapDecision>,
+    /// Packet table metadata, indexed by `PacketId`.
+    pub packets: Vec<PacketMeta>,
+}
+
+impl TelemetryReport {
+    /// Fabric-wide windowed counters as CSV, one row per window.
+    ///
+    /// `vc_occupancy` is the total flits buffered across all router input
+    /// VCs at window close; `mc_backlog`/`pes_busy` are the most recent
+    /// device samples at close. All other columns are per-window deltas
+    /// whose column sums equal the run's `NetworkStats` totals exactly.
+    pub fn windows_csv(&self) -> String {
+        let mut out = String::from(
+            "window,start,end,flits_injected,flits_switched,link_traversals,\
+             packets_delivered,credit_stalls,va_losses,sa_losses,route_blocked,\
+             vc_occupancy,mc_backlog,pes_busy\n",
+        );
+        for (i, r) in self.rows.iter().enumerate() {
+            let occ: u64 = r.vc_occupancy.iter().map(|&o| o as u64).sum();
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                i,
+                r.start,
+                r.end,
+                r.flits_injected,
+                r.flits_switched,
+                r.link_traversals,
+                r.packets_delivered,
+                r.stalls.credit_stalls,
+                r.stalls.va_losses,
+                r.stalls.sa_losses,
+                r.stalls.route_blocked,
+                occ,
+                r.mc_backlog,
+                r.pes_busy,
+            ));
+        }
+        out
+    }
+
+    /// Sum the per-window traffic deltas: `(flits_injected, flits_switched,
+    /// link_traversals, packets_delivered)`. Equal to the run's
+    /// `NetworkStats` totals by construction.
+    pub fn window_totals(&self) -> (u64, u64, u64, u64) {
+        let mut t = (0u64, 0u64, 0u64, 0u64);
+        for r in &self.rows {
+            t.0 += r.flits_injected;
+            t.1 += r.flits_switched;
+            t.2 += r.link_traversals;
+            t.3 += r.packets_delivered;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spec_builds_no_collector() {
+        assert!(!TelemetrySpec::default().enabled());
+        assert!(Telemetry::from_spec(TelemetrySpec::default(), 16).is_none());
+    }
+
+    #[test]
+    fn spec_selects_collectors_independently() {
+        let w = Telemetry::from_spec(TelemetrySpec { window: Some(64), trace: false }, 4).unwrap();
+        assert!(w.windows.is_some() && w.trace.is_none());
+        let t = Telemetry::from_spec(TelemetrySpec { window: None, trace: true }, 4).unwrap();
+        assert!(t.windows.is_none() && t.trace.is_some());
+    }
+
+    #[test]
+    fn probe_routes_counts_to_the_right_buckets() {
+        let mut tel =
+            Telemetry::from_spec(TelemetrySpec { window: Some(8), trace: true }, 2).unwrap();
+        {
+            let mut p = tel.router_probe(3, 1);
+            p.credit_stall();
+            p.credit_stall();
+            p.sa_loss();
+            p.va_loss();
+            p.route_blocked();
+            p.packet_event(7, TraceEventKind::RouteComputed);
+        }
+        let w = tel.windows.as_mut().unwrap();
+        let s = *w.stalls_mut(1);
+        assert_eq!(s.credit_stalls, 2);
+        assert_eq!(s.sa_losses, 1);
+        assert_eq!(s.va_losses, 1);
+        assert_eq!(s.route_blocked, 1);
+        assert_eq!(s.total(), 5);
+        assert_eq!(w.stalls_mut(0).total(), 0, "counts are per node");
+        let ev = tel.trace.as_ref().unwrap();
+        assert_eq!(ev.len(), 1);
+        let want = TraceEvent { ts: 3, node: 1, packet: 7, kind: TraceEventKind::RouteComputed };
+        assert_eq!(ev[0], want);
+    }
+
+    #[test]
+    fn csv_has_one_line_per_row_plus_header() {
+        let report = TelemetryReport::default();
+        assert_eq!(report.windows_csv().lines().count(), 1, "header only when empty");
+        assert!(report.windows_csv().starts_with("window,start,end,"));
+    }
+}

@@ -1,0 +1,294 @@
+//! Chrome/Perfetto `trace_event` JSON export.
+//!
+//! The exporter renders a [`TelemetryReport`] as the JSON array format
+//! both `chrome://tracing` and [ui.perfetto.dev](https://ui.perfetto.dev)
+//! load directly: one *process* per subsystem (NoC routers, plus any
+//! caller-supplied device tracks — PEs, MCs, serving requests), one
+//! *thread* per component, and one span per packet per router from its
+//! first to its last pipeline event there.
+//!
+//! Time base: `trace_event` timestamps are microseconds; the exporter maps
+//! **one router cycle to one microsecond**, so a cycle count reads
+//! directly off the Perfetto ruler (there is no wall-clock in the
+//! simulation to map to).
+//!
+//! Everything is hand-rolled JSON on [`escape_json`] — no serde in the
+//! dependency-free build.
+
+use std::collections::BTreeMap;
+
+use crate::noc::flit::PacketKind;
+use crate::telemetry::{TelemetryReport, TraceEventKind};
+use crate::util::bench::escape_json;
+
+/// One caller-supplied span track: a named thread inside a named process,
+/// holding `(label, start_cycle, end_cycle)` spans. The accel/serving
+/// layers build these from their own records (PE compute, MC service,
+/// serving requests) so the exporter stays independent of those types.
+#[derive(Debug, Clone, Default)]
+pub struct SpanTrack {
+    /// Process name the track groups under (e.g. `"PEs"`).
+    pub process: String,
+    /// Thread name (e.g. `"PE 3 @node 5"`).
+    pub thread: String,
+    /// Spans as `(label, start_cycle, end_cycle)`, end inclusive-of-work.
+    pub spans: Vec<(String, u64, u64)>,
+}
+
+/// Short span label for a packet: kind prefix + id.
+fn packet_label(kind: PacketKind, packet: u32) -> String {
+    let k = match kind {
+        PacketKind::Request => "req",
+        PacketKind::Response => "resp",
+        PacketKind::Result => "res",
+    };
+    format!("{k}#{packet}")
+}
+
+fn push_event(out: &mut String, first: &mut bool, body: &str) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    out.push('\n');
+    out.push_str("    ");
+    out.push_str(body);
+}
+
+/// Render `report` (plus optional device/serving `extra` tracks) as a
+/// Chrome/Perfetto `trace_event` JSON object.
+///
+/// Emitted tracks:
+/// * process **NoC routers** — per-router threads; an `"X"` span per
+///   (packet, router) covering that packet's pipeline events there, with
+///   `src`/`dst`/`flits` args; `"i"` instants for inject and eject.
+/// * process **window counters** (when the windowed collector ran) —
+///   `"C"` counter series for per-window traffic and stall totals.
+/// * one process per distinct `extra` track name, `"X"` spans as given.
+///
+/// Deterministic: events are grouped in `BTreeMap`s and emitted in sorted
+/// order, so identical runs produce byte-identical traces.
+pub fn perfetto_json(report: &TelemetryReport, extra: &[SpanTrack]) -> String {
+    let mut out = String::from("{\n  \"traceEvents\": [");
+    let mut first = true;
+
+    // Process/thread metadata: routers are pid 1; extra processes get
+    // stable pids in order of first appearance.
+    push_event(
+        &mut out,
+        &mut first,
+        "{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 1, \
+         \"args\": {\"name\": \"NoC routers\"}}",
+    );
+    let mut touched: BTreeMap<u32, ()> = BTreeMap::new();
+    for e in &report.events {
+        touched.entry(e.node).or_insert(());
+    }
+    for &node in touched.keys() {
+        push_event(
+            &mut out,
+            &mut first,
+            &format!(
+                "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": 1, \"tid\": {node}, \
+                 \"args\": {{\"name\": \"router {node}\"}}}}"
+            ),
+        );
+    }
+
+    // Per-(node, packet) spans: first..last pipeline event at that router.
+    let mut spans: BTreeMap<(u32, u32), (u64, u64)> = BTreeMap::new();
+    for e in &report.events {
+        let slot = spans.entry((e.node, e.packet)).or_insert((e.ts, e.ts));
+        slot.0 = slot.0.min(e.ts);
+        slot.1 = slot.1.max(e.ts);
+    }
+    for (&(node, packet), &(t0, t1)) in &spans {
+        let meta = report.packets.get(packet as usize);
+        let label =
+            meta.map_or_else(|| format!("pkt#{packet}"), |m| packet_label(m.kind, packet));
+        let args = meta.map_or_else(String::new, |m| {
+            format!(
+                ", \"args\": {{\"src\": {}, \"dst\": {}, \"flits\": {}}}",
+                m.src, m.dst, m.num_flits
+            )
+        });
+        push_event(
+            &mut out,
+            &mut first,
+            &format!(
+                "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {t0}, \"dur\": {}, \
+                 \"pid\": 1, \"tid\": {node}{args}}}",
+                escape_json(&label),
+                (t1 - t0).max(1),
+            ),
+        );
+    }
+    // Inject/eject instants mark the packet's fabric entry and exit.
+    for e in &report.events {
+        let name = match e.kind {
+            TraceEventKind::Inject => "inject",
+            TraceEventKind::Eject => "eject",
+            _ => continue,
+        };
+        push_event(
+            &mut out,
+            &mut first,
+            &format!(
+                "{{\"name\": \"{name}\", \"ph\": \"i\", \"ts\": {}, \"pid\": 1, \
+                 \"tid\": {}, \"s\": \"t\"}}",
+                e.ts, e.node
+            ),
+        );
+    }
+
+    // Windowed counters as Perfetto counter tracks (pid 1 counters).
+    for row in &report.rows {
+        push_event(
+            &mut out,
+            &mut first,
+            &format!(
+                "{{\"name\": \"flits/window\", \"ph\": \"C\", \"ts\": {}, \"pid\": 1, \
+                 \"args\": {{\"injected\": {}, \"switched\": {}, \"delivered\": {}}}}}",
+                row.start, row.flits_injected, row.flits_switched, row.packets_delivered
+            ),
+        );
+        push_event(
+            &mut out,
+            &mut first,
+            &format!(
+                "{{\"name\": \"stalls/window\", \"ph\": \"C\", \"ts\": {}, \"pid\": 1, \
+                 \"args\": {{\"credit\": {}, \"va\": {}, \"sa\": {}, \"blocked\": {}}}}}",
+                row.start,
+                row.stalls.credit_stalls,
+                row.stalls.va_losses,
+                row.stalls.sa_losses,
+                row.stalls.route_blocked
+            ),
+        );
+    }
+
+    // Extra tracks: assign pids per process name (in order of first
+    // appearance, starting at 2) and tids per thread within a process.
+    let mut pids: BTreeMap<&str, u32> = BTreeMap::new();
+    let mut next_pid = 2u32;
+    let mut tids: BTreeMap<(&str, &str), u32> = BTreeMap::new();
+    for t in extra {
+        let pid = *pids.entry(t.process.as_str()).or_insert_with(|| {
+            let p = next_pid;
+            next_pid += 1;
+            p
+        });
+        let next_tid = tids.keys().filter(|(p, _)| *p == t.process.as_str()).count() as u32;
+        let tid = *tids.entry((t.process.as_str(), t.thread.as_str())).or_insert(next_tid);
+        if next_tid == tid {
+            if tid == 0 {
+                push_event(
+                    &mut out,
+                    &mut first,
+                    &format!(
+                        "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {pid}, \
+                         \"args\": {{\"name\": \"{}\"}}}}",
+                        escape_json(&t.process)
+                    ),
+                );
+            }
+            push_event(
+                &mut out,
+                &mut first,
+                &format!(
+                    "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {pid}, \
+                     \"tid\": {tid}, \"args\": {{\"name\": \"{}\"}}}}",
+                    escape_json(&t.thread)
+                ),
+            );
+        }
+        for (label, start, end) in &t.spans {
+            push_event(
+                &mut out,
+                &mut first,
+                &format!(
+                    "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {start}, \"dur\": {}, \
+                     \"pid\": {pid}, \"tid\": {tid}}}",
+                    escape_json(label),
+                    end.saturating_sub(*start).max(1),
+                ),
+            );
+        }
+    }
+
+    out.push_str("\n  ],\n  \"displayTimeUnit\": \"ms\"\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{PacketMeta, TraceEvent};
+
+    fn tiny_report() -> TelemetryReport {
+        TelemetryReport {
+            window: None,
+            rows: Vec::new(),
+            events: vec![
+                TraceEvent { ts: 1, node: 0, packet: 0, kind: TraceEventKind::Inject },
+                TraceEvent { ts: 2, node: 0, packet: 0, kind: TraceEventKind::RouteComputed },
+                TraceEvent { ts: 4, node: 0, packet: 0, kind: TraceEventKind::SwitchAllocated },
+                TraceEvent { ts: 6, node: 9, packet: 0, kind: TraceEventKind::Eject },
+            ],
+            decisions: Vec::new(),
+            packets: vec![PacketMeta {
+                src: 0,
+                dst: 9,
+                kind: PacketKind::Request,
+                num_flits: 1,
+                tag: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn emits_spans_instants_and_metadata() {
+        let json = perfetto_json(&tiny_report(), &[]);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"NoC routers\""));
+        assert!(json.contains("\"router 0\"") && json.contains("\"router 9\""));
+        assert!(json.contains("\"req#0\""));
+        assert!(json.contains("\"ph\": \"X\""));
+        assert!(json.contains("\"inject\"") && json.contains("\"eject\""));
+    }
+
+    #[test]
+    fn extra_tracks_get_their_own_process() {
+        let track = SpanTrack {
+            process: "PEs".into(),
+            thread: "PE 0 @node 0".into(),
+            spans: vec![("task 0".into(), 10, 20)],
+        };
+        let json = perfetto_json(&tiny_report(), &[track]);
+        assert!(json.contains("\"PEs\""));
+        assert!(json.contains("\"PE 0 @node 0\""));
+        assert!(json.contains("\"task 0\""));
+        assert!(json.contains("\"pid\": 2"));
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let r = tiny_report();
+        assert_eq!(perfetto_json(&r, &[]), perfetto_json(&r, &[]));
+    }
+
+    #[test]
+    fn zero_length_span_gets_unit_duration() {
+        let report = TelemetryReport {
+            events: vec![TraceEvent {
+                ts: 5,
+                node: 1,
+                packet: 0,
+                kind: TraceEventKind::SwitchAllocated,
+            }],
+            ..TelemetryReport::default()
+        };
+        let json = perfetto_json(&report, &[]);
+        assert!(json.contains("\"dur\": 1"));
+    }
+}

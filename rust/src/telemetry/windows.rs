@@ -1,0 +1,317 @@
+//! The cycle-windowed counter collector.
+//!
+//! The collector never counts traffic itself — it snapshots the network's
+//! *cumulative* counters at every window boundary and stores the deltas,
+//! so per-window sums reconcile **exactly** with the end-of-run totals
+//! (conservation by construction, immune to any future counting-site
+//! drift). Stall causes have no cumulative counter in `NetworkStats`, so
+//! those accrue directly in per-node [`StallCounters`] that reset at each
+//! close.
+//!
+//! # Window attribution
+//!
+//! [`WindowedCounters::roll`] runs at the **top** of every network step,
+//! before that cycle's events are recorded. All counter growth since the
+//! last close therefore happened while the currently-open window was open,
+//! so the first closing window takes the full delta — exact even across
+//! `skip_to` fast-forward gaps, where the elapsed windows close with zero
+//! deltas (nothing can happen during a provably-idle gap).
+
+use crate::noc::topology::NUM_PORTS;
+use crate::telemetry::StallCounters;
+
+/// A borrowed view of the network's cumulative traffic counters (the
+/// subset of `NetworkStats` the collector snapshots). Keeps the telemetry
+/// module independent of the network's stats struct.
+#[derive(Debug, Clone, Copy)]
+pub struct CountersView<'a> {
+    /// Flits injected by any NI so far.
+    pub flits_injected: u64,
+    /// Flits that crossed any crossbar so far.
+    pub flits_switched: u64,
+    /// Flits that crossed an inter-router wire so far.
+    pub link_traversals: u64,
+    /// Packets fully delivered so far.
+    pub packets_delivered: u64,
+    /// Per-router per-output-port switch counts so far.
+    pub switched_per_port: &'a [[u64; NUM_PORTS]],
+}
+
+/// Owned snapshot of [`CountersView`] at the last window close.
+#[derive(Debug, Clone, Default)]
+struct BaseSnapshot {
+    flits_injected: u64,
+    flits_switched: u64,
+    link_traversals: u64,
+    packets_delivered: u64,
+    switched_per_port: Vec<[u64; NUM_PORTS]>,
+}
+
+impl BaseSnapshot {
+    fn capture(&mut self, cur: CountersView) {
+        self.flits_injected = cur.flits_injected;
+        self.flits_switched = cur.flits_switched;
+        self.link_traversals = cur.link_traversals;
+        self.packets_delivered = cur.packets_delivered;
+        self.switched_per_port.clear();
+        self.switched_per_port.extend_from_slice(cur.switched_per_port);
+    }
+}
+
+/// One closed window: traffic **deltas** over `[start, end)` plus
+/// occupancy/device samples taken at the close.
+#[derive(Debug, Clone, Default)]
+pub struct WindowRow {
+    /// First cycle of the window (inclusive).
+    pub start: u64,
+    /// Nominal end of the window (exclusive; the trailing partial row is
+    /// clamped to the final simulated cycle).
+    pub end: u64,
+    /// Flits injected during the window.
+    pub flits_injected: u64,
+    /// Flits switched during the window.
+    pub flits_switched: u64,
+    /// Link traversals during the window.
+    pub link_traversals: u64,
+    /// Packets delivered during the window.
+    pub packets_delivered: u64,
+    /// Fabric-wide stall cycles by cause during the window.
+    pub stalls: StallCounters,
+    /// Per-node stall cycles by cause during the window.
+    pub stalls_per_node: Vec<StallCounters>,
+    /// Per-node per-output-port flits switched during the window (the
+    /// windowed congestion heatmap).
+    pub switched_per_port: Vec<[u64; NUM_PORTS]>,
+    /// Flits buffered in each router's input VCs at window close.
+    pub vc_occupancy: Vec<u32>,
+    /// Most recent total MC queue depth sample at close.
+    pub mc_backlog: u64,
+    /// Most recent busy-PE count sample at close (PEs with active MACs).
+    pub pes_busy: u64,
+}
+
+/// The live windowed collector (owned by [`Telemetry`]).
+///
+/// [`Telemetry`]: crate::telemetry::Telemetry
+#[derive(Debug, Clone)]
+pub struct WindowedCounters {
+    window: u64,
+    num_nodes: usize,
+    /// First cycle of the currently-open window.
+    cur_start: u64,
+    rows: Vec<WindowRow>,
+    base: BaseSnapshot,
+    /// Per-node stall accrual for the open window.
+    stalls: Vec<StallCounters>,
+    /// Latest device samples (copied into the row at close).
+    mc_backlog: u64,
+    pes_busy: u64,
+}
+
+impl WindowedCounters {
+    /// New collector with `window`-cycle buckets over `num_nodes` routers.
+    pub fn new(window: u64, num_nodes: usize) -> Self {
+        assert!(window >= 1, "telemetry window must be at least one cycle");
+        Self {
+            window,
+            num_nodes,
+            cur_start: 0,
+            rows: Vec::new(),
+            base: BaseSnapshot {
+                switched_per_port: vec![[0; NUM_PORTS]; num_nodes],
+                ..BaseSnapshot::default()
+            },
+            stalls: vec![StallCounters::default(); num_nodes],
+            mc_backlog: 0,
+            pes_busy: 0,
+        }
+    }
+
+    /// Configured window length in cycles.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// The open window's stall counters for `node` (router probe target).
+    #[inline]
+    pub fn stalls_mut(&mut self, node: usize) -> &mut StallCounters {
+        &mut self.stalls[node]
+    }
+
+    /// Record the latest device-layer samples (total MC backlog, busy PE
+    /// count). Latest-value semantics: the value at window close is what
+    /// the row keeps.
+    #[inline]
+    pub fn note_devices(&mut self, mc_backlog: u64, pes_busy: u64) {
+        self.mc_backlog = mc_backlog;
+        self.pes_busy = pes_busy;
+    }
+
+    /// Close every window that ended strictly before cycle `now`. Called
+    /// at the top of each network step, before the cycle's events are
+    /// recorded; `occ(node)` reports the flits currently buffered in
+    /// `node`'s router.
+    pub fn roll<F: FnMut(usize) -> u32>(&mut self, now: u64, cur: CountersView, occ: &mut F) {
+        while now >= self.cur_start + self.window {
+            let end = self.cur_start + self.window;
+            self.close_row(end, cur, occ);
+        }
+    }
+
+    /// Close the open window at `end` and open the next one.
+    fn close_row<F: FnMut(usize) -> u32>(&mut self, end: u64, cur: CountersView, occ: &mut F) {
+        let mut fabric = StallCounters::default();
+        for s in &self.stalls {
+            fabric.add(s);
+        }
+        let per_port: Vec<[u64; NUM_PORTS]> = (0..self.num_nodes)
+            .map(|n| {
+                let mut d = [0u64; NUM_PORTS];
+                for (p, slot) in d.iter_mut().enumerate() {
+                    *slot = cur.switched_per_port[n][p] - self.base.switched_per_port[n][p];
+                }
+                d
+            })
+            .collect();
+        self.rows.push(WindowRow {
+            start: self.cur_start,
+            end,
+            flits_injected: cur.flits_injected - self.base.flits_injected,
+            flits_switched: cur.flits_switched - self.base.flits_switched,
+            link_traversals: cur.link_traversals - self.base.link_traversals,
+            packets_delivered: cur.packets_delivered - self.base.packets_delivered,
+            stalls: fabric,
+            stalls_per_node: self.stalls.clone(),
+            switched_per_port: per_port,
+            vc_occupancy: (0..self.num_nodes).map(|n| occ(n)).collect(),
+            mc_backlog: self.mc_backlog,
+            pes_busy: self.pes_busy,
+        });
+        self.base.capture(cur);
+        for s in &mut self.stalls {
+            *s = StallCounters::default();
+        }
+        self.cur_start = end;
+    }
+
+    /// Closed rows so far (no trailing partial window).
+    pub fn finished_rows(&self) -> &[WindowRow] {
+        &self.rows
+    }
+
+    /// All rows including the trailing partial window up to cycle `now`,
+    /// without mutating the live collector (report-time view). The sum of
+    /// every traffic column over the returned rows equals the counters in
+    /// `cur` exactly.
+    pub fn snapshot_rows<F: FnMut(usize) -> u32>(
+        &self,
+        now: u64,
+        cur: CountersView,
+        occ: &mut F,
+    ) -> Vec<WindowRow> {
+        let mut w = self.clone();
+        w.roll(now, cur, occ);
+        let residual = cur.flits_injected - w.base.flits_injected
+            + cur.flits_switched - w.base.flits_switched
+            + cur.link_traversals - w.base.link_traversals
+            + cur.packets_delivered - w.base.packets_delivered;
+        if now > w.cur_start || residual > 0 {
+            let start = w.cur_start;
+            w.close_row(now.max(start + 1), cur, occ);
+        }
+        w.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(cur: &BaseSnapshot) -> CountersView<'_> {
+        CountersView {
+            flits_injected: cur.flits_injected,
+            flits_switched: cur.flits_switched,
+            link_traversals: cur.link_traversals,
+            packets_delivered: cur.packets_delivered,
+            switched_per_port: &cur.switched_per_port,
+        }
+    }
+
+    #[test]
+    fn deltas_land_in_the_open_window() {
+        let mut w = WindowedCounters::new(10, 2);
+        let mut cum =
+            BaseSnapshot { switched_per_port: vec![[0; NUM_PORTS]; 2], ..BaseSnapshot::default() };
+        let mut occ = |_n: usize| 0u32;
+        // Cycles 1..=9 accrue 9 injections; the window [0,10) closes at
+        // the top of cycle 10's step with the full delta.
+        for now in 1..=9u64 {
+            w.roll(now, view(&cum), &mut occ);
+            cum.flits_injected += 1;
+        }
+        assert!(w.finished_rows().is_empty());
+        w.roll(10, view(&cum), &mut occ);
+        assert_eq!(w.finished_rows().len(), 1);
+        assert_eq!(w.finished_rows()[0].flits_injected, 9);
+        assert_eq!((w.finished_rows()[0].start, w.finished_rows()[0].end), (0, 10));
+    }
+
+    #[test]
+    fn fast_forward_gap_closes_empty_windows() {
+        let mut w = WindowedCounters::new(10, 1);
+        let mut cum =
+            BaseSnapshot { switched_per_port: vec![[0; NUM_PORTS]; 1], ..BaseSnapshot::default() };
+        let mut occ = |_n: usize| 0u32;
+        w.roll(5, view(&cum), &mut occ);
+        cum.flits_switched = 7;
+        // Jump to cycle 35: windows [0,10) [10,20) [20,30) all close; the
+        // first takes the whole delta (it was open when the counts grew).
+        w.roll(35, view(&cum), &mut occ);
+        let rows = w.finished_rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].flits_switched, 7);
+        assert_eq!(rows[1].flits_switched, 0);
+        assert_eq!(rows[2].flits_switched, 0);
+    }
+
+    #[test]
+    fn snapshot_appends_partial_row_and_conserves() {
+        let mut w = WindowedCounters::new(10, 1);
+        let mut cum =
+            BaseSnapshot { switched_per_port: vec![[0; NUM_PORTS]; 1], ..BaseSnapshot::default() };
+        let mut occ = |_n: usize| 3u32;
+        w.roll(10, view(&cum), &mut occ); // close [0,10) empty
+        cum.flits_injected = 4;
+        cum.packets_delivered = 2;
+        let rows = w.snapshot_rows(13, view(&cum), &mut occ);
+        assert_eq!(rows.len(), 2, "closed window + trailing partial");
+        assert_eq!((rows[1].start, rows[1].end), (10, 13));
+        assert_eq!(rows[1].flits_injected, 4);
+        assert_eq!(rows[1].vc_occupancy, vec![3]);
+        let total: u64 = rows.iter().map(|r| r.flits_injected).sum();
+        assert_eq!(total, cum.flits_injected, "window sums must equal totals");
+        // The live collector is untouched.
+        assert_eq!(w.finished_rows().len(), 1);
+    }
+
+    #[test]
+    fn stalls_reset_per_window_but_sum_across() {
+        let mut w = WindowedCounters::new(4, 2);
+        let cum = BaseSnapshot {
+            switched_per_port: vec![[0; NUM_PORTS]; 2],
+            ..BaseSnapshot::default()
+        };
+        let mut occ = |_n: usize| 0u32;
+        w.stalls_mut(0).credit_stalls += 3;
+        w.stalls_mut(1).sa_losses += 1;
+        w.roll(4, view(&cum), &mut occ);
+        w.stalls_mut(1).va_losses += 2;
+        w.roll(8, view(&cum), &mut occ);
+        let rows = w.finished_rows();
+        assert_eq!(rows[0].stalls.credit_stalls, 3);
+        assert_eq!(rows[0].stalls.sa_losses, 1);
+        assert_eq!(rows[0].stalls_per_node[0].credit_stalls, 3);
+        assert_eq!(rows[1].stalls.total(), 2, "counters reset at close");
+        assert_eq!(rows[1].stalls.va_losses, 2);
+    }
+}

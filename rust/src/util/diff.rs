@@ -1,0 +1,259 @@
+//! Structural diffing of the crate's JSON result files — the engine of
+//! `noctt report <a.json> <b.json>`.
+//!
+//! Works on *any* of the crate's `--json` emitters (sweep results,
+//! serving curves, bench series, `BENCH_baseline.json`): the file is
+//! parsed with [`crate::util::json`], flattened to `path → number` pairs,
+//! and the two maps are joined on path. Arrays of objects are keyed by
+//! their identity fields (`name`, or the sweep grid's
+//! `platform|layer|mapper` triple) instead of by position, so reordering
+//! cells between two runs — a different `--jobs`, an added mapper — still
+//! lines up the comparable numbers; anonymous arrays fall back to the
+//! index. Strings never diff (they *are* the keys); booleans widen to
+//! 0/1 so flag flips (`extra_run`, `saturated`) surface as ±1 rows.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Value;
+use crate::util::table::Table;
+
+/// Flatten a parsed document into sorted `path → number` pairs.
+///
+/// Paths are dot-joined; array elements contribute a `[key]` segment (see
+/// the module docs for how keys are chosen).
+pub fn flatten(doc: &Value) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    walk(doc, String::new(), &mut out);
+    out
+}
+
+/// The identity of one array element: its `name` field, the sweep grid's
+/// `platform|layer|mapper` triple (whichever of the three are present),
+/// or the position for anonymous elements.
+fn element_key(item: &Value, index: usize) -> String {
+    if let Some(name) = item.get("name").and_then(Value::as_str) {
+        return name.to_string();
+    }
+    let identity: Vec<&str> = ["platform", "layer", "mapper"]
+        .iter()
+        .filter_map(|k| item.get(k).and_then(Value::as_str))
+        .collect();
+    if identity.is_empty() {
+        index.to_string()
+    } else {
+        identity.join("|")
+    }
+}
+
+fn join(prefix: &str, segment: &str) -> String {
+    if prefix.is_empty() {
+        segment.to_string()
+    } else {
+        format!("{prefix}.{segment}")
+    }
+}
+
+fn walk(v: &Value, prefix: String, out: &mut BTreeMap<String, f64>) {
+    match v {
+        Value::Num(n) => {
+            out.insert(prefix, *n);
+        }
+        Value::Bool(b) => {
+            out.insert(prefix, f64::from(*b));
+        }
+        Value::Obj(pairs) => {
+            for (k, child) in pairs {
+                walk(child, join(&prefix, k), out);
+            }
+        }
+        Value::Arr(items) => {
+            for (i, child) in items.iter().enumerate() {
+                walk(child, format!("{prefix}[{}]", element_key(child, i)), out);
+            }
+        }
+        Value::Null | Value::Str(_) => {}
+    }
+}
+
+/// One shared path with a value on both sides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    /// Flattened path (e.g. `cells[4x4|C1|sampling-10].latency`).
+    pub path: String,
+    /// Value in the first file.
+    pub a: f64,
+    /// Value in the second file.
+    pub b: f64,
+}
+
+impl DiffRow {
+    /// Absolute change, `b − a`.
+    pub fn delta(&self) -> f64 {
+        self.b - self.a
+    }
+
+    /// Relative change in percent, `None` when `a` is zero.
+    pub fn pct(&self) -> Option<f64> {
+        (self.a != 0.0).then(|| (self.b - self.a) / self.a * 100.0)
+    }
+}
+
+/// The join of two flattened documents.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Diff {
+    /// Paths present in both files, in sorted path order (changed or not).
+    pub rows: Vec<DiffRow>,
+    /// Paths only the first file has.
+    pub only_a: Vec<String>,
+    /// Paths only the second file has.
+    pub only_b: Vec<String>,
+}
+
+impl Diff {
+    /// Rows whose relative change exceeds `threshold_pct` (absolute
+    /// value), plus every appeared/vanished-from-zero row.
+    pub fn exceeding(&self, threshold_pct: f64) -> Vec<&DiffRow> {
+        self.rows
+            .iter()
+            .filter(|r| match r.pct() {
+                Some(p) => p.abs() > threshold_pct,
+                None => r.b != 0.0,
+            })
+            .collect()
+    }
+}
+
+/// Join two parsed documents on flattened path.
+pub fn diff(a: &Value, b: &Value) -> Diff {
+    let fa = flatten(a);
+    let mut fb = flatten(b);
+    let mut out = Diff::default();
+    for (path, va) in fa {
+        match fb.remove(&path) {
+            Some(vb) => out.rows.push(DiffRow { path, a: va, b: vb }),
+            None => out.only_a.push(path),
+        }
+    }
+    out.only_b = fb.into_keys().collect();
+    out
+}
+
+/// Render a diff as the `noctt report` table: one row per *changed*
+/// shared path with Δ and Δ%, a `!` marker when the relative change
+/// exceeds `threshold_pct`, then the one-sided paths and a summary line.
+pub fn render(d: &Diff, label_a: &str, label_b: &str, threshold_pct: f64) -> String {
+    let mut out = String::new();
+    let changed: Vec<&DiffRow> = d.rows.iter().filter(|r| r.a != r.b).collect();
+    let mut table = Table::new(["", "metric", label_a, label_b, "delta", "delta%"]);
+    for r in &changed {
+        let (pct, hot) = match r.pct() {
+            Some(p) => (format!("{p:+.2}%"), p.abs() > threshold_pct),
+            None => ("new≠0".to_string(), r.b != 0.0),
+        };
+        table.row([
+            if hot { "!" } else { "" }.to_string(),
+            r.path.clone(),
+            fmt_num(r.a),
+            fmt_num(r.b),
+            fmt_num(r.delta()),
+            pct,
+        ]);
+    }
+    if changed.is_empty() {
+        out.push_str("no shared metric changed\n");
+    } else {
+        out.push_str(&table.render());
+    }
+    for (side, paths) in [(label_a, &d.only_a), (label_b, &d.only_b)] {
+        if !paths.is_empty() {
+            out.push_str(&format!("\nonly in {side} ({} paths):\n", paths.len()));
+            for p in paths {
+                out.push_str(&format!("  {p}\n"));
+            }
+        }
+    }
+    let flagged = d.exceeding(threshold_pct).iter().filter(|r| r.a != r.b).count();
+    out.push_str(&format!(
+        "\n{} shared metrics, {} changed, {} beyond ±{threshold_pct}% (marked '!')\n",
+        d.rows.len(),
+        changed.len(),
+        flagged,
+    ));
+    out
+}
+
+/// Trim a diffed number for the table: integers print bare, fractions
+/// keep four decimals.
+fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn flatten_keys_arrays_by_identity() {
+        let doc = parse(
+            r#"{"cells": [
+                {"platform": "4x4", "layer": "C1", "mapper": "row-major", "latency": 100},
+                {"platform": "4x4", "layer": "C1", "mapper": "sampling-10", "latency": 80}
+            ], "series": [{"name": "fig7", "mean_ns": 5}], "raw": [1, 2]}"#,
+        )
+        .unwrap();
+        let flat = flatten(&doc);
+        assert_eq!(flat["cells[4x4|C1|row-major].latency"], 100.0);
+        assert_eq!(flat["cells[4x4|C1|sampling-10].latency"], 80.0);
+        assert_eq!(flat["series[fig7].mean_ns"], 5.0);
+        assert_eq!(flat["raw[0]"], 1.0);
+        assert_eq!(flat["raw[1]"], 2.0);
+    }
+
+    #[test]
+    fn reordered_cells_still_line_up() {
+        let a = parse(r#"[{"name": "x", "v": 1}, {"name": "y", "v": 2}]"#).unwrap();
+        let b = parse(r#"[{"name": "y", "v": 2}, {"name": "x", "v": 5}]"#).unwrap();
+        let d = diff(&a, &b);
+        assert!(d.only_a.is_empty() && d.only_b.is_empty());
+        let changed: Vec<&DiffRow> = d.rows.iter().filter(|r| r.a != r.b).collect();
+        assert_eq!(changed.len(), 1);
+        assert_eq!(changed[0].path, "[x].v");
+        assert_eq!((changed[0].a, changed[0].b), (1.0, 5.0));
+    }
+
+    #[test]
+    fn one_sided_paths_are_reported() {
+        let a = parse(r#"{"kept": 1, "dropped": 2}"#).unwrap();
+        let b = parse(r#"{"kept": 1, "added": 3}"#).unwrap();
+        let d = diff(&a, &b);
+        assert_eq!(d.only_a, vec!["dropped".to_string()]);
+        assert_eq!(d.only_b, vec!["added".to_string()]);
+        assert_eq!(d.rows.len(), 1, "kept is shared");
+    }
+
+    #[test]
+    fn threshold_marks_regressions() {
+        let a = parse(r#"{"fast": 100, "slow": 100, "zero": 0}"#).unwrap();
+        let b = parse(r#"{"fast": 101, "slow": 150, "zero": 4}"#).unwrap();
+        let d = diff(&a, &b);
+        let hot: Vec<&str> = d.exceeding(2.0).iter().map(|r| r.path.as_str()).collect();
+        assert_eq!(hot, ["slow", "zero"], "1% drift stays cold, 50% and 0→4 are hot");
+        let rendered = render(&d, "a.json", "b.json", 2.0);
+        assert!(rendered.contains("+50.00%"), "{rendered}");
+        assert!(rendered.contains('!'), "{rendered}");
+        assert!(rendered.contains("3 shared metrics, 3 changed, 2 beyond"), "{rendered}");
+    }
+
+    #[test]
+    fn booleans_diff_as_flag_flips() {
+        let a = parse(r#"{"saturated": false}"#).unwrap();
+        let b = parse(r#"{"saturated": true}"#).unwrap();
+        let d = diff(&a, &b);
+        assert_eq!(d.rows[0].delta(), 1.0);
+    }
+}

@@ -6,6 +6,8 @@
 
 pub mod apportion;
 pub mod bench;
+pub mod diff;
+pub mod json;
 pub mod prng;
 pub mod proptest;
 pub mod table;

@@ -54,6 +54,16 @@ static ALLOC: CountingAlloc = CountingAlloc;
 
 fn main() {
     let cfg = PlatformConfig::default_2mc();
+    // The audit runs on the telemetry-off path on purpose: the default
+    // spec builds no collector, so the hot loop's telemetry hook is a
+    // single `Option` move per step and the zero-allocation pin below
+    // also pins the disabled-telemetry overhead at nothing. (The
+    // enabled path allocates by design — window rows, trace events —
+    // and is covered by rust/tests/telemetry.rs instead.)
+    assert!(
+        !cfg.telemetry.enabled(),
+        "audit must measure the default telemetry-off configuration"
+    );
     let mut layer = lenet5(6).remove(0);
     // 588 tasks: enough to warm every amortised vector past its final
     // doubling (records double to 1024 at push 513; the 3-packets-per-task

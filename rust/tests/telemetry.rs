@@ -1,0 +1,258 @@
+//! The telemetry subsystem's integration suite.
+//!
+//! Two invariants anchor everything:
+//!
+//! 1. **Observation never perturbs.** Telemetry hooks copy values out of
+//!    the simulation but never feed one back in, so a fully-instrumented
+//!    run must produce a bit-identical [`SimResult`] to the same run with
+//!    telemetry off — across stepping modes, topologies and mappers
+//!    (including the two-phase sampling mapper, whose remap decision is
+//!    itself logged through the telemetry layer).
+//! 2. **Conservation by construction.** Every windowed counter row is a
+//!    delta of the same cumulative [`NetworkStats`] the run reports, so
+//!    the window-column sums must equal the run totals *exactly* — no
+//!    sampling error, no missed cycles across event-driven fast-forward
+//!    gaps.
+//!
+//! On top: the Perfetto exporter must emit well-formed JSON (proved with
+//! the crate's own [`noctt::util::json`] parser — no external validator
+//! offline) with the tracks the `noctt trace` subcommand promises, and
+//! the serving pipeline must carry per-stage reports without changing its
+//! fingerprint.
+//!
+//! [`SimResult`]: noctt::accel::SimResult
+//! [`NetworkStats`]: noctt::noc::NetworkStats
+
+use noctt::accel::SimResult;
+use noctt::config::{PlatformConfig, SteppingMode, TopologyKind};
+use noctt::dnn::{LayerSpec, WorkloadSpec};
+use noctt::mapping::{run_layer, Strategy};
+use noctt::serving::{Arrival, ServingConfig, ServingSim};
+use noctt::telemetry::trace::{perfetto_json, SpanTrack};
+use noctt::telemetry::TelemetryReport;
+use noctt::util::json::{self, Value};
+
+/// The platforms under test: the paper's 2-MC mesh and a torus (wrap
+/// wires + dateline VCs exercise every router stage the probes touch).
+fn platforms() -> Vec<(&'static str, PlatformConfig)> {
+    vec![
+        ("2mc-mesh", PlatformConfig::default_2mc()),
+        ("torus", PlatformConfig::builder().topology(TopologyKind::Torus).build().unwrap()),
+    ]
+}
+
+/// A layer small enough for dense stepping, big enough that the sampling
+/// mapper's measurement phase completes and a remap decision fires.
+fn layer() -> LayerSpec {
+    LayerSpec::conv("t", 3, 1.0, 160)
+}
+
+/// Enable both collectors on a copy of `cfg`.
+fn instrumented(cfg: &PlatformConfig, window: u64) -> PlatformConfig {
+    let mut on = cfg.clone();
+    on.telemetry.window = Some(window);
+    on.telemetry.trace = true;
+    on
+}
+
+/// Flatten every observable of a [`SimResult`] into one comparable
+/// vector (the equivalence suite's fingerprint, minus nothing).
+fn fingerprint(r: &SimResult) -> Vec<u64> {
+    let mut fp = vec![r.latency, r.drained_at, r.records.len() as u64];
+    for rec in &r.records {
+        fp.extend([
+            rec.pe as u64,
+            rec.t_issue,
+            rec.t_req_arrive,
+            rec.t_resp_depart,
+            rec.t_resp_arrive,
+            rec.t_compute_done,
+        ]);
+    }
+    for t in &r.totals {
+        fp.extend([t.tasks, t.req, t.mem, t.resp, t.comp]);
+    }
+    fp.extend(&r.finish);
+    fp.extend([
+        r.net.cycles,
+        r.net.flits_injected,
+        r.net.flits_switched,
+        r.net.link_traversals,
+        r.net.packets_delivered,
+    ]);
+    fp.extend(r.net.latency_sum);
+    fp.extend(r.net.delivered_by_kind);
+    for per_port in &r.net.switched_per_port {
+        fp.extend(per_port);
+    }
+    fp
+}
+
+/// Run `strategy` on `cfg` and hand back the result.
+fn run(cfg: &PlatformConfig, strategy: Strategy) -> SimResult {
+    run_layer(cfg, &layer(), strategy).expect("mapped run").result
+}
+
+#[test]
+fn telemetry_on_is_bit_identical_to_telemetry_off() {
+    // The headline invariant: {mesh, torus} × {event, dense} ×
+    // {row-major, sampling-4}, instrumented vs not — same fingerprint.
+    for (name, base) in platforms() {
+        for dense in [false, true] {
+            let mut off = base.clone();
+            if dense {
+                off.stepping = SteppingMode::Dense;
+            }
+            let on = instrumented(&off, 64);
+            for strategy in [Strategy::RowMajor, Strategy::Sampling(4)] {
+                let r_off = run(&off, strategy);
+                let r_on = run(&on, strategy);
+                assert_eq!(
+                    fingerprint(&r_off),
+                    fingerprint(&r_on),
+                    "telemetry perturbed {name} dense={dense} {strategy:?}"
+                );
+                assert!(r_off.telemetry.is_none(), "off-path run must carry no report");
+                assert!(r_on.telemetry.is_some(), "on-path run must carry a report");
+            }
+        }
+    }
+}
+
+#[test]
+fn window_sums_reconcile_exactly_with_network_totals() {
+    for (name, base) in platforms() {
+        for strategy in [Strategy::RowMajor, Strategy::Sampling(4)] {
+            let r = run(&instrumented(&base, 64), strategy);
+            let rep = r.telemetry.as_ref().expect("report");
+            let (inj, sw, link, del) = rep.window_totals();
+            assert_eq!(inj, r.net.flits_injected, "{name} {strategy:?} injected");
+            assert_eq!(sw, r.net.flits_switched, "{name} {strategy:?} switched");
+            assert_eq!(link, r.net.link_traversals, "{name} {strategy:?} links");
+            assert_eq!(del, r.net.packets_delivered, "{name} {strategy:?} delivered");
+            // Per-node stall splits sum into the fabric-wide row totals.
+            for row in &rep.rows {
+                let per_node: u64 = row.stalls_per_node.iter().map(|s| s.total()).sum();
+                assert_eq!(per_node, row.stalls.total(), "{name} stall split");
+            }
+            // Windows tile the run: contiguous, ordered, window-aligned.
+            for pair in rep.rows.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start, "{name} windows must tile");
+            }
+        }
+    }
+}
+
+#[test]
+fn windows_csv_has_the_documented_shape() {
+    let r = run(&instrumented(&PlatformConfig::default_2mc(), 32), Strategy::RowMajor);
+    let csv = r.telemetry.as_ref().expect("report").windows_csv();
+    let mut lines = csv.lines();
+    let header = lines.next().expect("header");
+    assert!(header.starts_with("window,start,end,flits_injected"), "{header}");
+    let cols = header.split(',').count();
+    let mut rows = 0;
+    for line in lines {
+        assert_eq!(line.split(',').count(), cols, "ragged CSV row: {line}");
+        rows += 1;
+    }
+    assert_eq!(rows, r.telemetry.as_ref().unwrap().rows.len(), "one CSV line per window");
+    assert!(rows > 1, "a real run must close more than one 32-cycle window");
+}
+
+#[test]
+fn sampling_mapper_logs_its_remap_decision() {
+    let cfg = instrumented(&PlatformConfig::default_2mc(), 64);
+    let r = run(&cfg, Strategy::Sampling(4));
+    let rep = r.telemetry.as_ref().expect("report");
+    assert!(!rep.decisions.is_empty(), "sampling must log at least one remap decision");
+    for d in &rep.decisions {
+        assert_eq!(d.mapper, "sampling-4");
+        assert_eq!(d.mean_travel.len(), cfg.num_pes(), "one travel mean per PE");
+        assert_eq!(d.counts.len(), cfg.num_pes(), "one residual count per PE");
+        assert!(d.at_cycle > 0, "the decision happens after the sampling window");
+        assert!(d.rho.is_finite());
+        let residual: u64 = d.counts.iter().sum();
+        assert!(residual < layer().tasks, "residual counts exclude the sampled tasks");
+    }
+    // Static mappers take no sampling decision.
+    let stat = run(&cfg, Strategy::RowMajor);
+    assert!(stat.telemetry.as_ref().expect("report").decisions.is_empty());
+}
+
+/// Walk a parsed trace and collect the `name` argument of every process
+/// metadata event.
+fn process_names(doc: &Value) -> Vec<String> {
+    doc.get("traceEvents")
+        .and_then(Value::as_arr)
+        .expect("traceEvents array")
+        .iter()
+        .filter(|e| e.get("name").and_then(Value::as_str) == Some("process_name"))
+        .filter_map(|e| e.get("args")?.get("name")?.as_str().map(str::to_string))
+        .collect()
+}
+
+#[test]
+fn perfetto_export_is_wellformed_and_carries_every_track() {
+    let r = run(&instrumented(&PlatformConfig::default_2mc(), 64), Strategy::RowMajor);
+    let rep = r.telemetry.as_ref().expect("report");
+    assert!(!rep.events.is_empty(), "tracing was on — events must exist");
+    let extra = [SpanTrack {
+        process: "PEs".into(),
+        thread: "PE 0".into(),
+        spans: vec![("task 0".into(), 1, 9)],
+    }];
+    let text = perfetto_json(rep, &extra);
+    let doc = json::parse(&text).expect("exporter must emit well-formed JSON");
+    let events = doc.get("traceEvents").and_then(Value::as_arr).expect("traceEvents");
+    assert!(!events.is_empty());
+    for e in events {
+        let ph = e.get("ph").and_then(Value::as_str).expect("every event has a phase");
+        assert!(["M", "X", "i", "C"].contains(&ph), "unexpected phase {ph}");
+        assert!(e.get("pid").is_some(), "every event has a pid");
+    }
+    let procs = process_names(&doc);
+    assert!(procs.contains(&"NoC routers".to_string()), "{procs:?}");
+    assert!(procs.contains(&"PEs".to_string()), "{procs:?}");
+    // Spans exist and counter rows made it in.
+    assert!(events.iter().any(|e| e.get("ph").and_then(Value::as_str) == Some("X")));
+    assert!(events.iter().any(|e| e.get("ph").and_then(Value::as_str) == Some("C")));
+}
+
+#[test]
+fn serving_carries_stage_reports_without_perturbing_the_stream() {
+    let workload = WorkloadSpec::new(
+        "tiny2",
+        vec![LayerSpec::conv("a", 3, 1.0, 28), LayerSpec::conv("b", 5, 1.0, 14)],
+    )
+    .expect("tiny workload");
+    let mapper = noctt::mapping::registry().resolve("row-major").expect("builtin");
+    let serving = ServingConfig {
+        arrival: Arrival::Poisson,
+        load: 0.7,
+        requests: 4,
+        max_in_flight: 2,
+        seed: 11,
+    };
+    let cfg_off = PlatformConfig::default_2mc();
+    let cfg_on = instrumented(&cfg_off, 128);
+    let off = ServingSim::new(&cfg_off, &workload, mapper.as_ref()).run(&serving).unwrap();
+    let on = ServingSim::new(&cfg_on, &workload, mapper.as_ref()).run(&serving).unwrap();
+    assert_eq!(off.fingerprint(), on.fingerprint(), "telemetry perturbed the serving stream");
+    assert!(off.stage_telemetry.is_empty());
+    assert_eq!(on.stage_telemetry.len(), workload.layers.len(), "one report per stage");
+    for rep in &on.stage_telemetry {
+        let parsed = json::parse(&perfetto_json(rep, &[])).expect("stage trace parses");
+        assert!(parsed.get("traceEvents").is_some());
+    }
+}
+
+#[test]
+fn report_is_self_contained_for_the_exporters() {
+    // The exporters take a TelemetryReport alone — no live network. An
+    // empty report still renders valid JSON and a header-only CSV.
+    let empty = TelemetryReport::default();
+    assert!(json::parse(&perfetto_json(&empty, &[])).is_ok());
+    assert_eq!(empty.windows_csv().lines().count(), 1);
+    assert_eq!(empty.window_totals(), (0, 0, 0, 0));
+}

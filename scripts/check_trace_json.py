@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Validate a `noctt trace` Perfetto export from CI.
+
+The Rust side already proves the exporter emits well-formed JSON with the
+crate's own parser (rust/tests/telemetry.rs); this checker is the
+independent, second-implementation opinion the smoke job runs against the
+real binary's file output. It asserts the Chrome/Perfetto `trace_event`
+shape that ui.perfetto.dev actually needs to load the file:
+
+* a top-level object with a non-empty ``traceEvents`` array;
+* every event has a ``ph`` phase in the set the exporter emits
+  (M/X/i/C), a ``pid``, and the per-phase required fields
+  (``ts``+``dur`` on spans, ``ts`` on instants and counters);
+* spans are well-formed (``dur`` >= 1 -- Perfetto drops 0-length spans);
+* the metadata declares the "NoC routers" process, and every pid used by
+  an event was declared by a ``process_name`` record;
+* at least one span, one instant and (when the windowed collector ran)
+  one counter series made it in.
+
+Usage: check_trace_json.py TRACE.json [--require-counters]
+Exits non-zero with a reason on the first violation.
+"""
+
+import argparse
+import json
+import sys
+
+PHASES = {"M", "X", "i", "C"}
+
+
+def fail(msg):
+    print(f"check_trace_json: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="path to a noctt trace .trace.json file")
+    ap.add_argument(
+        "--require-counters",
+        action="store_true",
+        help="also require 'C' counter events (windowed collector output)",
+    )
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty array")
+
+    declared_pids = set()
+    used_pids = set()
+    seen_phases = set()
+    processes = set()
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            fail(f"event {i} is not an object")
+        ph = e.get("ph")
+        if ph not in PHASES:
+            fail(f"event {i} has unexpected phase {ph!r}")
+        seen_phases.add(ph)
+        pid = e.get("pid")
+        if not isinstance(pid, int):
+            fail(f"event {i} ({ph}) has no integer pid")
+        if ph == "M":
+            name = e.get("name")
+            arg_name = e.get("args", {}).get("name")
+            if name not in ("process_name", "thread_name"):
+                fail(f"metadata event {i} has unexpected name {name!r}")
+            if not isinstance(arg_name, str) or not arg_name:
+                fail(f"metadata event {i} lacks args.name")
+            if name == "process_name":
+                declared_pids.add(pid)
+                processes.add(arg_name)
+        else:
+            used_pids.add(pid)
+            if not isinstance(e.get("ts"), int):
+                fail(f"event {i} ({ph}) has no integer ts")
+            if ph == "X":
+                dur = e.get("dur")
+                if not isinstance(dur, int) or dur < 1:
+                    fail(f"span event {i} has dur {dur!r} (must be an int >= 1)")
+                if not isinstance(e.get("name"), str):
+                    fail(f"span event {i} has no name")
+
+    if "NoC routers" not in processes:
+        fail(f"no 'NoC routers' process metadata (processes: {sorted(processes)})")
+    undeclared = used_pids - declared_pids
+    if undeclared:
+        fail(f"events use undeclared pids {sorted(undeclared)}")
+    if "X" not in seen_phases:
+        fail("no span ('X') events — packet lifetimes are missing")
+    if "i" not in seen_phases:
+        fail("no instant ('i') events — inject/eject markers are missing")
+    if args.require_counters and "C" not in seen_phases:
+        fail("no counter ('C') events — the windowed collector output is missing")
+
+    print(
+        f"check_trace_json: OK: {len(events)} events, "
+        f"{len(processes)} processes ({', '.join(sorted(processes))}), "
+        f"phases {''.join(sorted(seen_phases))}"
+    )
+
+
+if __name__ == "__main__":
+    main()
